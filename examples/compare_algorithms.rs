@@ -1,0 +1,125 @@
+//! End-to-end driver (the repo's headline validation run, recorded in
+//! EXPERIMENTS.md): train ALL SEVEN online LDA algorithms — FOEM and the
+//! paper's five comparators plus plain SEM — on the same NYTIMES-like
+//! stream, logging each one's perplexity-vs-time curve, and print the
+//! final comparison table. Reproduces the *shape* of Figs. 8-12 in one
+//! run: FOEM/OGS/SCVB fast & accurate, OVB/RVB/SOI slower & higher
+//! perplexity.
+//!
+//!     cargo run --release --example compare_algorithms
+
+use foem::coordinator::config::{Algorithm, RunConfig, StoreKind};
+use foem::coordinator::driver::Driver;
+use foem::corpus::synthetic::{generate, SyntheticConfig};
+use foem::eval::{predictive_perplexity, EvalProtocol};
+use foem::stream::{CorpusStream, StreamConfig};
+use foem::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let k = 50;
+    let ds = 256;
+    let passes = 2;
+    let corpus = generate(&SyntheticConfig::nytimes_like(), 11);
+    let (train, test) = corpus.split(200, 1);
+    println!(
+        "workload: {} | D={} W={} NNZ={} tokens={:.0} | K={k} Ds={ds} passes={passes}\n",
+        corpus.name,
+        train.n_docs(),
+        train.n_words(),
+        train.nnz(),
+        train.n_tokens()
+    );
+
+    let scfg = StreamConfig { minibatch_docs: ds, shuffle: false, seed: 3 };
+    let scale_s = CorpusStream::new(&train, scfg).batches_per_pass() as f64;
+    let proto = EvalProtocol { fold_in_iters: 20, seed: 0 };
+
+    struct Run {
+        name: &'static str,
+        secs: f64,
+        ppx: f64,
+        trace: Vec<(f64, f64)>,
+    }
+    let mut summary: Vec<Run> = Vec::new();
+    for algo_kind in Algorithm::all() {
+        let cfg = RunConfig {
+            algorithm: algo_kind,
+            n_topics: k,
+            minibatch_docs: ds,
+            store: StoreKind::InMemory,
+            seed: 7,
+            ..RunConfig::default()
+        };
+        let mut algo = Driver::new(cfg).build_algorithm(train.n_words(), scale_s)?;
+        println!("[{}]", algo.name());
+        let mut train_secs = 0.0f64;
+        let mut batch_no = 0usize;
+        let mut trace = Vec::new();
+        let eval_every = (scale_s as usize / 3).max(1);
+        for _pass in 0..passes {
+            for mb in CorpusStream::new(&train, scfg) {
+                let t = Timer::start();
+                algo.process_minibatch(&mb);
+                train_secs += t.seconds();
+                batch_no += 1;
+                if batch_no % eval_every == 0 {
+                    let phi = algo.export_phi();
+                    let ppx = predictive_perplexity(
+                        &phi,
+                        &algo.eval_params(),
+                        &test.docs,
+                        &proto,
+                    );
+                    println!("  {train_secs:7.2}s  perplexity {ppx:8.1}");
+                    trace.push((train_secs, ppx));
+                }
+            }
+        }
+        let phi = algo.export_phi();
+        let ppx =
+            predictive_perplexity(&phi, &algo.eval_params(), &test.docs, &proto);
+        trace.push((train_secs, ppx));
+        println!("  final: {train_secs:.2}s, perplexity {ppx:.1}\n");
+        summary.push(Run { name: algo.name(), secs: train_secs, ppx, trace });
+    }
+
+    println!("== summary (K={k}, Ds={ds}, {passes} passes) ==");
+    // Fig. 12's comparison: time to reach a COMMON quality level — the
+    // best perplexity the weakest algorithm ever achieves.
+    let common_target = summary
+        .iter()
+        .map(|r| r.ppx)
+        .fold(f64::MIN, f64::max);
+    let time_to = |r: &Run| -> Option<f64> {
+        r.trace
+            .iter()
+            .find(|&&(_, p)| p <= common_target)
+            .map(|&(t, _)| t)
+    };
+    println!(
+        "{:<8} {:>12} {:>14} {:>22}",
+        "algo", "train time", "perplexity", "t->common quality"
+    );
+    for r in &summary {
+        println!(
+            "{:<8} {:>11.2}s {:>14.1} {:>21}",
+            r.name,
+            r.secs,
+            r.ppx,
+            time_to(r)
+                .map(|t| format!("{t:.2}s"))
+                .unwrap_or_else(|| "never".into())
+        );
+    }
+    let foem = summary.iter().find(|r| r.name == "FOEM").unwrap();
+    let scvb = summary.iter().find(|r| r.name == "SCVB").unwrap();
+    if let (Some(tf), Some(ts)) = (time_to(foem), time_to(scvb)) {
+        println!(
+            "\nFOEM reaches SCVB-final quality {:.1}x faster ({tf:.2}s vs {ts:.2}s)\n\
+             and ends {:.0} perplexity lower — the paper's Fig. 12 shape.",
+            ts / tf,
+            scvb.ppx - foem.ppx
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Lifelong topic modeling (§1, §3.2): an endless stream whose
+//! vocabulary GROWS over time (`W ← W+1` as unseen words arrive), with
+//! periodic checkpointing so the run can resume after a crash — the
+//! scenario the paper argues no fixed-W online LDA algorithm handles.
+//!
+//! The stream is simulated as a sequence of epochs, each drawn from a
+//! topic model over a progressively larger vocabulary (new terminology
+//! entering the discourse).
+//!
+//!     cargo run --release --example lifelong_stream
+
+use foem::corpus::synthetic::{generate, SyntheticConfig};
+use foem::em::foem::{Foem, FoemConfig};
+use foem::store::paged::PagedPhi;
+use foem::stream::{CorpusStream, StreamConfig};
+use foem::LdaParams;
+
+fn main() -> anyhow::Result<()> {
+    let k = 64usize;
+    let dir = foem::util::TempDir::new("lifelong");
+    let store_path = dir.path().join("phi.bin");
+    // Start with a minimal store; capacity grows with the vocabulary.
+    let p = LdaParams::paper_defaults(k);
+    let mut fc = FoemConfig::paper();
+    fc.open_vocabulary = true;
+    fc.hot_words = 128;
+    let mut algo = Foem::paged_create(p, &store_path, 1, 1 << 20, fc, 0)?;
+
+    println!("epoch | new vocab | effective W | train ppx | phi mass");
+    for epoch in 0..4u64 {
+        // Each epoch introduces fresh vocabulary: words are drawn from
+        // [0, 600*(epoch+1)).
+        let mut cfg = SyntheticConfig::small();
+        cfg.n_docs = 300;
+        cfg.n_words = 600 * (epoch as usize + 1);
+        cfg.name = format!("epoch-{epoch}");
+        let c = generate(&cfg, 1000 + epoch);
+        let scfg = StreamConfig { minibatch_docs: 100, ..Default::default() };
+        let mut last_ppx = f64::NAN;
+        for mb in CorpusStream::new(&c, scfg) {
+            last_ppx = algo.process_minibatch(&mb).train_perplexity();
+        }
+        println!(
+            "{epoch:>5} | {:>9} | {:>11} | {last_ppx:>9.1} | {:>9.0}",
+            c.n_words(),
+            algo.effective_w(),
+            algo.phisum_total()
+        );
+        // Checkpoint at epoch boundaries (fault tolerance).
+        algo.checkpoint_paged()?;
+        algo.store.checkpoint(algo.step, &algo.phisum)?;
+    }
+
+    // Simulated crash + restart: reopen the store and continue.
+    let (step, phisum) = PagedPhi::load_checkpoint(&store_path)?;
+    drop(algo);
+    let mut fc2 = FoemConfig::paper();
+    fc2.open_vocabulary = true;
+    let mut resumed = Foem::paged_open(p, &store_path, 1 << 20, fc2, 1)?;
+    resumed.step = step;
+    resumed.phisum = phisum;
+    println!(
+        "\nrestarted from checkpoint at step {step}; phi mass {:.0} preserved",
+        resumed.phisum_total()
+    );
+    let mut cfg = SyntheticConfig::small();
+    cfg.n_docs = 200;
+    cfg.n_words = 3000;
+    let c = generate(&cfg, 99);
+    let scfg = StreamConfig { minibatch_docs: 100, ..Default::default() };
+    for mb in CorpusStream::new(&c, scfg) {
+        resumed.process_minibatch(&mb);
+    }
+    println!(
+        "continued for {} more minibatches; final phi mass {:.0}",
+        resumed.step - step,
+        resumed.phisum_total()
+    );
+    Ok(())
+}

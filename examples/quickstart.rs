@@ -1,0 +1,45 @@
+//! Quickstart: train FOEM on a small synthetic corpus and print the
+//! predictive perplexity.
+//!
+//!     cargo run --release --example quickstart
+
+use foem::coordinator::config::RunConfig;
+use foem::coordinator::driver::Driver;
+use foem::corpus::synthetic::{generate, SyntheticConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A corpus. Real data: `foem::corpus::uci::load_docword(path)`.
+    let corpus = generate(&SyntheticConfig::small(), 42);
+    println!(
+        "corpus: {} docs, {} vocabulary words, {} tokens",
+        corpus.n_docs(),
+        corpus.n_words(),
+        corpus.n_tokens()
+    );
+
+    // 2. A run configuration. Defaults follow the paper (D_s = 1024,
+    //    alpha-1 = beta-1 = 0.01, lambda_k*K = 10 scheduled topics/word).
+    let cfg = RunConfig {
+        n_topics: 20,
+        minibatch_docs: 64,
+        eval_every: 1,
+        ..RunConfig::default()
+    };
+
+    // 3. Train. The driver splits off a test set, streams minibatches
+    //    through FOEM, and evaluates the paper's predictive perplexity
+    //    (Eq. 21).
+    let mut driver = Driver::new(cfg);
+    let report = driver.train_corpus(&corpus)?;
+
+    println!("\nperplexity trace (train seconds, predictive perplexity):");
+    for (t, p) in report.metrics.eval_trace() {
+        println!("  {t:7.2}s  {p:8.1}");
+    }
+    println!(
+        "\nfinal predictive perplexity: {:.1}  ({:.0} tokens/s)",
+        report.final_perplexity,
+        report.metrics.tokens_per_second()
+    );
+    Ok(())
+}

@@ -1,0 +1,156 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser on
+the Rust side (`HloModuleProto::from_text_file`) reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Emits one artifact per (graph, shape-variant) plus `manifest.json`
+describing every artifact's operands, shapes, and constants layout, which
+`rust/src/runtime/registry.rs` parses at startup.
+
+Run via `make artifacts`:  python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape variants compiled by default. The Rust coordinator pads any
+# workload onto the nearest variant (entry axis up, topic axis up with the
+# -(alpha-1) padding contract), so this small set covers every experiment:
+#   K in {64, 128, 256, 512}; entry blocks of 2048; SEM minibatch graphs
+#   sized for D_s<=1024 docs x 4096 entries x 2048 local words.
+ESTEP_VARIANTS = [
+    dict(b=2048, k=64),
+    dict(b=2048, k=128),
+    dict(b=2048, k=256),
+    dict(b=2048, k=512),
+]
+PREDICT_VARIANTS = [
+    dict(b=2048, k=64),
+    dict(b=2048, k=128),
+    dict(b=2048, k=256),
+    dict(b=2048, k=512),
+]
+SEM_VARIANTS = [
+    dict(b=4096, k=64, ds=1024, ws=2048, iters=8),
+    dict(b=4096, k=128, ds=1024, ws=2048, iters=8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_estep(v):
+    args = model.example_args_estep(v["b"], v["k"])
+    return jax.jit(model.estep_graph).lower(*args)
+
+
+def lower_predict(v):
+    args = model.example_args_predict(v["b"], v["k"])
+    return jax.jit(model.predict_ll_graph).lower(*args)
+
+
+def lower_sem(v):
+    args = model.example_args_sem(v["b"], v["k"], v["ds"], v["ws"])
+    fn = functools.partial(model.minibatch_sem_graph, n_iters=v["iters"])
+    return jax.jit(fn).lower(*args)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--out", default=None,
+                        help="legacy single-file mode: also write the first "
+                             "estep artifact to this path")
+    parser.add_argument("--skip-sem", action="store_true",
+                        help="skip the (slower to lower) SEM graphs")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": []}
+
+    def emit(name, lowered, entry):
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry.update(name=name, file=f"{name}.hlo.txt", bytes=len(text))
+        manifest["artifacts"].append(entry)
+        print(f"  {name}: {len(text)} chars")
+        return path
+
+    first_estep = None
+    for v in ESTEP_VARIANTS:
+        name = f"estep_b{v['b']}_k{v['k']}"
+        p = emit(name, lower_estep(v), {
+            "graph": "estep", "b": v["b"], "k": v["k"],
+            "operands": ["theta[b,k]", "phi[b,k]", "phisum[1,k]",
+                         "counts[b,1]", "consts[3]"],
+            "outputs": ["mu[b,k]", "xmu[b,k]"],
+            "consts": ["alpha-1", "beta-1", "W*(beta-1)"],
+        })
+        first_estep = first_estep or p
+
+    for v in PREDICT_VARIANTS:
+        name = f"predict_b{v['b']}_k{v['k']}"
+        emit(name, lower_predict(v), {
+            "graph": "predict", "b": v["b"], "k": v["k"],
+            "operands": ["theta[b,k]", "theta_tot[b,1]", "phi[b,k]",
+                         "phisum[1,k]", "counts[b,1]", "consts[4]"],
+            "outputs": ["ll[1,1]", "cnt[1,1]"],
+            "consts": ["alpha-1", "beta-1", "W*(beta-1)", "K*(alpha-1)"],
+        })
+
+    if not args.skip_sem:
+        for v in SEM_VARIANTS:
+            name = f"sem_b{v['b']}_k{v['k']}_ds{v['ds']}_ws{v['ws']}_t{v['iters']}"
+            emit(name, lower_sem(v), {
+                "graph": "sem", "b": v["b"], "k": v["k"], "ds": v["ds"],
+                "ws": v["ws"], "iters": v["iters"],
+                "operands": ["doc_ids[b,1]i32", "word_ids[b,1]i32",
+                             "counts[b,1]", "theta0[ds,k]",
+                             "phi_local[ws,k]", "phisum[1,k]", "consts[3]"],
+                "outputs": ["theta[ds,k]", "phi_delta[ws,k]", "ll[1,1]"],
+                "consts": ["alpha-1", "beta-1", "W*(beta-1)"],
+            })
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # Line-based manifest for the dependency-light Rust loader
+    # (rust/src/runtime/registry.rs): one artifact per line,
+    # space-separated `key=value` pairs.
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        for a in manifest["artifacts"]:
+            keys = ["name", "file", "graph", "b", "k", "ds", "ws", "iters"]
+            parts = [f"{key}={a[key]}" for key in keys if key in a]
+            f.write(" ".join(parts) + "\n")
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json "
+          f"to {args.out_dir}")
+
+    if args.out:
+        # Back-compat with the original Makefile target.
+        import shutil
+        shutil.copyfile(first_estep, args.out)
+        print(f"copied {first_estep} -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

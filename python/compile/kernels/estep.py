@@ -1,0 +1,257 @@
+"""L1 Pallas kernels: the blocked-dense LDA E-step hot-spot.
+
+The paper's inner loop (Fig. 1 line 5 / Fig. 4 line 11) evaluates, for every
+non-zero document-word entry, the responsibility
+
+    mu(k) ∝ (theta_d(k)+alpha-1)(phi_w(k)+beta-1) / (phisum(k)+W(beta-1))
+
+followed by normalization over k and the M-step weighting by the word count
+x_{w,d}.  On a GPU this would be a warp-per-entry elementwise+rowreduce; on
+TPU we re-think it as a VMEM-tiled [block_b, block_k] computation:
+
+  * grid axis 0 walks entry blocks (HBM→VMEM streaming of theta/phi rows),
+  * grid axis 1 walks topic tiles, so arbitrarily large K never exceeds
+    VMEM; the row normalizer is accumulated across topic tiles in a small
+    [block_b, 1] scratch accumulator and applied in a second grid pass
+    (classic two-pass softmax-style normalization, no atomics needed).
+
+There is no matmul in this op, so the MXU is idle by construction; the
+roofline is VPU/memory-bound.  Block sizes are chosen so that
+3 * block_b * block_k * 4B (theta, phi, u tiles) stays ≤ ~4 MiB — see
+DESIGN.md §Perf.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO so the AOT artifact runs
+on the Rust CPU client with identical numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Single-tile kernel: K fits in one VMEM tile (the common case: K ≤ 2048).
+# ---------------------------------------------------------------------------
+
+def _estep_kernel_single(theta_ref, phi_ref, phisum_ref, counts_ref,
+                         consts_ref, mu_ref, xmu_ref):
+    """One [block_b, K] tile: fused prior-product, normalize, weight.
+
+    consts_ref is a [3] vector (alpha-1, beta-1, W*(beta-1)) so the scalars
+    ride in as one tiny operand instead of three rank-0 params.
+    """
+    am1 = consts_ref[0]
+    bm1 = consts_ref[1]
+    wbm1 = consts_ref[2]
+    theta = theta_ref[...]
+    phi = phi_ref[...]
+    u = (theta + am1) * (phi + bm1) / (phisum_ref[...] + wbm1)
+    z = jnp.sum(u, axis=1, keepdims=True)
+    safe = jnp.where(z > 0.0, z, 1.0)
+    mu = jnp.where(z > 0.0, u / safe, 0.0)
+    mu_ref[...] = mu
+    xmu_ref[...] = counts_ref[...] * mu
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def estep_block(theta, phi, phisum, counts, consts, *, block_b=256):
+    """Blocked E-step over [B, K] gathered rows (single topic tile).
+
+    Args:
+      theta:  [B, K] f32 — gathered theta_hat rows (one per nnz entry).
+      phi:    [B, K] f32 — gathered phi_hat rows.
+      phisum: [1, K] f32 — topic totals (broadcast to every block).
+      counts: [B, 1] f32 — word counts.
+      consts: [3]    f32 — (alpha-1, beta-1, W*(beta-1)).
+      block_b: entry-block size; B must be a multiple (callers pad with
+        zero-count rows; the padding contract is tested).
+
+    Returns:
+      (mu, xmu): [B, K] responsibilities and count-weighted contributions.
+    """
+    b_dim, k_dim = theta.shape
+    block_b = min(block_b, b_dim)
+    assert b_dim % block_b == 0, (b_dim, block_b)
+    grid = (b_dim // block_b,)
+    return pl.pallas_call(
+        _estep_kernel_single,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, k_dim), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k_dim), lambda i: (i, 0)),
+            pl.BlockSpec((1, k_dim), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, k_dim), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k_dim), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_dim, k_dim), theta.dtype),
+            jax.ShapeDtypeStruct((b_dim, k_dim), theta.dtype),
+        ],
+        interpret=True,
+    )(theta, phi, phisum, counts, consts)
+
+
+# ---------------------------------------------------------------------------
+# Two-pass kernel: K tiled (big-model regime, K up to 10^5 in the paper).
+# ---------------------------------------------------------------------------
+
+def _prior_tile_kernel(theta_ref, phi_ref, phisum_ref, consts_ref,
+                       u_ref, zacc_ref):
+    """Pass 1 tile: unnormalized prior product u and per-row partial sums.
+
+    Grid is (B blocks, K tiles); for each row block the normalizer is
+    accumulated across the K-tile axis into zacc (the K-tile axis is the
+    *minor* grid axis, so accumulation is sequential per row block).
+    """
+    am1 = consts_ref[0]
+    bm1 = consts_ref[1]
+    wbm1 = consts_ref[2]
+    u = (theta_ref[...] + am1) * (phi_ref[...] + bm1) / (phisum_ref[...] + wbm1)
+    u_ref[...] = u
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        zacc_ref[...] = jnp.zeros_like(zacc_ref)
+
+    zacc_ref[...] += jnp.sum(u, axis=1, keepdims=True)
+
+
+def _normalize_tile_kernel(u_ref, zacc_ref, counts_ref, mu_ref, xmu_ref):
+    """Pass 2 tile: divide by the accumulated normalizer and weight."""
+    z = zacc_ref[...]
+    safe = jnp.where(z > 0.0, z, 1.0)
+    mu = jnp.where(z > 0.0, u_ref[...] / safe, 0.0)
+    mu_ref[...] = mu
+    xmu_ref[...] = counts_ref[...] * mu
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_k"))
+def estep_block_tiled(theta, phi, phisum, counts, consts, *,
+                      block_b=128, block_k=512):
+    """Blocked E-step with the topic axis tiled (two grid passes).
+
+    Semantically identical to `estep_block`; use when K is too large for a
+    single VMEM tile. Shapes as in `estep_block`; K must be a multiple of
+    block_k (pad topics per the `-(alpha-1)` contract in ref.py).
+    """
+    b_dim, k_dim = theta.shape
+    block_b = min(block_b, b_dim)
+    block_k = min(block_k, k_dim)
+    assert b_dim % block_b == 0 and k_dim % block_k == 0
+    grid = (b_dim // block_b, k_dim // block_k)
+
+    u, zacc = pl.pallas_call(
+        _prior_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_k), lambda i, j: (0, j)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_dim, k_dim), theta.dtype),
+            jax.ShapeDtypeStruct((b_dim, 1), theta.dtype),
+        ],
+        interpret=True,
+    )(theta, phi, phisum, consts)
+
+    return pl.pallas_call(
+        _normalize_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, block_k), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_dim, k_dim), theta.dtype),
+            jax.ShapeDtypeStruct((b_dim, k_dim), theta.dtype),
+        ],
+        interpret=True,
+    )(u, zacc, counts)
+
+
+# ---------------------------------------------------------------------------
+# Predictive log-likelihood kernel (Eq. 21 inner term).
+# ---------------------------------------------------------------------------
+
+def _predict_ll_kernel(theta_ref, theta_tot_ref, phi_ref, phisum_ref,
+                       counts_ref, consts_ref, ll_ref, cnt_ref):
+    """One [block_b, K] tile of the held-out word log-likelihood.
+
+    consts is [4]: (alpha-1, beta-1, W*(beta-1), K*(alpha-1)).
+    Accumulates scalar partials across the grid into [1,1] outputs.
+    """
+    am1 = consts_ref[0]
+    bm1 = consts_ref[1]
+    wbm1 = consts_ref[2]
+    kam1 = consts_ref[3]
+    theta_n = (theta_ref[...] + am1) / (theta_tot_ref[...] + kam1)
+    phi_n = (phi_ref[...] + bm1) / (phisum_ref[...] + wbm1)
+    p = jnp.sum(theta_n * phi_n, axis=1, keepdims=True)
+    p = jnp.maximum(p, 1e-30)
+    counts = counts_ref[...]
+    ll = jnp.sum(counts * jnp.log(p))
+    cnt = jnp.sum(counts)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    ll_ref[...] += ll
+    cnt_ref[...] += cnt
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def predict_ll_block(theta, theta_tot, phi, phisum, counts, consts, *,
+                     block_b=256):
+    """Held-out log-likelihood over a [B, K] block (see ref.predict_ll_ref).
+
+    theta_tot is [B, 1]; counts [B, 1] with 0 marking padded entries;
+    consts [4] = (alpha-1, beta-1, W*(beta-1), K*(alpha-1)).
+    Returns ([1,1] ll_sum, [1,1] count_sum).
+    """
+    b_dim, k_dim = theta.shape
+    block_b = min(block_b, b_dim)
+    assert b_dim % block_b == 0
+    grid = (b_dim // block_b,)
+    return pl.pallas_call(
+        _predict_ll_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, k_dim), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k_dim), lambda i: (i, 0)),
+            pl.BlockSpec((1, k_dim), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), theta.dtype),
+            jax.ShapeDtypeStruct((1, 1), theta.dtype),
+        ],
+        interpret=True,
+    )(theta, theta_tot, phi, phisum, counts, consts)

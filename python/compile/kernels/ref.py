@@ -1,0 +1,114 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the *correctness ground truth* for the whole stack: the Pallas
+kernels in `estep.py` are asserted allclose against these in
+`python/tests/test_kernel.py`, and the Rust native E-step is cross-checked
+against the AOT artifacts (which lower through the same code path) in
+`rust/tests/`.
+
+All formulas follow the paper "Fast Online EM for Big Topic Modeling"
+(Zeng, Liu, Cao; IEEE TKDE, DOI 10.1109/TKDE.2015.2492565):
+
+  E-step (Eq. 11):
+      mu_{w,d}(k) ∝ (theta_d(k) + alpha - 1) * (phi_w(k) + beta - 1)
+                    / (phisum(k) + W * (beta - 1))
+
+  M-step contribution:  x_{w,d} * mu_{w,d}(k)
+
+The kernels work on a *blocked dense* layout: a block of B "entries" (one
+entry = one non-zero (w, d) cell of the document-word matrix), each with a
+gathered row of document-topic stats `theta[B, K]`, a gathered row of
+topic-word stats `phi[B, K]`, the shared topic totals `phisum[K]`, and the
+word count `counts[B]`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def estep_ref(theta, phi, phisum, counts, alpha, beta, w_dim):
+    """Reference blocked E-step (Eq. 11) + M-step weights.
+
+    Args:
+      theta:  [B, K] gathered doc-topic sufficient statistics rows.
+      phi:    [B, K] gathered topic-word sufficient statistics rows.
+      phisum: [K]    topic totals  phisum(k) = sum_w phi_w(k).
+      counts: [B]    word counts x_{w,d} (float).
+      alpha, beta: Dirichlet hyperparameters (the paper uses the MAP
+        parameterization with `alpha - 1 = beta - 1 = 0.01`).
+      w_dim:  vocabulary size W used in the shared denominator.
+
+    Returns:
+      (mu, xmu): both [B, K]; `mu` rows are normalized responsibilities,
+      `xmu = counts[:, None] * mu` are the M-step contributions.
+
+    Padding contract: rows may be *topic-padded* by setting
+    `theta[:, k] = -(alpha - 1)` on padded columns, which zeroes the
+    numerator so padded topics get exactly zero responsibility.
+    """
+    am1 = alpha - 1.0
+    bm1 = beta - 1.0
+    u = (theta + am1) * (phi + bm1) / (phisum[None, :] + w_dim * bm1)
+    z = jnp.sum(u, axis=1, keepdims=True)
+    # Guard all-zero rows (fully padded entries): keep them exactly zero.
+    mu = jnp.where(z > 0.0, u / jnp.where(z > 0.0, z, 1.0), 0.0)
+    xmu = counts[:, None] * mu
+    return mu, xmu
+
+
+def predict_ll_ref(theta, theta_tot, phi, phisum, counts, alpha, beta, w_dim, k_dim):
+    """Reference predictive word log-likelihood block (for Eq. 21).
+
+    Normalizes sufficient statistics into multinomial parameters
+    (Eqs. 9 and 10) and evaluates
+
+        ll = sum_b counts_b * log( sum_k theta_d(k) * phi_w(k) )
+
+    Args:
+      theta:     [B, K] doc-topic stats rows for each entry's document.
+      theta_tot: [B]    per-document totals  sum_k theta_hat_d(k).
+      phi:       [B, K] topic-word stats rows for each entry's word.
+      phisum:    [K]    topic totals.
+      counts:    [B]    held-out word counts (0 for padded entries).
+      k_dim:     the *active* number of topics (for the theta normalizer).
+
+    Returns:
+      (ll_sum, count_sum): scalars; perplexity = exp(-ll_sum / count_sum)
+      once accumulated over every held-out entry.
+    """
+    am1 = alpha - 1.0
+    bm1 = beta - 1.0
+    theta_n = (theta + am1) / (theta_tot[:, None] + k_dim * am1)
+    phi_n = (phi + bm1) / (phisum[None, :] + w_dim * bm1)
+    p = jnp.sum(theta_n * phi_n, axis=1)
+    p = jnp.maximum(p, 1e-30)
+    ll = jnp.sum(counts * jnp.log(p))
+    return ll, jnp.sum(counts)
+
+
+def minibatch_sem_ref(doc_ids, word_ids, counts, theta0, phi_local, phisum,
+                      alpha, beta, w_dim, n_iters):
+    """Reference SEM inner loop (Fig. 3 lines 4-8) on one minibatch.
+
+    Holds the global topic-word stats fixed (`phi_local`, `phisum` are the
+    minibatch's gathered columns of phi_hat^{s-1}) and alternates the
+    blocked E-step with the local theta M-step for `n_iters` sweeps, then
+    emits the minibatch's phi-delta `sum_d x^s mu^s` for the global update
+    (Eq. 20 / Eq. 33).
+
+    Returns (theta, phi_delta, mu) where theta is [Ds, K], phi_delta is
+    [Ws_local, K] aligned with the gathered phi_local rows, mu is [B, K].
+    """
+    n_words = phi_local.shape[0]
+    theta = theta0
+    mu = jnp.zeros((doc_ids.shape[0], theta0.shape[1]), theta0.dtype)
+    for _ in range(n_iters):
+        th_rows = theta[doc_ids]
+        ph_rows = phi_local[word_ids]
+        mu, xmu = estep_ref(th_rows, ph_rows, phisum, counts, alpha, beta, w_dim)
+        theta = jnp.zeros_like(theta).at[doc_ids].add(xmu)
+    _, xmu = estep_ref(theta[doc_ids], phi_local[word_ids], phisum, counts,
+                       alpha, beta, w_dim)
+    phi_delta = jnp.zeros((n_words, theta.shape[1]), theta.dtype).at[word_ids].add(xmu)
+    return theta, phi_delta, mu

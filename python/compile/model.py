@@ -1,0 +1,141 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the Rust runtime.
+
+Three graph families, all built on the L1 Pallas kernels in
+`kernels/estep.py`:
+
+  * `estep_graph`         — one blocked E-step: (mu, xmu) from gathered rows.
+  * `minibatch_sem_graph` — the whole SEM inner loop (Fig. 3 lines 4-8) for
+    one minibatch: `n_iters` sweeps of E-step + local-theta M-step via
+    `lax.scan` (scan, not unroll, keeps the HLO small and lets XLA reuse
+    the loop body), then the phi-delta for the global update (Eq. 20/33).
+  * `predict_ll_graph`    — the held-out log-likelihood block for the
+    predictive perplexity (Eq. 21).
+
+Contract with the Rust side (`rust/src/runtime/`): Rust owns all sparse
+indexing and the parameter store; it gathers theta rows / phi columns into
+dense blocks, calls these graphs through PJRT, and scatters the results
+back.  Everything here is shape-static; Rust pads the entry axis with
+zero-count rows and the topic axis with the `-(alpha-1)` theta padding
+(see kernels/ref.py docstring), both of which produce exact zeros.
+
+Scalars (alpha, beta, W, K) arrive packed in small const vectors so each
+artifact stays a fixed-arity function of plain f32 arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import estep as kernels
+
+
+def estep_graph(theta, phi, phisum, counts, consts):
+    """One blocked E-step; exactly the L1 kernel, re-exported for AOT.
+
+    Shapes: theta/phi [B, K], phisum [1, K], counts [B, 1], consts [3].
+    Returns (mu, xmu) each [B, K].
+    """
+    return tuple(kernels.estep_block(theta, phi, phisum, counts, consts))
+
+
+def predict_ll_graph(theta, theta_tot, phi, phisum, counts, consts):
+    """Held-out LL block; consts [4]. Returns ([1,1] ll, [1,1] cnt)."""
+    return tuple(
+        kernels.predict_ll_block(theta, theta_tot, phi, phisum, counts, consts)
+    )
+
+
+def minibatch_sem_graph(doc_ids, word_ids, counts, theta0, phi_local, phisum,
+                        consts, *, n_iters):
+    """The SEM / FOEM-outer minibatch update as one fused XLA program.
+
+    Args:
+      doc_ids:   [B, 1] i32 — entry -> local document index (0..Ds-1).
+      word_ids:  [B, 1] i32 — entry -> local vocab index (0..Ws-1), i.e.
+        the row of `phi_local` that Rust gathered for that entry's word.
+      counts:    [B, 1] f32 — x_{w,d}; 0 marks padding entries.
+      theta0:    [Ds, K] f32 — initial doc-topic stats for the minibatch.
+      phi_local: [Ws, K] f32 — gathered columns of the global phi_hat^{s-1}.
+      phisum:    [1, K] f32 — global topic totals.
+      consts:    [3] f32 — (alpha-1, beta-1, W*(beta-1)).
+      n_iters:   static — number of inner E/M sweeps (the paper iterates
+        until the training-perplexity delta < 10; Rust picks n_iters per
+        its convergence check and can call this graph repeatedly).
+
+    Returns:
+      (theta, phi_delta, ll): [Ds, K] updated local doc-topic stats,
+      [Ws, K] minibatch phi contribution `sum_d x mu`, and [1, 1] the
+      training log-likelihood `sum x log(sum_k u)` for convergence checks.
+
+    Padding contract: padded entries carry counts==0 AND doc_ids/word_ids
+    pointing at dedicated scratch rows (Rust uses Ds-1/Ws-1), so their
+    zero xmu lands harmlessly.
+    """
+    n_words = phi_local.shape[0]
+    doc_ids_flat = doc_ids[:, 0]
+    word_ids_flat = word_ids[:, 0]
+
+    def body(theta, _):
+        th_rows = theta[doc_ids_flat]
+        ph_rows = phi_local[word_ids_flat]
+        _, xmu = kernels.estep_block(th_rows, ph_rows, phisum, counts, consts)
+        theta_new = jnp.zeros_like(theta).at[doc_ids_flat].add(xmu)
+        return theta_new, None
+
+    theta, _ = jax.lax.scan(body, theta0, None, length=n_iters)
+
+    th_rows = theta[doc_ids_flat]
+    ph_rows = phi_local[word_ids_flat]
+    _, xmu = kernels.estep_block(th_rows, ph_rows, phisum, counts, consts)
+    phi_delta = jnp.zeros((n_words, theta.shape[1]), theta.dtype) \
+        .at[word_ids_flat].add(xmu)
+
+    # Training LL for Rust's convergence check: sum x * log(sum_k u) with u
+    # the unnormalized prior product — the same quantity the paper's
+    # training-perplexity delta test tracks (constants cancel in the delta).
+    am1, bm1, wbm1 = consts[0], consts[1], consts[2]
+    u = (th_rows + am1) * (ph_rows + bm1) / (phisum + wbm1)
+    z = jnp.maximum(jnp.sum(u, axis=1, keepdims=True), 1e-30)
+    ll = jnp.sum(counts * jnp.log(z)).reshape(1, 1)
+    return theta, phi_delta, ll
+
+
+# ---------------------------------------------------------------------------
+# Example-argument builders used by aot.py (and mirrored by pytest).
+# ---------------------------------------------------------------------------
+
+def example_args_estep(b_dim, k_dim):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((b_dim, k_dim), f32),   # theta
+        jax.ShapeDtypeStruct((b_dim, k_dim), f32),   # phi
+        jax.ShapeDtypeStruct((1, k_dim), f32),       # phisum
+        jax.ShapeDtypeStruct((b_dim, 1), f32),       # counts
+        jax.ShapeDtypeStruct((3,), f32),             # consts
+    )
+
+
+def example_args_predict(b_dim, k_dim):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((b_dim, k_dim), f32),   # theta
+        jax.ShapeDtypeStruct((b_dim, 1), f32),       # theta_tot
+        jax.ShapeDtypeStruct((b_dim, k_dim), f32),   # phi
+        jax.ShapeDtypeStruct((1, k_dim), f32),       # phisum
+        jax.ShapeDtypeStruct((b_dim, 1), f32),       # counts
+        jax.ShapeDtypeStruct((4,), f32),             # consts
+    )
+
+
+def example_args_sem(b_dim, k_dim, ds_dim, ws_dim):
+    f32, i32 = jnp.float32, jnp.int32
+    return (
+        jax.ShapeDtypeStruct((b_dim, 1), i32),       # doc_ids
+        jax.ShapeDtypeStruct((b_dim, 1), i32),       # word_ids
+        jax.ShapeDtypeStruct((b_dim, 1), f32),       # counts
+        jax.ShapeDtypeStruct((ds_dim, k_dim), f32),  # theta0
+        jax.ShapeDtypeStruct((ws_dim, k_dim), f32),  # phi_local
+        jax.ShapeDtypeStruct((1, k_dim), f32),       # phisum
+        jax.ShapeDtypeStruct((3,), f32),             # consts
+    )

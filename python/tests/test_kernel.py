@@ -1,0 +1,183 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compiled hot path: everything
+the Rust runtime executes lowers through these kernels, so allclose here +
+the Rust-side artifact cross-check pins the whole stack's numerics.
+
+Hypothesis sweeps shapes/dtypes/hyperparameters; fixed seeds keep CI
+deterministic.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import estep, ref
+
+F32 = jnp.float32
+
+
+def make_inputs(rng, b, k, alpha, beta, w_dim, scale=5.0):
+    theta = jnp.asarray(rng.random((b, k)) * scale, F32)
+    phi = jnp.asarray(rng.random((b, k)) * scale, F32)
+    phisum = jnp.asarray(rng.random(k) * scale * 50 + 1.0, F32)
+    counts = jnp.asarray(rng.integers(1, 8, b), F32)
+    consts = jnp.array([alpha - 1, beta - 1, w_dim * (beta - 1)], F32)
+    return theta, phi, phisum, counts, consts
+
+
+class TestEstepSingle:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(0)
+        a, b_, w = 1.01, 1.01, 5000.0
+        th, ph, ps, c, consts = make_inputs(rng, 512, 128, a, b_, w)
+        mu, xmu = estep.estep_block(th, ph, ps[None, :], c[:, None], consts)
+        mur, xmur = ref.estep_ref(th, ph, ps, c, a, b_, w)
+        np.testing.assert_allclose(mu, mur, atol=1e-5)
+        np.testing.assert_allclose(xmu, xmur, atol=1e-4)
+
+    def test_rows_normalized(self):
+        rng = np.random.default_rng(1)
+        th, ph, ps, c, consts = make_inputs(rng, 256, 64, 1.01, 1.01, 1000.0)
+        mu, _ = estep.estep_block(th, ph, ps[None, :], c[:, None], consts)
+        np.testing.assert_allclose(np.sum(np.asarray(mu), axis=1), 1.0,
+                                   atol=1e-5)
+
+    def test_nonnegative(self):
+        rng = np.random.default_rng(2)
+        th, ph, ps, c, consts = make_inputs(rng, 256, 64, 1.01, 1.01, 1000.0)
+        mu, xmu = estep.estep_block(th, ph, ps[None, :], c[:, None], consts)
+        assert np.all(np.asarray(mu) >= 0)
+        assert np.all(np.asarray(xmu) >= 0)
+
+    def test_zero_count_padding_rows(self):
+        """Padded entries (count 0) must contribute exactly zero xmu."""
+        rng = np.random.default_rng(3)
+        th, ph, ps, c, consts = make_inputs(rng, 256, 64, 1.01, 1.01, 1000.0)
+        c = c.at[100:].set(0.0)
+        _, xmu = estep.estep_block(th, ph, ps[None, :], c[:, None], consts)
+        assert np.all(np.asarray(xmu)[100:] == 0.0)
+
+    def test_topic_padding_contract(self):
+        """theta = -(alpha-1) on padded topic columns -> mu exactly 0 there."""
+        rng = np.random.default_rng(4)
+        a = 1.01
+        th, ph, ps, c, consts = make_inputs(rng, 256, 64, a, 1.01, 1000.0)
+        th = th.at[:, 48:].set(-(a - 1.0))
+        mu, _ = estep.estep_block(th, ph, ps[None, :], c[:, None], consts)
+        mu = np.asarray(mu)
+        assert np.all(mu[:, 48:] == 0.0)
+        np.testing.assert_allclose(mu.sum(axis=1), 1.0, atol=1e-5)
+
+    def test_fully_padded_row_is_zero(self):
+        rng = np.random.default_rng(5)
+        a = 1.01
+        th, ph, ps, c, consts = make_inputs(rng, 128, 32, a, 1.01, 1000.0)
+        th = th.at[7].set(-(a - 1.0))
+        mu, xmu = estep.estep_block(th, ph, ps[None, :], c[:, None], consts)
+        assert np.all(np.asarray(mu)[7] == 0.0)
+        assert np.all(np.asarray(xmu)[7] == 0.0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b_blocks=st.integers(1, 4),
+        block_b=st.sampled_from([8, 32, 128]),
+        k=st.sampled_from([4, 16, 64, 200]),
+        alpha=st.sampled_from([1.01, 1.1, 1.5, 2.0]),
+        beta=st.sampled_from([1.01, 1.1, 1.5]),
+        w_dim=st.sampled_from([100.0, 5000.0, 100000.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_sweep(self, b_blocks, block_b, k, alpha, beta,
+                               w_dim, seed):
+        rng = np.random.default_rng(seed)
+        b = b_blocks * block_b
+        th, ph, ps, c, consts = make_inputs(rng, b, k, alpha, beta, w_dim)
+        mu, xmu = estep.estep_block(th, ph, ps[None, :], c[:, None], consts,
+                                    block_b=block_b)
+        mur, xmur = ref.estep_ref(th, ph, ps, c, alpha, beta, w_dim)
+        np.testing.assert_allclose(mu, mur, atol=2e-5)
+        np.testing.assert_allclose(xmu, xmur, atol=2e-4)
+
+
+class TestEstepTiled:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        block_b=st.sampled_from([16, 64]),
+        b_blocks=st.integers(1, 3),
+        block_k=st.sampled_from([8, 32]),
+        k_blocks=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_tiled_matches_single(self, block_b, b_blocks, block_k, k_blocks,
+                                  seed):
+        rng = np.random.default_rng(seed)
+        b, k = block_b * b_blocks, block_k * k_blocks
+        a, be, w = 1.01, 1.01, 10000.0
+        th, ph, ps, c, consts = make_inputs(rng, b, k, a, be, w)
+        mu1, xmu1 = estep.estep_block(th, ph, ps[None, :], c[:, None], consts,
+                                      block_b=block_b)
+        mu2, xmu2 = estep.estep_block_tiled(
+            th, ph, ps[None, :], c[:, None], consts,
+            block_b=block_b, block_k=block_k)
+        np.testing.assert_allclose(mu2, mu1, atol=2e-5)
+        np.testing.assert_allclose(xmu2, xmu1, atol=2e-4)
+
+    def test_big_k_tiling(self):
+        rng = np.random.default_rng(11)
+        a, be, w = 1.01, 1.01, 50000.0
+        th, ph, ps, c, consts = make_inputs(rng, 128, 2048, a, be, w)
+        mu, _ = estep.estep_block_tiled(th, ph, ps[None, :], c[:, None],
+                                        consts, block_b=64, block_k=256)
+        mur, _ = ref.estep_ref(th, ph, ps, c, a, be, w)
+        np.testing.assert_allclose(mu, mur, atol=2e-5)
+
+
+class TestPredictLL:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(20)
+        b, k, a, be, w = 512, 96, 1.01, 1.01, 7000.0
+        th, ph, ps, c, _ = make_inputs(rng, b, k, a, be, w)
+        tt = jnp.sum(th, axis=1, keepdims=True)
+        consts = jnp.array([a - 1, be - 1, w * (be - 1), k * (a - 1)], F32)
+        ll, cnt = estep.predict_ll_block(th, tt, ph, ps[None, :], c[:, None],
+                                         consts)
+        llr, cntr = ref.predict_ll_ref(th, tt[:, 0], ph, ps, c, a, be, w, k)
+        np.testing.assert_allclose(float(ll[0, 0]), float(llr), rtol=1e-4)
+        np.testing.assert_allclose(float(cnt[0, 0]), float(cntr), rtol=1e-6)
+
+    def test_zero_counts_contribute_nothing(self):
+        rng = np.random.default_rng(21)
+        b, k, a, be, w = 256, 32, 1.01, 1.01, 1000.0
+        th, ph, ps, c, _ = make_inputs(rng, b, k, a, be, w)
+        tt = jnp.sum(th, axis=1, keepdims=True)
+        consts = jnp.array([a - 1, be - 1, w * (be - 1), k * (a - 1)], F32)
+        ll_all, _ = estep.predict_ll_block(th, tt, ph, ps[None, :],
+                                           c[:, None], consts)
+        c2 = c.at[128:].set(0.0)
+        ll_half, _ = estep.predict_ll_block(th, tt, ph, ps[None, :],
+                                            c2[:, None], consts)
+        llr, _ = ref.predict_ll_ref(th, tt[:, 0], ph, ps, c2, a, be, w, k)
+        np.testing.assert_allclose(float(ll_half[0, 0]), float(llr),
+                                   rtol=1e-4)
+        assert float(ll_half[0, 0]) != pytest.approx(float(ll_all[0, 0]))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        block_b=st.sampled_from([32, 128]),
+        b_blocks=st.integers(1, 3),
+        k=st.sampled_from([8, 64, 300]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_sweep(self, block_b, b_blocks, k, seed):
+        rng = np.random.default_rng(seed)
+        b, a, be, w = block_b * b_blocks, 1.01, 1.01, 20000.0
+        th, ph, ps, c, _ = make_inputs(rng, b, k, a, be, w)
+        tt = jnp.sum(th, axis=1, keepdims=True)
+        consts = jnp.array([a - 1, be - 1, w * (be - 1), k * (a - 1)], F32)
+        ll, cnt = estep.predict_ll_block(th, tt, ph, ps[None, :],
+                                         c[:, None], consts, block_b=block_b)
+        llr, cntr = ref.predict_ll_ref(th, tt[:, 0], ph, ps, c, a, be, w, k)
+        np.testing.assert_allclose(float(ll[0, 0]), float(llr), rtol=2e-4)
+        np.testing.assert_allclose(float(cnt[0, 0]), float(cntr), rtol=1e-6)

@@ -1,0 +1,99 @@
+//! End-to-end minibatch benchmarks — one per paper table/figure family:
+//! per-minibatch cost of every algorithm at fixed K (Fig. 8's time axis),
+//! FOEM across K (Fig. 10's flat-in-K claim), and FOEM with the paged
+//! store across buffer sizes (Table 5).
+//!
+//! (`expfig` runs the full sweeps with convergence + perplexity; these
+//! benches isolate steady-state per-minibatch cost for profiling.)
+//!
+//!     cargo bench --bench end_to_end
+
+use foem::coordinator::config::{Algorithm, RunConfig, StoreKind};
+use foem::coordinator::driver::Driver;
+use foem::corpus::synthetic::{generate, SyntheticConfig};
+use foem::em::foem::{Foem, FoemConfig};
+use foem::store::InMemoryPhi;
+use foem::stream::{CorpusStream, StreamConfig};
+use foem::util::bench::{black_box, run};
+use foem::LdaParams;
+use std::time::Duration;
+
+fn main() {
+    let mut cfg = SyntheticConfig::enron_like();
+    cfg.n_docs = 512;
+    let corpus = generate(&cfg, 5);
+    let scfg = StreamConfig { minibatch_docs: 256, ..Default::default() };
+    let batches: Vec<_> = CorpusStream::new(&corpus, scfg).collect();
+    let scale = batches.len() as f64;
+
+    println!("== per-minibatch cost, K=64 (all algorithms) ==");
+    for algo_kind in Algorithm::all() {
+        let rc = RunConfig {
+            algorithm: algo_kind,
+            n_topics: 64,
+            minibatch_docs: 256,
+            store: StoreKind::InMemory,
+            seed: 1,
+            ..RunConfig::default()
+        };
+        let mut algo = Driver::new(rc)
+            .build_algorithm(corpus.n_words(), scale)
+            .unwrap();
+        let mut i = 0usize;
+        run(
+            &format!("minibatch_{}", algo_kind.name()),
+            Duration::from_secs(2),
+            || {
+                let r = algo.process_minibatch(&batches[i % batches.len()]);
+                i += 1;
+                black_box(r.inner_iters);
+            },
+        );
+    }
+
+    println!("\n== FOEM per-minibatch cost vs K (flat-in-K claim) ==");
+    for &k in &[64usize, 128, 256, 512, 1024] {
+        let p = LdaParams::paper_defaults(k);
+        let mut fc = FoemConfig::paper();
+        fc.exact_ll = false;
+        fc.max_inner_iters = 10;
+        let mut algo =
+            Foem::new(p, InMemoryPhi::zeros(k, corpus.n_words()), fc, 1);
+        let mut i = 0usize;
+        run(&format!("foem_k{k}"), Duration::from_secs(2), || {
+            let r = algo.process_minibatch(&batches[i % batches.len()]);
+            i += 1;
+            black_box(r.inner_iters);
+        });
+    }
+
+    println!("\n== FOEM + paged store vs buffer size, K=256 (Table 5) ==");
+    let k = 256usize;
+    for &buf_cols in &[1usize, 64, 512, corpus.n_words()] {
+        let dir = foem::util::TempDir::new("bench-e2e");
+        let p = LdaParams::paper_defaults(k);
+        let mut fc = FoemConfig::paper();
+        fc.exact_ll = false;
+        fc.max_inner_iters = 10;
+        fc.hot_words = buf_cols;
+        let mut algo = Foem::paged_create(
+            p,
+            &dir.path().join("phi.bin"),
+            corpus.n_words(),
+            buf_cols * k * 4 * 2,
+            fc,
+            1,
+        )
+        .unwrap();
+        let mut i = 0usize;
+        run(
+            &format!("foem_paged_buf{buf_cols}"),
+            Duration::from_secs(2),
+            || {
+                let r = algo.process_minibatch(&batches[i % batches.len()]);
+                i += 1;
+                black_box(r.inner_iters);
+            },
+        );
+    }
+}

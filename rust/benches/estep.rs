@@ -1,0 +1,120 @@
+//! Microbenchmarks of the E-step hot paths (the `2K` inner loop of
+//! Table 3) — native Rust per-entry E-step across K, the FOEM scheduled
+//! variant (cost ~flat in K), and the PJRT-executed AOT kernel when
+//! artifacts are present.
+//!
+//!     cargo bench --bench estep
+
+use foem::util::bench::{black_box, run};
+use foem::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(800);
+    println!("== E-step per-entry cost vs K (native, full K) ==");
+    for &k in &[64usize, 128, 256, 512, 1024] {
+        let mut rng = Rng::new(1);
+        let theta: Vec<f32> = (0..k).map(|_| rng.next_f32() * 4.0).collect();
+        let phi: Vec<f32> = (0..k).map(|_| rng.next_f32() * 2.0).collect();
+        let phisum: Vec<f32> =
+            (0..k).map(|_| rng.next_f32() * 100.0 + 1.0).collect();
+        let mut mu = vec![0.0f32; k];
+        run(&format!("estep_full_k{k}"), budget, || {
+            let z = foem::em::estep_unnormalized(
+                black_box(&theta),
+                black_box(&phi),
+                black_box(&phisum),
+                0.01,
+                0.01,
+                50.0,
+                &mut mu,
+            );
+            black_box(z);
+        });
+    }
+
+    println!("\n== FOEM scheduled E-step: 10 topics regardless of K ==");
+    for &k in &[64usize, 256, 1024, 4096] {
+        let mut rng = Rng::new(2);
+        let theta: Vec<f32> = (0..k).map(|_| rng.next_f32() * 4.0).collect();
+        let mut phi: Vec<f32> = (0..k).map(|_| rng.next_f32() * 2.0).collect();
+        let mut phisum: Vec<f32> =
+            (0..k).map(|_| rng.next_f32() * 100.0 + 1.0).collect();
+        let mut mu = vec![0.0f32; k];
+        // seed mu as a distribution
+        let z: f32 = k as f32;
+        mu.iter_mut().for_each(|m| *m = 1.0 / z);
+        let sel: Vec<u32> = (0..10u32.min(k as u32)).collect();
+        let mut theta_l = theta.clone();
+        let c = 2.0f32;
+        run(&format!("estep_sched10_k{k}"), budget, || {
+            // The FOEM inner update on a 10-topic subset (exclude,
+            // recompute, Eq. 38 renormalize, include).
+            let mut m_old = 0.0f32;
+            for &kk in &sel {
+                m_old += mu[kk as usize];
+            }
+            let mut scratch = [0.0f32; 10];
+            let mut zs = 0.0f32;
+            for (j, &kk) in sel.iter().enumerate() {
+                let kk = kk as usize;
+                let excl = c * mu[kk];
+                let u = (theta_l[kk] - excl + 0.01)
+                    * (phi[kk] - excl + 0.01)
+                    / (phisum[kk] - excl + 50.0);
+                scratch[j] = u.max(0.0);
+                zs += scratch[j];
+            }
+            let renorm = m_old / zs.max(1e-30);
+            for (j, &kk) in sel.iter().enumerate() {
+                let kk = kk as usize;
+                let new = scratch[j] * renorm;
+                let delta = c * (new - mu[kk]);
+                theta_l[kk] += delta;
+                phi[kk] += delta;
+                phisum[kk] += delta;
+                mu[kk] = new;
+            }
+            black_box(&mu);
+        });
+    }
+
+    // PJRT path (blocked dense E-step through the AOT artifact).
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        println!("\n== PJRT-executed AOT kernel (per [B,K] block) ==");
+        let mut exec = foem::runtime::Executor::new(dir).unwrap();
+        for k in [64usize, 128, 256] {
+            let Some(meta) = exec.estep_variant_for(k) else { continue };
+            if meta.k != k {
+                continue;
+            }
+            let (b, kk) = (meta.b, meta.k);
+            let mut rng = Rng::new(3);
+            let theta: Vec<f32> =
+                (0..b * kk).map(|_| rng.next_f32() * 4.0).collect();
+            let phi: Vec<f32> =
+                (0..b * kk).map(|_| rng.next_f32() * 2.0).collect();
+            let phisum: Vec<f32> =
+                (0..kk).map(|_| rng.next_f32() * 100.0 + 1.0).collect();
+            let counts: Vec<f32> =
+                (0..b).map(|_| (rng.below(5) + 1) as f32).collect();
+            let name = meta.name.clone();
+            run(
+                &format!("pjrt_estep_b{b}_k{kk}"),
+                Duration::from_secs(2),
+                || {
+                    let out = exec
+                        .run_estep(
+                            &name, &theta, &phi, &phisum, &counts, 0.01,
+                            0.01, 50.0,
+                        )
+                        .unwrap();
+                    black_box(out.mu.len());
+                },
+            );
+        }
+    } else {
+        println!("\n(skipping PJRT benches: run `make artifacts`)");
+    }
+}

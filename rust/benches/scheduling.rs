@@ -1,0 +1,57 @@
+//! Benchmarks of the dynamic scheduler (§3.1): the `O(K)` partial
+//! top-lambda_k selection vs a full sort, and residual bookkeeping.
+//!
+//!     cargo bench --bench scheduling
+
+use foem::em::schedule::{ResidualScheduler, TopicSubset};
+use foem::util::bench::{black_box, run};
+use foem::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(600);
+    println!("== top-10 topic selection: partial select vs full sort ==");
+    for &k in &[64usize, 256, 1024, 4096, 16384] {
+        let mut rng = Rng::new(1);
+        let res: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+        let mut sched = ResidualScheduler::new(k, 1);
+        sched.set_word_residuals(0, &res);
+        run(&format!("partial_select_k{k}"), budget, || {
+            let top = sched.top_topics(0, TopicSubset::Fixed(10));
+            black_box(top[0]);
+        });
+        let res2 = res.clone();
+        run(&format!("full_sort_k{k}"), budget, || {
+            let mut idx: Vec<u32> = (0..k as u32).collect();
+            idx.sort_unstable_by(|&a, &b| {
+                res2[b as usize].partial_cmp(&res2[a as usize]).unwrap()
+            });
+            black_box(idx[0]);
+        });
+    }
+
+    println!("\n== per-sweep word ordering (W_s local words) ==");
+    for &ws in &[512usize, 2048, 8192] {
+        let mut rng = Rng::new(2);
+        let mut sched = ResidualScheduler::new(8, ws);
+        for lw in 0..ws {
+            let res: Vec<f32> = (0..8).map(|_| rng.next_f32()).collect();
+            sched.set_word_residuals(lw, &res);
+        }
+        run(&format!("word_order_ws{ws}"), budget, || {
+            let order = sched.word_order(1.0);
+            black_box(order.len());
+        });
+    }
+
+    println!("\n== residual update (accumulate + overwrite) ==");
+    for &k in &[256usize, 1024] {
+        let mut rng = Rng::new(3);
+        let mut sched = ResidualScheduler::new(k, 64);
+        let fresh: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+        run(&format!("residual_set_k{k}"), budget, || {
+            sched.set_word_residuals(7, black_box(&fresh));
+            black_box(sched.word_total(7));
+        });
+    }
+}

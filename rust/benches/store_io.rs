@@ -1,0 +1,83 @@
+//! Benchmarks of the parameter-streaming store (§3.2 / Table 5): column
+//! access cost for buffered vs streamed columns, hot-set replacement,
+//! and the in-memory reference.
+//!
+//!     cargo bench --bench store_io
+
+use foem::store::paged::PagedPhi;
+use foem::store::{InMemoryPhi, PhiColumnStore};
+use foem::util::bench::{black_box, run};
+use foem::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(800);
+    let k = 1024usize;
+    let w = 4096usize;
+
+    println!("== column read-modify-write, K={k} ==");
+    {
+        let mut s = InMemoryPhi::zeros(k, w);
+        let mut rng = Rng::new(1);
+        run("in_memory_column", budget, || {
+            let wid = rng.below(w);
+            s.with_column(wid, |c| c[3] += 1.0);
+            black_box(wid);
+        });
+    }
+    {
+        let dir = foem::util::TempDir::new("bench-miss");
+        let mut s =
+            PagedPhi::create(&dir.path().join("phi.bin"), k, w, k * 4).unwrap();
+        let mut rng = Rng::new(2);
+        run("paged_column_miss (read+write disk)", budget, || {
+            let wid = rng.below(w);
+            s.with_column(wid, |c| c[3] += 1.0);
+            black_box(wid);
+        });
+    }
+    {
+        let dir = foem::util::TempDir::new("bench-hit");
+        let mut s =
+            PagedPhi::create(&dir.path().join("phi.bin"), k, w, 64 * k * 4)
+                .unwrap();
+        let hot: Vec<u32> = (0..64).collect();
+        s.set_hot_words(&hot);
+        let mut rng = Rng::new(3);
+        run("paged_column_hit (buffered)", budget, || {
+            let wid = rng.below(64);
+            s.with_column(wid, |c| c[3] += 1.0);
+            black_box(wid);
+        });
+    }
+
+    println!("\n== hot-set replacement (64 columns) ==");
+    {
+        let dir = foem::util::TempDir::new("bench-hot");
+        let mut s =
+            PagedPhi::create(&dir.path().join("phi.bin"), k, w, 64 * k * 4)
+                .unwrap();
+        let mut rng = Rng::new(4);
+        run("set_hot_words_64", Duration::from_millis(1500), || {
+            let hot: Vec<u32> =
+                (0..64).map(|_| rng.below(w) as u32).collect();
+            s.set_hot_words(&hot);
+            black_box(&s);
+        });
+    }
+
+    println!("\n== checkpoint + reopen, K={k} W={w} ==");
+    {
+        let dir = foem::util::TempDir::new("bench-ckpt");
+        let path = dir.path().join("phi.bin");
+        let mut s = PagedPhi::create(&path, k, w, 16 * k * 4).unwrap();
+        let phisum = vec![1.0f32; k];
+        run("checkpoint", Duration::from_millis(1500), || {
+            s.checkpoint(1, &phisum).unwrap();
+        });
+        run("reopen", Duration::from_millis(1500), || {
+            let s2 = PagedPhi::open(&path, 16 * k * 4).unwrap();
+            black_box(s2.n_words());
+        });
+    }
+}

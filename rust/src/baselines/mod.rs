@@ -1,0 +1,165 @@
+//! The five state-of-the-art online-LDA baselines the paper compares
+//! against (§4.3), plus the common [`OnlineLda`] trait the experiment
+//! harness drives:
+//!
+//! | paper | module | family |
+//! |---|---|---|
+//! | OGS  (Yao et al., KDD'09)       | [`ogs`]  | collapsed Gibbs |
+//! | OVB  (Hoffman et al., NIPS'10)  | [`ovb`]  | variational Bayes |
+//! | RVB  (Wahabzada & Kersting '11) | [`rvb`]  | VB + residual scheduling |
+//! | SOI  (Mimno et al., ICML'12)    | [`soi`]  | hybrid VB/Gibbs |
+//! | SCVB (Foulds et al., KDD'13)    | [`scvb`] | stochastic CVB0 (≡ SEM) |
+//!
+//! All of them are *online*: constant memory in the stream length,
+//! one-look-per-minibatch, global state only in the K×W topic-word
+//! statistics. The paper's claims that we reproduce (Figs. 8-12):
+//! FOEM/OGS/SCVB converge faster and to lower perplexity than
+//! OVB/RVB/SOI, and only FOEM's cost is ~flat in K.
+
+pub mod ogs;
+pub mod ovb;
+pub mod rvb;
+pub mod scvb;
+pub mod soi;
+pub mod special;
+
+use crate::em::{MinibatchReport, PhiStats};
+use crate::stream::Minibatch;
+use crate::LdaParams;
+
+/// Uniform driver interface over every online algorithm in the crate
+/// (FOEM, SEM and the five baselines).
+pub trait OnlineLda {
+    /// Short name used in experiment tables ("FOEM", "OVB", ...).
+    fn name(&self) -> &'static str;
+
+    /// The model hyperparameters the algorithm was built with.
+    fn params(&self) -> &LdaParams;
+
+    /// Consume one minibatch of the stream.
+    fn process_minibatch(&mut self, mb: &Minibatch) -> MinibatchReport;
+
+    /// Export the global topic-word sufficient statistics for evaluation.
+    fn export_phi(&mut self) -> PhiStats;
+
+    /// The smoothing parameters the *evaluator* should use to normalize
+    /// the exported statistics (Eqs. 9/10 form). EM-family algorithms use
+    /// `alpha-1 = beta-1 = 0.01`; GS/CVB-family statistics are smoothed
+    /// with `+alpha/+beta` instead, which is the same formula with the
+    /// hyperparameters shifted by one.
+    fn eval_params(&self) -> LdaParams {
+        *self.params()
+    }
+
+    /// Persist restartable state (paged-store FOEM overrides this; other
+    /// algorithms are memory-resident and checkpoint by re-export).
+    fn checkpoint(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Cumulative store I/O, when the algorithm streams parameters.
+    fn io_stats(&self) -> Option<crate::store::IoStats> {
+        None
+    }
+}
+
+impl OnlineLda for crate::em::sem::Sem {
+    fn name(&self) -> &'static str {
+        "SEM"
+    }
+
+    fn params(&self) -> &LdaParams {
+        &self.params
+    }
+
+    fn process_minibatch(&mut self, mb: &Minibatch) -> MinibatchReport {
+        crate::em::sem::Sem::process_minibatch(self, mb)
+    }
+
+    fn export_phi(&mut self) -> PhiStats {
+        self.phi.clone()
+    }
+}
+
+impl<S: crate::store::PhiColumnStore> OnlineLda for crate::em::foem::Foem<S> {
+    fn name(&self) -> &'static str {
+        "FOEM"
+    }
+
+    fn params(&self) -> &LdaParams {
+        &self.params
+    }
+
+    fn process_minibatch(&mut self, mb: &Minibatch) -> MinibatchReport {
+        crate::em::foem::Foem::process_minibatch(self, mb)
+    }
+
+    fn export_phi(&mut self) -> PhiStats {
+        crate::em::foem::Foem::export_phi(self)
+    }
+
+    fn checkpoint(&mut self) -> anyhow::Result<()> {
+        self.store.flush()?;
+        self.res_store.flush()
+    }
+
+    fn io_stats(&self) -> Option<crate::store::IoStats> {
+        Some(self.store.io_stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, SyntheticConfig};
+    use crate::em::foem::{Foem, FoemConfig};
+    use crate::em::sem::{Sem, SemConfig};
+    use crate::store::InMemoryPhi;
+    use crate::stream::{CorpusStream, StreamConfig};
+
+    /// Every algorithm must run a small stream end-to-end through the
+    /// trait object interface and export a usable phi.
+    #[test]
+    fn trait_drives_all_algorithms() {
+        let c = generate(&SyntheticConfig::small(), 21);
+        let k = 5;
+        let p = LdaParams::paper_defaults(k);
+        let scfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+        let s = CorpusStream::new(&c, scfg).batches_per_pass() as f64;
+
+        let mut algos: Vec<Box<dyn OnlineLda>> = vec![
+            Box::new(Sem::new(p, c.n_words(), SemConfig::paper(s), 0)),
+            Box::new(Foem::new(
+                p,
+                InMemoryPhi::zeros(k, c.n_words()),
+                FoemConfig::paper(),
+                0,
+            )),
+            Box::new(ovb::Ovb::new(k, c.n_words(), ovb::OvbConfig::paper(s), 0)),
+            Box::new(ogs::Ogs::new(k, c.n_words(), ogs::OgsConfig::paper(s), 0)),
+            Box::new(scvb::Scvb::new(k, c.n_words(), scvb::ScvbConfig::paper(s), 0)),
+            Box::new(rvb::Rvb::new(k, c.n_words(), rvb::RvbConfig::paper(s), 0)),
+            Box::new(soi::Soi::new(k, c.n_words(), soi::SoiConfig::paper(s), 0)),
+        ];
+        for algo in &mut algos {
+            for mb in CorpusStream::new(&c, scfg) {
+                let r = algo.process_minibatch(&mb);
+                assert!(r.seconds >= 0.0);
+                assert!(r.tokens > 0.0, "{}", algo.name());
+            }
+            let phi = algo.export_phi();
+            assert_eq!(phi.k, k, "{}", algo.name());
+            assert!(
+                phi.total_mass() > 0.0,
+                "{} exported empty phi",
+                algo.name()
+            );
+            // No NaNs anywhere.
+            assert!(
+                phi.raw().iter().all(|x| x.is_finite()),
+                "{} produced non-finite phi",
+                algo.name()
+            );
+        }
+    }
+}

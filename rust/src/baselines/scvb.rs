@@ -1,0 +1,122 @@
+//! Stochastic Collapsed Variational Bayes (SCVB0) — the paper's "SCVB"
+//! comparator (Foulds et al., KDD 2013).
+//!
+//! §2.5 of the paper observes that SCVB's zero-order update *is* SEM with
+//! the CVB0 responsibility, i.e. the Eq. 11 E-step with the
+//! hyperparameters un-shifted: `(theta+alpha)(phi+beta)/(phisum+W*beta)`
+//! instead of the MAP `alpha-1 / beta-1` offsets.  We therefore implement
+//! SCVB as the SEM core running with `LdaParams{alpha: 1+alpha_cvb,
+//! beta: 1+beta_cvb}` (so `am1 = alpha_cvb`), which reproduces its
+//! convergence behavior exactly while sharing the tested SEM machinery.
+
+use super::OnlineLda;
+use crate::em::sem::{LearningRate, Sem, SemConfig};
+use crate::em::{MinibatchReport, PhiStats};
+use crate::stream::Minibatch;
+use crate::LdaParams;
+
+/// SCVB hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ScvbConfig {
+    pub alpha: f32,
+    pub beta: f32,
+    pub rate: LearningRate,
+    pub scale_s: f64,
+    pub max_inner_iters: usize,
+}
+
+impl ScvbConfig {
+    pub fn paper(scale_s: f64) -> Self {
+        Self {
+            alpha: 0.01,
+            beta: 0.01,
+            rate: LearningRate::paper(),
+            scale_s,
+            max_inner_iters: 100,
+        }
+    }
+}
+
+/// SCVB0 trainer (SEM core with CVB0 responsibilities).
+pub struct Scvb {
+    inner: Sem,
+}
+
+impl Scvb {
+    pub fn new(k: usize, n_words: usize, cfg: ScvbConfig, seed: u64) -> Self {
+        let params = LdaParams {
+            n_topics: k,
+            alpha: 1.0 + cfg.alpha,
+            beta: 1.0 + cfg.beta,
+        };
+        let sem_cfg = SemConfig {
+            rate: cfg.rate,
+            scale_s: cfg.scale_s,
+            threshold: 10.0,
+            check_every: 1,
+            max_inner_iters: cfg.max_inner_iters,
+        };
+        Self { inner: Sem::new(params, n_words, sem_cfg, seed) }
+    }
+
+    pub fn phi(&self) -> &PhiStats {
+        &self.inner.phi
+    }
+}
+
+impl OnlineLda for Scvb {
+    fn name(&self) -> &'static str {
+        "SCVB"
+    }
+
+    fn params(&self) -> &LdaParams {
+        &self.inner.params
+    }
+
+    fn process_minibatch(&mut self, mb: &Minibatch) -> MinibatchReport {
+        self.inner.process_minibatch(mb)
+    }
+
+    fn export_phi(&mut self) -> PhiStats {
+        self.inner.phi.clone()
+    }
+
+    fn eval_params(&self) -> LdaParams {
+        self.inner.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, SyntheticConfig};
+    use crate::stream::{CorpusStream, StreamConfig};
+
+    #[test]
+    fn uses_cvb0_offsets() {
+        let s = Scvb::new(5, 100, ScvbConfig::paper(4.0), 0);
+        // am1 == alpha_cvb (0.01), not alpha-1 of the MAP family.
+        assert!((s.params().am1() - 0.01).abs() < 1e-6);
+        assert!((s.params().bm1() - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn runs_stream_and_improves() {
+        let c = generate(&SyntheticConfig::small(), 51);
+        let scfg = StreamConfig { minibatch_docs: 100, ..Default::default() };
+        let scale = CorpusStream::new(&c, scfg).batches_per_pass() as f64;
+        let mut cfg = ScvbConfig::paper(scale);
+        // Fast rate so a few passes visibly move phi in a short test.
+        cfg.rate = LearningRate { tau0: 1.0, kappa: 0.7 };
+        let mut scvb = Scvb::new(8, c.n_words(), cfg, 1);
+        let mb0 = CorpusStream::new(&c, scfg).next().unwrap();
+        let early = scvb.process_minibatch(&mb0).train_perplexity();
+        for _ in 0..3 {
+            for mb in CorpusStream::new(&c, scfg) {
+                scvb.process_minibatch(&mb);
+            }
+        }
+        let late = scvb.process_minibatch(&mb0).train_perplexity();
+        assert!(late < early, "{late} !< {early}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Special functions needed by the VB-family baselines (OVB, RVB, SOI):
+//! the digamma function Ψ(x) and exp(Ψ(x)).
+//!
+//! The paper's complexity analysis (Table 3) charges VB a `digamma`
+//! multiplier per E-step coordinate — these routines ARE that cost, so
+//! they are implemented carefully but without lookup-table tricks that
+//! would distort the comparison.
+
+/// Digamma Ψ(x) for x > 0 via upward recurrence + asymptotic series.
+/// Max abs error < 1e-9 for x >= 1e-3 (tested against reference values).
+pub fn digamma(x: f64) -> f64 {
+    debug_assert!(x > 0.0, "digamma domain: x > 0, got {x}");
+    let mut x = x;
+    let mut result = 0.0;
+    // Recurrence Ψ(x) = Ψ(x+1) - 1/x until x >= 6.
+    while x < 6.0 {
+        result -= 1.0 / x;
+        x += 1.0;
+    }
+    // Asymptotic: Ψ(x) ~ ln x - 1/(2x) - Σ B_2n / (2n x^{2n}).
+    let f = 1.0 / (x * x);
+    result + x.ln() - 0.5 / x
+        - f * (1.0 / 12.0
+            - f * (1.0 / 120.0
+                - f * (1.0 / 252.0
+                    - f * (1.0 / 240.0 - f * (1.0 / 132.0)))))
+}
+
+/// `exp(Ψ(x))` — the quantity OVB's E-step actually multiplies (Eq. 23).
+#[inline]
+pub fn exp_digamma(x: f64) -> f64 {
+    digamma(x).exp()
+}
+
+/// Fill `out[i] = exp(Ψ(xs[i]))` (vector form for column updates).
+pub fn exp_digamma_slice(xs: &[f32], out: &mut [f32]) {
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = exp_digamma(x.max(1e-8) as f64) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digamma_known_values() {
+        // Reference values (SciPy):
+        let cases = [
+            (1.0, -0.5772156649015329), // -EulerGamma
+            (0.5, -1.9635100260214235),
+            (2.0, 0.42278433509846713),
+            (10.0, 2.2517525890667214),
+            (100.0, 4.600161852738087),
+            (0.01, -100.56088545786867),
+        ];
+        for (x, want) in cases {
+            let got = digamma(x);
+            assert!(
+                (got - want).abs() < 1e-8,
+                "digamma({x}) = {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn digamma_recurrence_identity() {
+        // Ψ(x+1) = Ψ(x) + 1/x
+        for &x in &[0.1, 0.7, 1.5, 3.3, 12.0] {
+            let lhs = digamma(x + 1.0);
+            let rhs = digamma(x) + 1.0 / x;
+            assert!((lhs - rhs).abs() < 1e-10, "x={x}");
+        }
+    }
+
+    #[test]
+    fn digamma_monotone_increasing() {
+        let mut prev = digamma(0.05);
+        for i in 1..200 {
+            let x = 0.05 + i as f64 * 0.5;
+            let cur = digamma(x);
+            assert!(cur > prev);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn exp_digamma_slice_matches_scalar() {
+        let xs = [0.5f32, 1.0, 7.25, 42.0];
+        let mut out = [0.0f32; 4];
+        exp_digamma_slice(&xs, &mut out);
+        for (i, &x) in xs.iter().enumerate() {
+            assert!((out[i] as f64 - exp_digamma(x as f64)).abs() < 1e-6);
+        }
+    }
+}

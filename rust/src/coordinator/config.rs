@@ -1,0 +1,294 @@
+//! Run configuration: every knob of a training run, parseable from a
+//! simple `key value` config file plus command-line overrides (the
+//! dependency-light stand-in for a clap/serde config system — the
+//! vendored crate set has neither).
+
+use crate::em::foem::FoemConfig;
+use crate::em::schedule::TopicSubset;
+use crate::em::sem::LearningRate;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Which algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    Foem,
+    Sem,
+    Scvb,
+    Ovb,
+    Ogs,
+    Rvb,
+    Soi,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "foem" => Self::Foem,
+            "sem" => Self::Sem,
+            "scvb" => Self::Scvb,
+            "ovb" => Self::Ovb,
+            "ogs" => Self::Ogs,
+            "rvb" => Self::Rvb,
+            "soi" => Self::Soi,
+            other => anyhow::bail!("unknown algorithm {other}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Foem => "FOEM",
+            Self::Sem => "SEM",
+            Self::Scvb => "SCVB",
+            Self::Ovb => "OVB",
+            Self::Ogs => "OGS",
+            Self::Rvb => "RVB",
+            Self::Soi => "SOI",
+        }
+    }
+
+    pub fn all() -> [Algorithm; 7] {
+        [
+            Self::Foem,
+            Self::Ogs,
+            Self::Scvb,
+            Self::Sem,
+            Self::Ovb,
+            Self::Rvb,
+            Self::Soi,
+        ]
+    }
+}
+
+/// Phi storage backend selection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreKind {
+    InMemory,
+    /// Disk-streamed with a hot buffer of `buffer_bytes`.
+    Paged { path: PathBuf, buffer_bytes: usize },
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub algorithm: Algorithm,
+    pub n_topics: usize,
+    /// MAP hyperparameters (EM family): alpha-1 = beta-1 = 0.01.
+    pub alpha: f32,
+    pub beta: f32,
+    /// Minibatch size D_s.
+    pub minibatch_docs: usize,
+    /// Passes over the corpus (1 = pure single-look stream).
+    pub passes: usize,
+    /// Learning-rate schedule for the stepwise family.
+    pub tau0: f64,
+    pub kappa: f64,
+    pub store: StoreKind,
+    /// FOEM scheduling: lambda_k K topics per word (0 = all).
+    pub lambda_k_topics: usize,
+    pub lambda_w: f32,
+    /// FOEM hot-word pinning per minibatch.
+    pub hot_words: usize,
+    /// Evaluate predictive perplexity every N minibatches (0 = only at
+    /// the end).
+    pub eval_every: usize,
+    /// Checkpoint (paged store only) every N minibatches (0 = never).
+    pub checkpoint_every: usize,
+    pub seed: u64,
+    /// Print per-minibatch progress lines.
+    pub verbose: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            algorithm: Algorithm::Foem,
+            n_topics: 100,
+            alpha: 1.01,
+            beta: 1.01,
+            minibatch_docs: 1024,
+            passes: 1,
+            tau0: 1024.0,
+            kappa: 0.5,
+            store: StoreKind::InMemory,
+            lambda_k_topics: 10,
+            lambda_w: 1.0,
+            hot_words: 0,
+            eval_every: 0,
+            checkpoint_every: 0,
+            seed: 42,
+            verbose: false,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn params(&self) -> crate::LdaParams {
+        crate::LdaParams {
+            n_topics: self.n_topics,
+            alpha: self.alpha,
+            beta: self.beta,
+        }
+    }
+
+    pub fn rate(&self) -> LearningRate {
+        LearningRate { tau0: self.tau0, kappa: self.kappa }
+    }
+
+    pub fn foem_config(&self) -> FoemConfig {
+        FoemConfig {
+            topic_subset: if self.lambda_k_topics == 0 {
+                TopicSubset::All
+            } else {
+                TopicSubset::Fixed(self.lambda_k_topics)
+            },
+            lambda_w: self.lambda_w,
+            hot_words: self.hot_words,
+            // The driver evaluates predictively (eval_every); skip the
+            // O(K*NNZ_s) exact-training-LL pass on the hot path so the
+            // per-minibatch cost stays flat in K (Table 3).
+            exact_ll: false,
+            ..FoemConfig::paper()
+        }
+    }
+
+    /// Apply one `key value` pair (config file line or `--key value`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "algorithm" => self.algorithm = Algorithm::parse(value)?,
+            "n_topics" | "k" => self.n_topics = value.parse()?,
+            "alpha" => self.alpha = value.parse()?,
+            "beta" => self.beta = value.parse()?,
+            "minibatch_docs" | "ds" => self.minibatch_docs = value.parse()?,
+            "passes" => self.passes = value.parse()?,
+            "tau0" => self.tau0 = value.parse()?,
+            "kappa" => self.kappa = value.parse()?,
+            "lambda_k_topics" => self.lambda_k_topics = value.parse()?,
+            "lambda_w" => self.lambda_w = value.parse()?,
+            "hot_words" => self.hot_words = value.parse()?,
+            "eval_every" => self.eval_every = value.parse()?,
+            "checkpoint_every" => self.checkpoint_every = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "verbose" => self.verbose = value.parse()?,
+            "store" => {
+                self.store = if value == "memory" {
+                    StoreKind::InMemory
+                } else {
+                    anyhow::bail!(
+                        "store must be `memory` or set via store_path/buffer_mb"
+                    )
+                }
+            }
+            "store_path" => {
+                let buffer = match &self.store {
+                    StoreKind::Paged { buffer_bytes, .. } => *buffer_bytes,
+                    _ => 256 << 20,
+                };
+                self.store = StoreKind::Paged {
+                    path: PathBuf::from(value),
+                    buffer_bytes: buffer,
+                };
+            }
+            "buffer_mb" => {
+                let bytes = value.parse::<usize>()? << 20;
+                self.store = match std::mem::replace(
+                    &mut self.store,
+                    StoreKind::InMemory,
+                ) {
+                    StoreKind::Paged { path, .. } => {
+                        StoreKind::Paged { path, buffer_bytes: bytes }
+                    }
+                    StoreKind::InMemory => StoreKind::Paged {
+                        path: PathBuf::from("phi_store.bin"),
+                        buffer_bytes: bytes,
+                    },
+                };
+            }
+            other => anyhow::bail!("unknown config key {other}"),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file of `key value` lines (# comments allowed).
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let mut cfg = Self::default();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, value) = line
+                .split_once(char::is_whitespace)
+                .with_context(|| format!("line {}: expected `key value`", ln + 1))?;
+            cfg.set(key, value.trim())
+                .with_context(|| format!("line {}", ln + 1))?;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = RunConfig::default();
+        assert_eq!(c.minibatch_docs, 1024);
+        assert!((c.alpha - 1.01).abs() < 1e-6);
+        assert_eq!(c.lambda_k_topics, 10);
+        assert_eq!(c.tau0, 1024.0);
+        assert_eq!(c.kappa, 0.5);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = RunConfig::default();
+        c.set("algorithm", "ovb").unwrap();
+        c.set("k", "250").unwrap();
+        c.set("ds", "512").unwrap();
+        assert_eq!(c.algorithm, Algorithm::Ovb);
+        assert_eq!(c.n_topics, 250);
+        assert_eq!(c.minibatch_docs, 512);
+        assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn paged_store_composition() {
+        let mut c = RunConfig::default();
+        c.set("store_path", "/tmp/phi.bin").unwrap();
+        c.set("buffer_mb", "2").unwrap();
+        match &c.store {
+            StoreKind::Paged { path, buffer_bytes } => {
+                assert_eq!(path, &PathBuf::from("/tmp/phi.bin"));
+                assert_eq!(*buffer_bytes, 2 << 20);
+            }
+            _ => panic!("expected paged store"),
+        }
+    }
+
+    #[test]
+    fn from_file_round_trip() {
+        let dir = crate::util::TempDir::new("cfg");
+        let p = dir.path().join("run.conf");
+        std::fs::write(
+            &p,
+            "# experiment\nalgorithm foem\nk 64\nds 256\nlambda_k_topics 5\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_file(&p).unwrap();
+        assert_eq!(c.algorithm, Algorithm::Foem);
+        assert_eq!(c.n_topics, 64);
+        assert_eq!(c.minibatch_docs, 256);
+        assert_eq!(c.lambda_k_topics, 5);
+    }
+
+    #[test]
+    fn algorithm_names_round_trip() {
+        for a in Algorithm::all() {
+            assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
+        }
+    }
+}

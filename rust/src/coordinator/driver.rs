@@ -1,0 +1,247 @@
+//! The training driver: builds the configured algorithm + phi backend,
+//! frames the stream, runs the loop with metrics, periodic predictive
+//! evaluation and checkpointing, and reports the result.
+
+use super::config::{Algorithm, RunConfig, StoreKind};
+use super::metrics::Metrics;
+use crate::baselines::{ogs, ovb, rvb, scvb, soi, OnlineLda};
+use crate::corpus::Corpus;
+use crate::em::foem::Foem;
+use crate::em::sem::{Sem, SemConfig};
+use crate::eval::{predictive_perplexity, EvalProtocol};
+use crate::store::InMemoryPhi;
+use crate::stream::{CorpusStream, StreamConfig};
+use anyhow::Result;
+
+/// Result of a training run.
+pub struct TrainReport {
+    pub algorithm: &'static str,
+    pub final_perplexity: f64,
+    pub metrics: Metrics,
+    pub io: Option<crate::store::IoStats>,
+}
+
+/// Builds algorithms from config and drives training runs.
+pub struct Driver {
+    pub cfg: RunConfig,
+}
+
+impl Driver {
+    pub fn new(cfg: RunConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Instantiate the configured algorithm for a corpus of `n_words`
+    /// vocabulary and an estimated stream scale `S = D / D_s`.
+    pub fn build_algorithm(
+        &self,
+        n_words: usize,
+        scale_s: f64,
+    ) -> Result<Box<dyn OnlineLda>> {
+        let cfg = &self.cfg;
+        let k = cfg.n_topics;
+        let params = cfg.params();
+        Ok(match cfg.algorithm {
+            Algorithm::Foem => match &cfg.store {
+                StoreKind::InMemory => Box::new(Foem::new(
+                    params,
+                    InMemoryPhi::zeros(k, n_words),
+                    cfg.foem_config(),
+                    cfg.seed,
+                )),
+                StoreKind::Paged { path, buffer_bytes } => {
+                    let mut fc = cfg.foem_config();
+                    if fc.hot_words == 0 {
+                        // Default hot set: as many columns as half the
+                        // buffer holds (phi + residual split).
+                        fc.hot_words = (*buffer_bytes / 2 / (k * 4)).max(1);
+                    }
+                    Box::new(Foem::paged_create(
+                        params,
+                        path,
+                        n_words,
+                        *buffer_bytes,
+                        fc,
+                        cfg.seed,
+                    )?)
+                }
+            },
+            Algorithm::Sem => {
+                let mut sc = SemConfig::paper(scale_s);
+                sc.rate = cfg.rate();
+                Box::new(Sem::new(params, n_words, sc, cfg.seed))
+            }
+            Algorithm::Scvb => {
+                let mut sc = scvb::ScvbConfig::paper(scale_s);
+                sc.rate = cfg.rate();
+                Box::new(scvb::Scvb::new(k, n_words, sc, cfg.seed))
+            }
+            Algorithm::Ovb => {
+                let mut oc = ovb::OvbConfig::paper(scale_s);
+                oc.rate = cfg.rate();
+                Box::new(ovb::Ovb::new(k, n_words, oc, cfg.seed))
+            }
+            Algorithm::Ogs => {
+                let mut oc = ogs::OgsConfig::paper(scale_s);
+                oc.rate = cfg.rate();
+                Box::new(ogs::Ogs::new(k, n_words, oc, cfg.seed))
+            }
+            Algorithm::Rvb => {
+                let mut rc = rvb::RvbConfig::paper(scale_s);
+                rc.ovb.rate = cfg.rate();
+                Box::new(rvb::Rvb::new(k, n_words, rc, cfg.seed))
+            }
+            Algorithm::Soi => {
+                let mut sc = soi::SoiConfig::paper(scale_s);
+                sc.rate = cfg.rate();
+                Box::new(soi::Soi::new(k, n_words, sc, cfg.seed))
+            }
+        })
+    }
+
+    /// Train on `train`, evaluating on `test` per `eval_every` and at the
+    /// end.
+    pub fn train(
+        &mut self,
+        train: &Corpus,
+        test: &Corpus,
+    ) -> Result<TrainReport> {
+        let scfg = StreamConfig {
+            minibatch_docs: self.cfg.minibatch_docs,
+            shuffle: true,
+            seed: self.cfg.seed,
+        };
+        let per_pass = CorpusStream::new(train, scfg).batches_per_pass();
+        let scale_s = per_pass as f64;
+        let mut algo = self.build_algorithm(train.n_words(), scale_s)?;
+        let mut metrics = Metrics::new();
+        let proto = EvalProtocol { fold_in_iters: 30, seed: self.cfg.seed };
+
+        let mut batch_no = 0usize;
+        for pass in 0..self.cfg.passes.max(1) {
+            let mut pass_cfg = scfg;
+            pass_cfg.seed = scfg.seed.wrapping_add(pass as u64);
+            for mb in CorpusStream::new(train, pass_cfg) {
+                batch_no += 1;
+                let report = algo.process_minibatch(&mb);
+                let eval = if self.cfg.eval_every > 0
+                    && batch_no % self.cfg.eval_every == 0
+                {
+                    let phi = algo.export_phi();
+                    Some(predictive_perplexity(
+                        &phi,
+                        &algo.eval_params(),
+                        &test.docs,
+                        &proto,
+                    ))
+                } else {
+                    None
+                };
+                metrics.record(batch_no, &report, eval);
+                if self.cfg.checkpoint_every > 0
+                    && batch_no % self.cfg.checkpoint_every == 0
+                {
+                    algo.checkpoint()?;
+                }
+                if self.cfg.verbose {
+                    println!(
+                        "[{}] batch {batch_no}: iters={} ppx={:.1} {:.2}s{}",
+                        algo.name(),
+                        report.inner_iters,
+                        report.train_perplexity(),
+                        report.seconds,
+                        eval.map(|p| format!(" eval={p:.1}"))
+                            .unwrap_or_default()
+                    );
+                }
+            }
+        }
+        algo.checkpoint()?;
+        let phi = algo.export_phi();
+        let final_perplexity = predictive_perplexity(
+            &phi,
+            &algo.eval_params(),
+            &test.docs,
+            &proto,
+        );
+        Ok(TrainReport {
+            algorithm: algo.name(),
+            final_perplexity,
+            io: algo.io_stats(),
+            metrics,
+        })
+    }
+
+    /// Convenience: split 10% (≤ 2000 docs) for test and train on the
+    /// rest — the lib.rs quickstart entry point.
+    pub fn train_corpus(&mut self, corpus: &Corpus) -> Result<TrainReport> {
+        let test_docs = (corpus.n_docs() / 10).clamp(1, 2000);
+        let (train, test) = corpus.split(test_docs, self.cfg.seed);
+        self.train(&train, &test)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, SyntheticConfig};
+
+    fn small_cfg(algorithm: Algorithm) -> RunConfig {
+        RunConfig {
+            algorithm,
+            n_topics: 6,
+            minibatch_docs: 64,
+            eval_every: 2,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn foem_end_to_end_via_driver() {
+        let c = generate(&SyntheticConfig::small(), 91);
+        let mut d = Driver::new(small_cfg(Algorithm::Foem));
+        let report = d.train_corpus(&c).unwrap();
+        assert_eq!(report.algorithm, "FOEM");
+        assert!(report.final_perplexity > 1.0);
+        assert!(report.final_perplexity < c.n_words() as f64);
+        assert!(!report.metrics.records.is_empty());
+        assert!(!report.metrics.eval_trace().is_empty());
+    }
+
+    #[test]
+    fn paged_foem_via_driver_checkpoints() {
+        let dir = crate::util::TempDir::new("driver");
+        let c = generate(&SyntheticConfig::small(), 92);
+        let mut cfg = small_cfg(Algorithm::Foem);
+        cfg.store = StoreKind::Paged {
+            path: dir.path().join("phi.bin"),
+            buffer_bytes: 64 << 10,
+        };
+        cfg.checkpoint_every = 1;
+        let mut d = Driver::new(cfg);
+        let report = d.train_corpus(&c).unwrap();
+        assert!(report.io.is_some());
+        assert!(dir.path().join("phi.bin").exists());
+        assert!(report.final_perplexity.is_finite());
+    }
+
+    #[test]
+    fn every_algorithm_builds_and_trains_one_batch() {
+        let mut small = SyntheticConfig::small();
+        small.n_docs = 80;
+        let c = generate(&small, 93);
+        for algo in Algorithm::all() {
+            let mut cfg = small_cfg(algo);
+            cfg.eval_every = 0;
+            cfg.n_topics = 4;
+            let mut d = Driver::new(cfg);
+            let report = d.train_corpus(&c).unwrap();
+            assert_eq!(report.algorithm, algo.name());
+            assert!(
+                report.final_perplexity.is_finite(),
+                "{}",
+                algo.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Run metrics: per-minibatch records and aggregate throughput, consumed
+//! by the experiment harness (`expfig`) and printed by `foem train`.
+
+use crate::em::MinibatchReport;
+
+/// One record per processed minibatch.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchRecord {
+    pub index: usize,
+    pub inner_iters: usize,
+    pub seconds: f64,
+    pub tokens: f64,
+    pub train_perplexity: f64,
+    /// Cumulative wall-clock at the end of this minibatch.
+    pub elapsed: f64,
+    /// Predictive perplexity if an eval fired after this minibatch.
+    pub eval_perplexity: Option<f64>,
+}
+
+/// Aggregated run metrics.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub records: Vec<BatchRecord>,
+    pub total_tokens: f64,
+    pub total_seconds: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(
+        &mut self,
+        index: usize,
+        report: &MinibatchReport,
+        eval_perplexity: Option<f64>,
+    ) {
+        self.total_tokens += report.tokens;
+        self.total_seconds += report.seconds;
+        self.records.push(BatchRecord {
+            index,
+            inner_iters: report.inner_iters,
+            seconds: report.seconds,
+            tokens: report.tokens,
+            train_perplexity: report.train_perplexity(),
+            elapsed: self.total_seconds,
+            eval_perplexity,
+        });
+    }
+
+    /// Mean training throughput in tokens/second.
+    pub fn tokens_per_second(&self) -> f64 {
+        if self.total_seconds > 0.0 {
+            self.total_tokens / self.total_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// The trace of `(elapsed seconds, predictive perplexity)` points —
+    /// the Fig. 12 series.
+    pub fn eval_trace(&self) -> Vec<(f64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.eval_perplexity.map(|p| (r.elapsed, p)))
+            .collect()
+    }
+
+    /// Mean inner iterations per minibatch.
+    pub fn mean_inner_iters(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.inner_iters as f64).sum::<f64>()
+            / self.records.len() as f64
+    }
+
+    /// CSV dump (header + rows) for external plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "batch,inner_iters,seconds,tokens,train_ppx,elapsed,eval_ppx\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{:.6},{},{:.3},{:.6},{}\n",
+                r.index,
+                r.inner_iters,
+                r.seconds,
+                r.tokens,
+                r.train_perplexity,
+                r.elapsed,
+                r.eval_perplexity
+                    .map(|p| format!("{p:.3}"))
+                    .unwrap_or_default(),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(seconds: f64, tokens: f64) -> MinibatchReport {
+        MinibatchReport { inner_iters: 3, seconds, train_ll: -tokens, tokens }
+    }
+
+    #[test]
+    fn aggregates_accumulate() {
+        let mut m = Metrics::new();
+        m.record(1, &report(0.5, 100.0), None);
+        m.record(2, &report(0.5, 300.0), Some(42.0));
+        assert_eq!(m.records.len(), 2);
+        assert!((m.total_tokens - 400.0).abs() < 1e-9);
+        assert!((m.tokens_per_second() - 400.0).abs() < 1e-6);
+        assert!((m.mean_inner_iters() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eval_trace_collects_only_evals() {
+        let mut m = Metrics::new();
+        m.record(1, &report(1.0, 10.0), None);
+        m.record(2, &report(1.0, 10.0), Some(99.0));
+        m.record(3, &report(1.0, 10.0), Some(90.0));
+        let tr = m.eval_trace();
+        assert_eq!(tr.len(), 2);
+        assert!((tr[0].0 - 2.0).abs() < 1e-9);
+        assert_eq!(tr[1].1, 90.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut m = Metrics::new();
+        m.record(1, &report(1.0, 10.0), Some(5.0));
+        let csv = m.to_csv();
+        assert!(csv.starts_with("batch,"));
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("5.000"));
+    }
+}

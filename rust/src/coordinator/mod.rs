@@ -1,0 +1,11 @@
+//! L3 coordinator: configuration, the training driver (stream → algorithm
+//! → metrics → checkpoints), and run metrics.
+//!
+//! This is the layer a downstream user scripts against: pick a corpus,
+//! pick an algorithm (FOEM or a baseline), pick a phi backend (in-memory
+//! or disk-streamed), and drive the stream — the driver owns the loop,
+//! periodic evaluation, and fault-tolerant checkpointing.
+
+pub mod config;
+pub mod driver;
+pub mod metrics;

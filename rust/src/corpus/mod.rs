@@ -1,0 +1,109 @@
+//! Corpus substrate: sparse document-word matrices, the UCI bag-of-words
+//! loader (the format of the paper's ENRON / NIPS / NYTIMES / PUBMED
+//! sets), a synthetic LDA corpus generator (our substitute for those
+//! corpora — see DESIGN.md §4), and the open-vocabulary manager used by
+//! lifelong streams.
+
+pub mod sparse;
+pub mod synthetic;
+pub mod uci;
+pub mod vocab;
+
+pub use sparse::{DocWordMatrix, VocabMajorMatrix};
+
+/// A corpus: a doc-major sparse matrix plus bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    /// Doc-major sparse document-word matrix.
+    pub docs: DocWordMatrix,
+    /// Human-readable name (used by the experiment harness for reporting).
+    pub name: String,
+}
+
+impl Corpus {
+    pub fn new(name: impl Into<String>, docs: DocWordMatrix) -> Self {
+        Self { docs, name: name.into() }
+    }
+
+    pub fn n_docs(&self) -> usize {
+        self.docs.n_docs
+    }
+
+    pub fn n_words(&self) -> usize {
+        self.docs.n_words
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.docs.nnz()
+    }
+
+    pub fn n_tokens(&self) -> f64 {
+        self.docs.total_tokens()
+    }
+
+    /// Split into (train, test) by documents; `test_docs` go to the test
+    /// side, mirroring the paper's Table 4 splits. Deterministic in `seed`.
+    pub fn split(&self, test_docs: usize, seed: u64) -> (Corpus, Corpus) {
+        let mut order: Vec<usize> = (0..self.n_docs()).collect();
+        let mut rng = crate::util::Rng::new(seed);
+        rng.shuffle(&mut order);
+        let test_set: std::collections::HashSet<usize> =
+            order.into_iter().take(test_docs.min(self.n_docs())).collect();
+        let mut train_docs: Vec<Vec<(u32, f32)>> = Vec::new();
+        let mut test_docs_v: Vec<Vec<(u32, f32)>> = Vec::new();
+        for d in 0..self.n_docs() {
+            let row: Vec<(u32, f32)> = self.docs.iter_doc(d).collect();
+            if test_set.contains(&d) {
+                test_docs_v.push(row);
+            } else {
+                train_docs.push(row);
+            }
+        }
+        let train_refs: Vec<&[(u32, f32)]> =
+            train_docs.iter().map(|r| r.as_slice()).collect();
+        let test_refs: Vec<&[(u32, f32)]> =
+            test_docs_v.iter().map(|r| r.as_slice()).collect();
+        let train = DocWordMatrix::from_rows(self.n_words(), &train_refs);
+        let test = DocWordMatrix::from_rows(self.n_words(), &test_refs);
+        (
+            Corpus::new(format!("{}-train", self.name), train),
+            Corpus::new(format!("{}-test", self.name), test),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Corpus {
+        // 4 docs over 5 words.
+        let rows: Vec<Vec<(u32, f32)>> = vec![
+            vec![(0, 2.0), (1, 1.0)],
+            vec![(1, 3.0), (4, 1.0)],
+            vec![(2, 1.0)],
+            vec![(0, 1.0), (3, 2.0), (4, 4.0)],
+        ];
+        let refs: Vec<&[(u32, f32)]> = rows.iter().map(|r| r.as_slice()).collect();
+        Corpus::new("tiny", DocWordMatrix::from_rows(5, &refs))
+    }
+
+    #[test]
+    fn split_preserves_mass_and_counts() {
+        let c = tiny();
+        let (train, test) = c.split(1, 0);
+        assert_eq!(train.n_docs(), 3);
+        assert_eq!(test.n_docs(), 1);
+        assert_eq!(train.n_words(), 5);
+        let total = c.n_tokens();
+        assert!((train.n_tokens() + test.n_tokens() - total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let c = tiny();
+        let (a1, _) = c.split(2, 7);
+        let (a2, _) = c.split(2, 7);
+        assert_eq!(a1.docs.word_ids, a2.docs.word_ids);
+    }
+}

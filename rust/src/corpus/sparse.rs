@@ -1,0 +1,376 @@
+//! Sparse document-word matrices in the two layouts the paper uses:
+//! doc-major (CSR over documents — the input layout of Figs. 1-3) and
+//! vocab-major (CSC — Fig. 4 reorganizes every minibatch vocabulary-major
+//! so each column of the streamed `phi` store is touched exactly once per
+//! sweep).
+
+/// Doc-major sparse matrix: row `d` lists the distinct words of document
+/// `d` with their counts. `O(D + 2*NNZ)` memory, matching Table 3's
+/// "compressed document-major format".
+#[derive(Debug, Clone, PartialEq)]
+pub struct DocWordMatrix {
+    pub n_docs: usize,
+    /// Vocabulary size W (upper bound on word ids + 1).
+    pub n_words: usize,
+    /// CSR row pointers, `len == n_docs + 1`.
+    pub doc_ptr: Vec<u32>,
+    /// Column (word) indices, `len == nnz`.
+    pub word_ids: Vec<u32>,
+    /// Word counts `x_{w,d}`, `len == nnz`.
+    pub counts: Vec<f32>,
+}
+
+impl DocWordMatrix {
+    /// Build from per-document `(word_id, count)` slices.
+    pub fn from_rows(n_words: usize, rows: &[&[(u32, f32)]]) -> Self {
+        let nnz: usize = rows.iter().map(|r| r.len()).sum();
+        let mut doc_ptr = Vec::with_capacity(rows.len() + 1);
+        let mut word_ids = Vec::with_capacity(nnz);
+        let mut counts = Vec::with_capacity(nnz);
+        doc_ptr.push(0u32);
+        for row in rows {
+            for &(w, c) in *row {
+                debug_assert!((w as usize) < n_words);
+                debug_assert!(c > 0.0);
+                word_ids.push(w);
+                counts.push(c);
+            }
+            doc_ptr.push(word_ids.len() as u32);
+        }
+        Self { n_docs: rows.len(), n_words, doc_ptr, word_ids, counts }
+    }
+
+    /// Build from `(doc, word, count)` triplets (any order; duplicates
+    /// summed).
+    pub fn from_triplets(
+        n_docs: usize,
+        n_words: usize,
+        triplets: &[(u32, u32, f32)],
+    ) -> Self {
+        use std::collections::BTreeMap;
+        let mut rows: Vec<BTreeMap<u32, f32>> = vec![BTreeMap::new(); n_docs];
+        for &(d, w, c) in triplets {
+            *rows[d as usize].entry(w).or_insert(0.0) += c;
+        }
+        let collected: Vec<Vec<(u32, f32)>> = rows
+            .into_iter()
+            .map(|m| m.into_iter().collect())
+            .collect();
+        let refs: Vec<&[(u32, f32)]> =
+            collected.iter().map(|r| r.as_slice()).collect();
+        Self::from_rows(n_words, &refs)
+    }
+
+    /// Number of non-zero entries (the paper's NNZ).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.word_ids.len()
+    }
+
+    /// Total token mass `sum_{w,d} x_{w,d}` (the paper's `ntokens`).
+    pub fn total_tokens(&self) -> f64 {
+        self.counts.iter().map(|&c| c as f64).sum()
+    }
+
+    /// Word ids of document `d`.
+    #[inline]
+    pub fn doc_words(&self, d: usize) -> &[u32] {
+        let (s, e) = self.doc_range(d);
+        &self.word_ids[s..e]
+    }
+
+    /// Counts of document `d`.
+    #[inline]
+    pub fn doc_counts(&self, d: usize) -> &[f32] {
+        let (s, e) = self.doc_range(d);
+        &self.counts[s..e]
+    }
+
+    #[inline]
+    pub fn doc_range(&self, d: usize) -> (usize, usize) {
+        (self.doc_ptr[d] as usize, self.doc_ptr[d + 1] as usize)
+    }
+
+    /// Iterate `(word, count)` pairs of document `d`.
+    #[inline]
+    pub fn iter_doc(&self, d: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let (s, e) = self.doc_range(d);
+        self.word_ids[s..e]
+            .iter()
+            .copied()
+            .zip(self.counts[s..e].iter().copied())
+    }
+
+    /// Token mass of one document.
+    pub fn doc_len(&self, d: usize) -> f32 {
+        self.doc_counts(d).iter().sum()
+    }
+
+    /// Reorganize into the vocab-major layout (Fig. 4 line note / §3.2).
+    pub fn to_vocab_major(&self) -> VocabMajorMatrix {
+        let nnz = self.nnz();
+        let mut word_ptr = vec![0u32; self.n_words + 1];
+        for &w in &self.word_ids {
+            word_ptr[w as usize + 1] += 1;
+        }
+        for i in 0..self.n_words {
+            word_ptr[i + 1] += word_ptr[i];
+        }
+        let mut doc_ids = vec![0u32; nnz];
+        let mut counts = vec![0f32; nnz];
+        let mut cursor = word_ptr.clone();
+        for d in 0..self.n_docs {
+            let (s, e) = self.doc_range(d);
+            for i in s..e {
+                let w = self.word_ids[i] as usize;
+                let pos = cursor[w] as usize;
+                doc_ids[pos] = d as u32;
+                counts[pos] = self.counts[i];
+                cursor[w] += 1;
+            }
+        }
+        VocabMajorMatrix {
+            n_docs: self.n_docs,
+            n_words: self.n_words,
+            word_ptr,
+            doc_ids,
+            counts,
+        }
+    }
+
+    /// The set of distinct word ids present, ascending. This is the
+    /// minibatch's local vocabulary `W_s`.
+    pub fn distinct_words(&self) -> Vec<u32> {
+        let mut seen = vec![false; self.n_words];
+        for &w in &self.word_ids {
+            seen[w as usize] = true;
+        }
+        (0..self.n_words as u32)
+            .filter(|&w| seen[w as usize])
+            .collect()
+    }
+
+    /// Extract the sub-matrix of a contiguous document range
+    /// `[start, end)`; word ids are preserved (global).
+    pub fn slice_docs(&self, start: usize, end: usize) -> DocWordMatrix {
+        let end = end.min(self.n_docs);
+        let s0 = self.doc_ptr[start] as usize;
+        let e0 = self.doc_ptr[end] as usize;
+        let doc_ptr = self.doc_ptr[start..=end]
+            .iter()
+            .map(|&p| p - s0 as u32)
+            .collect();
+        DocWordMatrix {
+            n_docs: end - start,
+            n_words: self.n_words,
+            doc_ptr,
+            word_ids: self.word_ids[s0..e0].to_vec(),
+            counts: self.counts[s0..e0].to_vec(),
+        }
+    }
+
+    /// Split each document's tokens into (observed ~80%, held-out ~20%)
+    /// by *word tokens* as in §2.4's perplexity protocol. Deterministic in
+    /// `seed`. Entries with fractional counts round per-token.
+    pub fn split_tokens_80_20(
+        &self,
+        seed: u64,
+    ) -> (DocWordMatrix, DocWordMatrix) {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut obs_rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(self.n_docs);
+        let mut held_rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(self.n_docs);
+        for d in 0..self.n_docs {
+            let mut obs = Vec::new();
+            let mut held = Vec::new();
+            for (w, c) in self.iter_doc(d) {
+                let n = c.round() as usize;
+                let mut h = 0usize;
+                for _ in 0..n {
+                    if rng.next_f32() < 0.2 {
+                        h += 1;
+                    }
+                }
+                // Keep at least one observed token per entry when possible
+                // so fold-in always sees the document.
+                if h == n && n > 1 {
+                    h = n - 1;
+                }
+                let o = n - h;
+                if o > 0 {
+                    obs.push((w, o as f32));
+                }
+                if h > 0 {
+                    held.push((w, h as f32));
+                }
+            }
+            obs_rows.push(obs);
+            held_rows.push(held);
+        }
+        let obs_refs: Vec<&[(u32, f32)]> =
+            obs_rows.iter().map(|r| r.as_slice()).collect();
+        let held_refs: Vec<&[(u32, f32)]> =
+            held_rows.iter().map(|r| r.as_slice()).collect();
+        (
+            DocWordMatrix::from_rows(self.n_words, &obs_refs),
+            DocWordMatrix::from_rows(self.n_words, &held_refs),
+        )
+    }
+}
+
+/// Vocab-major sparse matrix: column `w` lists the documents containing
+/// word `w`. `O(W + 2*NNZ)` memory ("compressed vocabulary-major format").
+#[derive(Debug, Clone, PartialEq)]
+pub struct VocabMajorMatrix {
+    pub n_docs: usize,
+    pub n_words: usize,
+    /// CSC column pointers, `len == n_words + 1`.
+    pub word_ptr: Vec<u32>,
+    /// Row (document) indices, `len == nnz`.
+    pub doc_ids: Vec<u32>,
+    /// Word counts, `len == nnz`.
+    pub counts: Vec<f32>,
+}
+
+impl VocabMajorMatrix {
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.doc_ids.len()
+    }
+
+    #[inline]
+    pub fn word_range(&self, w: usize) -> (usize, usize) {
+        (self.word_ptr[w] as usize, self.word_ptr[w + 1] as usize)
+    }
+
+    /// Documents containing word `w`.
+    #[inline]
+    pub fn word_docs(&self, w: usize) -> &[u32] {
+        let (s, e) = self.word_range(w);
+        &self.doc_ids[s..e]
+    }
+
+    /// Counts parallel to [`Self::word_docs`].
+    #[inline]
+    pub fn word_counts(&self, w: usize) -> &[f32] {
+        let (s, e) = self.word_range(w);
+        &self.counts[s..e]
+    }
+
+    /// Iterate `(doc, count)` pairs of word `w`.
+    #[inline]
+    pub fn iter_word(&self, w: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let (s, e) = self.word_range(w);
+        self.doc_ids[s..e]
+            .iter()
+            .copied()
+            .zip(self.counts[s..e].iter().copied())
+    }
+
+    pub fn total_tokens(&self) -> f64 {
+        self.counts.iter().map(|&c| c as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DocWordMatrix {
+        DocWordMatrix::from_triplets(
+            3,
+            4,
+            &[
+                (0, 0, 2.0),
+                (0, 2, 1.0),
+                (1, 1, 3.0),
+                (1, 2, 1.0),
+                (2, 3, 5.0),
+                (2, 0, 1.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn from_triplets_sums_duplicates() {
+        let m = DocWordMatrix::from_triplets(1, 2, &[(0, 1, 1.0), (0, 1, 2.0)]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.counts[0], 3.0);
+    }
+
+    #[test]
+    fn csr_layout_is_consistent() {
+        let m = sample();
+        assert_eq!(m.nnz(), 6);
+        assert_eq!(m.doc_ptr.len(), 4);
+        assert_eq!(m.doc_words(0), &[0, 2]);
+        assert_eq!(m.doc_counts(2), &[1.0, 5.0]);
+        assert_eq!(m.total_tokens(), 13.0);
+        assert_eq!(m.doc_len(1), 4.0);
+    }
+
+    #[test]
+    fn vocab_major_round_trip_mass() {
+        let m = sample();
+        let vm = m.to_vocab_major();
+        assert_eq!(vm.nnz(), m.nnz());
+        assert_eq!(vm.total_tokens(), m.total_tokens());
+        // word 0 appears in docs 0 and 2
+        assert_eq!(vm.word_docs(0), &[0, 2]);
+        assert_eq!(vm.word_counts(0), &[2.0, 1.0]);
+        // word 3 only in doc 2
+        assert_eq!(vm.word_docs(3), &[2]);
+    }
+
+    #[test]
+    fn vocab_major_columns_cover_all_entries() {
+        let m = sample();
+        let vm = m.to_vocab_major();
+        let mut mass = 0.0f64;
+        for w in 0..vm.n_words {
+            for (_, c) in vm.iter_word(w) {
+                mass += c as f64;
+            }
+        }
+        assert_eq!(mass, m.total_tokens());
+    }
+
+    #[test]
+    fn distinct_words_sorted() {
+        let m = sample();
+        assert_eq!(m.distinct_words(), vec![0, 1, 2, 3]);
+        let m2 = DocWordMatrix::from_triplets(1, 10, &[(0, 7, 1.0), (0, 2, 1.0)]);
+        assert_eq!(m2.distinct_words(), vec![2, 7]);
+    }
+
+    #[test]
+    fn slice_docs_preserves_rows() {
+        let m = sample();
+        let s = m.slice_docs(1, 3);
+        assert_eq!(s.n_docs, 2);
+        assert_eq!(s.doc_words(0), m.doc_words(1));
+        assert_eq!(s.doc_counts(1), m.doc_counts(2));
+    }
+
+    #[test]
+    fn token_split_preserves_mass() {
+        let m = sample();
+        let (obs, held) = m.split_tokens_80_20(3);
+        assert_eq!(
+            obs.total_tokens() + held.total_tokens(),
+            m.total_tokens()
+        );
+        // ~20% held out, loose bounds for a tiny sample
+        let frac = held.total_tokens() / m.total_tokens();
+        assert!(frac < 0.6, "{frac}");
+    }
+
+    #[test]
+    fn token_split_keeps_observed_nonempty() {
+        // Every doc with >1 token in an entry must keep >=1 observed token.
+        let m = DocWordMatrix::from_triplets(1, 1, &[(0, 0, 10.0)]);
+        for seed in 0..20 {
+            let (obs, _) = m.split_tokens_80_20(seed);
+            assert!(obs.total_tokens() >= 1.0);
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! Synthetic LDA corpus generator — the substitute for the paper's UCI
+//! bag-of-words corpora (ENRON / WIKI / NYTIMES / PUBMED / NIPS), which
+//! are multi-GB downloads unavailable in this offline environment (see
+//! DESIGN.md §4 for the substitution argument).
+//!
+//! Documents are sampled from the LDA generative process itself:
+//! `phi_k ~ Dir(beta_gen)`, `theta_d ~ Dir(alpha_gen)`, doc length
+//! `~ Poisson(mean_len)`, each token `z ~ theta_d`, `w ~ phi_z`.  Because
+//! every algorithm under comparison consumes *identical* streams, the
+//! paper's relative claims (who converges faster, who reaches lower
+//! perplexity, how cost scales with K and D_s) are preserved even though
+//! absolute perplexities differ from the real corpora.
+//!
+//! Profiles below mirror each paper corpus' shape statistics (documents,
+//! vocabulary, NNZ density) scaled to this testbed.
+
+use super::{Corpus, DocWordMatrix};
+use crate::util::Rng;
+
+/// Parameters of the generative sampler.
+#[derive(Debug, Clone)]
+pub struct SyntheticConfig {
+    pub name: String,
+    /// Number of documents D.
+    pub n_docs: usize,
+    /// Vocabulary size W.
+    pub n_words: usize,
+    /// Number of generating topics (independent of the K later fitted).
+    pub n_topics: usize,
+    /// Mean document length in tokens (Poisson).
+    pub mean_doc_len: f64,
+    /// Dirichlet concentration for document-topic draws.
+    pub alpha_gen: f64,
+    /// Dirichlet concentration for topic-word draws (small => sparse,
+    /// word-sense-like topics as in real corpora).
+    pub beta_gen: f64,
+}
+
+impl SyntheticConfig {
+    /// Tiny corpus for unit tests and doc examples (~seconds).
+    pub fn small() -> Self {
+        Self {
+            name: "synth-small".into(),
+            n_docs: 200,
+            n_words: 500,
+            n_topics: 10,
+            mean_doc_len: 60.0,
+            alpha_gen: 0.1,
+            beta_gen: 0.05,
+        }
+    }
+
+    /// NIPS-like profile (paper §4.1: D=1500, W=12419): used for the
+    /// Fig. 7 dynamic-scheduling sweep. Scaled ~4x down in W.
+    pub fn nips_like() -> Self {
+        Self {
+            name: "NIPS-like".into(),
+            n_docs: 1_500,
+            n_words: 3_000,
+            n_topics: 50,
+            mean_doc_len: 400.0,
+            alpha_gen: 0.1,
+            beta_gen: 0.02,
+        }
+    }
+
+    /// ENRON-like profile (paper: D=39861, W=28102, NNZ=3.7M), ~20x down.
+    pub fn enron_like() -> Self {
+        Self {
+            name: "ENRON-like".into(),
+            n_docs: 2_000,
+            n_words: 1_400,
+            n_topics: 40,
+            mean_doc_len: 95.0,
+            alpha_gen: 0.1,
+            beta_gen: 0.03,
+        }
+    }
+
+    /// WIKI-like profile (paper: D=20758, W=83470, NNZ=9.3M), ~20x down.
+    /// Distinctive trait kept: large vocabulary relative to D, long docs.
+    pub fn wiki_like() -> Self {
+        Self {
+            name: "WIKI-like".into(),
+            n_docs: 1_000,
+            n_words: 4_000,
+            n_topics: 40,
+            mean_doc_len: 450.0,
+            alpha_gen: 0.1,
+            beta_gen: 0.02,
+        }
+    }
+
+    /// NYTIMES-like profile (paper: D=300000, W=102660, NNZ=69.7M),
+    /// ~100x down. Trait kept: many docs, large vocab, dense rows.
+    pub fn nytimes_like() -> Self {
+        Self {
+            name: "NYTIMES-like".into(),
+            n_docs: 3_000,
+            n_words: 5_000,
+            n_topics: 60,
+            mean_doc_len: 230.0,
+            alpha_gen: 0.08,
+            beta_gen: 0.02,
+        }
+    }
+
+    /// PUBMED-like profile (paper: D=8.2M, W=141043, NNZ=483M), ~1600x
+    /// down. Trait kept: short docs, huge D relative to W.
+    pub fn pubmed_like() -> Self {
+        Self {
+            name: "PUBMED-like".into(),
+            n_docs: 5_000,
+            n_words: 2_500,
+            n_topics: 60,
+            mean_doc_len: 60.0,
+            alpha_gen: 0.08,
+            beta_gen: 0.03,
+        }
+    }
+
+    /// The four comparison corpora of §4.3, in paper order.
+    pub fn paper_suite() -> Vec<Self> {
+        vec![
+            Self::enron_like(),
+            Self::wiki_like(),
+            Self::nytimes_like(),
+            Self::pubmed_like(),
+        ]
+    }
+}
+
+/// Ground-truth parameters kept alongside a generated corpus (useful for
+/// topic-recovery sanity checks in tests).
+pub struct GroundTruth {
+    /// `[n_topics][n_words]` rows are the generating topic-word
+    /// distributions.
+    pub phi: Vec<Vec<f32>>,
+}
+
+/// Sample a corpus from the LDA generative process. Deterministic in
+/// `seed`.
+pub fn generate(cfg: &SyntheticConfig, seed: u64) -> Corpus {
+    generate_with_truth(cfg, seed).0
+}
+
+/// As [`generate`], also returning the generating topics.
+pub fn generate_with_truth(cfg: &SyntheticConfig, seed: u64) -> (Corpus, GroundTruth) {
+    let mut rng = Rng::new(seed);
+    // Topic-word distributions.
+    let phi: Vec<Vec<f32>> = (0..cfg.n_topics)
+        .map(|_| {
+            rng.dirichlet_sym(cfg.beta_gen, cfg.n_words)
+                .into_iter()
+                .map(|x| x as f32)
+                .collect()
+        })
+        .collect();
+
+    // Precompute cumulative distributions for O(log W) word sampling.
+    let cum_phi: Vec<Vec<f32>> = phi
+        .iter()
+        .map(|row| {
+            let mut acc = 0.0f32;
+            row.iter()
+                .map(|&p| {
+                    acc += p;
+                    acc
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(cfg.n_docs);
+    let mut counts = std::collections::HashMap::new();
+    for _ in 0..cfg.n_docs {
+        let theta: Vec<f64> = rng.dirichlet_sym(cfg.alpha_gen, cfg.n_topics);
+        let len = rng.poisson(cfg.mean_doc_len).max(2);
+        counts.clear();
+        for _ in 0..len {
+            // z ~ theta
+            let mut r = rng.next_f64();
+            let mut z = cfg.n_topics - 1;
+            for (k, &t) in theta.iter().enumerate() {
+                r -= t;
+                if r <= 0.0 {
+                    z = k;
+                    break;
+                }
+            }
+            // w ~ phi_z via binary search on the cdf
+            let target = rng.next_f32();
+            let cdf = &cum_phi[z];
+            let w = match cdf.binary_search_by(|p| {
+                p.partial_cmp(&target).unwrap_or(std::cmp::Ordering::Equal)
+            }) {
+                Ok(i) | Err(i) => i.min(cfg.n_words - 1),
+            };
+            *counts.entry(w as u32).or_insert(0f32) += 1.0;
+        }
+        let mut row: Vec<(u32, f32)> = counts.drain().collect();
+        row.sort_unstable_by_key(|&(w, _)| w);
+        rows.push(row);
+    }
+    let refs: Vec<&[(u32, f32)]> = rows.iter().map(|r| r.as_slice()).collect();
+    let docs = DocWordMatrix::from_rows(cfg.n_words, &refs);
+    (Corpus::new(cfg.name.clone(), docs), GroundTruth { phi })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_deterministic() {
+        let cfg = SyntheticConfig::small();
+        let a = generate(&cfg, 1);
+        let b = generate(&cfg, 1);
+        assert_eq!(a.docs.word_ids, b.docs.word_ids);
+        assert_eq!(a.docs.counts, b.docs.counts);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let cfg = SyntheticConfig::small();
+        let a = generate(&cfg, 1);
+        let b = generate(&cfg, 2);
+        assert_ne!(a.docs.word_ids, b.docs.word_ids);
+    }
+
+    #[test]
+    fn shape_statistics_match_config() {
+        let cfg = SyntheticConfig::small();
+        let c = generate(&cfg, 7);
+        assert_eq!(c.n_docs(), cfg.n_docs);
+        assert_eq!(c.n_words(), cfg.n_words);
+        let mean_len = c.n_tokens() / c.n_docs() as f64;
+        assert!(
+            (mean_len - cfg.mean_doc_len).abs() < cfg.mean_doc_len * 0.15,
+            "mean_len={mean_len}"
+        );
+        // Every document non-empty.
+        for d in 0..c.n_docs() {
+            assert!(c.docs.doc_len(d) >= 2.0);
+        }
+    }
+
+    #[test]
+    fn ground_truth_topics_are_distributions() {
+        let cfg = SyntheticConfig::small();
+        let (_, truth) = generate_with_truth(&cfg, 3);
+        assert_eq!(truth.phi.len(), cfg.n_topics);
+        for row in &truth.phi {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-3, "{s}");
+        }
+    }
+
+    #[test]
+    fn word_ids_in_range() {
+        let cfg = SyntheticConfig::small();
+        let c = generate(&cfg, 11);
+        assert!(c
+            .docs
+            .word_ids
+            .iter()
+            .all(|&w| (w as usize) < cfg.n_words));
+    }
+}

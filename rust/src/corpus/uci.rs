@@ -1,0 +1,184 @@
+//! UCI "Bag of Words" loader — the on-disk format of the paper's corpora
+//! (ENRON, NIPS, NYTIMES, PUBMED at archive.ics.uci.edu/ml/datasets/bag+of+words).
+//!
+//! `docword.*.txt` layout:
+//! ```text
+//! D
+//! W
+//! NNZ
+//! docID wordID count      # 1-based ids, one triplet per line
+//! ...
+//! ```
+//! plus an optional `vocab.*.txt` with one word per line (line i = word id
+//! i, 1-based).
+//!
+//! The loader is streaming-friendly: it reads line by line and never
+//! materializes more than the CSR arrays, so PUBMED-scale files are bound
+//! by the output size, not parse overhead.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::vocab::Vocabulary;
+use super::{Corpus, DocWordMatrix};
+
+/// Parse a `docword` stream. The corpus name is only used for reporting.
+pub fn read_docword<R: BufRead>(name: &str, reader: R) -> anyhow::Result<Corpus> {
+    let mut lines = reader.lines();
+    let mut next_header = || -> anyhow::Result<usize> {
+        loop {
+            let line = lines
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("unexpected EOF in header"))??;
+            let t = line.trim();
+            if !t.is_empty() {
+                return Ok(t.parse::<usize>()?);
+            }
+        }
+    };
+    let n_docs = next_header()?;
+    let n_words = next_header()?;
+    let nnz = next_header()?;
+
+    let mut doc_ptr = Vec::with_capacity(n_docs + 1);
+    let mut word_ids = Vec::with_capacity(nnz);
+    let mut counts = Vec::with_capacity(nnz);
+    doc_ptr.push(0u32);
+    let mut current_doc = 1usize; // 1-based in the file
+
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let mut it = t.split_ascii_whitespace();
+        let d: usize = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("short line: {t}"))?
+            .parse()?;
+        let w: usize = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("short line: {t}"))?
+            .parse()?;
+        let c: f32 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("short line: {t}"))?
+            .parse()?;
+        if d < current_doc {
+            anyhow::bail!("docword file not sorted by document ({d} < {current_doc})");
+        }
+        if w == 0 || w > n_words {
+            anyhow::bail!("word id {w} out of range 1..={n_words}");
+        }
+        while current_doc < d {
+            doc_ptr.push(word_ids.len() as u32);
+            current_doc += 1;
+        }
+        word_ids.push((w - 1) as u32);
+        counts.push(c);
+    }
+    while current_doc <= n_docs {
+        doc_ptr.push(word_ids.len() as u32);
+        current_doc += 1;
+    }
+    if word_ids.len() != nnz {
+        anyhow::bail!("NNZ mismatch: header says {nnz}, parsed {}", word_ids.len());
+    }
+    Ok(Corpus::new(
+        name,
+        DocWordMatrix { n_docs, n_words, doc_ptr, word_ids, counts },
+    ))
+}
+
+/// Load `docword.<name>.txt`.
+pub fn load_docword(path: &Path) -> anyhow::Result<Corpus> {
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "corpus".into());
+    let f = File::open(path)?;
+    read_docword(&name, BufReader::new(f))
+}
+
+/// Load a `vocab.<name>.txt` word list.
+pub fn load_vocab(path: &Path) -> anyhow::Result<Vocabulary> {
+    let f = File::open(path)?;
+    let mut v = Vocabulary::new();
+    for line in BufReader::new(f).lines() {
+        let line = line?;
+        v.intern(line.trim());
+    }
+    Ok(v)
+}
+
+/// Write a corpus in docword format (round-trip support; used by tests and
+/// by `expfig --export` so runs can be reproduced outside this crate).
+pub fn write_docword<W: Write>(corpus: &Corpus, mut out: W) -> anyhow::Result<()> {
+    writeln!(out, "{}", corpus.n_docs())?;
+    writeln!(out, "{}", corpus.n_words())?;
+    writeln!(out, "{}", corpus.nnz())?;
+    for d in 0..corpus.n_docs() {
+        for (w, c) in corpus.docs.iter_doc(d) {
+            writeln!(out, "{} {} {}", d + 1, w + 1, c as u64)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const SAMPLE: &str = "3\n4\n5\n1 1 2\n1 3 1\n2 2 3\n3 4 5\n3 1 1\n";
+
+    #[test]
+    fn parses_header_and_triplets() {
+        let c = read_docword("t", Cursor::new(SAMPLE)).unwrap();
+        assert_eq!(c.n_docs(), 3);
+        assert_eq!(c.n_words(), 4);
+        assert_eq!(c.nnz(), 5);
+        assert_eq!(c.docs.doc_words(0), &[0, 2]);
+        assert_eq!(c.docs.doc_counts(1), &[3.0]);
+        assert_eq!(c.docs.doc_words(2), &[3, 0]);
+        assert_eq!(c.n_tokens(), 12.0);
+    }
+
+    #[test]
+    fn handles_empty_documents() {
+        // doc 2 has no entries
+        let s = "3\n2\n2\n1 1 1\n3 2 4\n";
+        let c = read_docword("t", Cursor::new(s)).unwrap();
+        assert_eq!(c.docs.doc_words(1), &[] as &[u32]);
+        assert_eq!(c.docs.doc_counts(2), &[4.0]);
+    }
+
+    #[test]
+    fn rejects_bad_word_ids() {
+        let s = "1\n2\n1\n1 3 1\n";
+        assert!(read_docword("t", Cursor::new(s)).is_err());
+    }
+
+    #[test]
+    fn rejects_unsorted_docs() {
+        let s = "2\n2\n2\n2 1 1\n1 1 1\n";
+        assert!(read_docword("t", Cursor::new(s)).is_err());
+    }
+
+    #[test]
+    fn rejects_nnz_mismatch() {
+        let s = "1\n2\n5\n1 1 1\n";
+        assert!(read_docword("t", Cursor::new(s)).is_err());
+    }
+
+    #[test]
+    fn write_read_round_trip() {
+        let c = read_docword("t", Cursor::new(SAMPLE)).unwrap();
+        let mut buf = Vec::new();
+        write_docword(&c, &mut buf).unwrap();
+        let c2 = read_docword("t", Cursor::new(buf)).unwrap();
+        assert_eq!(c.docs, c2.docs);
+    }
+}

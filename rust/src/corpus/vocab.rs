@@ -1,0 +1,144 @@
+//! Open-vocabulary manager for lifelong streams (§3.2).
+//!
+//! The paper's FOEM "can possibly process both infinite documents and
+//! vocabulary words in the data stream without ending": when a new
+//! vocabulary word is met, the vocabulary size is incremented (`W ← W+1`)
+//! and the denominator `W(β−1)` of Eq. 13 grows accordingly.  This module
+//! owns the string↔id mapping and the monotonically growing `W` that the
+//! FOEM denominator reads.
+
+use std::collections::HashMap;
+
+/// Monotone string-to-id vocabulary. Ids are dense `0..len`.
+#[derive(Debug, Default, Clone)]
+pub struct Vocabulary {
+    by_name: HashMap<String, u32>,
+    names: Vec<String>,
+}
+
+impl Vocabulary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current vocabulary size W.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Intern a word, growing W when it is unseen (the paper's `W ← W+1`).
+    pub fn intern(&mut self, word: &str) -> u32 {
+        if let Some(&id) = self.by_name.get(word) {
+            return id;
+        }
+        let id = self.names.len() as u32;
+        self.by_name.insert(word.to_string(), id);
+        self.names.push(word.to_string());
+        id
+    }
+
+    /// Lookup without growing.
+    pub fn get(&self, word: &str) -> Option<u32> {
+        self.by_name.get(word).copied()
+    }
+
+    pub fn name(&self, id: u32) -> Option<&str> {
+        self.names.get(id as usize).map(|s| s.as_str())
+    }
+
+    /// Pre-register `n` anonymous words `w0..w{n-1}` (synthetic corpora).
+    pub fn with_anonymous(n: usize) -> Self {
+        let mut v = Self::new();
+        for i in 0..n {
+            v.intern(&format!("w{i}"));
+        }
+        v
+    }
+}
+
+/// Tracks the vocabulary-growth statistics of a lifelong stream:
+/// how many ids were first seen in each minibatch. Used by the
+/// `lifelong_stream` example and the coordinator's metrics.
+#[derive(Debug, Default, Clone)]
+pub struct VocabGrowth {
+    /// `seen[w] == true` once word id `w` has appeared in the stream.
+    seen: Vec<bool>,
+    /// Number of distinct ids observed so far (the *effective* W the
+    /// FOEM denominator uses).
+    pub n_seen: usize,
+    /// Per-minibatch count of first-time words.
+    pub new_per_batch: Vec<usize>,
+}
+
+impl VocabGrowth {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one minibatch's word ids; returns the number of new words.
+    pub fn observe(&mut self, word_ids: impl Iterator<Item = u32>) -> usize {
+        let mut fresh = 0usize;
+        for w in word_ids {
+            let w = w as usize;
+            if w >= self.seen.len() {
+                self.seen.resize(w + 1, false);
+            }
+            if !self.seen[w] {
+                self.seen[w] = true;
+                self.n_seen += 1;
+                fresh += 1;
+            }
+        }
+        self.new_per_batch.push(fresh);
+        fresh
+    }
+
+    /// The effective vocabulary size after the batches observed so far —
+    /// what FOEM plugs into `W(β−1)` (never less than 1).
+    pub fn effective_w(&self) -> usize {
+        self.n_seen.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_grows_monotonically() {
+        let mut v = Vocabulary::new();
+        assert_eq!(v.intern("alpha"), 0);
+        assert_eq!(v.intern("beta"), 1);
+        assert_eq!(v.intern("alpha"), 0);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.name(1), Some("beta"));
+        assert_eq!(v.get("gamma"), None);
+    }
+
+    #[test]
+    fn anonymous_vocab() {
+        let v = Vocabulary::with_anonymous(5);
+        assert_eq!(v.len(), 5);
+        assert_eq!(v.get("w3"), Some(3));
+    }
+
+    #[test]
+    fn growth_counts_first_appearances() {
+        let mut g = VocabGrowth::new();
+        assert_eq!(g.observe([0u32, 1, 1, 2].into_iter()), 3);
+        assert_eq!(g.observe([1u32, 2, 5].into_iter()), 1);
+        assert_eq!(g.n_seen, 4);
+        assert_eq!(g.effective_w(), 4);
+        assert_eq!(g.new_per_batch, vec![3, 1]);
+    }
+
+    #[test]
+    fn effective_w_never_zero() {
+        let g = VocabGrowth::new();
+        assert_eq!(g.effective_w(), 1);
+    }
+}

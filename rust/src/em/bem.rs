@@ -1,0 +1,263 @@
+//! Batch EM for LDA (paper Fig. 1).
+//!
+//! Sweeps every non-zero of the document-word matrix, computing all
+//! responsibilities from the *previous* iteration's sufficient statistics
+//! (synchronous schedule — the paper notes this is exactly synchronous
+//! belief propagation), then swaps in the freshly accumulated statistics.
+//! Monotonically improves the LDA log-likelihood (Eq. 12).
+
+use super::{
+    estep, perplexity, train_log_likelihood, ConvergenceCheck, MinibatchReport,
+    PhiStats, ThetaStats,
+};
+use crate::corpus::sparse::DocWordMatrix;
+use crate::util::{Rng, Timer};
+use crate::LdaParams;
+
+/// Batch EM trainer state.
+pub struct Bem {
+    pub params: LdaParams,
+    pub theta: ThetaStats,
+    pub phi: PhiStats,
+    theta_new: ThetaStats,
+    phi_new: PhiStats,
+    /// Per-iteration training perplexity trace (for convergence plots).
+    pub perplexity_trace: Vec<f64>,
+}
+
+impl Bem {
+    /// Random hard initialization (Fig. 1 line 1).
+    pub fn init(docs: &DocWordMatrix, params: LdaParams, seed: u64) -> Self {
+        let k = params.n_topics;
+        let mut theta = ThetaStats::zeros(k, docs.n_docs);
+        let mut phi = PhiStats::zeros(k, docs.n_words);
+        let mut rng = Rng::new(seed);
+        super::init_hard_assignments(docs, k, &mut rng, |d, w, c, topic| {
+            theta.doc_mut(d)[topic] += c;
+            let col = phi.word_mut(w as usize);
+            col[topic] += c;
+            phi.phisum[topic] += c;
+        });
+        Self {
+            params,
+            theta_new: ThetaStats::zeros(k, docs.n_docs),
+            phi_new: PhiStats::zeros(k, docs.n_words),
+            theta,
+            phi,
+            perplexity_trace: Vec::new(),
+        }
+    }
+
+    /// One synchronous sweep (Fig. 1 lines 3-7). Returns the training
+    /// log-likelihood *under the pre-sweep parameters* (free to compute
+    /// during the sweep).
+    pub fn sweep(&mut self, docs: &DocWordMatrix) -> f64 {
+        let k = self.params.n_topics;
+        let w_dim = docs.n_words;
+        let mut mu = vec![0.0f32; k];
+        self.theta_new.fill_zero();
+        self.phi_new.raw_mut().iter_mut().for_each(|x| *x = 0.0);
+        self.phi_new.phisum.iter_mut().for_each(|x| *x = 0.0);
+        let mut ll = 0.0f64;
+
+        let kam1 = self.params.n_topics as f32 * self.params.am1();
+        for d in 0..docs.n_docs {
+            let theta_d = self.theta.doc(d);
+            // z is computed from *unnormalized* theta stats; dividing by
+            // the per-doc total turns it into the true word likelihood
+            // p(w|d) = sum_k theta_d(k) phi_w(k).
+            let doc_norm = ((docs.doc_len(d) + kam1) as f64).max(1e-300).ln();
+            for (w, c) in docs.iter_doc(d) {
+                let w = w as usize;
+                let z = super::estep_unnormalized(
+                    theta_d,
+                    self.phi.word(w),
+                    &self.phi.phisum,
+                    self.params.am1(),
+                    self.params.bm1(),
+                    self.params.wbm1(w_dim),
+                    &mut mu,
+                );
+                if z > 0.0 {
+                    let inv = 1.0 / z;
+                    mu.iter_mut().for_each(|m| *m *= inv);
+                }
+                ll += c as f64 * (((z as f64).max(1e-300)).ln() - doc_norm);
+                // M-step accumulation (Fig. 1 line 6)
+                let trow = self.theta_new.doc_mut(d);
+                for i in 0..k {
+                    trow[i] += c * mu[i];
+                }
+                let (col, phisum) = self.phi_new.word_and_sum_mut(w);
+                for i in 0..k {
+                    col[i] += c * mu[i];
+                    phisum[i] += c * mu[i];
+                }
+            }
+        }
+        std::mem::swap(&mut self.theta, &mut self.theta_new);
+        std::mem::swap(&mut self.phi, &mut self.phi_new);
+        ll
+    }
+
+    /// Train until the paper's convergence test fires. Returns the usual
+    /// report.
+    pub fn train(
+        &mut self,
+        docs: &DocWordMatrix,
+        check: &mut ConvergenceCheck,
+    ) -> MinibatchReport {
+        let timer = Timer::start();
+        let tokens = docs.total_tokens();
+        let mut iters = 0usize;
+        let mut last_ll = f64::NEG_INFINITY;
+        for t in 0..check.max_iters {
+            last_ll = self.sweep(docs);
+            let ppx = perplexity(last_ll, tokens);
+            self.perplexity_trace.push(ppx);
+            iters = t + 1;
+            if check.update(t, ppx) {
+                break;
+            }
+        }
+        MinibatchReport {
+            inner_iters: iters,
+            seconds: timer.seconds(),
+            train_ll: last_ll,
+            tokens,
+        }
+    }
+
+    /// Exact training log-likelihood under current parameters.
+    pub fn log_likelihood(&self, docs: &DocWordMatrix) -> f64 {
+        train_log_likelihood(docs, &self.theta, &self.phi, &self.params)
+    }
+
+    /// Fold-in: fit theta for held-out documents with phi frozen (used by
+    /// the predictive-perplexity protocol, §2.4). Returns the theta stats
+    /// for `docs`.
+    pub fn fold_in(
+        phi: &PhiStats,
+        params: &LdaParams,
+        docs: &DocWordMatrix,
+        n_iters: usize,
+        seed: u64,
+    ) -> ThetaStats {
+        let k = params.n_topics;
+        let mut theta = ThetaStats::zeros(k, docs.n_docs);
+        let mut rng = Rng::new(seed);
+        super::init_hard_assignments(docs, k, &mut rng, |d, _, c, topic| {
+            theta.doc_mut(d)[topic] += c;
+        });
+        let mut mu = vec![0.0f32; k];
+        let w_dim = phi.n_words;
+        for _ in 0..n_iters {
+            for d in 0..docs.n_docs {
+                let mut fresh = vec![0.0f32; k];
+                for (w, c) in docs.iter_doc(d) {
+                    estep(
+                        theta.doc(d),
+                        phi.word(w as usize),
+                        &phi.phisum,
+                        params,
+                        w_dim,
+                        &mut mu,
+                    );
+                    for i in 0..k {
+                        fresh[i] += c * mu[i];
+                    }
+                }
+                theta.doc_mut(d).copy_from_slice(&fresh);
+            }
+        }
+        theta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, SyntheticConfig};
+
+    fn small_docs() -> DocWordMatrix {
+        generate(&SyntheticConfig::small(), 3).docs
+    }
+
+    #[test]
+    fn init_stats_are_consistent() {
+        let docs = small_docs();
+        let p = LdaParams::paper_defaults(8);
+        let bem = Bem::init(&docs, p, 0);
+        // per-doc theta mass == doc token mass
+        for d in 0..docs.n_docs {
+            assert!(
+                (bem.theta.doc_total(d) - docs.doc_len(d)).abs() < 1e-3,
+                "doc {d}"
+            );
+        }
+        // phi mass == corpus mass
+        assert!((bem.phi.total_mass() - docs.total_tokens()).abs() < 1e-2);
+    }
+
+    #[test]
+    fn sweep_preserves_mass() {
+        let docs = small_docs();
+        let p = LdaParams::paper_defaults(8);
+        let mut bem = Bem::init(&docs, p, 0);
+        bem.sweep(&docs);
+        let total = docs.total_tokens();
+        assert!((bem.phi.total_mass() - total).abs() < total * 1e-5);
+        for d in 0..docs.n_docs {
+            assert!((bem.theta.doc_total(d) - docs.doc_len(d)).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn log_likelihood_monotone_improves() {
+        // Eq. 12: every sweep must not decrease the log-likelihood.
+        let docs = small_docs();
+        let p = LdaParams::paper_defaults(5);
+        let mut bem = Bem::init(&docs, p, 1);
+        let mut prev = bem.log_likelihood(&docs);
+        for _ in 0..10 {
+            bem.sweep(&docs);
+            let ll = bem.log_likelihood(&docs);
+            assert!(
+                ll >= prev - prev.abs() * 1e-6,
+                "LL decreased: {prev} -> {ll}"
+            );
+            prev = ll;
+        }
+    }
+
+    #[test]
+    fn train_converges_and_reports() {
+        let docs = small_docs();
+        let p = LdaParams::paper_defaults(5);
+        let mut bem = Bem::init(&docs, p, 2);
+        let mut check = ConvergenceCheck::new(5.0, 5, 200);
+        let report = bem.train(&docs, &mut check);
+        assert!(report.inner_iters >= 5);
+        assert!(report.inner_iters < 200, "{}", report.inner_iters);
+        assert!(report.train_perplexity() > 1.0);
+        assert!(report.train_perplexity() < 500.0);
+        // trace is recorded and generally decreasing front-to-back
+        let tr = &bem.perplexity_trace;
+        assert_eq!(tr.len(), report.inner_iters);
+        assert!(tr[tr.len() - 1] <= tr[0]);
+    }
+
+    #[test]
+    fn fold_in_produces_consistent_theta() {
+        let docs = small_docs();
+        let p = LdaParams::paper_defaults(5);
+        let mut bem = Bem::init(&docs, p, 2);
+        for _ in 0..5 {
+            bem.sweep(&docs);
+        }
+        let theta = Bem::fold_in(&bem.phi, &p, &docs, 10, 9);
+        for d in 0..docs.n_docs {
+            assert!((theta.doc_total(d) - docs.doc_len(d)).abs() < 1e-2);
+        }
+    }
+}

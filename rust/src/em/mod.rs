@@ -1,0 +1,437 @@
+//! The EM framework for LDA (paper §2): shared sufficient-statistics
+//! types, the Eq. 11 / Eq. 13 E-step inner loops, and the four EM
+//! algorithms — batch ([`bem`]), incremental ([`iem`]), stepwise
+//! ([`sem`]) and the paper's contribution, fast online EM ([`foem`]) with
+//! its residual scheduler ([`schedule`]).
+
+pub mod bem;
+pub mod foem;
+pub mod iem;
+pub mod schedule;
+pub mod sem;
+
+use crate::corpus::sparse::DocWordMatrix;
+use crate::LdaParams;
+
+/// Global topic-word sufficient statistics `phi_hat_{K×W}` (+ topic
+/// totals), stored word-column-contiguous: `phi[w*k .. (w+1)*k]` is word
+/// `w`'s K-vector.  Column-contiguity is what makes parameter streaming
+/// (§3.2) a sequential-I/O problem — one column = one disk page run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhiStats {
+    pub k: usize,
+    pub n_words: usize,
+    data: Vec<f32>,
+    /// `phisum[k] = sum_w phi[w][k]` (the paper's phi_hat(k)).
+    pub phisum: Vec<f32>,
+}
+
+impl PhiStats {
+    pub fn zeros(k: usize, n_words: usize) -> Self {
+        Self { k, n_words, data: vec![0.0; k * n_words], phisum: vec![0.0; k] }
+    }
+
+    #[inline]
+    pub fn word(&self, w: usize) -> &[f32] {
+        &self.data[w * self.k..(w + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn word_mut(&mut self, w: usize) -> &mut [f32] {
+        &mut self.data[w * self.k..(w + 1) * self.k]
+    }
+
+    /// Add `delta` into column `w` and the totals.
+    #[inline]
+    pub fn add_to_word(&mut self, w: usize, delta: &[f32]) {
+        let col = &mut self.data[w * self.k..(w + 1) * self.k];
+        for ((c, s), &d) in col.iter_mut().zip(self.phisum.iter_mut()).zip(delta) {
+            *c += d;
+            *s += d;
+        }
+    }
+
+    /// Split borrow: word column `w` and the totals, both mutable.
+    /// Needed by the IEM-style in-place exclude/include updates.
+    #[inline]
+    pub fn word_and_sum_mut(&mut self, w: usize) -> (&mut [f32], &mut [f32]) {
+        let col = &mut self.data[w * self.k..(w + 1) * self.k];
+        (col, &mut self.phisum)
+    }
+
+    /// Recompute `phisum` from scratch (used after bulk overwrites).
+    pub fn rebuild_phisum(&mut self) {
+        self.phisum.iter_mut().for_each(|s| *s = 0.0);
+        for w in 0..self.n_words {
+            let col = &self.data[w * self.k..(w + 1) * self.k];
+            for (s, &c) in self.phisum.iter_mut().zip(col) {
+                *s += c;
+            }
+        }
+    }
+
+    /// Total accumulated mass `sum_k phisum(k)`.
+    pub fn total_mass(&self) -> f64 {
+        self.phisum.iter().map(|&x| x as f64).sum()
+    }
+
+    /// Normalized topic-word probability `phi_w(k)` (Eq. 10).
+    pub fn prob(&self, w: usize, params: &LdaParams) -> Vec<f32> {
+        let bm1 = params.bm1();
+        let wbm1 = params.wbm1(self.n_words);
+        self.word(w)
+            .iter()
+            .zip(&self.phisum)
+            .map(|(&pw, &ps)| (pw + bm1) / (ps + wbm1))
+            .collect()
+    }
+
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn raw_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+/// Document-topic sufficient statistics `theta_hat_{K×D}`, row-contiguous
+/// per document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThetaStats {
+    pub k: usize,
+    pub n_docs: usize,
+    data: Vec<f32>,
+}
+
+impl ThetaStats {
+    pub fn zeros(k: usize, n_docs: usize) -> Self {
+        Self { k, n_docs, data: vec![0.0; k * n_docs] }
+    }
+
+    #[inline]
+    pub fn doc(&self, d: usize) -> &[f32] {
+        &self.data[d * self.k..(d + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn doc_mut(&mut self, d: usize) -> &mut [f32] {
+        &mut self.data[d * self.k..(d + 1) * self.k]
+    }
+
+    pub fn fill_zero(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Per-document total `sum_k theta_hat_d(k)` (== doc token mass once
+    /// stats are consistent).
+    pub fn doc_total(&self, d: usize) -> f32 {
+        self.doc(d).iter().sum()
+    }
+
+    /// Normalized document-topic probability `theta_d(k)` (Eq. 9).
+    pub fn prob(&self, d: usize, params: &LdaParams) -> Vec<f32> {
+        let am1 = params.am1();
+        let row = self.doc(d);
+        let denom = row.iter().sum::<f32>() + params.n_topics as f32 * am1;
+        row.iter().map(|&t| (t + am1) / denom).collect()
+    }
+
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// The Eq. 11 E-step for one non-zero entry: writes the *unnormalized*
+/// responsibility into `mu` and returns the normalizer `Z`.
+///
+/// This is the hottest loop in the whole system; it is kept branch-free
+/// and slice-length-pinned so LLVM auto-vectorizes it.
+#[inline]
+pub fn estep_unnormalized(
+    theta_d: &[f32],
+    phi_w: &[f32],
+    phisum: &[f32],
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    mu: &mut [f32],
+) -> f32 {
+    let k = mu.len();
+    let (theta_d, phi_w, phisum) = (&theta_d[..k], &phi_w[..k], &phisum[..k]);
+    let mut z = 0.0f32;
+    for i in 0..k {
+        let v = (theta_d[i] + am1) * (phi_w[i] + bm1) / (phisum[i] + wbm1);
+        mu[i] = v;
+        z += v;
+    }
+    z
+}
+
+/// Full E-step (Eq. 11): normalized responsibility into `mu`.
+#[inline]
+pub fn estep(
+    theta_d: &[f32],
+    phi_w: &[f32],
+    phisum: &[f32],
+    params: &LdaParams,
+    w_dim: usize,
+    mu: &mut [f32],
+) {
+    let z = estep_unnormalized(
+        theta_d,
+        phi_w,
+        phisum,
+        params.am1(),
+        params.bm1(),
+        params.wbm1(w_dim),
+        mu,
+    );
+    if z > 0.0 {
+        let inv = 1.0 / z;
+        mu.iter_mut().for_each(|m| *m *= inv);
+    }
+}
+
+/// Random hard initialization of responsibilities: all of an entry's mass
+/// on one uniformly random topic. This is the standard LDA-EM
+/// initialization (equivalent to GS's random topic assignment) and keeps
+/// initial sufficient statistics consistent by construction.
+pub fn init_hard_assignments(
+    docs: &DocWordMatrix,
+    k: usize,
+    rng: &mut crate::util::Rng,
+    mut sink: impl FnMut(usize, u32, f32, usize),
+) {
+    for d in 0..docs.n_docs {
+        for (w, c) in docs.iter_doc(d) {
+            let topic = rng.below(k);
+            sink(d, w, c, topic);
+        }
+    }
+}
+
+/// Training-set word log-likelihood of a (theta, phi) state:
+/// `sum_{w,d} x_{w,d} log sum_k theta_d(k) phi_w(k)` with the Eq. 9/10
+/// normalizations. `exp(-ll/ntokens)` is the paper's training perplexity.
+pub fn train_log_likelihood(
+    docs: &DocWordMatrix,
+    theta: &ThetaStats,
+    phi: &PhiStats,
+    params: &LdaParams,
+) -> f64 {
+    let am1 = params.am1();
+    let bm1 = params.bm1();
+    let wbm1 = params.wbm1(phi.n_words);
+    let kam1 = params.n_topics as f32 * am1;
+    let mut ll = 0.0f64;
+    for d in 0..docs.n_docs {
+        let trow = theta.doc(d);
+        let tden = trow.iter().sum::<f32>() + kam1;
+        for (w, c) in docs.iter_doc(d) {
+            let pcol = phi.word(w as usize);
+            let mut p = 0.0f32;
+            for i in 0..params.n_topics {
+                p += (trow[i] + am1) / tden * (pcol[i] + bm1)
+                    / (phi.phisum[i] + wbm1);
+            }
+            ll += c as f64 * (p.max(1e-30) as f64).ln();
+        }
+    }
+    ll
+}
+
+/// Perplexity from a log-likelihood total and token mass (Eq. 21 outer
+/// form).
+pub fn perplexity(ll: f64, n_tokens: f64) -> f64 {
+    (-ll / n_tokens.max(1.0)).exp()
+}
+
+/// Report of one algorithm invocation on one minibatch (or one batch
+/// sweep), consumed by the coordinator's metrics and the experiment
+/// harness.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MinibatchReport {
+    /// Inner sweeps actually run before the convergence check fired.
+    pub inner_iters: usize,
+    /// Wall-clock seconds spent.
+    pub seconds: f64,
+    /// Training log-likelihood of the minibatch at exit.
+    pub train_ll: f64,
+    /// Token mass of the minibatch.
+    pub tokens: f64,
+}
+
+impl MinibatchReport {
+    pub fn train_perplexity(&self) -> f64 {
+        perplexity(self.train_ll, self.tokens)
+    }
+}
+
+/// Convergence test the paper uses per minibatch (§4): stop when the
+/// training-perplexity delta between two successive checks is below
+/// `threshold` (default 10), checking every `check_every` sweeps
+/// (footnote 8: every 10).
+#[derive(Debug, Clone, Copy)]
+pub struct ConvergenceCheck {
+    pub threshold: f64,
+    pub check_every: usize,
+    pub max_iters: usize,
+    last: Option<f64>,
+}
+
+impl ConvergenceCheck {
+    pub fn new(threshold: f64, check_every: usize, max_iters: usize) -> Self {
+        Self { threshold, check_every, max_iters, last: None }
+    }
+
+    /// Paper defaults.
+    pub fn paper() -> Self {
+        Self::new(10.0, 10, 500)
+    }
+
+    /// Feed the perplexity measured at iteration `t` (0-based); returns
+    /// true when converged or out of budget.
+    pub fn update(&mut self, t: usize, perplexity: f64) -> bool {
+        if t + 1 >= self.max_iters {
+            return true;
+        }
+        let fire = (t + 1) % self.check_every == 0;
+        if !fire {
+            return false;
+        }
+        let done = match self.last {
+            Some(prev) => (prev - perplexity).abs() < self.threshold,
+            None => false,
+        };
+        self.last = Some(perplexity);
+        done
+    }
+
+    pub fn reset(&mut self) {
+        self.last = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn params(k: usize) -> LdaParams {
+        LdaParams::paper_defaults(k)
+    }
+
+    #[test]
+    fn phi_stats_add_and_sum() {
+        let mut phi = PhiStats::zeros(3, 4);
+        phi.add_to_word(2, &[1.0, 2.0, 3.0]);
+        phi.add_to_word(0, &[0.5, 0.0, 0.0]);
+        assert_eq!(phi.word(2), &[1.0, 2.0, 3.0]);
+        assert_eq!(phi.phisum, vec![1.5, 2.0, 3.0]);
+        assert_eq!(phi.total_mass(), 6.5);
+        let mut phi2 = phi.clone();
+        phi2.rebuild_phisum();
+        assert_eq!(phi.phisum, phi2.phisum);
+    }
+
+    #[test]
+    fn phi_prob_normalizes_over_words() {
+        let mut phi = PhiStats::zeros(2, 3);
+        phi.add_to_word(0, &[4.0, 1.0]);
+        phi.add_to_word(1, &[2.0, 2.0]);
+        phi.add_to_word(2, &[1.0, 6.0]);
+        let p = params(2);
+        let mut per_topic = [0.0f32; 2];
+        for w in 0..3 {
+            let pr = phi.prob(w, &p);
+            for k in 0..2 {
+                per_topic[k] += pr[k];
+            }
+        }
+        // sum_w phi_w(k) == 1 per topic
+        assert!((per_topic[0] - 1.0).abs() < 1e-5);
+        assert!((per_topic[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn theta_prob_normalizes_over_topics() {
+        let mut th = ThetaStats::zeros(4, 2);
+        th.doc_mut(0).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let pr = th.prob(0, &params(4));
+        let s: f32 = pr.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn estep_matches_manual() {
+        let p = params(2);
+        let theta = [1.0f32, 3.0];
+        let phi = [2.0f32, 2.0];
+        let phisum = [10.0f32, 20.0];
+        let w = 100usize;
+        let mut mu = [0.0f32; 2];
+        estep(&theta, &phi, &phisum, &p, w, &mut mu);
+        let am1 = p.am1();
+        let bm1 = p.bm1();
+        let wbm1 = p.wbm1(w);
+        let u0 = (1.0 + am1) * (2.0 + bm1) / (10.0 + wbm1);
+        let u1 = (3.0 + am1) * (2.0 + bm1) / (20.0 + wbm1);
+        assert!((mu[0] - u0 / (u0 + u1)).abs() < 1e-6);
+        assert!((mu[0] + mu[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn init_hard_assignments_covers_all_entries() {
+        let docs = DocWordMatrix::from_triplets(
+            2,
+            3,
+            &[(0, 0, 2.0), (0, 1, 1.0), (1, 2, 4.0)],
+        );
+        let mut rng = Rng::new(0);
+        let mut seen = 0usize;
+        let mut mass = 0.0f32;
+        init_hard_assignments(&docs, 5, &mut rng, |_, _, c, topic| {
+            assert!(topic < 5);
+            seen += 1;
+            mass += c;
+        });
+        assert_eq!(seen, 3);
+        assert_eq!(mass, 7.0);
+    }
+
+    #[test]
+    fn convergence_check_fires_on_small_delta() {
+        let mut c = ConvergenceCheck::new(10.0, 10, 1000);
+        // first check at t=9 establishes baseline
+        for t in 0..9 {
+            assert!(!c.update(t, 1000.0));
+        }
+        assert!(!c.update(9, 1000.0));
+        // big improvement: keep going
+        for t in 10..19 {
+            assert!(!c.update(t, 900.0));
+        }
+        assert!(!c.update(19, 900.0));
+        // small delta now: converged at the next check
+        for t in 20..29 {
+            assert!(!c.update(t, 895.0));
+        }
+        assert!(c.update(29, 895.0));
+    }
+
+    #[test]
+    fn convergence_check_respects_budget() {
+        let mut c = ConvergenceCheck::new(0.0, 10, 5);
+        assert!(!c.update(0, 1.0));
+        assert!(c.update(4, 1.0));
+    }
+
+    #[test]
+    fn perplexity_of_uniform_model() {
+        // uniform over V words => perplexity == V
+        let v = 64f64;
+        let ll = (1.0 / v).ln() * 100.0;
+        assert!((perplexity(ll, 100.0) - v).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,6 @@
+//! Evaluation harness: the paper's predictive-perplexity protocol (§2.4)
+//! and topic-quality diagnostics.
+
+pub mod perplexity;
+
+pub use perplexity::{predictive_perplexity, EvalProtocol};

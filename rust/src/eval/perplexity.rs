@@ -1,0 +1,170 @@
+//! Predictive perplexity (paper §2.4, Eq. 21).
+//!
+//! Protocol: fix the trained `phi_hat`; split each *test* document's
+//! tokens 80/20; fold in `theta_hat` on the 80% side (E/M steps on theta
+//! only); evaluate
+//!
+//!   P = exp( - sum x^{20%} log( sum_k theta_d(k) phi_w(k) ) / sum x^{20%} )
+//!
+//! on the held-out 20%. Lower is better. This is the measure behind
+//! Figs. 9, 11 and 12.
+
+use crate::corpus::sparse::DocWordMatrix;
+use crate::em::bem::Bem;
+use crate::em::PhiStats;
+use crate::LdaParams;
+
+/// Evaluation protocol parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalProtocol {
+    /// Fold-in sweeps on the observed 80% (the paper uses up to 500; the
+    /// estimate stabilizes far earlier at our scales).
+    pub fold_in_iters: usize,
+    /// Seed for the 80/20 token split and the fold-in init.
+    pub seed: u64,
+}
+
+impl Default for EvalProtocol {
+    fn default() -> Self {
+        Self { fold_in_iters: 50, seed: 0 }
+    }
+}
+
+/// Compute the predictive perplexity of `phi` on `test_docs`.
+///
+/// `params` must be the smoothing parameterization that matches how `phi`
+/// was produced (see `OnlineLda::eval_params`).
+pub fn predictive_perplexity(
+    phi: &PhiStats,
+    params: &LdaParams,
+    test_docs: &DocWordMatrix,
+    protocol: &EvalProtocol,
+) -> f64 {
+    let (observed, held_out) = test_docs.split_tokens_80_20(protocol.seed);
+    let theta = Bem::fold_in(
+        phi,
+        params,
+        &observed,
+        protocol.fold_in_iters,
+        protocol.seed ^ 0x5EED,
+    );
+
+    let k = params.n_topics;
+    let am1 = params.am1();
+    let bm1 = params.bm1();
+    let wbm1 = params.wbm1(phi.n_words);
+    let kam1 = k as f32 * am1;
+    let mut ll = 0.0f64;
+    let mut n = 0.0f64;
+    for d in 0..held_out.n_docs {
+        let trow = theta.doc(d);
+        let tden = trow.iter().sum::<f32>() + kam1;
+        if tden <= 0.0 {
+            continue;
+        }
+        for (w, c) in held_out.iter_doc(d) {
+            let col = phi.word(w as usize);
+            let mut p = 0.0f32;
+            for i in 0..k {
+                p += (trow[i] + am1) / tden * (col[i] + bm1)
+                    / (phi.phisum[i] + wbm1);
+            }
+            ll += c as f64 * (p.max(1e-30) as f64).ln();
+            n += c as f64;
+        }
+    }
+    crate::em::perplexity(ll, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, SyntheticConfig};
+    use crate::em::bem::Bem;
+    use crate::em::ConvergenceCheck;
+
+    fn setup() -> (crate::corpus::Corpus, crate::corpus::Corpus) {
+        let c = generate(&SyntheticConfig::small(), 81);
+        c.split(40, 0)
+    }
+
+    #[test]
+    fn trained_model_beats_untrained() {
+        let (train, test) = setup();
+        let p = LdaParams::paper_defaults(10);
+        // Untrained phi: tiny uniform mass.
+        let mut phi0 = PhiStats::zeros(10, train.n_words());
+        for w in 0..train.n_words() {
+            phi0.add_to_word(w, &vec![0.01; 10]);
+        }
+        let proto = EvalProtocol::default();
+        let ppx0 = predictive_perplexity(&phi0, &p, &test.docs, &proto);
+
+        let mut bem = Bem::init(&train.docs, p, 0);
+        let mut check = ConvergenceCheck::new(5.0, 5, 100);
+        bem.train(&train.docs, &mut check);
+        let ppx1 = predictive_perplexity(&bem.phi, &p, &test.docs, &proto);
+        assert!(
+            ppx1 < ppx0 * 0.9,
+            "trained {ppx1} not clearly better than uniform {ppx0}"
+        );
+    }
+
+    #[test]
+    fn perplexity_bounded_by_vocab() {
+        // A uniform predictive distribution gives perplexity == W; any
+        // model should be in (1, W * slack).
+        let (train, test) = setup();
+        let p = LdaParams::paper_defaults(5);
+        let mut bem = Bem::init(&train.docs, p, 1);
+        for _ in 0..10 {
+            bem.sweep(&train.docs);
+        }
+        let ppx = predictive_perplexity(
+            &bem.phi,
+            &p,
+            &test.docs,
+            &EvalProtocol::default(),
+        );
+        assert!(ppx > 1.0);
+        assert!(ppx < train.n_words() as f64 * 2.0, "{ppx}");
+    }
+
+    #[test]
+    fn protocol_is_deterministic() {
+        let (train, test) = setup();
+        let p = LdaParams::paper_defaults(5);
+        let mut bem = Bem::init(&train.docs, p, 1);
+        for _ in 0..5 {
+            bem.sweep(&train.docs);
+        }
+        let proto = EvalProtocol::default();
+        let a = predictive_perplexity(&bem.phi, &p, &test.docs, &proto);
+        let b = predictive_perplexity(&bem.phi, &p, &test.docs, &proto);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn more_training_lowers_perplexity() {
+        let (train, test) = setup();
+        let p = LdaParams::paper_defaults(10);
+        let mut bem = Bem::init(&train.docs, p, 3);
+        bem.sweep(&train.docs);
+        let early = predictive_perplexity(
+            &bem.phi,
+            &p,
+            &test.docs,
+            &EvalProtocol::default(),
+        );
+        for _ in 0..30 {
+            bem.sweep(&train.docs);
+        }
+        let late = predictive_perplexity(
+            &bem.phi,
+            &p,
+            &test.docs,
+            &EvalProtocol::default(),
+        );
+        assert!(late < early, "{late} !< {early}");
+    }
+}

@@ -1,0 +1,86 @@
+//! # foem — Fast Online EM for Big Topic Modeling
+//!
+//! A production-grade reproduction of *"Fast Online EM for Big Topic
+//! Modeling"* (Jia Zeng, Zhi-Qiang Liu, Xiao-Qin Cao; IEEE TKDE,
+//! DOI 10.1109/TKDE.2015.2492565) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's system contribution: the
+//!   streaming coordinator, the residual-based **dynamic scheduler**
+//!   ([`em::schedule`]), the disk-backed **parameter streaming** store
+//!   ([`store`]), the online EM family (BEM / IEM / SEM / **FOEM**,
+//!   [`em`]), five state-of-the-art online-LDA baselines ([`baselines`]),
+//!   and the evaluation harness ([`eval`]).
+//! * **Layer 2/1 (build time, `python/`)** — the dense minibatch EM
+//!   graphs and the Pallas E-step kernels, AOT-lowered to HLO text and
+//!   executed from Rust through PJRT ([`runtime`]). Python never runs on
+//!   the hot path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use foem::corpus::synthetic::{SyntheticConfig, generate};
+//! use foem::coordinator::config::RunConfig;
+//! use foem::coordinator::driver::Driver;
+//!
+//! let corpus = generate(&SyntheticConfig::small(), 42);
+//! let cfg = RunConfig { n_topics: 50, ..RunConfig::default() };
+//! let mut driver = Driver::new(cfg);
+//! let report = driver.train_corpus(&corpus).unwrap();
+//! println!("perplexity = {:.1}", report.final_perplexity);
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
+//! experiment-by-experiment map back to the paper.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod corpus;
+pub mod em;
+pub mod eval;
+pub mod runtime;
+pub mod store;
+pub mod stream;
+pub mod util;
+
+/// LDA model hyperparameters shared across every algorithm in the crate.
+///
+/// The paper's EM family works with the MAP parameterization: the E-step
+/// (Eq. 11) uses `alpha - 1` and `beta - 1`, and experiments set
+/// `alpha - 1 = beta - 1 = 0.01` (§4). VB-family baselines use `alpha`,
+/// `beta` directly (footnote 9 recommends 0.5 for those).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LdaParams {
+    /// Number of topics K.
+    pub n_topics: usize,
+    /// Dirichlet hyperparameter on document-topic distributions.
+    pub alpha: f32,
+    /// Dirichlet hyperparameter on topic-word distributions.
+    pub beta: f32,
+}
+
+impl LdaParams {
+    /// Paper defaults: `alpha - 1 = beta - 1 = 0.01` (§4).
+    pub fn paper_defaults(n_topics: usize) -> Self {
+        Self { n_topics, alpha: 1.01, beta: 1.01 }
+    }
+
+    /// `alpha - 1`, the numerator offset of Eq. 11.
+    #[inline]
+    pub fn am1(&self) -> f32 {
+        self.alpha - 1.0
+    }
+
+    /// `beta - 1`, the numerator offset of Eq. 11.
+    #[inline]
+    pub fn bm1(&self) -> f32 {
+        self.beta - 1.0
+    }
+
+    /// `W * (beta - 1)`, the denominator offset of Eq. 11 for vocabulary
+    /// size `w`.
+    #[inline]
+    pub fn wbm1(&self, w: usize) -> f32 {
+        w as f32 * self.bm1()
+    }
+}

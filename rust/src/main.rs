@@ -1,0 +1,198 @@
+//! `foem` — command-line entry point for the Fast Online EM topic
+//! modeling system.
+//!
+//! Subcommands:
+//!   train      train an algorithm on a corpus (UCI docword file or a
+//!              synthetic profile) and report predictive perplexity
+//!   info       show artifact registry + build info
+//!   selftest   run the PJRT artifact smoke test (L1/L2/L3 composition)
+//!
+//! Examples:
+//!   foem train --corpus synth:pubmed --algorithm foem --k 100
+//!   foem train --corpus data/docword.enron.txt --algorithm ovb --ds 512
+//!   foem train --corpus synth:nytimes --algorithm foem \
+//!        --store-path /tmp/phi.bin --buffer-mb 64 --verbose true
+//!   foem info
+
+use anyhow::{Context, Result};
+use foem::coordinator::config::RunConfig;
+use foem::coordinator::driver::Driver;
+use foem::corpus::synthetic::{self, SyntheticConfig};
+use foem::corpus::{uci, Corpus};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: foem <train|info|selftest> [--key value ...]\n\
+         train keys: --corpus <synth:NAME|PATH> --algorithm <foem|sem|scvb|ovb|ogs|rvb|soi>\n\
+         \x20       --k N --ds N --passes N --seed N --eval-every N --verbose true\n\
+         \x20       --store-path PATH --buffer-mb N --lambda-k-topics N --config FILE"
+    );
+    std::process::exit(2);
+}
+
+/// Parse `--key value` pairs into (key, value) with `-` normalized to `_`.
+fn parse_flags(args: &[String]) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .with_context(|| format!("expected --flag, got {}", args[i]))?;
+        let value = args
+            .get(i + 1)
+            .with_context(|| format!("--{key} needs a value"))?;
+        out.push((key.replace('-', "_"), value.clone()));
+        i += 2;
+    }
+    Ok(out)
+}
+
+fn load_corpus(spec: &str, seed: u64) -> Result<Corpus> {
+    if let Some(name) = spec.strip_prefix("synth:") {
+        let cfg = match name {
+            "small" => SyntheticConfig::small(),
+            "nips" => SyntheticConfig::nips_like(),
+            "enron" => SyntheticConfig::enron_like(),
+            "wiki" => SyntheticConfig::wiki_like(),
+            "nytimes" => SyntheticConfig::nytimes_like(),
+            "pubmed" => SyntheticConfig::pubmed_like(),
+            other => anyhow::bail!(
+                "unknown synthetic profile {other} \
+                 (small|nips|enron|wiki|nytimes|pubmed)"
+            ),
+        };
+        Ok(synthetic::generate(&cfg, seed))
+    } else {
+        uci::load_docword(std::path::Path::new(spec))
+    }
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args)?;
+    let mut cfg = RunConfig::default();
+    let mut corpus_spec = String::from("synth:small");
+    // config file first, CLI overrides second
+    for (k, v) in &flags {
+        if k == "config" {
+            cfg = RunConfig::from_file(std::path::Path::new(v))?;
+        }
+    }
+    for (k, v) in &flags {
+        match k.as_str() {
+            "config" => {}
+            "corpus" => corpus_spec = v.clone(),
+            other => cfg.set(other, v).with_context(|| format!("--{k}"))?,
+        }
+    }
+
+    let corpus = load_corpus(&corpus_spec, cfg.seed)?;
+    println!(
+        "corpus {}: D={} W={} NNZ={} tokens={}",
+        corpus.name,
+        corpus.n_docs(),
+        corpus.n_words(),
+        corpus.nnz(),
+        corpus.n_tokens()
+    );
+    println!(
+        "algorithm {} K={} D_s={} store={:?}",
+        cfg.algorithm.name(),
+        cfg.n_topics,
+        cfg.minibatch_docs,
+        cfg.store
+    );
+    let mut driver = Driver::new(cfg);
+    let report = driver.train_corpus(&corpus)?;
+    println!(
+        "done: predictive perplexity {:.2} | {:.0} tokens/s | mean inner iters {:.1}",
+        report.final_perplexity,
+        report.metrics.tokens_per_second(),
+        report.metrics.mean_inner_iters()
+    );
+    if let Some(io) = report.io {
+        println!(
+            "store I/O: {} col reads, {} col writes, {} buffer hits, {} misses",
+            io.col_reads, io.col_writes, io.buffer_hits, io.buffer_misses
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("foem {} — Fast Online EM for big topic modeling", env!("CARGO_PKG_VERSION"));
+    let dir = std::path::Path::new("artifacts");
+    match foem::runtime::registry::Registry::load(dir) {
+        Ok(reg) => {
+            println!("artifacts ({}):", reg.len());
+            for a in reg.iter() {
+                println!(
+                    "  {} [{}] b={} k={}{}",
+                    a.name,
+                    a.graph,
+                    a.b,
+                    a.k,
+                    if a.graph == "sem" {
+                        format!(" ds={} ws={} iters={}", a.ds, a.ws, a.iters)
+                    } else {
+                        String::new()
+                    }
+                );
+            }
+        }
+        Err(e) => println!("no artifacts: {e:#}"),
+    }
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    // Compose L3 (this binary) with the AOT L2/L1 artifact through PJRT
+    // and check the numerics against the native Rust E-step.
+    let dir = std::path::Path::new("artifacts");
+    let mut exec = foem::runtime::Executor::new(dir)?;
+    let meta = exec
+        .estep_variant_for(64)
+        .context("no estep artifact with k >= 64")?;
+    println!("selftest: executing {} via PJRT", meta.name);
+    let (b, k) = (meta.b, meta.k);
+    let mut rng = foem::util::Rng::new(0);
+    let theta: Vec<f32> = (0..b * k).map(|_| rng.next_f32() * 5.0).collect();
+    let phi: Vec<f32> = (0..b * k).map(|_| rng.next_f32() * 3.0).collect();
+    let phisum: Vec<f32> = (0..k).map(|_| rng.next_f32() * 100.0 + 1.0).collect();
+    let counts: Vec<f32> = (0..b).map(|_| (rng.below(5) + 1) as f32).collect();
+    let (am1, bm1, wbm1) = (0.01f32, 0.01f32, 0.01f32 * 5000.0);
+    let out = exec.run_estep(&meta.name, &theta, &phi, &phisum, &counts, am1, bm1, wbm1)?;
+
+    // Native reference.
+    let mut max_err = 0f32;
+    let mut mu = vec![0.0f32; k];
+    for e in 0..b {
+        let z = foem::em::estep_unnormalized(
+            &theta[e * k..(e + 1) * k],
+            &phi[e * k..(e + 1) * k],
+            &phisum,
+            am1,
+            bm1,
+            wbm1,
+            &mut mu,
+        );
+        let inv = 1.0 / z;
+        for i in 0..k {
+            let want = mu[i] * inv;
+            max_err = max_err.max((out.mu[e * k + i] - want).abs());
+        }
+    }
+    println!("selftest: max |PJRT - native| = {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-4, "numerics mismatch");
+    println!("selftest OK");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("selftest") => cmd_selftest(),
+        _ => usage(),
+    }
+}

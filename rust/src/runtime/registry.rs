@@ -1,0 +1,131 @@
+//! Artifact registry: parses `artifacts/manifest.tsv` (one artifact per
+//! line, `key=value` pairs) emitted by `python/compile/aot.py` alongside
+//! the human-readable `manifest.json`.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata of one AOT artifact.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Graph family: "estep" | "predict" | "sem".
+    pub graph: String,
+    /// Entry-block size B.
+    pub b: usize,
+    /// Topic capacity K.
+    pub k: usize,
+    /// SEM only: local doc capacity.
+    pub ds: usize,
+    /// SEM only: local vocab capacity.
+    pub ws: usize,
+    /// SEM only: inner sweeps baked into the graph.
+    pub iters: usize,
+}
+
+/// The set of artifacts available in a directory.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    dir: PathBuf,
+    artifacts: Vec<ArtifactMeta>,
+}
+
+impl Registry {
+    /// Parse `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("{path:?} missing — run `make artifacts` first")
+        })?;
+        let mut artifacts = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut meta = ArtifactMeta::default();
+            for kv in line.split_ascii_whitespace() {
+                let (key, value) = kv
+                    .split_once('=')
+                    .with_context(|| format!("line {}: bad pair {kv}", ln + 1))?;
+                match key {
+                    "name" => meta.name = value.to_string(),
+                    "file" => meta.file = value.to_string(),
+                    "graph" => meta.graph = value.to_string(),
+                    "b" => meta.b = value.parse()?,
+                    "k" => meta.k = value.parse()?,
+                    "ds" => meta.ds = value.parse()?,
+                    "ws" => meta.ws = value.parse()?,
+                    "iters" => meta.iters = value.parse()?,
+                    _ => {} // forward-compatible
+                }
+            }
+            anyhow::ensure!(!meta.name.is_empty(), "line {}: no name", ln + 1);
+            anyhow::ensure!(!meta.file.is_empty(), "line {}: no file", ln + 1);
+            artifacts.push(meta);
+        }
+        Ok(Self { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.artifacts.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_lines() {
+        let dir = crate::util::TempDir::new("registry");
+        std::fs::write(
+            dir.path().join("manifest.tsv"),
+            "name=estep_b8_k4 file=e.hlo.txt graph=estep b=8 k=4\n\
+             # comment\n\
+             \n\
+             name=sem_x file=s.hlo.txt graph=sem b=16 k=4 ds=2 ws=8 iters=3\n",
+        )
+        .unwrap();
+        let r = Registry::load(dir.path()).unwrap();
+        assert_eq!(r.len(), 2);
+        let e = r.get("estep_b8_k4").unwrap();
+        assert_eq!(e.graph, "estep");
+        assert_eq!((e.b, e.k), (8, 4));
+        let s = r.get("sem_x").unwrap();
+        assert_eq!((s.ds, s.ws, s.iters), (2, 8, 3));
+        assert!(r.get("nope").is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let dir = crate::util::TempDir::new("registry2");
+        let err = Registry::load(dir.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_nameless_lines() {
+        let dir = crate::util::TempDir::new("registry3");
+        std::fs::write(dir.path().join("manifest.tsv"), "graph=estep b=8\n")
+            .unwrap();
+        assert!(Registry::load(dir.path()).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Parameter streaming (paper §3.2): the global topic-word matrix
+//! `phi_hat_{K×W}` behind a column-store abstraction.
+//!
+//! The *big model* problem is that `K×W` does not fit in memory (the
+//! paper's example: K=10^5, W=10^6 → 400 GB). FOEM therefore keeps the
+//! matrix in secondary storage and streams only the columns (words) the
+//! current minibatch touches, plus a fixed-size buffer of hot columns
+//! (Table 5 sweeps the buffer size; Fig. 4 lines 2, 8, 15).
+//!
+//! Two implementations of [`PhiColumnStore`]:
+//! * [`InMemoryPhi`] — the whole matrix resident (the "in-memory" column
+//!   of Table 5, and what every non-FOEM algorithm implicitly uses);
+//! * [`paged::PagedPhi`] — a binary column file on disk with a hot-word
+//!   buffer, write-back caching, I/O accounting and restart recovery
+//!   (the fault-tolerance property of §3.2).
+
+pub mod paged;
+
+/// I/O accounting used by the Table 5 experiment and the coordinator's
+/// metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IoStats {
+    /// Columns read from disk.
+    pub col_reads: u64,
+    /// Columns written to disk.
+    pub col_writes: u64,
+    /// Column accesses served from the hot buffer.
+    pub buffer_hits: u64,
+    /// Column accesses that had to touch the backing store.
+    pub buffer_misses: u64,
+}
+
+/// Column-store abstraction over `phi_hat_{K×W}`.
+///
+/// The topic totals `phisum` are *not* part of the store — they are a
+/// K-vector owned by the algorithm (they must stay resident; they are the
+/// denominator of every E-step).
+pub trait PhiColumnStore {
+    /// Number of topics K (column length).
+    fn k(&self) -> usize;
+
+    /// Current vocabulary capacity W.
+    fn n_words(&self) -> usize;
+
+    /// Grow capacity to at least `n_words` columns of zeros (lifelong
+    /// vocabulary growth, `W ← W+1`).
+    fn ensure_capacity(&mut self, n_words: usize);
+
+    /// Access column `w` read-write. The store guarantees the slice holds
+    /// the current value on entry and persists mutations (possibly
+    /// write-back-cached) on exit.
+    fn with_column<R>(&mut self, w: usize, f: impl FnOnce(&mut [f32]) -> R) -> R;
+
+    /// Read-only convenience copy of a column.
+    fn read_column(&mut self, w: usize) -> Vec<f32> {
+        let mut out = vec![0.0; self.k()];
+        self.load_column(w, &mut out);
+        out
+    }
+
+    /// Read column `w` into `out` WITHOUT a write-back obligation.
+    /// Backends should avoid dirtying storage on this path.
+    fn load_column(&mut self, w: usize, out: &mut [f32]) {
+        self.with_column(w, |col| out.copy_from_slice(col));
+    }
+
+    /// Overwrite column `w` with `data` (no prior read needed).
+    fn store_column(&mut self, w: usize, data: &[f32]) {
+        self.with_column(w, |col| col.copy_from_slice(data));
+    }
+
+    /// Install the minibatch's hot words into the buffer (Fig. 4 line 2:
+    /// "Replace most frequent vocabulary word-topic parameter matrix ...
+    /// in buffer memory"). A no-op for in-memory stores.
+    fn set_hot_words(&mut self, words: &[u32]);
+
+    /// Persist all dirty state to the backing store.
+    fn flush(&mut self) -> anyhow::Result<()>;
+
+    /// Cumulative I/O counters.
+    fn io_stats(&self) -> IoStats;
+
+    /// Export the dense matrix (evaluation / checkpointing).
+    fn export_dense(&mut self) -> crate::em::PhiStats {
+        let k = self.k();
+        let n_words = self.n_words();
+        let mut phi = crate::em::PhiStats::zeros(k, n_words);
+        for w in 0..n_words {
+            let col = self.read_column(w);
+            phi.add_to_word(w, &col);
+        }
+        phi
+    }
+}
+
+/// Fully resident store — a thin wrapper around a flat `Vec<f32>`.
+#[derive(Debug, Clone)]
+pub struct InMemoryPhi {
+    k: usize,
+    data: Vec<f32>,
+    stats: IoStats,
+}
+
+impl InMemoryPhi {
+    pub fn zeros(k: usize, n_words: usize) -> Self {
+        Self { k, data: vec![0.0; k * n_words], stats: IoStats::default() }
+    }
+
+    /// Wrap an existing dense matrix.
+    pub fn from_dense(phi: &crate::em::PhiStats) -> Self {
+        Self { k: phi.k, data: phi.raw().to_vec(), stats: IoStats::default() }
+    }
+}
+
+impl PhiColumnStore for InMemoryPhi {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n_words(&self) -> usize {
+        self.data.len() / self.k
+    }
+
+    fn ensure_capacity(&mut self, n_words: usize) {
+        if n_words * self.k > self.data.len() {
+            self.data.resize(n_words * self.k, 0.0);
+        }
+    }
+
+    fn with_column<R>(&mut self, w: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+        self.stats.buffer_hits += 1;
+        f(&mut self.data[w * self.k..(w + 1) * self.k])
+    }
+
+    fn set_hot_words(&mut self, _words: &[u32]) {}
+
+    fn flush(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn io_stats(&self) -> IoStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_memory_read_write_round_trip() {
+        let mut s = InMemoryPhi::zeros(4, 3);
+        s.with_column(1, |col| col.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]));
+        assert_eq!(s.read_column(1), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.read_column(0), vec![0.0; 4]);
+        assert_eq!(s.io_stats().buffer_hits, 3);
+        assert_eq!(s.io_stats().col_reads, 0);
+    }
+
+    #[test]
+    fn in_memory_capacity_growth_preserves_data() {
+        let mut s = InMemoryPhi::zeros(2, 2);
+        s.with_column(1, |col| col.copy_from_slice(&[5.0, 6.0]));
+        s.ensure_capacity(10);
+        assert_eq!(s.n_words(), 10);
+        assert_eq!(s.read_column(1), vec![5.0, 6.0]);
+        assert_eq!(s.read_column(9), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn export_dense_matches_columns() {
+        let mut s = InMemoryPhi::zeros(2, 3);
+        s.with_column(0, |c| c.copy_from_slice(&[1.0, 0.0]));
+        s.with_column(2, |c| c.copy_from_slice(&[0.0, 7.0]));
+        let dense = s.export_dense();
+        assert_eq!(dense.word(0), &[1.0, 0.0]);
+        assert_eq!(dense.word(2), &[0.0, 7.0]);
+        assert_eq!(dense.phisum, vec![1.0, 7.0]);
+    }
+}

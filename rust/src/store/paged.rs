@@ -1,0 +1,484 @@
+//! Disk-backed paged column store for `phi_hat_{K×W}` with a hot-word
+//! buffer — the parameter-streaming engine of §3.2.
+//!
+//! Layout of the backing file (`<path>`):
+//!   [magic u64][k u64][n_words u64]  then column `w` at byte offset
+//!   `HEADER + w*k*4`, little-endian f32.
+//!
+//! The paper stores parameters in HDF5; we use a fixed-stride binary file,
+//! which preserves the properties the paper relies on (one sequential I/O
+//! run per column, restartability/fault tolerance, O(buffer) memory) with
+//! zero dependency weight.  A sidecar `<path>.meta.json` carries the
+//! algorithm state needed for restart (step counter, phisum), written by
+//! [`PagedPhi::checkpoint`].
+//!
+//! Buffering policy (Fig. 4 line 2): at every minibatch the coordinator
+//! calls `set_hot_words` with the minibatch's most frequent words; those
+//! columns become buffer-resident (write-back) until replaced. Non-hot
+//! columns are read, mutated and written straight back (one read + one
+//! write per visit — exactly the paper's "read and write wth column of
+//! phi only once at each iteration").
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::{IoStats, PhiColumnStore};
+
+const MAGIC: u64 = 0xF0E3_14DA_0001;
+const HEADER_BYTES: u64 = 24;
+
+/// Disk-backed column store with a bounded hot buffer.
+pub struct PagedPhi {
+    k: usize,
+    n_words: usize,
+    file: File,
+    path: PathBuf,
+    /// Hot-word buffer: local slot per hot word, write-back.
+    buffer: Vec<f32>,
+    /// word id -> slot index in `buffer`.
+    slot_of: std::collections::HashMap<u32, usize>,
+    /// slot -> word id (for eviction write-back).
+    word_of_slot: Vec<u32>,
+    dirty: Vec<bool>,
+    /// Maximum number of buffered columns (from the byte budget).
+    max_slots: usize,
+    stats: IoStats,
+    /// Scratch for non-buffered column visits.
+    scratch: Vec<f32>,
+}
+
+impl PagedPhi {
+    /// Create (or overwrite) a store of `n_words` zero columns with a hot
+    /// buffer of `buffer_bytes`.
+    pub fn create(
+        path: &Path,
+        k: usize,
+        n_words: usize,
+        buffer_bytes: usize,
+    ) -> anyhow::Result<Self> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        let mut header = [0u8; HEADER_BYTES as usize];
+        header[..8].copy_from_slice(&MAGIC.to_le_bytes());
+        header[8..16].copy_from_slice(&(k as u64).to_le_bytes());
+        header[16..24].copy_from_slice(&(n_words as u64).to_le_bytes());
+        file.write_all(&header)?;
+        // Extend to full size with zeros without materializing K*W memory.
+        file.set_len(HEADER_BYTES + (k * n_words * 4) as u64)?;
+        let max_slots = (buffer_bytes / (k * 4)).max(1);
+        Ok(Self {
+            k,
+            n_words,
+            file,
+            path: path.to_path_buf(),
+            buffer: Vec::new(),
+            slot_of: std::collections::HashMap::new(),
+            word_of_slot: Vec::new(),
+            dirty: Vec::new(),
+            max_slots,
+            stats: IoStats::default(),
+            scratch: vec![0.0; k],
+        })
+    }
+
+    /// Reopen an existing store (restart / fault recovery).
+    pub fn open(path: &Path, buffer_bytes: usize) -> anyhow::Result<Self> {
+        let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+        let mut header = [0u8; HEADER_BYTES as usize];
+        file.read_exact(&mut header)?;
+        let magic = u64::from_le_bytes(header[..8].try_into().unwrap());
+        anyhow::ensure!(magic == MAGIC, "not a PagedPhi file: {path:?}");
+        let k = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+        let n_words =
+            u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+        let max_slots = (buffer_bytes / (k * 4)).max(1);
+        Ok(Self {
+            k,
+            n_words,
+            file,
+            path: path.to_path_buf(),
+            buffer: Vec::new(),
+            slot_of: std::collections::HashMap::new(),
+            word_of_slot: Vec::new(),
+            dirty: Vec::new(),
+            max_slots,
+            stats: IoStats::default(),
+            scratch: vec![0.0; k],
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn max_buffered_columns(&self) -> usize {
+        self.max_slots
+    }
+
+    pub fn buffered_columns(&self) -> usize {
+        self.slot_of.len()
+    }
+
+    fn col_offset(&self, w: usize) -> u64 {
+        HEADER_BYTES + (w * self.k * 4) as u64
+    }
+
+    fn read_col_from_disk(&mut self, w: usize, out: &mut [f32]) {
+        self.stats.col_reads += 1;
+        self.file
+            .seek(SeekFrom::Start(self.col_offset(w)))
+            .expect("seek");
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(
+                out.as_mut_ptr() as *mut u8,
+                out.len() * 4,
+            )
+        };
+        self.file.read_exact(bytes).expect("column read");
+    }
+
+    fn write_col_to_disk(&mut self, w: usize, data: &[f32]) {
+        self.stats.col_writes += 1;
+        self.file
+            .seek(SeekFrom::Start(self.col_offset(w)))
+            .expect("seek");
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        self.file.write_all(bytes).expect("column write");
+    }
+
+    fn evict_slot(&mut self, slot: usize) {
+        let w = self.word_of_slot[slot];
+        if self.dirty[slot] {
+            let col: Vec<f32> =
+                self.buffer[slot * self.k..(slot + 1) * self.k].to_vec();
+            self.write_col_to_disk(w as usize, &col);
+            self.dirty[slot] = false;
+        }
+        self.slot_of.remove(&w);
+    }
+
+    /// Write a checkpoint sidecar with algorithm state (fault tolerance:
+    /// "the global topic-word matrix is stored in hard disk for
+    /// restarting the online learning", §3.2).
+    pub fn checkpoint(&mut self, step: usize, phisum: &[f32]) -> anyhow::Result<()> {
+        self.flush()?;
+        let mut meta = String::new();
+        meta.push_str(&format!("step {step}\n"));
+        meta.push_str(&format!("k {}\n", self.k));
+        meta.push_str(&format!("n_words {}\n", self.n_words));
+        meta.push_str("phisum");
+        for &x in phisum {
+            meta.push_str(&format!(" {x}"));
+        }
+        meta.push('\n');
+        let meta_path = self.path.with_extension("meta");
+        std::fs::write(meta_path, meta)?;
+        Ok(())
+    }
+
+    /// Load the checkpoint sidecar: `(step, phisum)`.
+    pub fn load_checkpoint(path: &Path) -> anyhow::Result<(usize, Vec<f32>)> {
+        let meta_path = path.with_extension("meta");
+        let text = std::fs::read_to_string(meta_path)?;
+        let mut step = 0usize;
+        let mut phisum = Vec::new();
+        for line in text.lines() {
+            let mut it = line.split_ascii_whitespace();
+            match it.next() {
+                Some("step") => {
+                    step = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("bad checkpoint"))?
+                        .parse()?;
+                }
+                Some("phisum") => {
+                    phisum = it
+                        .map(|x| x.parse::<f32>())
+                        .collect::<Result<Vec<_>, _>>()?;
+                }
+                _ => {}
+            }
+        }
+        anyhow::ensure!(!phisum.is_empty(), "bad checkpoint: no phisum");
+        Ok((step, phisum))
+    }
+}
+
+impl PhiColumnStore for PagedPhi {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n_words(&self) -> usize {
+        self.n_words
+    }
+
+    fn ensure_capacity(&mut self, n_words: usize) {
+        if n_words <= self.n_words {
+            return;
+        }
+        self.n_words = n_words;
+        self.file
+            .set_len(HEADER_BYTES + (self.k * n_words * 4) as u64)
+            .expect("grow file");
+        // Persist the new W in the header.
+        self.file.seek(SeekFrom::Start(16)).expect("seek header");
+        self.file
+            .write_all(&(n_words as u64).to_le_bytes())
+            .expect("header write");
+    }
+
+    fn with_column<R>(&mut self, w: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+        assert!(w < self.n_words, "column {w} out of range {}", self.n_words);
+        if let Some(&slot) = self.slot_of.get(&(w as u32)) {
+            self.stats.buffer_hits += 1;
+            self.dirty[slot] = true;
+            return f(&mut self.buffer[slot * self.k..(slot + 1) * self.k]);
+        }
+        // Miss: stream through scratch — read, mutate, write back (Fig. 4
+        // lines 8 and 15).
+        self.stats.buffer_misses += 1;
+        let mut scratch = std::mem::take(&mut self.scratch);
+        self.read_col_from_disk(w, &mut scratch);
+        let r = f(&mut scratch);
+        self.write_col_to_disk(w, &scratch);
+        self.scratch = scratch;
+        r
+    }
+
+    fn load_column(&mut self, w: usize, out: &mut [f32]) {
+        assert!(w < self.n_words);
+        if let Some(&slot) = self.slot_of.get(&(w as u32)) {
+            self.stats.buffer_hits += 1;
+            out.copy_from_slice(&self.buffer[slot * self.k..(slot + 1) * self.k]);
+            return;
+        }
+        self.stats.buffer_misses += 1;
+        self.read_col_from_disk(w, out);
+    }
+
+    fn store_column(&mut self, w: usize, data: &[f32]) {
+        assert!(w < self.n_words);
+        if let Some(&slot) = self.slot_of.get(&(w as u32)) {
+            self.stats.buffer_hits += 1;
+            self.buffer[slot * self.k..(slot + 1) * self.k]
+                .copy_from_slice(data);
+            self.dirty[slot] = true;
+            return;
+        }
+        self.stats.buffer_misses += 1;
+        self.write_col_to_disk(w, data);
+    }
+
+    fn set_hot_words(&mut self, words: &[u32]) {
+        use std::collections::HashSet;
+        let want: HashSet<u32> =
+            words.iter().copied().take(self.max_slots).collect();
+        // Evict buffered columns that are no longer hot.
+        let to_evict: Vec<usize> = self
+            .slot_of
+            .iter()
+            .filter(|(w, _)| !want.contains(w))
+            .map(|(_, &s)| s)
+            .collect();
+        for slot in to_evict {
+            self.evict_slot(slot);
+        }
+        // Load newly hot columns into free slots.
+        for &w in words.iter().take(self.max_slots) {
+            if self.slot_of.contains_key(&w) {
+                continue;
+            }
+            let slot = if self.word_of_slot.len() < self.max_slots {
+                let slot = self.word_of_slot.len();
+                self.word_of_slot.push(w);
+                self.dirty.push(false);
+                self.buffer.resize((slot + 1) * self.k, 0.0);
+                slot
+            } else {
+                // Find a slot not mapped (evicted above).
+                match (0..self.word_of_slot.len()).find(|&s| {
+                    !self.slot_of.contains_key(&self.word_of_slot[s])
+                        || self.slot_of[&self.word_of_slot[s]] != s
+                }) {
+                    Some(s) => s,
+                    None => continue, // buffer full of still-hot words
+                }
+            };
+            let mut col = vec![0.0f32; self.k];
+            self.read_col_from_disk(w as usize, &mut col);
+            self.buffer[slot * self.k..(slot + 1) * self.k].copy_from_slice(&col);
+            self.word_of_slot[slot] = w;
+            self.dirty[slot] = false;
+            self.slot_of.insert(w, slot);
+        }
+    }
+
+    fn flush(&mut self) -> anyhow::Result<()> {
+        let slots: Vec<(usize, u32)> = self
+            .word_of_slot
+            .iter()
+            .enumerate()
+            .filter(|(s, w)| {
+                self.slot_of.get(w) == Some(s) && self.dirty[*s]
+            })
+            .map(|(s, &w)| (s, w))
+            .collect();
+        for (slot, w) in slots {
+            let col: Vec<f32> =
+                self.buffer[slot * self.k..(slot + 1) * self.k].to_vec();
+            self.write_col_to_disk(w as usize, &col);
+            self.dirty[slot] = false;
+        }
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    fn io_stats(&self) -> IoStats {
+        self.stats
+    }
+}
+
+impl Drop for PagedPhi {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+
+    fn new_store(k: usize, w: usize, buf_cols: usize) -> (crate::util::TempDir, PagedPhi) {
+        let dir = crate::util::TempDir::new("t");
+        let path = dir.path().join("phi.bin");
+        let store = PagedPhi::create(&path, k, w, buf_cols * k * 4).unwrap();
+        (dir, store)
+    }
+
+    #[test]
+    fn read_write_round_trip_unbuffered() {
+        let (_d, mut s) = new_store(4, 8, 1);
+        s.with_column(3, |c| c.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]));
+        s.with_column(7, |c| c.copy_from_slice(&[9.0; 4]));
+        assert_eq!(s.read_column(3), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.read_column(7), vec![9.0; 4]);
+        assert_eq!(s.read_column(0), vec![0.0; 4]);
+        // with_column misses read+write; read_column (load path) only
+        // reads.
+        assert!(s.io_stats().col_reads >= 5);
+        assert_eq!(s.io_stats().col_writes, 2);
+    }
+
+    #[test]
+    fn hot_buffer_avoids_disk_io() {
+        let (_d, mut s) = new_store(4, 8, 4);
+        s.set_hot_words(&[1, 2]);
+        let base_reads = s.io_stats().col_reads;
+        for _ in 0..10 {
+            s.with_column(1, |c| c[0] += 1.0);
+            s.with_column(2, |c| c[1] += 1.0);
+        }
+        assert_eq!(s.io_stats().col_reads, base_reads, "hits must not read");
+        assert_eq!(s.io_stats().buffer_hits, 20);
+        s.flush().unwrap();
+        assert_eq!(s.read_column(1)[0], 10.0);
+        assert_eq!(s.read_column(2)[1], 10.0);
+    }
+
+    #[test]
+    fn eviction_writes_back_dirty_columns() {
+        let (_d, mut s) = new_store(2, 6, 2);
+        s.set_hot_words(&[0, 1]);
+        s.with_column(0, |c| c.copy_from_slice(&[5.0, 5.0]));
+        // Replace the hot set: column 0 must be written back.
+        s.set_hot_words(&[2, 3]);
+        assert_eq!(s.read_column(0), vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn buffer_respects_budget() {
+        let (_d, mut s) = new_store(2, 100, 3);
+        s.set_hot_words(&(0u32..50).collect::<Vec<_>>());
+        assert!(s.buffered_columns() <= 3);
+    }
+
+    #[test]
+    fn restart_recovers_state() {
+        let dir = crate::util::TempDir::new("t");
+        let path = dir.path().join("phi.bin");
+        {
+            let mut s = PagedPhi::create(&path, 3, 5, 3 * 4 * 2).unwrap();
+            s.set_hot_words(&[1]);
+            s.with_column(1, |c| c.copy_from_slice(&[1.0, 2.0, 3.0]));
+            s.with_column(4, |c| c.copy_from_slice(&[7.0, 8.0, 9.0]));
+            s.checkpoint(42, &[6.0, 10.0, 12.0]).unwrap();
+        } // dropped: flushed
+        let mut s = PagedPhi::open(&path, 1024).unwrap();
+        assert_eq!(s.k(), 3);
+        assert_eq!(s.n_words(), 5);
+        assert_eq!(s.read_column(1), vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.read_column(4), vec![7.0, 8.0, 9.0]);
+        let (step, phisum) = PagedPhi::load_checkpoint(&path).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(phisum, vec![6.0, 10.0, 12.0]);
+    }
+
+    #[test]
+    fn capacity_growth_persists_and_zeroes() {
+        let (_d, mut s) = new_store(2, 3, 1);
+        s.with_column(2, |c| c.copy_from_slice(&[1.0, 1.0]));
+        s.ensure_capacity(10);
+        assert_eq!(s.n_words(), 10);
+        assert_eq!(s.read_column(9), vec![0.0, 0.0]);
+        assert_eq!(s.read_column(2), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn export_dense_round_trip() {
+        let (_d, mut s) = new_store(2, 4, 2);
+        s.with_column(0, |c| c.copy_from_slice(&[1.0, 0.5]));
+        s.with_column(3, |c| c.copy_from_slice(&[0.0, 2.0]));
+        let dense = s.export_dense();
+        assert_eq!(dense.word(0), &[1.0, 0.5]);
+        assert_eq!(dense.word(3), &[0.0, 2.0]);
+        assert_eq!(dense.phisum, vec![1.0, 2.5]);
+    }
+
+    #[test]
+    fn hot_set_changes_are_correct_across_many_rounds() {
+        // Churn the hot set and verify contents never corrupt.
+        let (_d, mut s) = new_store(2, 20, 4);
+        let mut truth = vec![[0.0f32; 2]; 20];
+        let mut rng = crate::util::Rng::new(5);
+        for round in 0..30 {
+            let hot: Vec<u32> =
+                (0..4).map(|_| rng.below(20) as u32).collect();
+            s.set_hot_words(&hot);
+            for _ in 0..10 {
+                let w = rng.below(20);
+                let inc = (round + 1) as f32;
+                s.with_column(w, |c| {
+                    c[0] += inc;
+                    c[1] += 0.5;
+                });
+                truth[w][0] += inc;
+                truth[w][1] += 0.5;
+            }
+        }
+        s.flush().unwrap();
+        for w in 0..20 {
+            let col = s.read_column(w);
+            assert!((col[0] - truth[w][0]).abs() < 1e-4, "w={w}");
+            assert!((col[1] - truth[w][1]).abs() < 1e-4, "w={w}");
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! Minibatch streaming: frames a corpus (or an endless generator) into the
+//! document-major minibatches `x^s_{w,d}` that every online algorithm in
+//! the paper consumes (Fig. 3 / Fig. 4 line 1), including the vocab-major
+//! reorganization FOEM needs for one-I/O-per-column parameter streaming
+//! (§3.2).
+
+use crate::corpus::sparse::{DocWordMatrix, VocabMajorMatrix};
+use crate::corpus::Corpus;
+
+/// One minibatch of the stream: the `D_s` documents in both layouts plus
+/// the local vocabulary.
+#[derive(Debug, Clone)]
+pub struct Minibatch {
+    /// Minibatch index `s` (1-based like the paper, so ρ_s = 1/s works).
+    pub index: usize,
+    /// Doc-major local matrix (word ids are *global*).
+    pub docs: DocWordMatrix,
+    /// Vocab-major reorganization (§3.2: "we reorganize each incoming
+    /// minibatch as a vocabulary-major sparse matrix").
+    pub vocab_major: VocabMajorMatrix,
+    /// Sorted distinct global word ids present (the local vocabulary W_s).
+    pub local_words: Vec<u32>,
+}
+
+impl Minibatch {
+    pub fn new(index: usize, docs: DocWordMatrix) -> Self {
+        let vocab_major = docs.to_vocab_major();
+        let local_words = docs.distinct_words();
+        Self { index, docs, vocab_major, local_words }
+    }
+
+    /// Local vocabulary size W_s.
+    pub fn n_local_words(&self) -> usize {
+        self.local_words.len()
+    }
+
+    pub fn n_docs(&self) -> usize {
+        self.docs.n_docs
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.docs.nnz()
+    }
+}
+
+/// Configuration of the stream framing.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamConfig {
+    /// Minibatch size `D_s` in documents (paper default 1024, §4.3).
+    pub minibatch_docs: usize,
+    /// Shuffle document order before framing (deterministic in `seed`).
+    pub shuffle: bool,
+    pub seed: u64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        Self { minibatch_docs: 1024, shuffle: false, seed: 0 }
+    }
+}
+
+/// Iterator of minibatches over a corpus; one pass = one "epoch" of the
+/// stream. For lifelong experiments wrap it in [`RepeatingStream`].
+pub struct CorpusStream<'a> {
+    corpus: &'a Corpus,
+    order: Vec<usize>,
+    cfg: StreamConfig,
+    cursor: usize,
+    next_index: usize,
+}
+
+impl<'a> CorpusStream<'a> {
+    pub fn new(corpus: &'a Corpus, cfg: StreamConfig) -> Self {
+        let mut order: Vec<usize> = (0..corpus.n_docs()).collect();
+        if cfg.shuffle {
+            let mut rng = crate::util::Rng::new(cfg.seed);
+            rng.shuffle(&mut order);
+        }
+        Self { corpus, order, cfg, cursor: 0, next_index: 1 }
+    }
+
+    /// Total number of minibatches in one pass (the paper's S for a
+    /// finite corpus; the scaling coefficient of Eq. 20 is `S = D / D_s`).
+    pub fn batches_per_pass(&self) -> usize {
+        self.corpus.n_docs().div_ceil(self.cfg.minibatch_docs)
+    }
+
+    /// Restart the pass (lifelong streams loop passes).
+    pub fn rewind(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+impl<'a> Iterator for CorpusStream<'a> {
+    type Item = Minibatch;
+
+    fn next(&mut self) -> Option<Minibatch> {
+        if self.cursor >= self.order.len() {
+            return None;
+        }
+        let end = (self.cursor + self.cfg.minibatch_docs).min(self.order.len());
+        let rows: Vec<Vec<(u32, f32)>> = self.order[self.cursor..end]
+            .iter()
+            .map(|&d| self.corpus.docs.iter_doc(d).collect())
+            .collect();
+        let refs: Vec<&[(u32, f32)]> =
+            rows.iter().map(|r| r.as_slice()).collect();
+        let docs = DocWordMatrix::from_rows(self.corpus.n_words(), &refs);
+        self.cursor = end;
+        let mb = Minibatch::new(self.next_index, docs);
+        self.next_index += 1;
+        Some(mb)
+    }
+}
+
+/// Endless stream: cycles passes over the corpus forever, reshuffling each
+/// pass when configured. Minibatch indices keep increasing across passes
+/// so learning-rate schedules keep decaying — this is the "lifelong topic
+/// modeling" mode of §1.
+pub struct RepeatingStream<'a> {
+    corpus: &'a Corpus,
+    cfg: StreamConfig,
+    inner: CorpusStream<'a>,
+    pass: usize,
+    next_index: usize,
+}
+
+impl<'a> RepeatingStream<'a> {
+    pub fn new(corpus: &'a Corpus, cfg: StreamConfig) -> Self {
+        let inner = CorpusStream::new(corpus, cfg.clone());
+        Self { corpus, cfg, inner, pass: 0, next_index: 1 }
+    }
+
+    pub fn pass(&self) -> usize {
+        self.pass
+    }
+}
+
+impl<'a> Iterator for RepeatingStream<'a> {
+    type Item = Minibatch;
+
+    fn next(&mut self) -> Option<Minibatch> {
+        loop {
+            if let Some(mut mb) = self.inner.next() {
+                mb.index = self.next_index;
+                self.next_index += 1;
+                return Some(mb);
+            }
+            self.pass += 1;
+            let mut cfg = self.cfg.clone();
+            cfg.seed = cfg.seed.wrapping_add(self.pass as u64);
+            self.inner = CorpusStream::new(self.corpus, cfg);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, SyntheticConfig};
+
+    fn corpus() -> Corpus {
+        generate(&SyntheticConfig::small(), 5)
+    }
+
+    #[test]
+    fn covers_all_documents_once() {
+        let c = corpus();
+        let cfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+        let stream = CorpusStream::new(&c, cfg);
+        let mut docs = 0usize;
+        let mut mass = 0f64;
+        for mb in stream {
+            docs += mb.n_docs();
+            mass += mb.docs.total_tokens();
+        }
+        assert_eq!(docs, c.n_docs());
+        assert!((mass - c.n_tokens()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_count_and_sizes() {
+        let c = corpus();
+        let cfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+        let stream = CorpusStream::new(&c, cfg);
+        assert_eq!(stream.batches_per_pass(), 200usize.div_ceil(64));
+        let batches: Vec<_> = stream.collect();
+        assert_eq!(batches.len(), 4);
+        assert!(batches[..3].iter().all(|b| b.n_docs() == 64));
+        assert_eq!(batches[3].n_docs(), 200 - 3 * 64);
+        // indices are 1-based and increasing
+        assert_eq!(batches[0].index, 1);
+        assert_eq!(batches[3].index, 4);
+    }
+
+    #[test]
+    fn local_vocab_matches_docs() {
+        let c = corpus();
+        let cfg = StreamConfig { minibatch_docs: 50, ..Default::default() };
+        for mb in CorpusStream::new(&c, cfg) {
+            let mut from_docs: Vec<u32> = mb.docs.word_ids.clone();
+            from_docs.sort_unstable();
+            from_docs.dedup();
+            assert_eq!(from_docs, mb.local_words);
+            // vocab-major columns only at local words
+            for w in 0..mb.vocab_major.n_words {
+                let nonempty = mb.vocab_major.word_docs(w).len() > 0;
+                assert_eq!(nonempty, mb.local_words.binary_search(&(w as u32)).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_changes_order_not_content() {
+        let c = corpus();
+        let plain: Vec<_> = CorpusStream::new(
+            &c,
+            StreamConfig { minibatch_docs: 32, shuffle: false, seed: 0 },
+        )
+        .collect();
+        let shuf: Vec<_> = CorpusStream::new(
+            &c,
+            StreamConfig { minibatch_docs: 32, shuffle: true, seed: 9 },
+        )
+        .collect();
+        let mass = |b: &[Minibatch]| -> f64 {
+            b.iter().map(|m| m.docs.total_tokens()).sum()
+        };
+        assert!((mass(&plain) - mass(&shuf)).abs() < 1e-6);
+        assert_ne!(plain[0].docs.word_ids, shuf[0].docs.word_ids);
+    }
+
+    #[test]
+    fn repeating_stream_keeps_counting() {
+        let c = corpus();
+        let cfg = StreamConfig { minibatch_docs: 100, ..Default::default() };
+        let mut stream = RepeatingStream::new(&c, cfg);
+        let batches: Vec<_> = (&mut stream).take(5).collect();
+        assert_eq!(
+            batches.iter().map(|b| b.index).collect::<Vec<_>>(),
+            vec![1, 2, 3, 4, 5]
+        );
+        assert_eq!(stream.pass(), 2);
+    }
+}

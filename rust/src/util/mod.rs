@@ -1,0 +1,374 @@
+//! Small shared utilities: a deterministic RNG wrapper, timing helpers,
+//! and numeric helpers used across modules.
+
+use std::time::Instant;
+
+/// Deterministic xoshiro256++ PRNG.
+///
+/// Every stochastic component in the crate (synthetic corpora, random
+/// initializations, Gibbs sampling, minibatch shuffling) seeds one of
+/// these so that experiments are exactly reproducible run-to-run; `rand`'s
+/// `StdRng` is not stable across crate versions, which would silently
+/// change recorded experiment numbers.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64, per the xoshiro reference implementation.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Standard normal via Box-Muller (cached half dropped for simplicity).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia-Tsang; shape > 0.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u = self.next_f64().max(1e-12);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.next_f64().max(1e-12);
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v;
+            }
+        }
+    }
+
+    /// Sample from a symmetric Dirichlet(conc) of dimension `dim`.
+    pub fn dirichlet_sym(&mut self, conc: f64, dim: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..dim).map(|_| self.gamma(conc)).collect();
+        let s: f64 = v.iter().sum();
+        let s = if s > 0.0 { s } else { 1.0 };
+        for x in &mut v {
+            *x /= s;
+        }
+        v
+    }
+
+    /// Poisson(lambda) via Knuth (small lambda) / normal approx (large).
+    pub fn poisson(&mut self, lambda: f64) -> usize {
+        if lambda > 64.0 {
+            let x = lambda + lambda.sqrt() * self.normal();
+            return x.max(0.0).round() as usize;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= self.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        if total <= 0.0 {
+            return self.below(weights.len());
+        }
+        let mut r = self.next_f32() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// A self-cleaning temporary directory (replacement for the `tempfile`
+/// crate, which is not in the vendored dependency set).
+pub struct TempDir {
+    path: std::path::PathBuf,
+}
+
+impl TempDir {
+    pub fn new(label: &str) -> Self {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos())
+            .unwrap_or(0);
+        let path = std::env::temp_dir().join(format!("foem-{label}-{pid}-{n}-{nanos}"));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        Self { path }
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// A simple stopwatch for the experiment harness.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Minimal micro-benchmark runner (the vendored crate set has no
+/// criterion). Warms up, then runs timed batches until `budget` elapses,
+/// reporting mean / p50 / p95 per-iteration times like criterion's
+/// summary line. Used by `rust/benches/*` (harness = false).
+pub mod bench {
+    use std::time::{Duration, Instant};
+
+    pub struct Report {
+        pub name: String,
+        pub iters: u64,
+        pub mean_ns: f64,
+        pub p50_ns: f64,
+        pub p95_ns: f64,
+    }
+
+    impl Report {
+        pub fn print(&self) {
+            println!(
+                "{:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p95 {:>12}",
+                self.name,
+                self.iters,
+                fmt_ns(self.mean_ns),
+                fmt_ns(self.p50_ns),
+                fmt_ns(self.p95_ns)
+            );
+        }
+    }
+
+    pub fn fmt_ns(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.1}ns")
+        } else if ns < 1e6 {
+            format!("{:.2}µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2}ms", ns / 1e6)
+        } else {
+            format!("{:.3}s", ns / 1e9)
+        }
+    }
+
+    /// Benchmark `f`, spending roughly `budget` on measurement.
+    pub fn run<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Report {
+        // Warmup: at least 3 runs or 10% of budget.
+        let warm_until = Instant::now() + budget / 10;
+        let mut warm_runs = 0;
+        while warm_runs < 3 || Instant::now() < warm_until {
+            f();
+            warm_runs += 1;
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < budget || samples.len() < 5 {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        let report = Report {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean_ns: mean,
+            p50_ns: p(0.5),
+            p95_ns: p(0.95),
+        };
+        report.print();
+        report
+    }
+
+    /// Prevent the optimizer from deleting a computed value.
+    #[inline]
+    pub fn black_box<T>(x: T) -> T {
+        std::hint::black_box(x)
+    }
+}
+
+/// `log(sum_i exp(x_i))` without overflow — used by the VB baselines.
+pub fn log_sum_exp(xs: &[f32]) -> f32 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f32>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_f32_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(3);
+        for &dim in &[2usize, 10, 100] {
+            let v = r.dirichlet_sym(0.1, dim);
+            let s: f64 = v.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "{s}");
+            assert!(v.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn gamma_mean_approx() {
+        let mut r = Rng::new(5);
+        let shape = 2.5;
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+        assert!((mean - shape).abs() < 0.1, "{mean}");
+    }
+
+    #[test]
+    fn poisson_mean_approx() {
+        let mut r = Rng::new(6);
+        for &lam in &[3.0, 120.0] {
+            let n = 20_000;
+            let mean: f64 =
+                (0..n).map(|_| r.poisson(lam) as f64).sum::<f64>() / n as f64;
+            assert!((mean - lam).abs() < lam * 0.05, "lam={lam} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(8);
+        let w = [1.0f32, 0.0, 3.0];
+        let mut hits = [0usize; 3];
+        for _ in 0..40_000 {
+            hits[r.categorical(&w)] += 1;
+        }
+        assert_eq!(hits[1], 0);
+        let ratio = hits[2] as f64 / hits[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "{ratio}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn log_sum_exp_matches_naive() {
+        let xs = [0.1f32, -2.0, 3.5];
+        let naive = xs.iter().map(|x| x.exp()).sum::<f32>().ln();
+        assert!((log_sum_exp(&xs) - naive).abs() < 1e-5);
+    }
+}

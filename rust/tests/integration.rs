@@ -1,0 +1,308 @@
+//! Cross-module integration tests: corpus → stream → algorithms →
+//! evaluation, the Fig. 9/11 ordering claims at test scale, and the
+//! coordinator's fault-tolerance path.
+
+use foem::baselines::{ogs, ovb, scvb, OnlineLda};
+use foem::coordinator::config::{Algorithm, RunConfig, StoreKind};
+use foem::coordinator::driver::Driver;
+use foem::corpus::synthetic::{generate, SyntheticConfig};
+use foem::em::foem::{Foem, FoemConfig};
+use foem::em::sem::{Sem, SemConfig};
+use foem::eval::{predictive_perplexity, EvalProtocol};
+use foem::store::paged::PagedPhi;
+use foem::store::{InMemoryPhi, PhiColumnStore};
+use foem::stream::{CorpusStream, StreamConfig};
+use foem::LdaParams;
+
+fn corpus_pair() -> (foem::corpus::Corpus, foem::corpus::Corpus) {
+    let mut cfg = SyntheticConfig::small();
+    cfg.n_docs = 400;
+    let c = generate(&cfg, 7);
+    c.split(60, 1)
+}
+
+fn eval<A: OnlineLda + ?Sized>(
+    algo: &mut A,
+    test: &foem::corpus::Corpus,
+) -> f64 {
+    let phi = algo.export_phi();
+    predictive_perplexity(
+        &phi,
+        &algo.eval_params(),
+        &test.docs,
+        &EvalProtocol::default(),
+    )
+}
+
+/// All seven algorithms train on the same stream and produce sane
+/// perplexities; the EM/GS family must beat the VB family (the paper's
+/// Fig. 9/11 group ordering).
+#[test]
+fn perplexity_group_ordering_matches_paper() {
+    let (train, test) = corpus_pair();
+    let k = 10;
+    let scfg = StreamConfig { minibatch_docs: 100, ..Default::default() };
+    let s = CorpusStream::new(&train, scfg).batches_per_pass() as f64;
+    let p = LdaParams::paper_defaults(k);
+
+    let run = |algo: &mut dyn OnlineLda| -> f64 {
+        for _pass in 0..3 {
+            for mb in CorpusStream::new(&train, scfg) {
+                algo.process_minibatch(&mb);
+            }
+        }
+        eval(algo, &test)
+    };
+
+    let mut foem_a =
+        Foem::new(p, InMemoryPhi::zeros(k, train.n_words()), FoemConfig::paper(), 0);
+    let mut sem = Sem::new(p, train.n_words(), SemConfig::paper(s), 0);
+    let mut scvb_a = scvb::Scvb::new(k, train.n_words(), scvb::ScvbConfig::paper(s), 0);
+    let mut ogs_a = ogs::Ogs::new(k, train.n_words(), ogs::OgsConfig::paper(s), 0);
+    let mut ovb_a = ovb::Ovb::new(k, train.n_words(), ovb::OvbConfig::paper(s), 0);
+
+    let ppx_foem = run(&mut foem_a);
+    let ppx_sem = run(&mut sem);
+    let ppx_scvb = run(&mut scvb_a);
+    let ppx_ogs = run(&mut ogs_a);
+    let ppx_ovb = run(&mut ovb_a);
+
+    println!(
+        "FOEM={ppx_foem:.1} SEM={ppx_sem:.1} SCVB={ppx_scvb:.1} \
+         OGS={ppx_ogs:.1} OVB={ppx_ovb:.1}"
+    );
+    for (name, v) in [
+        ("FOEM", ppx_foem),
+        ("SEM", ppx_sem),
+        ("SCVB", ppx_scvb),
+        ("OGS", ppx_ogs),
+        ("OVB", ppx_ovb),
+    ] {
+        assert!(v > 1.0 && v < train.n_words() as f64, "{name}: {v}");
+    }
+    // Group claim: best EM-family model beats OVB (paper Figs. 9/11).
+    let best_em = ppx_foem.min(ppx_sem).min(ppx_scvb);
+    assert!(
+        best_em < ppx_ovb,
+        "EM family ({best_em}) should beat OVB ({ppx_ovb})"
+    );
+}
+
+/// FOEM with the paged store survives a kill/restart cycle: state written
+/// by checkpoint() is recovered and training continues (the §3.2 fault
+/// tolerance claim).
+#[test]
+fn foem_restart_recovers_and_continues() {
+    let dir = foem::util::TempDir::new("restart");
+    let path = dir.path().join("phi.bin");
+    let (train, test) = corpus_pair();
+    let k = 6;
+    let p = LdaParams::paper_defaults(k);
+    let scfg = StreamConfig { minibatch_docs: 100, ..Default::default() };
+
+    // Phase 1: train half the stream, checkpoint, drop (simulated crash).
+    let phase1_ppx;
+    {
+        let mut foem_a = Foem::paged_create(
+            p,
+            &path,
+            train.n_words(),
+            64 * k * 4,
+            FoemConfig::paper(),
+            3,
+        )
+        .unwrap();
+        let batches: Vec<_> = CorpusStream::new(&train, scfg).collect();
+        for mb in &batches[..batches.len() / 2] {
+            foem_a.process_minibatch(mb);
+        }
+        foem_a.checkpoint_paged().unwrap();
+        phase1_ppx = eval(&mut foem_a, &test);
+    }
+
+    // Phase 2: reopen, restore, finish the stream.
+    let (step, phisum) = PagedPhi::load_checkpoint(&path).unwrap();
+    let mut foem_b = Foem::paged_open(
+        p,
+        &path,
+        64 * k * 4,
+        FoemConfig::paper(),
+        3,
+    )
+    .unwrap();
+    foem_b.step = step;
+    foem_b.phisum = phisum;
+    // Recovered mass must match what phase 1 accumulated.
+    let recovered = foem_b.export_phi();
+    for kk in 0..k {
+        assert!(
+            (recovered.phisum[kk] - foem_b.phisum[kk]).abs()
+                < foem_b.phisum[kk].abs().max(1.0) * 1e-3,
+            "checkpointed phisum inconsistent with store"
+        );
+    }
+    let batches: Vec<_> = CorpusStream::new(&train, scfg).collect();
+    for mb in &batches[batches.len() / 2..] {
+        foem_b.process_minibatch(mb);
+    }
+    let phase2_ppx = eval(&mut foem_b, &test);
+    assert!(
+        phase2_ppx < phase1_ppx * 1.05,
+        "continued training got worse: {phase1_ppx} -> {phase2_ppx}"
+    );
+}
+
+/// Buffer size only changes I/O counts, never results (Table 5's premise).
+#[test]
+fn buffer_size_changes_io_not_results() {
+    let (train, _) = corpus_pair();
+    let k = 5;
+    let p = LdaParams::paper_defaults(k);
+    let scfg = StreamConfig { minibatch_docs: 100, ..Default::default() };
+    let run = |buf_cols: usize| {
+        let dir = foem::util::TempDir::new("buf");
+        let mut cfg = FoemConfig::paper();
+        cfg.hot_words = buf_cols;
+        let mut algo = Foem::paged_create(
+            p,
+            &dir.path().join("phi.bin"),
+            train.n_words(),
+            buf_cols * k * 4 * 2,
+            cfg,
+            5,
+        )
+        .unwrap();
+        for mb in CorpusStream::new(&train, scfg) {
+            algo.process_minibatch(&mb);
+        }
+        let io = algo.store.io_stats();
+        (algo.export_phi(), io)
+    };
+    let (phi_small, io_small) = run(2);
+    let (phi_big, io_big) = run(400);
+    assert!(
+        io_big.col_reads < io_small.col_reads,
+        "bigger buffer should read less: {} vs {}",
+        io_big.col_reads,
+        io_small.col_reads
+    );
+    let mut max_rel = 0f32;
+    for w in 0..train.n_words() {
+        for kk in 0..k {
+            let a = phi_small.word(w)[kk];
+            let b = phi_big.word(w)[kk];
+            max_rel = max_rel.max((a - b).abs() / a.abs().max(1.0));
+        }
+    }
+    assert!(max_rel < 1e-4, "results diverged with buffer size: {max_rel}");
+}
+
+/// The driver + RunConfig path exercises the same pipeline as the manual
+/// setup (guards against config plumbing rot).
+#[test]
+fn driver_matches_manual_foem() {
+    let mut cfg_small = SyntheticConfig::small();
+    cfg_small.n_docs = 150;
+    let c = generate(&cfg_small, 17);
+    let cfg = RunConfig {
+        algorithm: Algorithm::Foem,
+        n_topics: 5,
+        minibatch_docs: 50,
+        store: StoreKind::InMemory,
+        seed: 9,
+        ..RunConfig::default()
+    };
+    let mut driver = Driver::new(cfg);
+    let report = driver.train_corpus(&c).unwrap();
+    assert_eq!(report.algorithm, "FOEM");
+    assert!(report.final_perplexity > 1.0);
+    assert!(report.metrics.records.len() >= 2);
+    // Tokens accounted exactly: all train-side tokens processed.
+    let test_docs = (c.n_docs() / 10).clamp(1, 2000);
+    let (train, _) = c.split(test_docs, 9);
+    assert!((report.metrics.total_tokens - train.n_tokens()).abs() < 1e-6);
+}
+
+/// Topic recovery: trained on data from a known generative model, FOEM's
+/// learned topics must align with the generating ones far better than
+/// chance (greedy matching on L1 distance over the normalized rows).
+#[test]
+fn foem_recovers_generating_topics() {
+    use foem::corpus::synthetic::{generate_with_truth, SyntheticConfig};
+    let mut cfg = SyntheticConfig::small();
+    cfg.n_docs = 500;
+    cfg.n_topics = 8;
+    cfg.mean_doc_len = 120.0;
+    let (c, truth) = generate_with_truth(&cfg, 55);
+    let k = 8;
+    let p = LdaParams::paper_defaults(k);
+    let mut algo = Foem::new(
+        p,
+        InMemoryPhi::zeros(k, c.n_words()),
+        FoemConfig::paper(),
+        1,
+    );
+    let scfg = StreamConfig { minibatch_docs: 100, ..Default::default() };
+    for _pass in 0..4 {
+        for mb in CorpusStream::new(&c, scfg) {
+            algo.process_minibatch(&mb);
+        }
+    }
+    let phi = algo.export_phi();
+    // Normalized learned topics, row per topic.
+    let w = c.n_words();
+    let mut learned = vec![vec![0.0f32; w]; k];
+    for ww in 0..w {
+        let pr = phi.prob(ww, &p);
+        for kk in 0..k {
+            learned[kk][ww] = pr[kk];
+        }
+    }
+    // Greedy match learned -> truth by minimal L1 distance (max 2.0).
+    let mut used = vec![false; k];
+    let mut total_l1 = 0.0f32;
+    for lt in &learned {
+        let (mut best, mut best_d) = (usize::MAX, f32::INFINITY);
+        for (ti, tt) in truth.phi.iter().enumerate() {
+            if used[ti] {
+                continue;
+            }
+            let d: f32 =
+                lt.iter().zip(tt).map(|(a, b)| (a - b).abs()).sum();
+            if d < best_d {
+                best = ti;
+                best_d = d;
+            }
+        }
+        used[best] = true;
+        total_l1 += best_d;
+    }
+    let mean_l1 = total_l1 / k as f32;
+    // Random topic pairs on this W have L1 ~= 1.6-2.0; recovered topics
+    // should be far closer.
+    assert!(mean_l1 < 0.9, "topics not recovered: mean L1 = {mean_l1}");
+}
+
+/// Open-vocabulary lifelong mode: FOEM keeps learning as W grows without
+/// losing earlier mass.
+#[test]
+fn lifelong_vocabulary_growth_is_safe() {
+    let mut cfg = SyntheticConfig::small();
+    cfg.n_docs = 200;
+    cfg.n_words = 800;
+    let c = generate(&cfg, 23);
+    let k = 5;
+    let p = LdaParams::paper_defaults(k);
+    let mut fc = FoemConfig::paper();
+    fc.open_vocabulary = true;
+    // Start with a 1-word store; it must grow on demand.
+    let mut algo = Foem::new(p, InMemoryPhi::zeros(k, 1), fc, 0);
+    let scfg = StreamConfig { minibatch_docs: 40, ..Default::default() };
+    for mb in CorpusStream::new(&c, scfg) {
+        algo.process_minibatch(&mb);
+    }
+    let total = c.n_tokens();
+    assert!((algo.phisum_total() - total).abs() < total * 1e-4);
+    assert!(algo.store.n_words() <= cfg.n_words);
+    assert!(algo.effective_w() > 400);
+}

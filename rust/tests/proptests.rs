@@ -1,0 +1,275 @@
+//! Randomized property tests over the coordinator invariants (the
+//! vendored crate set has no proptest, so these roll shrink-free random
+//! sweeps with fixed seeds — each case runs dozens of random instances
+//! and asserts the invariant exactly).
+
+use foem::corpus::sparse::DocWordMatrix;
+use foem::corpus::synthetic::{generate, SyntheticConfig};
+use foem::em::foem::{Foem, FoemConfig};
+use foem::em::schedule::{ResidualScheduler, TopicSubset};
+use foem::em::{bem::Bem, iem::Iem, PhiStats};
+use foem::store::paged::PagedPhi;
+use foem::store::{InMemoryPhi, PhiColumnStore};
+use foem::stream::{CorpusStream, Minibatch, StreamConfig};
+use foem::util::Rng;
+use foem::LdaParams;
+
+fn random_docs(rng: &mut Rng, max_docs: usize, max_words: usize) -> DocWordMatrix {
+    let n_docs = rng.below(max_docs) + 1;
+    let n_words = rng.below(max_words) + 2;
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n_docs);
+    for _ in 0..n_docs {
+        let n_entries = rng.below(8) + 1;
+        let mut row = std::collections::BTreeMap::new();
+        for _ in 0..n_entries {
+            let w = rng.below(n_words) as u32;
+            *row.entry(w).or_insert(0.0) += (rng.below(4) + 1) as f32;
+        }
+        rows.push(row.into_iter().collect());
+    }
+    let refs: Vec<&[(u32, f32)]> = rows.iter().map(|r| r.as_slice()).collect();
+    DocWordMatrix::from_rows(n_words, &refs)
+}
+
+/// Property: vocab-major reorganization is an exact permutation of the
+/// doc-major entries (mass, NNZ, and per-cell counts all preserved).
+#[test]
+fn prop_vocab_major_is_permutation() {
+    let mut rng = Rng::new(1000);
+    for _case in 0..50 {
+        let docs = random_docs(&mut rng, 20, 30);
+        let vm = docs.to_vocab_major();
+        assert_eq!(vm.nnz(), docs.nnz());
+        assert!((vm.total_tokens() - docs.total_tokens()).abs() < 1e-9);
+        // Per-cell check via lookup.
+        for w in 0..docs.n_words {
+            for (d, c) in vm.iter_word(w) {
+                let found = docs
+                    .iter_doc(d as usize)
+                    .find(|&(ww, _)| ww as usize == w)
+                    .map(|(_, cc)| cc);
+                assert_eq!(found, Some(c), "cell ({w},{d})");
+            }
+        }
+    }
+}
+
+/// Property: after any number of BEM sweeps, sufficient statistics
+/// remain mass-consistent (sum theta_d == doc mass, phi total == corpus
+/// mass, phisum == column sums).
+#[test]
+fn prop_bem_mass_conservation() {
+    let mut rng = Rng::new(2000);
+    for case in 0..25 {
+        let docs = random_docs(&mut rng, 15, 25);
+        let k = rng.below(6) + 2;
+        let p = LdaParams::paper_defaults(k);
+        let mut bem = Bem::init(&docs, p, case);
+        let sweeps = rng.below(4) + 1;
+        for _ in 0..sweeps {
+            bem.sweep(&docs);
+        }
+        let total = docs.total_tokens();
+        assert!(
+            (bem.phi.total_mass() - total).abs() < total.max(1.0) * 1e-4,
+            "case {case}"
+        );
+        for d in 0..docs.n_docs {
+            assert!(
+                (bem.theta.doc_total(d) - docs.doc_len(d)).abs()
+                    < docs.doc_len(d).max(1.0) * 1e-4
+            );
+        }
+        let mut rebuilt = bem.phi.clone();
+        rebuilt.rebuild_phisum();
+        for i in 0..k {
+            assert!((bem.phi.phisum[i] - rebuilt.phisum[i]).abs() < 1e-2);
+        }
+    }
+}
+
+/// Property: IEM's mu rows stay normalized and non-negative after any
+/// number of sweeps on any matrix.
+#[test]
+fn prop_iem_mu_is_distribution() {
+    let mut rng = Rng::new(3000);
+    for case in 0..20 {
+        let docs = random_docs(&mut rng, 12, 20);
+        let k = rng.below(5) + 2;
+        let p = LdaParams::paper_defaults(k);
+        let mut iem = Iem::init(&docs, p, case);
+        for _ in 0..(rng.below(3) + 1) {
+            iem.sweep(&docs);
+        }
+        for e in 0..docs.nnz() {
+            let row = &iem.mu[e * k..(e + 1) * k];
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-3, "case {case} entry {e}: {s}");
+            assert!(row.iter().all(|&x| x >= -1e-6));
+        }
+    }
+}
+
+/// Property: the scheduler's top-topic selection always returns the true
+/// top set (cross-checked against a full sort), for any residual vector.
+#[test]
+fn prop_scheduler_topk_exact() {
+    let mut rng = Rng::new(4000);
+    for _case in 0..100 {
+        let k = rng.below(40) + 2;
+        let n = rng.below(k) + 1;
+        let mut sched = ResidualScheduler::new(k, 1);
+        let res: Vec<f32> = (0..k).map(|_| rng.next_f32() * 10.0).collect();
+        sched.set_word_residuals(0, &res);
+        let got: std::collections::HashSet<u32> = sched
+            .top_topics(0, TopicSubset::Fixed(n))
+            .iter()
+            .copied()
+            .collect();
+        let mut idx: Vec<u32> = (0..k as u32).collect();
+        idx.sort_by(|&a, &b| {
+            res[b as usize].partial_cmp(&res[a as usize]).unwrap()
+        });
+        let want: std::collections::HashSet<u32> =
+            idx[..n].iter().copied().collect();
+        // Sets can differ only on ties; compare residual-sum instead.
+        let sum = |s: &std::collections::HashSet<u32>| -> f32 {
+            s.iter().map(|&i| res[i as usize]).sum()
+        };
+        assert!((sum(&got) - sum(&want)).abs() < 1e-4);
+        assert_eq!(got.len(), n);
+    }
+}
+
+/// Property: the paged store behaves exactly like the in-memory store
+/// under an arbitrary interleaving of column ops, hot-set changes,
+/// capacity growth and flushes.
+#[test]
+fn prop_paged_store_equals_in_memory() {
+    let mut rng = Rng::new(5000);
+    for case in 0..10 {
+        let k = rng.below(6) + 1;
+        let w0 = rng.below(20) + 2;
+        let dir = foem::util::TempDir::new("prop-store");
+        let mut paged = PagedPhi::create(
+            &dir.path().join("phi.bin"),
+            k,
+            w0,
+            (rng.below(4) + 1) * k * 4,
+        )
+        .unwrap();
+        let mut shadow = InMemoryPhi::zeros(k, w0);
+        let mut w_cap = w0;
+        for _op in 0..200 {
+            match rng.below(10) {
+                0 => {
+                    // grow
+                    let extra = rng.below(5) + 1;
+                    w_cap += extra;
+                    paged.ensure_capacity(w_cap);
+                    shadow.ensure_capacity(w_cap);
+                }
+                1 => {
+                    let hot: Vec<u32> = (0..rng.below(5))
+                        .map(|_| rng.below(w_cap) as u32)
+                        .collect();
+                    paged.set_hot_words(&hot);
+                }
+                2 => {
+                    paged.flush().unwrap();
+                }
+                _ => {
+                    let w = rng.below(w_cap);
+                    let kk = rng.below(k);
+                    let delta = rng.next_f32();
+                    paged.with_column(w, |c| c[kk] += delta);
+                    shadow.with_column(w, |c| c[kk] += delta);
+                }
+            }
+        }
+        for w in 0..w_cap {
+            let a = paged.read_column(w);
+            let b = shadow.read_column(w);
+            for i in 0..k {
+                assert!(
+                    (a[i] - b[i]).abs() < 1e-5,
+                    "case {case} w={w} k={i}: {} vs {}",
+                    a[i],
+                    b[i]
+                );
+            }
+        }
+    }
+}
+
+/// Property: FOEM's accumulated global mass always equals the total
+/// stream mass seen so far, for any minibatch framing and any subset
+/// schedule (Eq. 33 invariant — scheduling moves mass, never creates it).
+#[test]
+fn prop_foem_mass_invariant_any_schedule() {
+    let mut rng = Rng::new(6000);
+    let mut cfg_small = SyntheticConfig::small();
+    cfg_small.n_docs = 100;
+    let c = generate(&cfg_small, 8);
+    for case in 0..8 {
+        let k = rng.below(8) + 2;
+        let p = LdaParams::paper_defaults(k);
+        let mut fc = FoemConfig::paper();
+        fc.topic_subset = match rng.below(3) {
+            0 => TopicSubset::All,
+            1 => TopicSubset::Fixed(rng.below(k) + 1),
+            _ => TopicSubset::Fraction(rng.next_f32().max(0.05)),
+        };
+        fc.lambda_w = 0.3 + 0.7 * rng.next_f32();
+        fc.max_inner_iters = rng.below(8) + 1;
+        fc.exact_ll = false;
+        let mut algo =
+            Foem::new(p, InMemoryPhi::zeros(k, c.n_words()), fc, case);
+        let scfg = StreamConfig {
+            minibatch_docs: rng.below(60) + 10,
+            ..Default::default()
+        };
+        let mut seen = 0.0f64;
+        for mb in CorpusStream::new(&c, scfg) {
+            algo.process_minibatch(&mb);
+            seen += mb.docs.total_tokens();
+            assert!(
+                (algo.phisum_total() - seen).abs() < seen.max(1.0) * 1e-4,
+                "case {case}: {} vs {seen}",
+                algo.phisum_total()
+            );
+        }
+        // phisum must equal the column sums exactly.
+        let dense: PhiStats = algo.export_phi();
+        for kk in 0..k {
+            assert!(
+                (dense.phisum[kk] - algo.phisum[kk]).abs()
+                    < algo.phisum[kk].abs().max(1.0) * 1e-3
+            );
+        }
+    }
+}
+
+/// Property: minibatch framing is lossless for any minibatch size.
+#[test]
+fn prop_stream_framing_lossless() {
+    let mut rng = Rng::new(7000);
+    let c = generate(&SyntheticConfig::small(), 9);
+    for _case in 0..20 {
+        let ds = rng.below(300) + 1;
+        let scfg = StreamConfig { minibatch_docs: ds, ..Default::default() };
+        let mut docs = 0usize;
+        let mut mass = 0.0f64;
+        let mut last_index = 0usize;
+        for mb in CorpusStream::new(&c, scfg) {
+            docs += mb.n_docs();
+            mass += mb.docs.total_tokens();
+            assert_eq!(mb.index, last_index + 1);
+            last_index = mb.index;
+            assert!(mb.n_docs() <= ds);
+            let _m: &Minibatch = &mb;
+        }
+        assert_eq!(docs, c.n_docs());
+        assert!((mass - c.n_tokens()).abs() < 1e-6);
+    }
+}

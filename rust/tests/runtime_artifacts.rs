@@ -1,0 +1,218 @@
+//! L3 ↔ L2/L1 composition tests: execute the AOT artifacts through PJRT
+//! and cross-check against the native Rust implementations.
+//!
+//! These need `artifacts/` (run `make artifacts`); they self-skip with a
+//! message when it is absent so `cargo test` stays green pre-build.
+
+use foem::runtime::Executor;
+use foem::util::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn registry_lists_all_graph_families() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = foem::runtime::registry::Registry::load(&dir).unwrap();
+    assert!(reg.len() >= 4);
+    let graphs: std::collections::HashSet<&str> =
+        reg.iter().map(|a| a.graph.as_str()).collect();
+    assert!(graphs.contains("estep"));
+    assert!(graphs.contains("predict"));
+}
+
+#[test]
+fn pjrt_estep_matches_native_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut exec = Executor::new(&dir).unwrap();
+    let meta = exec.estep_variant_for(64).expect("no estep artifact");
+    let (b, k) = (meta.b, meta.k);
+    let mut rng = Rng::new(7);
+    let theta: Vec<f32> = (0..b * k).map(|_| rng.next_f32() * 4.0).collect();
+    let phi: Vec<f32> = (0..b * k).map(|_| rng.next_f32() * 2.0).collect();
+    let phisum: Vec<f32> = (0..k).map(|_| rng.next_f32() * 50.0 + 1.0).collect();
+    let counts: Vec<f32> = (0..b).map(|_| (rng.below(6) + 1) as f32).collect();
+    let (am1, bm1, wbm1) = (0.01f32, 0.01, 50.0);
+    let out = exec
+        .run_estep(&meta.name, &theta, &phi, &phisum, &counts, am1, bm1, wbm1)
+        .unwrap();
+
+    let mut mu = vec![0.0f32; k];
+    for e in 0..b {
+        let z = foem::em::estep_unnormalized(
+            &theta[e * k..(e + 1) * k],
+            &phi[e * k..(e + 1) * k],
+            &phisum,
+            am1,
+            bm1,
+            wbm1,
+            &mut mu,
+        );
+        let inv = 1.0 / z;
+        for i in 0..k {
+            let want_mu = mu[i] * inv;
+            let got_mu = out.mu[e * k + i];
+            assert!(
+                (got_mu - want_mu).abs() < 1e-4,
+                "mu[{e},{i}]: {got_mu} vs {want_mu}"
+            );
+            let want_xmu = counts[e] * want_mu;
+            assert!((out.xmu[e * k + i] - want_xmu).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn pjrt_estep_respects_padding_contract() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut exec = Executor::new(&dir).unwrap();
+    let meta = exec.estep_variant_for(64).unwrap();
+    let (b, k) = (meta.b, meta.k);
+    let am1 = 0.01f32;
+    let mut rng = Rng::new(8);
+    let mut theta: Vec<f32> = (0..b * k).map(|_| rng.next_f32()).collect();
+    let phi: Vec<f32> = (0..b * k).map(|_| rng.next_f32()).collect();
+    let phisum: Vec<f32> = (0..k).map(|_| rng.next_f32() * 10.0 + 1.0).collect();
+    let mut counts: Vec<f32> = (0..b).map(|_| 2.0).collect();
+    // Topic-pad the last k/2 columns of every row; count-pad the last
+    // quarter of entries.
+    for e in 0..b {
+        for i in k / 2..k {
+            theta[e * k + i] = -am1;
+        }
+    }
+    for c in counts.iter_mut().skip(3 * b / 4) {
+        *c = 0.0;
+    }
+    let out = exec
+        .run_estep(&meta.name, &theta, &phi, &phisum, &counts, am1, 0.01, 20.0)
+        .unwrap();
+    for e in 0..b {
+        for i in k / 2..k {
+            assert_eq!(out.mu[e * k + i], 0.0, "padded topic leaked");
+        }
+        let row_sum: f32 = out.mu[e * k..(e + 1) * k].iter().sum();
+        assert!((row_sum - 1.0).abs() < 1e-4);
+    }
+    for e in 3 * b / 4..b {
+        for i in 0..k {
+            assert_eq!(out.xmu[e * k + i], 0.0, "padded entry leaked");
+        }
+    }
+}
+
+#[test]
+fn pjrt_predict_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut exec = Executor::new(&dir).unwrap();
+    let meta = exec
+        .registry()
+        .iter()
+        .find(|m| m.graph == "predict")
+        .unwrap()
+        .clone();
+    let (b, k) = (meta.b, meta.k);
+    let mut rng = Rng::new(9);
+    let theta: Vec<f32> = (0..b * k).map(|_| rng.next_f32() * 4.0).collect();
+    let theta_tot: Vec<f32> = (0..b)
+        .map(|e| theta[e * k..(e + 1) * k].iter().sum())
+        .collect();
+    let phi: Vec<f32> = (0..b * k).map(|_| rng.next_f32() * 2.0).collect();
+    let phisum: Vec<f32> = (0..k).map(|_| rng.next_f32() * 50.0 + 1.0).collect();
+    let counts: Vec<f32> = (0..b).map(|_| (rng.below(4)) as f32).collect();
+    let (am1, bm1) = (0.01f32, 0.01f32);
+    let wbm1 = 100.0f32;
+    let kam1 = k as f32 * am1;
+    let (ll, cnt) = exec
+        .run_predict(
+            &meta.name,
+            &theta,
+            &theta_tot,
+            &phi,
+            &phisum,
+            &counts,
+            [am1, bm1, wbm1, kam1],
+        )
+        .unwrap();
+
+    // Native reference.
+    let mut want_ll = 0.0f64;
+    let mut want_cnt = 0.0f64;
+    for e in 0..b {
+        let mut p = 0.0f32;
+        for i in 0..k {
+            p += (theta[e * k + i] + am1) / (theta_tot[e] + kam1)
+                * (phi[e * k + i] + bm1)
+                / (phisum[i] + wbm1);
+        }
+        want_ll += counts[e] as f64 * (p.max(1e-30) as f64).ln();
+        want_cnt += counts[e] as f64;
+    }
+    assert!(
+        (ll as f64 - want_ll).abs() < want_ll.abs() * 1e-3 + 1e-2,
+        "{ll} vs {want_ll}"
+    );
+    assert!((cnt as f64 - want_cnt).abs() < 1e-3);
+}
+
+#[test]
+fn pjrt_sem_minibatch_graph_runs_and_conserves_mass() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut exec = Executor::new(&dir).unwrap();
+    let Some(meta) = exec
+        .registry()
+        .iter()
+        .find(|m| m.graph == "sem")
+        .cloned()
+    else {
+        eprintln!("skipping: no sem artifact (aot --skip-sem?)");
+        return;
+    };
+    let (b, k, ds, ws) = (meta.b, meta.k, meta.ds, meta.ws);
+    let mut rng = Rng::new(10);
+    // Random minibatch: real entries in the first half, padding after.
+    let real = b / 2;
+    let mut doc_ids = vec![(ds - 1) as i32; b];
+    let mut word_ids = vec![(ws - 1) as i32; b];
+    let mut counts = vec![0.0f32; b];
+    for e in 0..real {
+        doc_ids[e] = rng.below(ds - 1) as i32;
+        word_ids[e] = rng.below(ws - 1) as i32;
+        counts[e] = (rng.below(3) + 1) as f32;
+    }
+    // theta0 consistent with counts (hard init on topic 0).
+    let mut theta0 = vec![0.0f32; ds * k];
+    for e in 0..real {
+        theta0[doc_ids[e] as usize * k] += counts[e];
+    }
+    let phi_local: Vec<f32> = (0..ws * k).map(|_| rng.next_f32()).collect();
+    let phisum: Vec<f32> = (0..k).map(|_| rng.next_f32() * 100.0 + 10.0).collect();
+    let (theta, phi_delta, ll) = exec
+        .run_sem(
+            &meta.name,
+            &doc_ids,
+            &word_ids,
+            &counts,
+            &theta0,
+            &phi_local,
+            &phisum,
+            [0.01, 0.01, 50.0],
+        )
+        .unwrap();
+    let total: f32 = counts.iter().sum();
+    let theta_mass: f32 = theta.iter().sum();
+    let delta_mass: f32 = phi_delta.iter().sum();
+    assert!(
+        (theta_mass - total).abs() < total * 1e-3,
+        "{theta_mass} vs {total}"
+    );
+    assert!((delta_mass - total).abs() < total * 1e-3);
+    assert!(ll.is_finite());
+}
