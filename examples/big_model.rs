@@ -41,6 +41,11 @@ fn main() -> anyhow::Result<()> {
     fc.hot_words = buffer_bytes / 2 / (k * 4);
     fc.exact_ll = false; // throughput mode: skip the O(K*NNZ) LL pass
     fc.max_inner_iters = 10;
+    // Parallel sharded E-step: the disk-backed store serves each
+    // minibatch through a read-only column snapshot, so multiple workers
+    // sweep concurrently while the store sees one read + one write per
+    // column per minibatch.
+    fc.n_workers = 4;
     // buffer_bytes covers phi + the streamed residual matrix (50/50).
     let mut algo =
         Foem::paged_create(p, &dir.path().join("phi.bin"), w, buffer_bytes, fc, 0)?;

@@ -48,6 +48,9 @@ fn main() -> anyhow::Result<()> {
             minibatch_docs: ds,
             store: StoreKind::InMemory,
             seed: 7,
+            // Keep every algorithm on the serial path so per-algorithm
+            // times stay comparable (only FOEM/SEM have parallel paths).
+            n_workers: 1,
             ..RunConfig::default()
         };
         let mut algo = Driver::new(cfg).build_algorithm(train.n_words(), scale_s)?;

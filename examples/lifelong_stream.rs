@@ -24,6 +24,7 @@ fn main() -> anyhow::Result<()> {
     let mut fc = FoemConfig::paper();
     fc.open_vocabulary = true;
     fc.hot_words = 128;
+    fc.n_workers = 2; // lifelong streams ride the parallel E-step too
     let mut algo = Foem::paged_create(p, &store_path, 1, 1 << 20, fc, 0)?;
 
     println!("epoch | new vocab | effective W | train ppx | phi mass");

@@ -23,6 +23,9 @@ fn main() -> anyhow::Result<()> {
         n_topics: 20,
         minibatch_docs: 64,
         eval_every: 1,
+        // Shard each minibatch's E-step across two worker threads
+        // (n_workers = 1 is the exact serial path).
+        n_workers: 2,
         ..RunConfig::default()
     };
 

@@ -1,0 +1,60 @@
+//! Parallel E-step scaling: per-minibatch cost at P = 1/2/4/8 workers
+//! for FOEM and SEM on a fixed stream — the throughput metric of the
+//! sharded execution engine (`exec::ParallelExecutor`; see
+//! `rust/DESIGN.md` §6). P=1 is the serial baseline, so the ratio of the
+//! P=1 row to the others is the engine's speedup on this machine.
+//!
+//!     cargo bench --bench parallel_scaling
+
+use foem::corpus::synthetic::{generate, SyntheticConfig};
+use foem::em::foem::{Foem, FoemConfig};
+use foem::em::sem::{Sem, SemConfig};
+use foem::store::InMemoryPhi;
+use foem::stream::{CorpusStream, StreamConfig};
+use foem::util::bench::{black_box, run};
+use foem::LdaParams;
+use std::time::Duration;
+
+fn main() {
+    let mut cfg = SyntheticConfig::enron_like();
+    cfg.n_docs = 1024;
+    let corpus = generate(&cfg, 5);
+    let scfg = StreamConfig { minibatch_docs: 512, ..Default::default() };
+    let batches: Vec<_> = CorpusStream::new(&corpus, scfg).collect();
+    let scale = batches.len() as f64;
+    let workers = [1usize, 2, 4, 8];
+
+    println!("== FOEM per-minibatch cost vs workers (K=128) ==");
+    let k = 128usize;
+    for &p_workers in &workers {
+        let p = LdaParams::paper_defaults(k);
+        let mut fc = FoemConfig::paper();
+        fc.exact_ll = false;
+        fc.max_inner_iters = 10;
+        fc.n_workers = p_workers;
+        let mut algo =
+            Foem::new(p, InMemoryPhi::zeros(k, corpus.n_words()), fc, 1);
+        let mut i = 0usize;
+        run(&format!("foem_p{p_workers}"), Duration::from_secs(2), || {
+            let r = algo.process_minibatch(&batches[i % batches.len()]);
+            i += 1;
+            black_box(r.inner_iters);
+        });
+    }
+
+    println!("\n== SEM per-minibatch cost vs workers (K=64) ==");
+    let k = 64usize;
+    for &p_workers in &workers {
+        let p = LdaParams::paper_defaults(k);
+        let mut sc = SemConfig::paper(scale);
+        sc.max_inner_iters = 20;
+        sc.n_workers = p_workers;
+        let mut algo = Sem::new(p, corpus.n_words(), sc, 1);
+        let mut i = 0usize;
+        run(&format!("sem_p{p_workers}"), Duration::from_secs(2), || {
+            let r = algo.process_minibatch(&batches[i % batches.len()]);
+            i += 1;
+            black_box(r.inner_iters);
+        });
+    }
+}

@@ -55,6 +55,7 @@ impl Scvb {
             threshold: 10.0,
             check_every: 1,
             max_inner_iters: cfg.max_inner_iters,
+            n_workers: 1,
         };
         Self { inner: Sem::new(params, n_words, sem_cfg, seed) }
     }

@@ -94,6 +94,10 @@ pub struct RunConfig {
     pub eval_every: usize,
     /// Checkpoint (paged store only) every N minibatches (0 = never).
     pub checkpoint_every: usize,
+    /// E-step worker threads for the parallel executor (FOEM and SEM
+    /// route minibatches through `exec::ParallelExecutor`); `1` keeps the
+    /// exact serial path.
+    pub n_workers: usize,
     pub seed: u64,
     /// Print per-minibatch progress lines.
     pub verbose: bool,
@@ -116,6 +120,7 @@ impl Default for RunConfig {
             hot_words: 0,
             eval_every: 0,
             checkpoint_every: 0,
+            n_workers: 1,
             seed: 42,
             verbose: false,
         }
@@ -148,6 +153,7 @@ impl RunConfig {
             // O(K*NNZ_s) exact-training-LL pass on the hot path so the
             // per-minibatch cost stays flat in K (Table 3).
             exact_ll: false,
+            n_workers: self.n_workers,
             ..FoemConfig::paper()
         }
     }
@@ -168,6 +174,7 @@ impl RunConfig {
             "hot_words" => self.hot_words = value.parse()?,
             "eval_every" => self.eval_every = value.parse()?,
             "checkpoint_every" => self.checkpoint_every = value.parse()?,
+            "n_workers" | "workers" => self.n_workers = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "verbose" => self.verbose = value.parse()?,
             "store" => {
@@ -249,9 +256,13 @@ mod tests {
         c.set("algorithm", "ovb").unwrap();
         c.set("k", "250").unwrap();
         c.set("ds", "512").unwrap();
+        c.set("n_workers", "4").unwrap();
         assert_eq!(c.algorithm, Algorithm::Ovb);
         assert_eq!(c.n_topics, 250);
         assert_eq!(c.minibatch_docs, 512);
+        assert_eq!(c.n_workers, 4);
+        c.set("workers", "2").unwrap();
+        assert_eq!(c.n_workers, 2);
         assert!(c.set("bogus", "1").is_err());
     }
 

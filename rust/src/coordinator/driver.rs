@@ -69,6 +69,7 @@ impl Driver {
             Algorithm::Sem => {
                 let mut sc = SemConfig::paper(scale_s);
                 sc.rate = cfg.rate();
+                sc.n_workers = cfg.n_workers;
                 Box::new(Sem::new(params, n_words, sc, cfg.seed))
             }
             Algorithm::Scvb => {
@@ -223,6 +224,21 @@ mod tests {
         assert!(report.io.is_some());
         assert!(dir.path().join("phi.bin").exists());
         assert!(report.final_perplexity.is_finite());
+    }
+
+    #[test]
+    fn driver_threads_n_workers_to_parallel_trainers() {
+        let c = generate(&SyntheticConfig::small(), 94);
+        for algo in [Algorithm::Foem, Algorithm::Sem] {
+            let mut cfg = small_cfg(algo);
+            cfg.n_workers = 2;
+            cfg.eval_every = 0;
+            let mut d = Driver::new(cfg);
+            let report = d.train_corpus(&c).unwrap();
+            assert_eq!(report.algorithm, algo.name());
+            assert!(report.final_perplexity.is_finite());
+            assert!(report.final_perplexity < c.n_words() as f64);
+        }
     }
 
     #[test]

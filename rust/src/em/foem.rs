@@ -28,10 +28,11 @@
 //! per-word residual totals `r_w` (Eq. 37).
 
 use super::schedule::TopicSubset;
-use super::MinibatchReport;
+use super::{MinibatchReport, SsDelta};
 use crate::corpus::vocab::VocabGrowth;
-use crate::store::PhiColumnStore;
-use crate::stream::Minibatch;
+use crate::exec::ParallelExecutor;
+use crate::store::{PhiColumnStore, PhiSnapshot};
+use crate::stream::{Minibatch, MinibatchShard};
 use crate::util::{Rng, Timer};
 use crate::LdaParams;
 
@@ -58,7 +59,7 @@ pub struct FoemConfig {
     /// paper plugs this hole with a full-K first iteration per minibatch,
     /// which costs O(K·NNZ_s); epsilon-greedy slots achieve the same
     /// discovery at O(1) per entry, keeping the cost flat in K (see
-    /// DESIGN.md and EXPERIMENTS.md §Perf).
+    /// `rust/DESIGN.md` §7).
     pub explore_slots: usize,
     /// Compute the exact full-K training log-likelihood at minibatch exit
     /// (one O(K*NNZ_s) pass; needed for training-perplexity traces,
@@ -67,6 +68,12 @@ pub struct FoemConfig {
     pub exact_ll: bool,
     /// Lifelong mode: grow W as unseen words appear (`W ← W+1`, §3.2).
     pub open_vocabulary: bool,
+    /// E-step worker threads for the parallel executor ([`crate::exec`]):
+    /// each minibatch is split into this many document shards, swept
+    /// concurrently against read-only column snapshots, with the
+    /// per-shard deltas merged deterministically. `1` = the exact serial
+    /// path (bit-identical numerics and I/O counters).
+    pub n_workers: usize,
 }
 
 impl FoemConfig {
@@ -81,6 +88,7 @@ impl FoemConfig {
             explore_slots: 4,
             exact_ll: true,
             open_vocabulary: false,
+            n_workers: 1,
         }
     }
 
@@ -189,9 +197,23 @@ impl<S: PhiColumnStore> Foem<S> {
     }
 
     /// Process one minibatch (Fig. 4). Returns the usual report.
+    ///
+    /// With `cfg.n_workers == 1` this is the serial Fig. 4 algorithm;
+    /// otherwise the E-step sweeps run document-sharded on the parallel
+    /// executor (see [`crate::exec`] and `rust/DESIGN.md` §6).
     pub fn process_minibatch(&mut self, mb: &Minibatch) -> MinibatchReport {
-        let timer = Timer::start();
-        let k = self.params.n_topics;
+        if self.cfg.n_workers <= 1 {
+            self.process_minibatch_serial(mb)
+        } else {
+            self.process_minibatch_parallel(mb)
+        }
+    }
+
+    /// Per-minibatch entry work shared by the serial and parallel paths:
+    /// step counter, lifelong vocabulary growth (§3.2), resident residual
+    /// sizing, and hot-word pinning (Fig. 4 line 2). Returns the
+    /// effective W for the Eq. 13 denominator.
+    fn begin_minibatch(&mut self, mb: &Minibatch) -> usize {
         self.step += 1;
 
         // Lifelong vocabulary growth (§3.2).
@@ -204,10 +226,6 @@ impl<S: PhiColumnStore> Foem<S> {
         if self.r_totals.len() < self.store.n_words() {
             self.r_totals.resize(self.store.n_words(), 0.0);
         }
-        let w_dim = self.effective_w();
-        let am1 = self.params.am1();
-        let bm1 = self.params.bm1();
-        let wbm1 = self.params.wbm1(w_dim);
 
         // Hot-word buffer replacement (Fig. 4 line 2): pin the minibatch's
         // most frequent words in BOTH stores.
@@ -232,6 +250,18 @@ impl<S: PhiColumnStore> Foem<S> {
             self.store.set_hot_words(&hot);
             self.res_store.set_hot_words(&hot);
         }
+        self.effective_w()
+    }
+
+    /// The serial Fig. 4 path — exposed so the equivalence tests can pin
+    /// `process_minibatch(n_workers = 1)` against it bit-for-bit.
+    pub fn process_minibatch_serial(&mut self, mb: &Minibatch) -> MinibatchReport {
+        let timer = Timer::start();
+        let k = self.params.n_topics;
+        let w_dim = self.begin_minibatch(mb);
+        let am1 = self.params.am1();
+        let bm1 = self.params.bm1();
+        let wbm1 = self.params.wbm1(w_dim);
 
         let vm = &mb.vocab_major;
         let n_local = mb.local_words.len();
@@ -477,6 +507,131 @@ impl<S: PhiColumnStore> Foem<S> {
         }
     }
 
+    /// Document-sharded parallel path: snapshot the touched columns,
+    /// sweep each shard on a worker thread against private copies, then
+    /// reduce the per-shard [`SsDelta`]s in fixed shard order into the
+    /// global stores. Eq. 33 accumulation semantics are preserved: each
+    /// shard contributes exactly its token mass, so the global mass
+    /// invariant holds for any `P`.
+    fn process_minibatch_parallel(&mut self, mb: &Minibatch) -> MinibatchReport {
+        let timer = Timer::start();
+        let k = self.params.n_topics;
+        let w_dim = self.begin_minibatch(mb);
+        let am1 = self.params.am1();
+        let bm1 = self.params.bm1();
+        let wbm1 = self.params.wbm1(w_dim);
+
+        // Shared-read snapshots of the touched columns: one sequential
+        // read per column, after which the stores sit untouched until the
+        // merge — this is what lets PagedPhi feed concurrent workers.
+        let phi_snap = self.store.snapshot_columns(&mb.local_words);
+        let res_snap = self.res_store.snapshot_columns(&mb.local_words);
+
+        let exec = ParallelExecutor::new(self.cfg.n_workers);
+        let shards = exec.shard(mb);
+        // Per-shard RNG streams drawn in shard order: deterministic for a
+        // given (seed, n_workers).
+        let seeds: Vec<u64> =
+            shards.iter().map(|_| self.rng.next_u64()).collect();
+
+        let params = self.params;
+        let cfg = self.cfg;
+        let phisum0 = self.phisum.clone();
+        let results = exec.run_sharded(&shards, |shard| {
+            run_foem_shard(
+                &params,
+                &cfg,
+                shard,
+                &phi_snap,
+                &res_snap,
+                &phisum0,
+                w_dim,
+                seeds[shard.shard_index],
+            )
+        });
+
+        // Deterministic reduce (fixed shard order), then ONE
+        // read-modify-write per global column — the Fig. 4 line 8/15 I/O
+        // discipline, paid once per minibatch instead of once per shard.
+        let phi_delta =
+            exec.reduce(k, &mb.local_words, results.iter().map(|r| &r.phi_delta));
+        let res_delta =
+            exec.reduce(k, &mb.local_words, results.iter().map(|r| &r.res_delta));
+        phi_delta.apply_to_store(&mut self.store, &mut self.phisum);
+
+        // Residual columns merge additively, clamped at zero: workers
+        // each re-derive the selected coordinates from the same snapshot,
+        // so overlapping zero-outs may overshoot — residuals are a
+        // scheduling heuristic and must only stay non-negative.
+        for (i, &gw) in mb.local_words.iter().enumerate() {
+            let gw = gw as usize;
+            let d = res_delta.col(i);
+            let mut total = 0.0f32;
+            self.res_store.with_column(gw, |col| {
+                for (c, &dv) in col.iter_mut().zip(d) {
+                    *c = (*c + dv).max(0.0);
+                    total += *c;
+                }
+            });
+            self.r_totals[gw] = total;
+        }
+
+        let inner = results.iter().map(|r| r.inner_iters).max().unwrap_or(0);
+        self.last_inner_iters = inner;
+
+        // Exact training LL (optional O(K*NNZ_s) pass) on the merged
+        // global state. Word-major outer loop so each column is read
+        // from the store exactly ONCE even when the word appears in
+        // every shard (frequent words do) — the serial I/O discipline.
+        let mut ll = 0.0f64;
+        if self.cfg.exact_ll {
+            let kam1 = k as f32 * am1;
+            let doc_norms: Vec<Vec<f64>> = shards
+                .iter()
+                .map(|shard| {
+                    (0..shard.docs.n_docs)
+                        .map(|d| {
+                            ((shard.docs.doc_len(d) + kam1) as f64)
+                                .max(1e-300)
+                                .ln()
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut col = vec![0.0f32; k];
+            for &gw in &mb.local_words {
+                let gw = gw as usize;
+                self.store.load_column(gw, &mut col);
+                for (si, (r, shard)) in
+                    results.iter().zip(&shards).enumerate()
+                {
+                    let vm = &shard.vocab_major;
+                    let (s, en) = vm.word_range(gw);
+                    for i in s..en {
+                        let d = vm.doc_ids[i] as usize;
+                        let c = vm.counts[i];
+                        let th = &r.theta[d * k..(d + 1) * k];
+                        let mut z = 0.0f32;
+                        for kk in 0..k {
+                            z += (th[kk] + am1) * (col[kk] + bm1)
+                                / (self.phisum[kk] + wbm1);
+                        }
+                        ll += c as f64
+                            * (((z as f64).max(1e-300)).ln()
+                                - doc_norms[si][d]);
+                    }
+                }
+            }
+        }
+
+        MinibatchReport {
+            inner_iters: inner,
+            seconds: timer.seconds(),
+            train_ll: ll,
+            tokens: mb.docs.total_tokens(),
+        }
+    }
+
     /// Checkpoint-friendly view of the resident state.
     pub fn phisum_total(&self) -> f64 {
         self.phisum.iter().map(|&x| x as f64).sum()
@@ -486,6 +641,215 @@ impl<S: PhiColumnStore> Foem<S> {
     pub fn export_phi(&mut self) -> crate::em::PhiStats {
         self.store.export_dense()
     }
+}
+
+/// Result of one shard worker's E-step sweeps.
+struct FoemShardResult {
+    inner_iters: usize,
+    /// Topic-word delta vs the phi snapshot, over the shard's words.
+    phi_delta: SsDelta,
+    /// Residual delta vs the residual snapshot.
+    res_delta: SsDelta,
+    /// Shard-local doc-topic stats (kept for the optional exact-LL pass).
+    theta: Vec<f32>,
+}
+
+/// The FOEM inner loop (Fig. 4 lines 3-18) for one document shard, run
+/// against worker-private copies of the snapshot columns. The math is the
+/// serial algorithm's verbatim; only the storage differs: updates land in
+/// private dense arrays, and the net change vs the snapshot is returned
+/// as [`SsDelta`]s for the executor's deterministic merge.
+#[allow(clippy::too_many_arguments)]
+fn run_foem_shard(
+    params: &LdaParams,
+    cfg: &FoemConfig,
+    shard: &MinibatchShard,
+    phi_snap: &PhiSnapshot,
+    res_snap: &PhiSnapshot,
+    phisum0: &[f32],
+    w_dim: usize,
+    seed: u64,
+) -> FoemShardResult {
+    let k = params.n_topics;
+    let am1 = params.am1();
+    let bm1 = params.bm1();
+    let wbm1 = params.wbm1(w_dim);
+    let vm = &shard.vocab_major;
+    let words = &shard.local_words;
+    let n_local = words.len();
+    let nnz = vm.nnz();
+    let tokens = shard.docs.total_tokens();
+    let mut rng = Rng::new(seed);
+
+    // Private working copies of the touched columns plus resident totals.
+    let mut phi = vec![0.0f32; n_local * k];
+    let mut res = vec![0.0f32; n_local * k];
+    for (lw, &gw) in words.iter().enumerate() {
+        phi[lw * k..(lw + 1) * k].copy_from_slice(
+            phi_snap.column(gw).expect("shard word missing from snapshot"),
+        );
+        res[lw * k..(lw + 1) * k].copy_from_slice(
+            res_snap.column(gw).expect("shard word missing from snapshot"),
+        );
+    }
+    let mut phisum = phisum0.to_vec();
+    let mut r_totals: Vec<f32> = (0..n_local)
+        .map(|lw| res[lw * k..(lw + 1) * k].iter().sum())
+        .collect();
+
+    let mut mu = vec![0.0f32; nnz * k];
+    let mut theta = vec![0.0f32; shard.docs.n_docs * k];
+
+    // Init (Fig. 4 line 3): random hard assignments accumulated into the
+    // private state (Eq. 33 accumulation form).
+    {
+        let mut e_base = 0usize;
+        for (lw, &gw) in words.iter().enumerate() {
+            let (s, en) = vm.word_range(gw as usize);
+            let col = &mut phi[lw * k..(lw + 1) * k];
+            let rcol = &mut res[lw * k..(lw + 1) * k];
+            for (off, i) in (s..en).enumerate() {
+                let d = vm.doc_ids[i] as usize;
+                let c = vm.counts[i];
+                let topic = rng.below(k);
+                mu[(e_base + off) * k + topic] = 1.0;
+                theta[d * k + topic] += c;
+                col[topic] += c;
+                phisum[topic] += c;
+                rcol[topic] += c;
+                r_totals[lw] += c;
+            }
+            e_base += en - s;
+        }
+    }
+
+    // Local word -> base entry offset in `mu`; per-word token mass for
+    // the per-word convergence cutoff.
+    let mut entry_base = vec![0usize; n_local + 1];
+    let mut word_mass = vec![0.0f32; n_local];
+    for (lw, &gw) in words.iter().enumerate() {
+        let (s, e) = vm.word_range(gw as usize);
+        entry_base[lw + 1] = entry_base[lw] + (e - s);
+        word_mass[lw] = vm.word_counts(gw as usize).iter().sum();
+    }
+
+    // Inner time-efficient IEM sweeps (Fig. 4 lines 5-18), private state.
+    let n_sel = cfg.topic_subset.size(k);
+    let mut inner = 0usize;
+    let mut sel: Vec<u32> = Vec::with_capacity(n_sel);
+    let mut scratch_mu = vec![0.0f32; n_sel];
+    let mut fresh_res = vec![0.0f32; n_sel];
+    for t in 0..cfg.max_inner_iters {
+        let mut order: Vec<u32> = (0..n_local as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            let ra = r_totals[a as usize];
+            let rb = r_totals[b as usize];
+            rb.partial_cmp(&ra).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let keep = ((cfg.lambda_w as f64 * n_local as f64).ceil() as usize)
+            .clamp(1, n_local);
+        order.truncate(keep);
+
+        let mut moved = 0.0f64;
+        for &lw in &order {
+            let lw = lw as usize;
+            let gw = words[lw] as usize;
+            if (r_totals[lw] as f64) < cfg.residual_tol * word_mass[lw] as f64
+            {
+                break;
+            }
+            let (s, en) = vm.word_range(gw);
+            let base = entry_base[lw];
+            let rcol = &mut res[lw * k..(lw + 1) * k];
+            top_n_indices(rcol, n_sel, &mut sel);
+            if n_sel < k && cfg.explore_slots > 0 {
+                let swaps = cfg.explore_slots.min(n_sel / 2);
+                for j in 0..swaps {
+                    let cand = rng.below(k) as u32;
+                    if !sel.contains(&cand) {
+                        let pos = sel.len() - 1 - j;
+                        sel[pos] = cand;
+                    }
+                }
+            }
+            let mut removed = 0.0f32;
+            for &kk in &sel {
+                removed += rcol[kk as usize];
+                rcol[kk as usize] = 0.0;
+            }
+            fresh_res.iter_mut().for_each(|x| *x = 0.0);
+            let col = &mut phi[lw * k..(lw + 1) * k];
+            for (off, i) in (s..en).enumerate() {
+                let e = base + off;
+                let d = vm.doc_ids[i] as usize;
+                let c = vm.counts[i];
+                let mu_row = &mut mu[e * k..(e + 1) * k];
+                let th = &mut theta[d * k..(d + 1) * k];
+                // Retained mass within the subset (Eq. 38).
+                let mut m_old = 0.0f32;
+                for &kk in &sel {
+                    m_old += mu_row[kk as usize];
+                }
+                if m_old <= 1e-12 {
+                    continue;
+                }
+                // Exclude + recompute on the subset (Eq. 13).
+                let mut z = 0.0f32;
+                for (j, &kk) in sel.iter().enumerate() {
+                    let kk = kk as usize;
+                    let excl = c * mu_row[kk];
+                    let u = (th[kk] - excl + am1) * (col[kk] - excl + bm1)
+                        / (phisum[kk] - excl + wbm1);
+                    scratch_mu[j] = u.max(0.0);
+                    z += scratch_mu[j];
+                }
+                if z <= 0.0 {
+                    continue;
+                }
+                let renorm = m_old / z;
+                for (j, &kk) in sel.iter().enumerate() {
+                    let kk = kk as usize;
+                    let new = scratch_mu[j] * renorm;
+                    let delta = c * (new - mu_row[kk]);
+                    th[kk] += delta;
+                    col[kk] += delta;
+                    phisum[kk] += delta;
+                    fresh_res[j] += delta.abs();
+                    mu_row[kk] = new;
+                }
+            }
+            let mut word_moved = 0.0f32;
+            for (j, &kk) in sel.iter().enumerate() {
+                rcol[kk as usize] += fresh_res[j];
+                word_moved += fresh_res[j];
+            }
+            r_totals[lw] = (r_totals[lw] - removed + word_moved).max(0.0);
+            moved += word_moved as f64;
+        }
+        inner = t + 1;
+        if moved / tokens.max(1.0) < cfg.residual_tol {
+            break;
+        }
+    }
+
+    // Net change vs the snapshots — what the executor reduces & applies.
+    let mut phi_delta = SsDelta::zeros(k, words.clone());
+    let mut res_delta = SsDelta::zeros(k, words.clone());
+    for (lw, &gw) in words.iter().enumerate() {
+        let psnap = phi_snap.column(gw).expect("snapshot column");
+        let rsnap = res_snap.column(gw).expect("snapshot column");
+        for kk in 0..k {
+            let dp = phi[lw * k + kk] - psnap[kk];
+            if dp != 0.0 {
+                phi_delta.add_at(lw, kk, dp);
+            }
+            let dr = res[lw * k + kk] - rsnap[kk];
+            if dr != 0.0 {
+                res_delta.add_at(lw, kk, dr);
+            }
+        }
+    }
+    FoemShardResult { inner_iters: inner, phi_delta, res_delta, theta }
 }
 
 impl Foem<crate::store::InMemoryPhi> {
@@ -712,6 +1076,75 @@ mod tests {
         let theta = crate::em::bem::Bem::fold_in(&phi, p, &c.docs, 20, 1);
         let ll = crate::em::train_log_likelihood(&c.docs, &theta, &phi, p);
         crate::em::perplexity(ll, c.n_tokens())
+    }
+
+    #[test]
+    fn parallel_workers_preserve_mass_and_quality() {
+        // Eq. 33 accumulation must survive document sharding: for any P,
+        // the merged global stats hold exactly the stream's token mass,
+        // and phisum stays consistent with the columns.
+        let c = corpus();
+        let k = 8;
+        let p = LdaParams::paper_defaults(k);
+        for workers in [2usize, 4] {
+            let mut cfg = FoemConfig::paper();
+            cfg.n_workers = workers;
+            let store = InMemoryPhi::zeros(k, c.n_words());
+            let mut foem = Foem::new(p, store, cfg, 7);
+            let scfg =
+                StreamConfig { minibatch_docs: 64, ..Default::default() };
+            for mb in CorpusStream::new(&c, scfg) {
+                let r = foem.process_minibatch(&mb);
+                assert!(r.train_perplexity().is_finite(), "P={workers}");
+                assert!(r.inner_iters >= 1);
+            }
+            let total = c.n_tokens();
+            assert!(
+                (foem.phisum_total() - total).abs() < total * 1e-3,
+                "P={workers}: {} vs {total}",
+                foem.phisum_total()
+            );
+            let dense = foem.export_phi();
+            for kk in 0..k {
+                assert!(
+                    (dense.phisum[kk] - foem.phisum[kk]).abs()
+                        < foem.phisum[kk].abs().max(1.0) * 1e-3,
+                    "P={workers} topic {kk}"
+                );
+            }
+            assert!(foem.r_totals.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn parallel_works_with_paged_store() {
+        // The snapshot/merge path must serve the disk-backed store too:
+        // columns are read once into the snapshot and merged back with
+        // one read-modify-write each.
+        let dir = crate::util::TempDir::new("par");
+        let c = corpus();
+        let k = 6;
+        let p = LdaParams::paper_defaults(k);
+        let mut cfg = FoemConfig::paper();
+        cfg.n_workers = 2;
+        cfg.hot_words = 16;
+        let mut foem = Foem::paged_create(
+            p,
+            &dir.path().join("phi.bin"),
+            c.n_words(),
+            32 * k * 4,
+            cfg,
+            0,
+        )
+        .unwrap();
+        let scfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+        for mb in CorpusStream::new(&c, scfg) {
+            foem.process_minibatch(&mb);
+        }
+        let io = foem.store.io_stats();
+        assert!(io.col_reads > 0, "no streaming happened");
+        let total = c.n_tokens();
+        assert!((foem.phisum_total() - total).abs() < total * 1e-3);
     }
 
     #[test]

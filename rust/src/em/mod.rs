@@ -142,6 +142,112 @@ impl ThetaStats {
     }
 }
 
+/// A privately-filled sufficient-statistics delta over a sparse set of
+/// vocabulary columns — the unit of communication of the parallel E-step
+/// engine ([`crate::exec`]).
+///
+/// Each shard worker accumulates its updates into its own `SsDelta`; the
+/// executor then [`SsDelta::merge`]s the per-shard deltas in a fixed
+/// (shard-index) order and applies the result to the global stores with
+/// [`SsDelta::apply_to_store`], so a run is reproducible for a given seed
+/// and worker count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SsDelta {
+    pub k: usize,
+    /// Sorted global word ids this delta covers.
+    words: Vec<u32>,
+    /// `words.len() * k`; column `i` belongs to `words[i]`.
+    data: Vec<f32>,
+    /// Per-topic totals: `phisum[k] = sum_w data[w][k]`.
+    pub phisum: Vec<f32>,
+}
+
+impl SsDelta {
+    pub fn zeros(k: usize, words: Vec<u32>) -> Self {
+        debug_assert!(
+            words.windows(2).all(|w| w[0] < w[1]),
+            "SsDelta words must be sorted and distinct"
+        );
+        let n = words.len();
+        Self { k, words, data: vec![0.0; k * n], phisum: vec![0.0; k] }
+    }
+
+    /// The sorted global word ids covered.
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    pub fn n_columns(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Delta-local index of global word `w`, if covered.
+    #[inline]
+    pub fn index_of(&self, w: u32) -> Option<usize> {
+        self.words.binary_search(&w).ok()
+    }
+
+    /// Column by delta-local index.
+    #[inline]
+    pub fn col(&self, idx: usize) -> &[f32] {
+        &self.data[idx * self.k..(idx + 1) * self.k]
+    }
+
+    /// Add `v` at (delta-local column `idx`, `topic`), updating totals.
+    #[inline]
+    pub fn add_at(&mut self, idx: usize, topic: usize, v: f32) {
+        self.data[idx * self.k + topic] += v;
+        self.phisum[topic] += v;
+    }
+
+    /// Accumulate `other` into `self`. `other`'s words must be a subset
+    /// of this delta's words (shard vocabularies are subsets of the
+    /// minibatch vocabulary). Calling this per shard in shard order is
+    /// the executor's deterministic reduction.
+    pub fn merge(&mut self, other: &SsDelta) {
+        assert_eq!(self.k, other.k, "K mismatch in SsDelta::merge");
+        for (i, &w) in other.words.iter().enumerate() {
+            let j = self
+                .index_of(w)
+                .expect("SsDelta::merge: word not covered by accumulator");
+            let src = &other.data[i * self.k..(i + 1) * self.k];
+            let dst = &mut self.data[j * self.k..(j + 1) * self.k];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+        for (p, &q) in self.phisum.iter_mut().zip(&other.phisum) {
+            *p += q;
+        }
+    }
+
+    /// Apply to a column store plus the resident topic totals: one
+    /// read-modify-write per covered column (the Fig. 4 line 8/15 I/O
+    /// discipline, now at merge time instead of per entry).
+    pub fn apply_to_store<S: crate::store::PhiColumnStore>(
+        &self,
+        store: &mut S,
+        phisum: &mut [f32],
+    ) {
+        for (i, &w) in self.words.iter().enumerate() {
+            let src = self.col(i);
+            store.with_column(w as usize, |col| {
+                for (c, &d) in col.iter_mut().zip(src) {
+                    *c += d;
+                }
+            });
+        }
+        for (p, &d) in phisum.iter_mut().zip(&self.phisum) {
+            *p += d;
+        }
+    }
+
+    /// Total signed mass of the delta.
+    pub fn total_mass(&self) -> f64 {
+        self.phisum.iter().map(|&x| x as f64).sum()
+    }
+}
+
 /// The Eq. 11 E-step for one non-zero entry: writes the *unnormalized*
 /// responsibility into `mu` and returns the normalizer `Z`.
 ///
@@ -361,6 +467,44 @@ mod tests {
         let pr = th.prob(0, &params(4));
         let s: f32 = pr.iter().sum();
         assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ss_delta_accumulates_and_applies() {
+        let mut d = SsDelta::zeros(3, vec![2u32, 7]);
+        d.add_at(0, 1, 2.0);
+        d.add_at(1, 0, 1.5);
+        d.add_at(1, 1, 0.5);
+        assert_eq!(d.col(0), &[0.0, 2.0, 0.0]);
+        assert_eq!(d.col(1), &[1.5, 0.5, 0.0]);
+        assert_eq!(d.phisum, vec![1.5, 2.5, 0.0]);
+        assert_eq!(d.index_of(7), Some(1));
+        assert_eq!(d.index_of(3), None);
+        assert!((d.total_mass() - 4.0).abs() < 1e-9);
+
+        use crate::store::PhiColumnStore;
+        let mut store = crate::store::InMemoryPhi::zeros(3, 10);
+        let mut phisum = vec![0.0f32; 3];
+        d.apply_to_store(&mut store, &mut phisum);
+        assert_eq!(store.read_column(2), vec![0.0, 2.0, 0.0]);
+        assert_eq!(store.read_column(7), vec![1.5, 0.5, 0.0]);
+        assert_eq!(phisum, vec![1.5, 2.5, 0.0]);
+    }
+
+    #[test]
+    fn ss_delta_merge_aligns_word_subsets() {
+        let mut acc = SsDelta::zeros(2, vec![1u32, 4, 9]);
+        let mut a = SsDelta::zeros(2, vec![4u32]);
+        a.add_at(0, 0, 3.0);
+        let mut b = SsDelta::zeros(2, vec![1u32, 9]);
+        b.add_at(0, 1, 1.0);
+        b.add_at(1, 0, 2.0);
+        acc.merge(&a);
+        acc.merge(&b);
+        assert_eq!(acc.col(0), &[0.0, 1.0]);
+        assert_eq!(acc.col(1), &[3.0, 0.0]);
+        assert_eq!(acc.col(2), &[2.0, 0.0]);
+        assert_eq!(acc.phisum, vec![5.0, 1.0]);
     }
 
     #[test]

@@ -13,8 +13,12 @@
 //! SCVB (Foulds et al.) is equivalent to this algorithm (§2.5); the
 //! `baselines::scvb` wrapper reuses this core with its own defaults.
 
-use super::{perplexity, ConvergenceCheck, MinibatchReport, PhiStats, ThetaStats};
-use crate::stream::Minibatch;
+use super::{
+    perplexity, ConvergenceCheck, MinibatchReport, PhiStats, SsDelta,
+    ThetaStats,
+};
+use crate::exec::ParallelExecutor;
+use crate::stream::{Minibatch, MinibatchShard};
 use crate::util::{Rng, Timer};
 use crate::LdaParams;
 
@@ -51,6 +55,12 @@ pub struct SemConfig {
     pub check_every: usize,
     /// Inner-loop sweep budget per minibatch.
     pub max_inner_iters: usize,
+    /// E-step worker threads ([`crate::exec`]): the minibatch's documents
+    /// are sharded across this many scoped threads, each running the
+    /// inner BEM loop against the frozen global phi, and the per-shard
+    /// sufficient statistics are folded in with a fixed merge order.
+    /// `1` = the exact serial path.
+    pub n_workers: usize,
 }
 
 impl SemConfig {
@@ -61,6 +71,7 @@ impl SemConfig {
             threshold: 10.0,
             check_every: 1,
             max_inner_iters: 100,
+            n_workers: 1,
         }
     }
 }
@@ -88,7 +99,22 @@ impl Sem {
 
     /// Run the Fig. 3 inner loop on one minibatch and fold the result into
     /// the global phi.
+    ///
+    /// With `cfg.n_workers == 1` this is the serial Fig. 3 algorithm;
+    /// otherwise the inner loop runs document-sharded on the parallel
+    /// executor (the global phi is frozen during the loop, so shards are
+    /// independent; see [`crate::exec`]).
     pub fn process_minibatch(&mut self, mb: &Minibatch) -> MinibatchReport {
+        if self.cfg.n_workers <= 1 {
+            self.process_minibatch_serial(mb)
+        } else {
+            self.process_minibatch_parallel(mb)
+        }
+    }
+
+    /// The serial Fig. 3 path — exposed so the equivalence tests can pin
+    /// `process_minibatch(n_workers = 1)` against it bit-for-bit.
+    pub fn process_minibatch_serial(&mut self, mb: &Minibatch) -> MinibatchReport {
         let timer = Timer::start();
         let k = self.params.n_topics;
         let w_dim = self.phi.n_words;
@@ -203,6 +229,221 @@ impl Sem {
             tokens,
         }
     }
+
+    /// Document-sharded parallel path. The Fig. 3 inner loop freezes the
+    /// global phi, so shards only couple through their private theta —
+    /// workers read the shared `PhiStats` concurrently, and the Eq. 20
+    /// fold-in scatters the per-shard [`SsDelta`]s in fixed shard order.
+    /// The scattered mass is `scale * tokens` regardless of how
+    /// responsibilities distribute, so the global mass trajectory matches
+    /// the serial path exactly.
+    fn process_minibatch_parallel(&mut self, mb: &Minibatch) -> MinibatchReport {
+        let timer = Timer::start();
+        let k = self.params.n_topics;
+        let tokens = mb.docs.total_tokens();
+        self.step += 1;
+        let bootstrap = self.phi.total_mass() == 0.0;
+
+        let exec = ParallelExecutor::new(self.cfg.n_workers);
+        let shards = exec.shard(mb);
+        // Per-shard RNG streams drawn in shard order (deterministic for a
+        // given seed and worker count).
+        let seeds: Vec<u64> =
+            shards.iter().map(|_| self.rng.next_u64()).collect();
+
+        let params = self.params;
+        let cfg = self.cfg;
+        let phi = &self.phi;
+        let results = exec.run_sharded(&shards, |shard| {
+            run_sem_shard(
+                &params,
+                &cfg,
+                shard,
+                phi,
+                bootstrap,
+                seeds[shard.shard_index],
+            )
+        });
+
+        // Cold-start seeding first, mirroring the serial order (seed the
+        // global stats during init, decay afterwards).
+        if bootstrap {
+            for r in &results {
+                for (i, &w) in r.boot.words().iter().enumerate() {
+                    let src = r.boot.col(i);
+                    let (col, phisum) = self.phi.word_and_sum_mut(w as usize);
+                    for kk in 0..k {
+                        col[kk] += src[kk];
+                        phisum[kk] += src[kk];
+                    }
+                }
+            }
+        }
+
+        // Global update (Fig. 3 line 10, Eq. 20): decay, then scatter the
+        // per-shard sufficient statistics in fixed shard order.
+        let rho = self.cfg.rate.rho(self.step) as f32;
+        let scale = (self.cfg.scale_s as f32) * rho;
+        self.phi.raw_mut().iter_mut().for_each(|x| *x *= 1.0 - rho);
+        self.phi.phisum.iter_mut().for_each(|x| *x *= 1.0 - rho);
+        for r in &results {
+            for (i, &w) in r.stats.words().iter().enumerate() {
+                let src = r.stats.col(i);
+                let (col, phisum) = self.phi.word_and_sum_mut(w as usize);
+                for kk in 0..k {
+                    let v = scale * src[kk];
+                    col[kk] += v;
+                    phisum[kk] += v;
+                }
+            }
+        }
+
+        let iters = results.iter().map(|r| r.inner_iters).max().unwrap_or(0);
+        let ll: f64 = results.iter().map(|r| r.train_ll).sum();
+        MinibatchReport {
+            inner_iters: iters,
+            seconds: timer.seconds(),
+            train_ll: ll,
+            tokens,
+        }
+    }
+}
+
+/// Result of one SEM shard worker.
+struct SemShardResult {
+    inner_iters: usize,
+    train_ll: f64,
+    /// `sum_d x_{w,d} mu` sufficient statistics over the shard's words.
+    stats: SsDelta,
+    /// Cold-start hard-init mass (empty unless bootstrapping).
+    boot: SsDelta,
+}
+
+/// The Fig. 3 inner loop for one document shard: private theta and
+/// responsibilities against the frozen shared phi (copied locally per
+/// shard so an optional bootstrap overlay needs no branching in the hot
+/// loop), with a shard-local convergence check.
+fn run_sem_shard(
+    params: &LdaParams,
+    cfg: &SemConfig,
+    shard: &MinibatchShard,
+    phi: &PhiStats,
+    bootstrap: bool,
+    seed: u64,
+) -> SemShardResult {
+    let k = params.n_topics;
+    let w_dim = phi.n_words;
+    let docs = &shard.docs;
+    let tokens = docs.total_tokens();
+    let words = &shard.local_words;
+    let n_local = words.len();
+    let mut rng = Rng::new(seed);
+
+    // Private copies of the frozen phi columns the shard touches.
+    let mut lphi = vec![0.0f32; n_local * k];
+    for (lw, &gw) in words.iter().enumerate() {
+        lphi[lw * k..(lw + 1) * k].copy_from_slice(phi.word(gw as usize));
+    }
+    let mut lphisum = phi.phisum.clone();
+    // Per-entry shard-local word slots, resolved off the hot loop.
+    let entry_slot: Vec<u32> = docs
+        .word_ids
+        .iter()
+        .map(|w| {
+            words.binary_search(w).expect("entry word in shard vocabulary")
+                as u32
+        })
+        .collect();
+
+    // Local init (Fig. 3 line 2): random hard assignments -> theta, plus
+    // cold-start seeding of the (private) global stats.
+    let mut theta = ThetaStats::zeros(k, docs.n_docs);
+    let nnz = docs.nnz();
+    let mut mu = vec![0.0f32; nnz * k];
+    let mut boot =
+        SsDelta::zeros(k, if bootstrap { words.clone() } else { Vec::new() });
+    {
+        let mut e = 0usize;
+        for d in 0..docs.n_docs {
+            for (_w, c) in docs.iter_doc(d) {
+                let topic = rng.below(k);
+                mu[e * k + topic] = 1.0;
+                theta.doc_mut(d)[topic] += c;
+                if bootstrap {
+                    let lw = entry_slot[e] as usize;
+                    lphi[lw * k + topic] += c;
+                    lphisum[topic] += c;
+                    boot.add_at(lw, topic, c);
+                }
+                e += 1;
+            }
+        }
+    }
+
+    // Inner BEM on theta with phi frozen (Fig. 3 lines 4-8).
+    let am1 = params.am1();
+    let bm1 = params.bm1();
+    let wbm1 = params.wbm1(w_dim);
+    let kam1 = k as f32 * am1;
+    let mut check =
+        ConvergenceCheck::new(cfg.threshold, cfg.check_every, cfg.max_inner_iters);
+    let mut iters = 0usize;
+    let mut last_ll = f64::NEG_INFINITY;
+    for t in 0..cfg.max_inner_iters {
+        let mut ll = 0.0f64;
+        let mut e = 0usize;
+        let mut theta_new = ThetaStats::zeros(k, docs.n_docs);
+        for d in 0..docs.n_docs {
+            let theta_d = theta.doc(d);
+            let doc_norm = ((docs.doc_len(d) + kam1) as f64).max(1e-300).ln();
+            for (_w, c) in docs.iter_doc(d) {
+                let lw = entry_slot[e] as usize;
+                let mu_row = &mut mu[e * k..(e + 1) * k];
+                let z = super::estep_unnormalized(
+                    theta_d,
+                    &lphi[lw * k..(lw + 1) * k],
+                    &lphisum,
+                    am1,
+                    bm1,
+                    wbm1,
+                    mu_row,
+                );
+                if z > 0.0 {
+                    let inv = 1.0 / z;
+                    mu_row.iter_mut().for_each(|m| *m *= inv);
+                }
+                ll += c as f64 * (((z as f64).max(1e-300)).ln() - doc_norm);
+                let trow = theta_new.doc_mut(d);
+                for i in 0..k {
+                    trow[i] += c * mu_row[i];
+                }
+                e += 1;
+            }
+        }
+        theta = theta_new;
+        last_ll = ll;
+        iters = t + 1;
+        if check.update(t, perplexity(ll, tokens)) {
+            break;
+        }
+    }
+
+    // Shard sufficient statistics for the Eq. 20 scatter.
+    let mut stats = SsDelta::zeros(k, words.clone());
+    let mut e = 0usize;
+    for d in 0..docs.n_docs {
+        for (_w, c) in docs.iter_doc(d) {
+            let lw = entry_slot[e] as usize;
+            let mu_row = &mu[e * k..(e + 1) * k];
+            for i in 0..k {
+                if mu_row[i] != 0.0 {
+                    stats.add_at(lw, i, c * mu_row[i]);
+                }
+            }
+            e += 1;
+        }
+    }
+    SemShardResult { inner_iters: iters, train_ll: last_ll, stats, boot }
 }
 
 #[cfg(test)]
@@ -261,6 +502,41 @@ mod tests {
                 "inner loop hit budget: {}",
                 r.inner_iters
             );
+        }
+    }
+
+    #[test]
+    fn parallel_sem_matches_serial_mass_trajectory() {
+        let corpus = generate(&SyntheticConfig::small(), 11);
+        let p = LdaParams::paper_defaults(8);
+        let scfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+        let s = CorpusStream::new(&corpus, scfg).batches_per_pass() as f64;
+        let run = |workers: usize| {
+            let mut cfg = SemConfig::paper(s);
+            cfg.n_workers = workers;
+            let mut sem = Sem::new(p, corpus.n_words(), cfg, 4);
+            let mut last = f64::NAN;
+            for mb in CorpusStream::new(&corpus, scfg) {
+                last = sem.process_minibatch(&mb).train_perplexity();
+            }
+            (sem, last)
+        };
+        let (serial, ppx1) = run(1);
+        let (par, ppx4) = run(4);
+        // The Eq. 20 scatter moves exactly scale * tokens of mass no
+        // matter how responsibilities distribute, so the total-mass
+        // trajectory is P-invariant.
+        let (m1, m4) = (serial.phi.total_mass(), par.phi.total_mass());
+        assert!((m1 - m4).abs() < m1.abs().max(1.0) * 1e-3, "{m1} vs {m4}");
+        // And quality lands in the same neighbourhood.
+        assert!(ppx1.is_finite() && ppx4.is_finite());
+        assert!((ppx4 - ppx1).abs() < ppx1 * 0.25, "{ppx4} vs {ppx1}");
+        // phisum stays consistent with the columns after parallel folds.
+        let mut rebuilt = par.phi.clone();
+        rebuilt.rebuild_phisum();
+        for i in 0..8 {
+            let (a, b) = (par.phi.phisum[i], rebuilt.phisum[i]);
+            assert!((a - b).abs() < a.abs().max(1.0) * 1e-3, "{a} vs {b}");
         }
     }
 

@@ -1,0 +1,163 @@
+//! Parallel sharded minibatch execution — the multi-worker E-step engine.
+//!
+//! The paper's FOEM processes each minibatch serially; its own complexity
+//! argument (Table 3) and the production north star demand multi-core
+//! execution. Document-sharded parallel LDA with periodic
+//! sufficient-statistics merges preserves model quality (Yan et al.,
+//! *Towards Big Topic Modeling*), and the stochastic-approximation frame
+//! of Cappé & Moulines' online EM is indifferent to whether a minibatch's
+//! statistics were gathered by one sweep or by `P` merged shard sweeps.
+//! This module is the seam where that parallelism lives:
+//!
+//! 1. [`crate::stream::Minibatch::shard`] splits an incoming minibatch
+//!    into `P` contiguous document shards, each keeping the vocab-major
+//!    layout over its own documents;
+//! 2. the store layer materializes a read-only
+//!    [`crate::store::PhiSnapshot`] of the minibatch's local columns
+//!    (one sequential read per column), shared by all workers —
+//!    `InMemoryPhi` and `PagedPhi` alike serve concurrent readers this
+//!    way without locking;
+//! 3. [`ParallelExecutor::run_sharded`] runs one worker per shard on
+//!    scoped `std::thread`s; each fills a private [`crate::em::SsDelta`];
+//! 4. [`ParallelExecutor::reduce`] merges the per-shard deltas in fixed
+//!    shard order, and the trainer applies the result to the global
+//!    stores — so results are reproducible for a given seed and `P`.
+//!
+//! `P = 1` bypasses the engine entirely: the trainers keep their serial
+//! paths, bit-identical to the pre-engine code (same numerics, same
+//! [`crate::store::IoStats`]). See `rust/DESIGN.md` §6 for the full
+//! architecture and the equivalence argument.
+
+use crate::em::SsDelta;
+use crate::stream::{Minibatch, MinibatchShard};
+
+/// The parallel minibatch executor: worker-count policy plus the fan-out
+/// and deterministic-reduce primitives every parallel trainer routes
+/// through.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelExecutor {
+    n_workers: usize,
+}
+
+impl ParallelExecutor {
+    pub fn new(n_workers: usize) -> Self {
+        Self { n_workers: n_workers.max(1) }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Shard a minibatch for this executor: at most `n_workers` contiguous
+    /// document shards (see [`Minibatch::shard`]).
+    pub fn shard(&self, mb: &Minibatch) -> Vec<MinibatchShard> {
+        mb.shard(self.n_workers)
+    }
+
+    /// Run `worker` once per shard. A single shard runs inline on the
+    /// calling thread; otherwise each shard gets a scoped OS thread.
+    /// Results come back indexed in shard order regardless of completion
+    /// order — the precondition for a deterministic reduce.
+    pub fn run_sharded<T, F>(&self, shards: &[MinibatchShard], worker: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(&MinibatchShard) -> T + Sync,
+    {
+        if shards.len() <= 1 {
+            return shards.iter().map(|s| worker(s)).collect();
+        }
+        std::thread::scope(|scope| {
+            let worker = &worker;
+            let handles: Vec<_> = shards
+                .iter()
+                .map(|shard| scope.spawn(move || worker(shard)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("E-step shard worker panicked"))
+                .collect()
+        })
+    }
+
+    /// Deterministic reduction: merge per-shard deltas, in the order the
+    /// iterator yields them (callers pass shard order), into a fresh
+    /// accumulator over `words` (the minibatch's local vocabulary).
+    pub fn reduce<'a, I>(&self, k: usize, words: &[u32], deltas: I) -> SsDelta
+    where
+        I: IntoIterator<Item = &'a SsDelta>,
+    {
+        let mut acc = SsDelta::zeros(k, words.to_vec());
+        for d in deltas {
+            acc.merge(d);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, SyntheticConfig};
+    use crate::stream::{CorpusStream, StreamConfig};
+
+    fn minibatch() -> Minibatch {
+        let c = generate(&SyntheticConfig::small(), 3);
+        let scfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+        CorpusStream::new(&c, scfg).next().unwrap()
+    }
+
+    #[test]
+    fn run_sharded_returns_results_in_shard_order() {
+        let mb = minibatch();
+        let exec = ParallelExecutor::new(4);
+        let shards = exec.shard(&mb);
+        assert!(shards.len() >= 2);
+        let idx: Vec<usize> = exec.run_sharded(&shards, |s| s.shard_index);
+        assert_eq!(idx, (0..shards.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_sharded_uses_worker_threads() {
+        let mb = minibatch();
+        let exec = ParallelExecutor::new(4);
+        let shards = exec.shard(&mb);
+        let main_id = std::thread::current().id();
+        let ids = exec.run_sharded(&shards, |_| std::thread::current().id());
+        assert_eq!(ids.len(), shards.len());
+        assert!(ids.iter().all(|&id| id != main_id));
+    }
+
+    #[test]
+    fn single_shard_runs_inline() {
+        let mb = minibatch();
+        let exec = ParallelExecutor::new(1);
+        let shards = exec.shard(&mb);
+        assert_eq!(shards.len(), 1);
+        let main_id = std::thread::current().id();
+        let ids = exec.run_sharded(&shards, |_| std::thread::current().id());
+        assert_eq!(ids, vec![main_id]);
+    }
+
+    #[test]
+    fn reduce_merges_in_order_over_minibatch_vocab() {
+        let words = vec![1u32, 3, 5];
+        let mut a = SsDelta::zeros(2, vec![1u32, 3]);
+        a.add_at(0, 0, 1.0);
+        a.add_at(1, 1, 2.0);
+        let mut b = SsDelta::zeros(2, vec![3u32, 5]);
+        b.add_at(0, 1, 4.0);
+        b.add_at(1, 0, 8.0);
+        let exec = ParallelExecutor::new(2);
+        let acc = exec.reduce(2, &words, [&a, &b]);
+        assert_eq!(acc.col(0), &[1.0, 0.0]);
+        assert_eq!(acc.col(1), &[0.0, 6.0]);
+        assert_eq!(acc.col(2), &[8.0, 0.0]);
+        assert_eq!(acc.phisum, vec![9.0, 6.0]);
+    }
+
+    #[test]
+    fn worker_count_is_clamped() {
+        assert_eq!(ParallelExecutor::new(0).n_workers(), 1);
+        assert_eq!(ParallelExecutor::new(8).n_workers(), 8);
+    }
+}

@@ -9,7 +9,9 @@
 //!   streaming coordinator, the residual-based **dynamic scheduler**
 //!   ([`em::schedule`]), the disk-backed **parameter streaming** store
 //!   ([`store`]), the online EM family (BEM / IEM / SEM / **FOEM**,
-//!   [`em`]), five state-of-the-art online-LDA baselines ([`baselines`]),
+//!   [`em`]), the **parallel sharded E-step engine** ([`exec`]) that runs
+//!   each minibatch across `n_workers` document shards with deterministic
+//!   merges, five state-of-the-art online-LDA baselines ([`baselines`]),
 //!   and the evaluation harness ([`eval`]).
 //! * **Layer 2/1 (build time, `python/`)** — the dense minibatch EM
 //!   graphs and the Pallas E-step kernels, AOT-lowered to HLO text and
@@ -30,14 +32,16 @@
 //! println!("perplexity = {:.1}", report.final_perplexity);
 //! ```
 //!
-//! See `examples/` for runnable end-to-end drivers and `DESIGN.md` for the
-//! experiment-by-experiment map back to the paper.
+//! See `examples/` for runnable end-to-end drivers and `rust/DESIGN.md`
+//! for the architecture notes and the experiment-by-experiment map back
+//! to the paper.
 
 pub mod baselines;
 pub mod coordinator;
 pub mod corpus;
 pub mod em;
 pub mod eval;
+pub mod exec;
 pub mod runtime;
 pub mod store;
 pub mod stream;

@@ -25,7 +25,8 @@ fn usage() -> ! {
         "usage: foem <train|info|selftest> [--key value ...]\n\
          train keys: --corpus <synth:NAME|PATH> --algorithm <foem|sem|scvb|ovb|ogs|rvb|soi>\n\
          \x20       --k N --ds N --passes N --seed N --eval-every N --verbose true\n\
-         \x20       --store-path PATH --buffer-mb N --lambda-k-topics N --config FILE"
+         \x20       --store-path PATH --buffer-mb N --lambda-k-topics N --config FILE\n\
+         \x20       --n-workers N  (parallel sharded E-step; 1 = serial)"
     );
     std::process::exit(2);
 }
@@ -95,10 +96,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
         corpus.n_tokens()
     );
     println!(
-        "algorithm {} K={} D_s={} store={:?}",
+        "algorithm {} K={} D_s={} workers={} store={:?}",
         cfg.algorithm.name(),
         cfg.n_topics,
         cfg.minibatch_docs,
+        cfg.n_workers,
         cfg.store
     );
     let mut driver = Driver::new(cfg);

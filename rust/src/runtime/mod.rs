@@ -10,25 +10,15 @@
 //!
 //! Python never runs at this point: artifacts are built once by
 //! `make artifacts` and the binary is self-contained afterwards.
+//!
+//! The PJRT execution path needs the `xla` bindings, which are heavy and
+//! not part of the default dependency set; it is therefore gated behind
+//! the off-by-default `pjrt` cargo feature. Without it, [`Executor`] is a
+//! metadata-only stub: the artifact [`registry`] still parses and
+//! variant selection still works, but `run_*` returns a clear error
+//! telling the caller to rebuild with `--features pjrt`.
 
 pub mod registry;
-
-use anyhow::{Context, Result};
-use registry::{ArtifactMeta, Registry};
-
-/// A compiled, ready-to-execute artifact.
-pub struct LoadedGraph {
-    pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The PJRT executor: owns the CPU client and a cache of compiled
-/// executables, one per artifact.
-pub struct Executor {
-    client: xla::PjRtClient,
-    registry: Registry,
-    cache: std::collections::HashMap<String, LoadedGraph>,
-}
 
 /// Outputs of the blocked E-step graph.
 pub struct EstepOut {
@@ -38,166 +28,284 @@ pub struct EstepOut {
     pub xmu: Vec<f32>,
 }
 
-impl Executor {
-    /// Create a CPU executor over an artifact directory (usually
-    /// `artifacts/`).
-    pub fn new(artifact_dir: &std::path::Path) -> Result<Self> {
-        let registry = Registry::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Self { client, registry, cache: std::collections::HashMap::new() })
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::registry::{ArtifactMeta, Registry};
+    use super::EstepOut;
+    use anyhow::{Context, Result};
+
+    /// A compiled, ready-to-execute artifact.
+    pub struct LoadedGraph {
+        pub meta: ArtifactMeta,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    pub fn registry(&self) -> &Registry {
-        &self.registry
+    /// The PJRT executor: owns the CPU client and a cache of compiled
+    /// executables, one per artifact.
+    pub struct Executor {
+        client: xla::PjRtClient,
+        registry: Registry,
+        cache: std::collections::HashMap<String, LoadedGraph>,
     }
 
-    /// Compile (and cache) an artifact by name.
-    pub fn load(&mut self, name: &str) -> Result<&LoadedGraph> {
-        if !self.cache.contains_key(name) {
-            let meta = self
-                .registry
-                .get(name)
-                .with_context(|| format!("unknown artifact {name}"))?
-                .clone();
-            let path = self.registry.dir().join(&meta.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
-            self.cache.insert(name.to_string(), LoadedGraph { meta, exe });
+    impl Executor {
+        /// Create a CPU executor over an artifact directory (usually
+        /// `artifacts/`).
+        pub fn new(artifact_dir: &std::path::Path) -> Result<Self> {
+            let registry = Registry::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+            Ok(Self { client, registry, cache: std::collections::HashMap::new() })
         }
-        Ok(&self.cache[name])
-    }
 
-    /// Pick the smallest estep variant with `k_cap >= k`; callers pad the
-    /// topic axis per the `-(alpha-1)` contract.
-    pub fn estep_variant_for(&self, k: usize) -> Option<ArtifactMeta> {
-        self.registry
-            .iter()
-            .filter(|m| m.graph == "estep" && m.k >= k)
-            .min_by_key(|m| m.k)
-            .cloned()
-    }
+        pub fn registry(&self) -> &Registry {
+            &self.registry
+        }
 
-    /// Execute the blocked E-step graph `name` on row-major inputs.
-    ///
-    /// `theta`/`phi` are `[B*K]`, `phisum` `[K]`, `counts` `[B]`; the
-    /// caller is responsible for padding B and K to the artifact's shape
-    /// (see [`Executor::estep_variant_for`]).
-    pub fn run_estep(
-        &mut self,
-        name: &str,
-        theta: &[f32],
-        phi: &[f32],
-        phisum: &[f32],
-        counts: &[f32],
-        am1: f32,
-        bm1: f32,
-        wbm1: f32,
-    ) -> Result<EstepOut> {
-        let graph = self.load(name)?;
-        let b = graph.meta.b as i64;
-        let k = graph.meta.k as i64;
-        anyhow::ensure!(theta.len() as i64 == b * k, "theta shape");
-        anyhow::ensure!(phisum.len() as i64 == k, "phisum shape");
-        anyhow::ensure!(counts.len() as i64 == b, "counts shape");
+        /// Compile (and cache) an artifact by name.
+        pub fn load(&mut self, name: &str) -> Result<&LoadedGraph> {
+            if !self.cache.contains_key(name) {
+                let meta = self
+                    .registry
+                    .get(name)
+                    .with_context(|| format!("unknown artifact {name}"))?
+                    .clone();
+                let path = self.registry.dir().join(&meta.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )
+                .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+                self.cache.insert(name.to_string(), LoadedGraph { meta, exe });
+            }
+            Ok(&self.cache[name])
+        }
 
-        let theta_l = xla::Literal::vec1(theta).reshape(&[b, k])?;
-        let phi_l = xla::Literal::vec1(phi).reshape(&[b, k])?;
-        let phisum_l = xla::Literal::vec1(phisum).reshape(&[1, k])?;
-        let counts_l = xla::Literal::vec1(counts).reshape(&[b, 1])?;
-        let consts_l = xla::Literal::vec1(&[am1, bm1, wbm1]);
+        /// Pick the smallest estep variant with `k_cap >= k`; callers pad
+        /// the topic axis per the `-(alpha-1)` contract.
+        pub fn estep_variant_for(&self, k: usize) -> Option<ArtifactMeta> {
+            self.registry
+                .iter()
+                .filter(|m| m.graph == "estep" && m.k >= k)
+                .min_by_key(|m| m.k)
+                .cloned()
+        }
 
-        let result = graph
-            .exe
-            .execute::<xla::Literal>(&[theta_l, phi_l, phisum_l, counts_l, consts_l])
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
-        let (mu_l, xmu_l) = result.to_tuple2()?;
-        Ok(EstepOut { mu: mu_l.to_vec::<f32>()?, xmu: xmu_l.to_vec::<f32>()? })
-    }
+        /// Execute the blocked E-step graph `name` on row-major inputs.
+        ///
+        /// `theta`/`phi` are `[B*K]`, `phisum` `[K]`, `counts` `[B]`; the
+        /// caller is responsible for padding B and K to the artifact's
+        /// shape (see [`Executor::estep_variant_for`]).
+        #[allow(clippy::too_many_arguments)]
+        pub fn run_estep(
+            &mut self,
+            name: &str,
+            theta: &[f32],
+            phi: &[f32],
+            phisum: &[f32],
+            counts: &[f32],
+            am1: f32,
+            bm1: f32,
+            wbm1: f32,
+        ) -> Result<EstepOut> {
+            let graph = self.load(name)?;
+            let b = graph.meta.b as i64;
+            let k = graph.meta.k as i64;
+            anyhow::ensure!(theta.len() as i64 == b * k, "theta shape");
+            anyhow::ensure!(phisum.len() as i64 == k, "phisum shape");
+            anyhow::ensure!(counts.len() as i64 == b, "counts shape");
 
-    /// Execute the held-out log-likelihood graph; returns `(ll, count)`.
-    #[allow(clippy::too_many_arguments)]
-    pub fn run_predict(
-        &mut self,
-        name: &str,
-        theta: &[f32],
-        theta_tot: &[f32],
-        phi: &[f32],
-        phisum: &[f32],
-        counts: &[f32],
-        consts4: [f32; 4],
-    ) -> Result<(f32, f32)> {
-        let graph = self.load(name)?;
-        let b = graph.meta.b as i64;
-        let k = graph.meta.k as i64;
-        let theta_l = xla::Literal::vec1(theta).reshape(&[b, k])?;
-        let tt_l = xla::Literal::vec1(theta_tot).reshape(&[b, 1])?;
-        let phi_l = xla::Literal::vec1(phi).reshape(&[b, k])?;
-        let phisum_l = xla::Literal::vec1(phisum).reshape(&[1, k])?;
-        let counts_l = xla::Literal::vec1(counts).reshape(&[b, 1])?;
-        let consts_l = xla::Literal::vec1(&consts4);
-        let result = graph
-            .exe
-            .execute::<xla::Literal>(&[
-                theta_l, tt_l, phi_l, phisum_l, counts_l, consts_l,
-            ])
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
-        let (ll_l, cnt_l) = result.to_tuple2()?;
-        Ok((ll_l.to_vec::<f32>()?[0], cnt_l.to_vec::<f32>()?[0]))
-    }
+            let theta_l = xla::Literal::vec1(theta).reshape(&[b, k])?;
+            let phi_l = xla::Literal::vec1(phi).reshape(&[b, k])?;
+            let phisum_l = xla::Literal::vec1(phisum).reshape(&[1, k])?;
+            let counts_l = xla::Literal::vec1(counts).reshape(&[b, 1])?;
+            let consts_l = xla::Literal::vec1(&[am1, bm1, wbm1]);
 
-    /// Execute the fused SEM minibatch graph.
-    #[allow(clippy::too_many_arguments)]
-    pub fn run_sem(
-        &mut self,
-        name: &str,
-        doc_ids: &[i32],
-        word_ids: &[i32],
-        counts: &[f32],
-        theta0: &[f32],
-        phi_local: &[f32],
-        phisum: &[f32],
-        consts3: [f32; 3],
-    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
-        let graph = self.load(name)?;
-        let b = graph.meta.b as i64;
-        let k = graph.meta.k as i64;
-        let ds = graph.meta.ds as i64;
-        let ws = graph.meta.ws as i64;
-        let doc_l = xla::Literal::vec1(doc_ids).reshape(&[b, 1])?;
-        let word_l = xla::Literal::vec1(word_ids).reshape(&[b, 1])?;
-        let counts_l = xla::Literal::vec1(counts).reshape(&[b, 1])?;
-        let theta_l = xla::Literal::vec1(theta0).reshape(&[ds, k])?;
-        let phi_l = xla::Literal::vec1(phi_local).reshape(&[ws, k])?;
-        let phisum_l = xla::Literal::vec1(phisum).reshape(&[1, k])?;
-        let consts_l = xla::Literal::vec1(&consts3);
-        let result = graph
-            .exe
-            .execute::<xla::Literal>(&[
-                doc_l, word_l, counts_l, theta_l, phi_l, phisum_l, consts_l,
-            ])
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
-        let (theta_l, delta_l, ll_l) = result.to_tuple3()?;
-        Ok((
-            theta_l.to_vec::<f32>()?,
-            delta_l.to_vec::<f32>()?,
-            ll_l.to_vec::<f32>()?[0],
-        ))
+            let result = graph
+                .exe
+                .execute::<xla::Literal>(&[
+                    theta_l, phi_l, phisum_l, counts_l, consts_l,
+                ])
+                .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+            let (mu_l, xmu_l) = result.to_tuple2()?;
+            Ok(EstepOut {
+                mu: mu_l.to_vec::<f32>()?,
+                xmu: xmu_l.to_vec::<f32>()?,
+            })
+        }
+
+        /// Execute the held-out log-likelihood graph; returns
+        /// `(ll, count)`.
+        #[allow(clippy::too_many_arguments)]
+        pub fn run_predict(
+            &mut self,
+            name: &str,
+            theta: &[f32],
+            theta_tot: &[f32],
+            phi: &[f32],
+            phisum: &[f32],
+            counts: &[f32],
+            consts4: [f32; 4],
+        ) -> Result<(f32, f32)> {
+            let graph = self.load(name)?;
+            let b = graph.meta.b as i64;
+            let k = graph.meta.k as i64;
+            let theta_l = xla::Literal::vec1(theta).reshape(&[b, k])?;
+            let tt_l = xla::Literal::vec1(theta_tot).reshape(&[b, 1])?;
+            let phi_l = xla::Literal::vec1(phi).reshape(&[b, k])?;
+            let phisum_l = xla::Literal::vec1(phisum).reshape(&[1, k])?;
+            let counts_l = xla::Literal::vec1(counts).reshape(&[b, 1])?;
+            let consts_l = xla::Literal::vec1(&consts4);
+            let result = graph
+                .exe
+                .execute::<xla::Literal>(&[
+                    theta_l, tt_l, phi_l, phisum_l, counts_l, consts_l,
+                ])
+                .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+            let (ll_l, cnt_l) = result.to_tuple2()?;
+            Ok((ll_l.to_vec::<f32>()?[0], cnt_l.to_vec::<f32>()?[0]))
+        }
+
+        /// Execute the fused SEM minibatch graph.
+        #[allow(clippy::too_many_arguments)]
+        pub fn run_sem(
+            &mut self,
+            name: &str,
+            doc_ids: &[i32],
+            word_ids: &[i32],
+            counts: &[f32],
+            theta0: &[f32],
+            phi_local: &[f32],
+            phisum: &[f32],
+            consts3: [f32; 3],
+        ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+            let graph = self.load(name)?;
+            let b = graph.meta.b as i64;
+            let k = graph.meta.k as i64;
+            let ds = graph.meta.ds as i64;
+            let ws = graph.meta.ws as i64;
+            let doc_l = xla::Literal::vec1(doc_ids).reshape(&[b, 1])?;
+            let word_l = xla::Literal::vec1(word_ids).reshape(&[b, 1])?;
+            let counts_l = xla::Literal::vec1(counts).reshape(&[b, 1])?;
+            let theta_l = xla::Literal::vec1(theta0).reshape(&[ds, k])?;
+            let phi_l = xla::Literal::vec1(phi_local).reshape(&[ws, k])?;
+            let phisum_l = xla::Literal::vec1(phisum).reshape(&[1, k])?;
+            let consts_l = xla::Literal::vec1(&consts3);
+            let result = graph
+                .exe
+                .execute::<xla::Literal>(&[
+                    doc_l, word_l, counts_l, theta_l, phi_l, phisum_l,
+                    consts_l,
+                ])
+                .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+            let (theta_l, delta_l, ll_l) = result.to_tuple3()?;
+            Ok((
+                theta_l.to_vec::<f32>()?,
+                delta_l.to_vec::<f32>()?,
+                ll_l.to_vec::<f32>()?[0],
+            ))
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executor, LoadedGraph};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::registry::{ArtifactMeta, Registry};
+    use super::EstepOut;
+    use anyhow::Result;
+
+    const NO_PJRT: &str = "foem was built without the `pjrt` feature; \
+         executing AOT artifacts needs the XLA/PJRT bindings — rebuild \
+         with `--features pjrt` after vendoring the `xla` crate";
+
+    /// Metadata-only executor compiled when the `pjrt` feature is off:
+    /// the artifact registry stays queryable, execution returns a clear
+    /// error instead of linking the XLA runtime.
+    pub struct Executor {
+        registry: Registry,
+    }
+
+    impl Executor {
+        /// Open the artifact registry in `artifact_dir` (no PJRT client).
+        pub fn new(artifact_dir: &std::path::Path) -> Result<Self> {
+            Ok(Self { registry: Registry::load(artifact_dir)? })
+        }
+
+        pub fn registry(&self) -> &Registry {
+            &self.registry
+        }
+
+        /// Pick the smallest estep variant with `k_cap >= k` (metadata
+        /// query; works without PJRT).
+        pub fn estep_variant_for(&self, k: usize) -> Option<ArtifactMeta> {
+            self.registry
+                .iter()
+                .filter(|m| m.graph == "estep" && m.k >= k)
+                .min_by_key(|m| m.k)
+                .cloned()
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn run_estep(
+            &mut self,
+            _name: &str,
+            _theta: &[f32],
+            _phi: &[f32],
+            _phisum: &[f32],
+            _counts: &[f32],
+            _am1: f32,
+            _bm1: f32,
+            _wbm1: f32,
+        ) -> Result<EstepOut> {
+            anyhow::bail!(NO_PJRT)
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn run_predict(
+            &mut self,
+            _name: &str,
+            _theta: &[f32],
+            _theta_tot: &[f32],
+            _phi: &[f32],
+            _phisum: &[f32],
+            _counts: &[f32],
+            _consts4: [f32; 4],
+        ) -> Result<(f32, f32)> {
+            anyhow::bail!(NO_PJRT)
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn run_sem(
+            &mut self,
+            _name: &str,
+            _doc_ids: &[i32],
+            _word_ids: &[i32],
+            _counts: &[f32],
+            _theta0: &[f32],
+            _phi_local: &[f32],
+            _phisum: &[f32],
+            _consts3: [f32; 3],
+        ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+            anyhow::bail!(NO_PJRT)
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Executor;
 
 #[cfg(test)]
 mod tests {

@@ -30,6 +30,58 @@ pub struct IoStats {
     pub buffer_misses: u64,
 }
 
+/// A detached, read-only snapshot of a set of columns — the shared-read
+/// path of the parallel E-step engine ([`crate::exec`]).
+///
+/// A snapshot is materialized once per minibatch (one sequential read per
+/// touched column, same I/O discipline as a serial sweep) and then served
+/// to every shard worker concurrently: it owns its data, so it is `Sync`
+/// regardless of the backing store — `InMemoryPhi` and `PagedPhi` alike
+/// can feed any number of concurrent readers this way without locking.
+#[derive(Debug, Clone)]
+pub struct PhiSnapshot {
+    k: usize,
+    /// Sorted global word ids the snapshot covers.
+    words: Vec<u32>,
+    /// `words.len() * k`; column `i` belongs to `words[i]`.
+    data: Vec<f32>,
+}
+
+impl PhiSnapshot {
+    /// Number of topics K (column length).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of columns captured.
+    pub fn n_columns(&self) -> usize {
+        self.words.len()
+    }
+
+    /// The sorted global word ids covered.
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Snapshot-local index of global word `w`, if captured.
+    #[inline]
+    pub fn index_of(&self, w: u32) -> Option<usize> {
+        self.words.binary_search(&w).ok()
+    }
+
+    /// Column of global word `w`, if captured.
+    #[inline]
+    pub fn column(&self, w: u32) -> Option<&[f32]> {
+        self.index_of(w).map(|i| self.column_at(i))
+    }
+
+    /// Column by snapshot-local index.
+    #[inline]
+    pub fn column_at(&self, idx: usize) -> &[f32] {
+        &self.data[idx * self.k..(idx + 1) * self.k]
+    }
+}
+
 /// Column-store abstraction over `phi_hat_{K×W}`.
 ///
 /// The topic totals `phisum` are *not* part of the store — they are a
@@ -67,6 +119,24 @@ pub trait PhiColumnStore {
     /// Overwrite column `w` with `data` (no prior read needed).
     fn store_column(&mut self, w: usize, data: &[f32]) {
         self.with_column(w, |col| col.copy_from_slice(data));
+    }
+
+    /// Materialize a read-only [`PhiSnapshot`] of the given columns
+    /// (`words` sorted ascending). Uses the non-dirtying [`Self::load_column`]
+    /// path — one sequential read per column, no write-back obligation —
+    /// so concurrent shard workers can then read the snapshot while the
+    /// store itself stays untouched until the merge.
+    fn snapshot_columns(&mut self, words: &[u32]) -> PhiSnapshot {
+        debug_assert!(
+            words.windows(2).all(|w| w[0] < w[1]),
+            "snapshot words must be sorted and distinct"
+        );
+        let k = self.k();
+        let mut data = vec![0.0f32; words.len() * k];
+        for (i, &w) in words.iter().enumerate() {
+            self.load_column(w as usize, &mut data[i * k..(i + 1) * k]);
+        }
+        PhiSnapshot { k, words: words.to_vec(), data }
     }
 
     /// Install the minibatch's hot words into the buffer (Fig. 4 line 2:
@@ -165,6 +235,51 @@ mod tests {
         assert_eq!(s.n_words(), 10);
         assert_eq!(s.read_column(1), vec![5.0, 6.0]);
         assert_eq!(s.read_column(9), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn snapshot_is_detached_and_thread_shareable() {
+        let mut s = InMemoryPhi::zeros(3, 5);
+        s.with_column(1, |c| c.copy_from_slice(&[1.0, 2.0, 3.0]));
+        s.with_column(4, |c| c.copy_from_slice(&[4.0, 0.0, 1.0]));
+        let snap = s.snapshot_columns(&[1, 2, 4]);
+        assert_eq!(snap.k(), 3);
+        assert_eq!(snap.n_columns(), 3);
+        assert_eq!(snap.words(), &[1, 2, 4]);
+        assert_eq!(snap.column(1).unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(snap.column(2).unwrap(), &[0.0; 3]);
+        assert_eq!(snap.column_at(2), &[4.0, 0.0, 1.0]);
+        assert!(snap.column(3).is_none());
+        // Detached: later store writes must not show through.
+        s.with_column(1, |c| c[0] = 9.0);
+        assert_eq!(snap.column(1).unwrap()[0], 1.0);
+        // Shared-read across threads (the parallel engine's access
+        // pattern).
+        std::thread::scope(|scope| {
+            let a = scope.spawn(|| snap.column(4).unwrap()[0]);
+            let b = scope.spawn(|| snap.column(1).unwrap()[1]);
+            assert_eq!(a.join().unwrap(), 4.0);
+            assert_eq!(b.join().unwrap(), 2.0);
+        });
+    }
+
+    #[test]
+    fn paged_snapshot_reads_without_dirtying() {
+        let dir = crate::util::TempDir::new("snap");
+        let mut s =
+            paged::PagedPhi::create(&dir.path().join("p.bin"), 2, 6, 2 * 2 * 4)
+                .unwrap();
+        s.with_column(2, |c| c.copy_from_slice(&[1.0, 2.0]));
+        let writes_before = s.io_stats().col_writes;
+        let snap = s.snapshot_columns(&[0, 2, 5]);
+        assert_eq!(snap.column(2).unwrap(), &[1.0, 2.0]);
+        assert_eq!(snap.column(5).unwrap(), &[0.0, 0.0]);
+        assert_eq!(
+            s.io_stats().col_writes,
+            writes_before,
+            "snapshot must not write"
+        );
+        assert!(s.io_stats().col_reads >= 3);
     }
 
     #[test]

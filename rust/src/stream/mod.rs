@@ -41,6 +41,74 @@ impl Minibatch {
     pub fn nnz(&self) -> usize {
         self.docs.nnz()
     }
+
+    /// Split into at most `p` contiguous document shards for the parallel
+    /// E-step engine ([`crate::exec`]). Each shard keeps the vocab-major
+    /// layout over its own documents (its own CSC + local vocabulary), so
+    /// a shard worker sweeps it exactly like a serial minibatch. Word ids
+    /// stay global; `doc_offset` maps shard-local doc ids back to the
+    /// minibatch's. Documents are split evenly; with fewer documents than
+    /// `p`, fewer (single-document) shards are returned.
+    pub fn shard(&self, p: usize) -> Vec<MinibatchShard> {
+        let n_docs = self.docs.n_docs;
+        let p = p.clamp(1, n_docs.max(1));
+        let mut shards = Vec::with_capacity(p);
+        let mut start = 0usize;
+        for i in 0..p {
+            let remaining = p - i;
+            let take = (n_docs - start).div_ceil(remaining);
+            let end = start + take;
+            let docs = self.docs.slice_docs(start, end);
+            let vocab_major = docs.to_vocab_major();
+            let local_words = docs.distinct_words();
+            shards.push(MinibatchShard {
+                shard_index: i,
+                doc_offset: start,
+                docs,
+                vocab_major,
+                local_words,
+            });
+            start = end;
+            if start >= n_docs {
+                break;
+            }
+        }
+        shards
+    }
+}
+
+/// One document shard of a minibatch — the unit of work of the parallel
+/// E-step engine. Structurally a mini-minibatch: doc-major and
+/// vocab-major layouts plus the shard's local vocabulary (a subset of the
+/// parent minibatch's `local_words`).
+#[derive(Debug, Clone)]
+pub struct MinibatchShard {
+    /// Position in the parent minibatch's shard list (the fixed merge
+    /// order of the executor's reduction).
+    pub shard_index: usize,
+    /// First parent-minibatch document this shard covers; shard-local doc
+    /// `d` is parent doc `doc_offset + d`.
+    pub doc_offset: usize,
+    /// Doc-major rows of this shard (global word ids).
+    pub docs: DocWordMatrix,
+    /// Vocab-major reorganization of the same rows.
+    pub vocab_major: VocabMajorMatrix,
+    /// Sorted distinct global word ids present in this shard.
+    pub local_words: Vec<u32>,
+}
+
+impl MinibatchShard {
+    pub fn n_docs(&self) -> usize {
+        self.docs.n_docs
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.docs.nnz()
+    }
+
+    pub fn n_local_words(&self) -> usize {
+        self.local_words.len()
+    }
 }
 
 /// Configuration of the stream framing.
@@ -208,6 +276,74 @@ mod tests {
                 assert_eq!(nonempty, mb.local_words.binary_search(&(w as u32)).is_ok());
             }
         }
+    }
+
+    #[test]
+    fn shard_partitions_documents_losslessly() {
+        let c = corpus();
+        let cfg = StreamConfig { minibatch_docs: 100, ..Default::default() };
+        let mb = CorpusStream::new(&c, cfg).next().unwrap();
+        for p in [1usize, 2, 3, 4, 7] {
+            let shards = mb.shard(p);
+            assert!(!shards.is_empty() && shards.len() <= p);
+            assert_eq!(
+                shards.iter().map(|s| s.n_docs()).sum::<usize>(),
+                mb.n_docs()
+            );
+            let mass: f64 =
+                shards.iter().map(|s| s.docs.total_tokens()).sum();
+            assert!((mass - mb.docs.total_tokens()).abs() < 1e-6);
+            let mut offset = 0usize;
+            for (i, s) in shards.iter().enumerate() {
+                assert_eq!(s.shard_index, i);
+                assert_eq!(s.doc_offset, offset);
+                offset += s.n_docs();
+                // Shard rows are the minibatch's rows, in order.
+                for d in 0..s.n_docs() {
+                    assert_eq!(
+                        s.docs.doc_words(d),
+                        mb.docs.doc_words(s.doc_offset + d)
+                    );
+                    assert_eq!(
+                        s.docs.doc_counts(d),
+                        mb.docs.doc_counts(s.doc_offset + d)
+                    );
+                }
+                // Per-shard vocab-major layout is consistent.
+                assert_eq!(s.vocab_major.nnz(), s.docs.nnz());
+                let mut from_docs: Vec<u32> = s.docs.word_ids.clone();
+                from_docs.sort_unstable();
+                from_docs.dedup();
+                assert_eq!(from_docs, s.local_words);
+                // Shard vocabulary ⊆ minibatch vocabulary.
+                assert!(s
+                    .local_words
+                    .iter()
+                    .all(|w| mb.local_words.binary_search(w).is_ok()));
+            }
+        }
+    }
+
+    #[test]
+    fn shard_one_is_the_whole_minibatch() {
+        let c = corpus();
+        let cfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+        let mb = CorpusStream::new(&c, cfg).next().unwrap();
+        let shards = mb.shard(1);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].docs, mb.docs);
+        assert_eq!(shards[0].local_words, mb.local_words);
+        assert_eq!(shards[0].doc_offset, 0);
+    }
+
+    #[test]
+    fn shard_caps_at_document_count() {
+        let c = corpus();
+        let cfg = StreamConfig { minibatch_docs: 5, ..Default::default() };
+        let mb = CorpusStream::new(&c, cfg).next().unwrap();
+        let shards = mb.shard(16);
+        assert_eq!(shards.len(), 5);
+        assert!(shards.iter().all(|s| s.n_docs() == 1));
     }
 
     #[test]
