@@ -8,12 +8,19 @@
 //! (a 10% ratio, comparable to the paper's 2 GB / 10 GB) to exercise the
 //! same streaming path.
 //!
+//! The demo runs the SAME stream twice — synchronous (`pipeline depth 0`)
+//! and pipelined (`depth 2`: prefetch + write-behind overlapped with
+//! compute, `rust/DESIGN.md` §7) — and prints the overlapped-I/O
+//! counters, so the Table 5 story plus its pipelined extension is
+//! reproducible from one command:
+//!
 //!     cargo run --release --example big_model
 
 use foem::corpus::synthetic::{generate, SyntheticConfig};
 use foem::em::foem::{Foem, FoemConfig};
+use foem::exec::pipeline::Pipeline;
 use foem::store::paged::PagedPhi;
-use foem::store::PhiColumnStore;
+use foem::store::{IoStats, PhiColumnStore};
 use foem::stream::{CorpusStream, StreamConfig};
 use foem::util::Timer;
 use foem::LdaParams;
@@ -37,51 +44,98 @@ fn main() -> anyhow::Result<()> {
 
     let dir = foem::util::TempDir::new("big-model");
     let p = LdaParams::paper_defaults(k);
-    let mut fc = FoemConfig::paper(); // lambda_k*K = 10 topics per word
-    fc.hot_words = buffer_bytes / 2 / (k * 4);
-    fc.exact_ll = false; // throughput mode: skip the O(K*NNZ) LL pass
-    fc.max_inner_iters = 10;
-    // Parallel sharded E-step: the disk-backed store serves each
-    // minibatch through a read-only column snapshot, so multiple workers
-    // sweep concurrently while the store sees one read + one write per
-    // column per minibatch.
-    fc.n_workers = 4;
-    // buffer_bytes covers phi + the streamed residual matrix (50/50).
-    let mut algo =
-        Foem::paged_create(p, &dir.path().join("phi.bin"), w, buffer_bytes, fc, 0)?;
-
     let scfg = StreamConfig { minibatch_docs: 512, ..Default::default() };
-    let t = Timer::start();
-    let mut batches = 0usize;
-    for mb in CorpusStream::new(&corpus, scfg) {
-        let r = algo.process_minibatch(&mb);
-        batches += 1;
-        println!(
-            "  batch {batches}: {} inner sweeps, {:.2}s, {} local words",
-            r.inner_iters,
-            r.seconds,
-            mb.n_local_words()
-        );
-    }
-    let total = t.seconds();
-    let io = algo.store.io_stats();
+
+    // One paged run of the whole stream at the given pipeline depth.
+    // Returns (seconds, batches, phi-store IoStats, the trained model).
+    let run = |depth: usize| -> anyhow::Result<(f64, usize, IoStats, Foem<PagedPhi>)> {
+        let mut fc = FoemConfig::paper(); // lambda_k*K = 10 topics per word
+        fc.hot_words = buffer_bytes / 2 / (k * 4);
+        fc.exact_ll = false; // throughput mode: skip the O(K*NNZ) LL pass
+        fc.max_inner_iters = 10;
+        // Parallel sharded E-step: the disk-backed store serves each
+        // minibatch through a read-only column snapshot, so multiple
+        // workers sweep concurrently while the store sees one read + one
+        // write per column per minibatch.
+        fc.n_workers = 4;
+        // buffer_bytes covers phi + the streamed residual matrix (50/50).
+        let mut algo = Foem::paged_create(
+            p,
+            &dir.path().join(format!("phi-d{depth}.bin")),
+            w,
+            buffer_bytes,
+            fc,
+            0,
+        )?;
+        let t = Timer::start();
+        let mut batches = 0usize;
+        Pipeline::new(depth).run(
+            &mut algo,
+            CorpusStream::new(&corpus, scfg),
+            |_, batch_no, r| {
+                batches = batch_no;
+                println!(
+                    "  [d{depth}] batch {batch_no}: {} inner sweeps, {:.2}s",
+                    r.inner_iters, r.seconds
+                );
+                Ok(())
+            },
+        )?;
+        Ok((t.seconds(), batches, algo.store.io_stats(), algo))
+    };
+
+    println!("\n-- synchronous parameter streaming (pipeline depth 0) --");
+    let (t0, batches0, io0, _algo0) = run(0)?;
+    println!("\n-- pipelined: prefetch + write-behind (depth 2) --");
+    let (t2, batches2, io2, mut algo2) = run(2)?;
+    assert_eq!(batches0, batches2);
+
+    let hit_rate = |io: &IoStats| {
+        100.0 * (io.buffer_hits + io.prefetch_hits) as f64
+            / (io.buffer_hits + io.prefetch_hits + io.buffer_misses).max(1)
+                as f64
+    };
     println!(
-        "\ndone: {batches} minibatches in {total:.1}s ({:.0} tokens/s)",
-        corpus.n_tokens() / total
+        "\ndepth 0: {batches0} minibatches in {t0:.1}s ({:.0} tokens/s)\n\
+         \x20        {} col reads, {} col writes, {} buffer hits, {} misses \
+         ({:.0}% hit rate)",
+        corpus.n_tokens() / t0,
+        io0.col_reads,
+        io0.col_writes,
+        io0.buffer_hits,
+        io0.buffer_misses,
+        hit_rate(&io0),
     );
     println!(
-        "store I/O: {} column reads, {} writes, {} buffer hits ({:.0}% hit rate)",
-        io.col_reads,
-        io.col_writes,
-        io.buffer_hits,
-        100.0 * io.buffer_hits as f64
-            / (io.buffer_hits + io.buffer_misses).max(1) as f64
+        "depth 2: {batches2} minibatches in {t2:.1}s ({:.0} tokens/s)\n\
+         \x20        {} col reads, {} col writes, {} buffer hits, {} misses \
+         ({:.0}% hit rate)\n\
+         \x20        overlapped: {} cols prefetched, {} prefetch hits, \
+         {} write-behind flushes",
+        corpus.n_tokens() / t2,
+        io2.col_reads,
+        io2.col_writes,
+        io2.buffer_hits,
+        io2.buffer_misses,
+        hit_rate(&io2),
+        io2.prefetched_cols,
+        io2.prefetch_hits,
+        io2.wb_writes,
     );
-    // Fault tolerance: checkpoint, reopen, verify.
-    algo.checkpoint_paged()?;
-    algo.store.checkpoint(algo.step, &algo.phisum)?;
-    let (step, phisum) = PagedPhi::load_checkpoint(&dir.path().join("phi.bin"))?;
-    assert_eq!(step, batches);
+    println!(
+        "blocking disk reads on the compute path: {} -> {} ({:.0}% hidden \
+         by the stager thread)",
+        io0.buffer_misses,
+        io2.buffer_misses,
+        100.0 * (1.0 - io2.buffer_misses as f64 / io0.buffer_misses.max(1) as f64),
+    );
+
+    // Fault tolerance: checkpoint the pipelined model, reopen, verify.
+    algo2.checkpoint_paged()?;
+    algo2.store.checkpoint(algo2.step, &algo2.phisum)?;
+    let (step, phisum) =
+        PagedPhi::load_checkpoint(&dir.path().join("phi-d2.bin"))?;
+    assert_eq!(step, batches2);
     println!(
         "checkpoint verified: step {step}, phisum mass {:.0} == stream tokens {:.0}",
         phisum.iter().map(|&x| x as f64).sum::<f64>(),

@@ -1,0 +1,76 @@
+//! Streaming-pipeline bench: paged FOEM at pipeline depth 0/1/2 ×
+//! workers 1/4 — the §3.2 parameter-streaming workload with the
+//! pipelined prefetch/write-behind overlap on top (`exec::pipeline`,
+//! `rust/DESIGN.md` §7). Depth 0 is the synchronous baseline, so the
+//! depth-0 row over the others is the overlap's speedup on this machine.
+//!
+//! Emits one `BENCH_pipeline.json`-compatible line per configuration so
+//! the perf trajectory accumulates across PRs:
+//!
+//!     cargo bench --bench streaming_pipeline
+//!     cargo bench --bench streaming_pipeline | grep BENCH_pipeline.json
+
+use foem::corpus::synthetic::{generate, SyntheticConfig};
+use foem::em::foem::{Foem, FoemConfig};
+use foem::exec::pipeline::Pipeline;
+use foem::store::PhiColumnStore;
+use foem::stream::{CorpusStream, StreamConfig};
+use foem::util::{TempDir, Timer};
+use foem::LdaParams;
+
+fn main() {
+    let mut profile = SyntheticConfig::enron_like();
+    profile.n_docs = 1024;
+    let corpus = generate(&profile, 7);
+    let k = 128usize;
+    let p = LdaParams::paper_defaults(k);
+    let scfg = StreamConfig { minibatch_docs: 256, ..Default::default() };
+    println!(
+        "== paged FOEM streaming pipeline (K={k}, D={}, W={}) ==",
+        corpus.n_docs(),
+        corpus.n_words()
+    );
+    for &workers in &[1usize, 4] {
+        for &depth in &[0usize, 1, 2] {
+            let dir = TempDir::new("bench-pipe");
+            let mut fc = FoemConfig::paper();
+            fc.exact_ll = false;
+            fc.max_inner_iters = 10;
+            fc.n_workers = workers;
+            fc.hot_words = 32;
+            let mut algo = Foem::paged_create(
+                p,
+                &dir.path().join("phi.bin"),
+                corpus.n_words(),
+                64 * k * 4,
+                fc,
+                1,
+            )
+            .expect("create paged store");
+            let timer = Timer::start();
+            Pipeline::new(depth)
+                .run(&mut algo, CorpusStream::new(&corpus, scfg), |_, _, _| {
+                    Ok(())
+                })
+                .expect("pipeline run");
+            let seconds = timer.seconds();
+            let io = algo.store.io_stats();
+            let tokens_per_sec = corpus.n_tokens() / seconds.max(1e-9);
+            println!(
+                "BENCH_pipeline.json {{\"bench\":\"streaming_pipeline\",\
+                 \"algo\":\"foem_paged\",\"k\":{k},\"depth\":{depth},\
+                 \"workers\":{workers},\"seconds\":{seconds:.4},\
+                 \"tokens_per_sec\":{tokens_per_sec:.1},\
+                 \"col_reads\":{},\"col_writes\":{},\"buffer_misses\":{},\
+                 \"prefetched_cols\":{},\"prefetch_hits\":{},\
+                 \"wb_writes\":{}}}",
+                io.col_reads,
+                io.col_writes,
+                io.buffer_misses,
+                io.prefetched_cols,
+                io.prefetch_hits,
+                io.wb_writes
+            );
+        }
+    }
+}

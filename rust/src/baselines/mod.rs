@@ -42,6 +42,16 @@ pub trait OnlineLda {
     /// Export the global topic-word sufficient statistics for evaluation.
     fn export_phi(&mut self) -> PhiStats;
 
+    /// A sparse evaluation view over just `words` (sorted ascending) —
+    /// what periodic driver evaluation uses so a parameter-streaming
+    /// store is never fully densified mid-run (that would defeat the
+    /// §3.2 memory bound). The default copies out of `export_phi`, which
+    /// is fine for memory-resident algorithms; streaming backends
+    /// override it with a column-snapshot read.
+    fn eval_view(&mut self, words: &[u32]) -> crate::em::EvalPhiView {
+        crate::em::EvalPhiView::from_dense(&self.export_phi(), words)
+    }
+
     /// The smoothing parameters the *evaluator* should use to normalize
     /// the exported statistics (Eqs. 9/10 form). EM-family algorithms use
     /// `alpha-1 = beta-1 = 0.01`; GS/CVB-family statistics are smoothed
@@ -96,6 +106,18 @@ impl<S: crate::store::PhiColumnStore> OnlineLda for crate::em::foem::Foem<S> {
 
     fn export_phi(&mut self) -> PhiStats {
         crate::em::foem::Foem::export_phi(self)
+    }
+
+    fn eval_view(&mut self, words: &[u32]) -> crate::em::EvalPhiView {
+        // One non-dirtying sequential read per requested column — counted
+        // in IoStats like any other stream access — instead of the
+        // O(K*W) densification of the default.
+        let snap = self.store.snapshot_columns(words);
+        crate::em::EvalPhiView::from_snapshot(
+            snap,
+            self.phisum.clone(),
+            self.store.n_words(),
+        )
     }
 
     fn checkpoint(&mut self) -> anyhow::Result<()> {

@@ -484,7 +484,7 @@ fn fig12(scale: &Scale) {
 }
 
 // ---------------------------------------------------------------------
-// Ablation: which of FOEM's ingredients buys what (DESIGN.md §7).
+// Ablation: which of FOEM's ingredients buys what (DESIGN.md §8).
 // ---------------------------------------------------------------------
 fn ablation() {
     println!("\n== Ablation: FOEM design choices (NYTIMES-like, K=50, Ds=256) ==");

@@ -98,6 +98,12 @@ pub struct RunConfig {
     /// route minibatches through `exec::ParallelExecutor`); `1` keeps the
     /// exact serial path.
     pub n_workers: usize,
+    /// Software-pipeline depth (`exec::pipeline`): how many minibatches
+    /// may be staged/computing ahead of the strict-order apply cursor.
+    /// `0` bypasses the pipeline entirely — bit-identical to the plain
+    /// trainer loop (numerics and IoStats). `>= 1` overlaps store
+    /// prefetch and write-behind with compute (FOEM and SEM only).
+    pub pipeline_depth: usize,
     pub seed: u64,
     /// Print per-minibatch progress lines.
     pub verbose: bool,
@@ -121,6 +127,7 @@ impl Default for RunConfig {
             eval_every: 0,
             checkpoint_every: 0,
             n_workers: 1,
+            pipeline_depth: 0,
             seed: 42,
             verbose: false,
         }
@@ -175,6 +182,7 @@ impl RunConfig {
             "eval_every" => self.eval_every = value.parse()?,
             "checkpoint_every" => self.checkpoint_every = value.parse()?,
             "n_workers" | "workers" => self.n_workers = value.parse()?,
+            "pipeline_depth" => self.pipeline_depth = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "verbose" => self.verbose = value.parse()?,
             "store" => {
@@ -263,6 +271,8 @@ mod tests {
         assert_eq!(c.n_workers, 4);
         c.set("workers", "2").unwrap();
         assert_eq!(c.n_workers, 2);
+        c.set("pipeline_depth", "3").unwrap();
+        assert_eq!(c.pipeline_depth, 3);
         assert!(c.set("bogus", "1").is_err());
     }
 

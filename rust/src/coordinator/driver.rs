@@ -6,14 +6,16 @@ use super::config::{Algorithm, RunConfig, StoreKind};
 use super::metrics::Metrics;
 use crate::baselines::{ogs, ovb, rvb, scvb, soi, OnlineLda};
 use crate::corpus::Corpus;
-use crate::em::foem::Foem;
+use crate::em::foem::{Foem, FoemConfig};
 use crate::em::sem::{Sem, SemConfig};
 use crate::eval::{predictive_perplexity, EvalProtocol};
+use crate::exec::pipeline::{PhasedTrainer, Pipeline};
 use crate::store::InMemoryPhi;
 use crate::stream::{CorpusStream, StreamConfig};
 use anyhow::Result;
 
 /// Result of a training run.
+#[derive(Debug)]
 pub struct TrainReport {
     pub algorithm: &'static str,
     pub final_perplexity: f64,
@@ -31,6 +33,42 @@ impl Driver {
         Self { cfg }
     }
 
+    /// Error for the one store/algorithm combination that cannot work:
+    /// only FOEM streams its parameters, so a paged store under any other
+    /// algorithm would silently train in memory behind the user's back.
+    fn ensure_store_supported(&self) -> Result<()> {
+        if self.cfg.store != StoreKind::InMemory
+            && self.cfg.algorithm != Algorithm::Foem
+        {
+            anyhow::bail!(
+                "the paged parameter-streaming store (store_path / buffer_mb) \
+                 is only supported by FOEM; {} keeps its topic-word matrix \
+                 in memory and would ignore the store setting",
+                self.cfg.algorithm.name()
+            );
+        }
+        Ok(())
+    }
+
+    /// FOEM config for a paged run: default the hot set to as many
+    /// columns as half the buffer holds (phi + residual split).
+    fn foem_paged_config(&self, buffer_bytes: usize) -> FoemConfig {
+        let mut fc = self.cfg.foem_config();
+        if fc.hot_words == 0 {
+            fc.hot_words = (buffer_bytes / 2 / (self.cfg.n_topics * 4)).max(1);
+        }
+        fc
+    }
+
+    /// SEM config derived from the run config — shared by the plain and
+    /// pipelined construction paths so they cannot drift.
+    fn sem_config(&self, scale_s: f64) -> SemConfig {
+        let mut sc = SemConfig::paper(scale_s);
+        sc.rate = self.cfg.rate();
+        sc.n_workers = self.cfg.n_workers;
+        sc
+    }
+
     /// Instantiate the configured algorithm for a corpus of `n_words`
     /// vocabulary and an estimated stream scale `S = D / D_s`.
     pub fn build_algorithm(
@@ -38,6 +76,7 @@ impl Driver {
         n_words: usize,
         scale_s: f64,
     ) -> Result<Box<dyn OnlineLda>> {
+        self.ensure_store_supported()?;
         let cfg = &self.cfg;
         let k = cfg.n_topics;
         let params = cfg.params();
@@ -50,12 +89,7 @@ impl Driver {
                     cfg.seed,
                 )),
                 StoreKind::Paged { path, buffer_bytes } => {
-                    let mut fc = cfg.foem_config();
-                    if fc.hot_words == 0 {
-                        // Default hot set: as many columns as half the
-                        // buffer holds (phi + residual split).
-                        fc.hot_words = (*buffer_bytes / 2 / (k * 4)).max(1);
-                    }
+                    let fc = self.foem_paged_config(*buffer_bytes);
                     Box::new(Foem::paged_create(
                         params,
                         path,
@@ -66,12 +100,12 @@ impl Driver {
                     )?)
                 }
             },
-            Algorithm::Sem => {
-                let mut sc = SemConfig::paper(scale_s);
-                sc.rate = cfg.rate();
-                sc.n_workers = cfg.n_workers;
-                Box::new(Sem::new(params, n_words, sc, cfg.seed))
-            }
+            Algorithm::Sem => Box::new(Sem::new(
+                params,
+                n_words,
+                self.sem_config(scale_s),
+                cfg.seed,
+            )),
             Algorithm::Scvb => {
                 let mut sc = scvb::ScvbConfig::paper(scale_s);
                 sc.rate = cfg.rate();
@@ -102,11 +136,25 @@ impl Driver {
 
     /// Train on `train`, evaluating on `test` per `eval_every` and at the
     /// end.
+    ///
+    /// Periodic and final evaluation go through
+    /// [`OnlineLda::eval_view`] — a sparse view over the test vocabulary
+    /// — never a full `export_phi` densification, so a paged run keeps
+    /// its §3.2 memory bound and the eval reads show up in `IoStats`.
+    ///
+    /// With `cfg.pipeline_depth >= 1` the run is dispatched to the
+    /// software pipeline ([`crate::exec::pipeline`]): FOEM and SEM
+    /// stage/compute/apply with prefetch and write-behind overlapped
+    /// against compute. `pipeline_depth == 0` is this plain loop,
+    /// bit-identical to the pre-pipeline driver.
     pub fn train(
         &mut self,
         train: &Corpus,
         test: &Corpus,
     ) -> Result<TrainReport> {
+        if self.cfg.pipeline_depth > 0 {
+            return self.train_pipelined(train, test);
+        }
         let scfg = StreamConfig {
             minibatch_docs: self.cfg.minibatch_docs,
             shuffle: true,
@@ -117,6 +165,7 @@ impl Driver {
         let mut algo = self.build_algorithm(train.n_words(), scale_s)?;
         let mut metrics = Metrics::new();
         let proto = EvalProtocol { fold_in_iters: 30, seed: self.cfg.seed };
+        let test_words = test.docs.distinct_words();
 
         let mut batch_no = 0usize;
         for pass in 0..self.cfg.passes.max(1) {
@@ -128,9 +177,9 @@ impl Driver {
                 let eval = if self.cfg.eval_every > 0
                     && batch_no % self.cfg.eval_every == 0
                 {
-                    let phi = algo.export_phi();
+                    let view = algo.eval_view(&test_words);
                     Some(predictive_perplexity(
-                        &phi,
+                        &view,
                         &algo.eval_params(),
                         &test.docs,
                         &proto,
@@ -158,9 +207,143 @@ impl Driver {
             }
         }
         algo.checkpoint()?;
-        let phi = algo.export_phi();
+        let view = algo.eval_view(&test_words);
         let final_perplexity = predictive_perplexity(
-            &phi,
+            &view,
+            &algo.eval_params(),
+            &test.docs,
+            &proto,
+        );
+        Ok(TrainReport {
+            algorithm: algo.name(),
+            final_perplexity,
+            io: algo.io_stats(),
+            metrics,
+        })
+    }
+
+    /// Pipelined training (`pipeline_depth >= 1`): build the concrete
+    /// three-phase trainer (the pipeline needs the [`PhasedTrainer`]
+    /// seam, which only FOEM and SEM implement) and drive it through
+    /// [`Pipeline::run`].
+    fn train_pipelined(
+        &mut self,
+        train: &Corpus,
+        test: &Corpus,
+    ) -> Result<TrainReport> {
+        self.ensure_store_supported()?;
+        let cfg = self.cfg.clone();
+        let k = cfg.n_topics;
+        let params = cfg.params();
+        let scfg = StreamConfig {
+            minibatch_docs: cfg.minibatch_docs,
+            shuffle: true,
+            seed: cfg.seed,
+        };
+        let scale_s = CorpusStream::new(train, scfg).batches_per_pass() as f64;
+        match (&cfg.algorithm, &cfg.store) {
+            (Algorithm::Foem, StoreKind::InMemory) => {
+                let algo = Foem::new(
+                    params,
+                    InMemoryPhi::zeros(k, train.n_words()),
+                    cfg.foem_config(),
+                    cfg.seed,
+                );
+                self.run_pipelined(algo, train, test)
+            }
+            (Algorithm::Foem, StoreKind::Paged { path, buffer_bytes }) => {
+                let fc = self.foem_paged_config(*buffer_bytes);
+                let algo = Foem::paged_create(
+                    params,
+                    path,
+                    train.n_words(),
+                    *buffer_bytes,
+                    fc,
+                    cfg.seed,
+                )?;
+                self.run_pipelined(algo, train, test)
+            }
+            (Algorithm::Sem, _) => {
+                let sc = self.sem_config(scale_s);
+                let algo = Sem::new(params, train.n_words(), sc, cfg.seed);
+                self.run_pipelined(algo, train, test)
+            }
+            (other, _) => anyhow::bail!(
+                "pipeline_depth > 0 requires a three-phase trainer \
+                 (foem or sem), got {}",
+                other.name()
+            ),
+        }
+    }
+
+    /// The pipelined run loop shared by every three-phase trainer: the
+    /// same metrics / eval / checkpoint cadence as the plain loop, hooked
+    /// into the pipeline's strict-batch-order sink.
+    fn run_pipelined<T>(
+        &self,
+        mut algo: T,
+        train: &Corpus,
+        test: &Corpus,
+    ) -> Result<TrainReport>
+    where
+        T: PhasedTrainer + OnlineLda,
+    {
+        let cfg = &self.cfg;
+        let scfg = StreamConfig {
+            minibatch_docs: cfg.minibatch_docs,
+            shuffle: true,
+            seed: cfg.seed,
+        };
+        let mut metrics = Metrics::new();
+        let proto = EvalProtocol { fold_in_iters: 30, seed: cfg.seed };
+        let test_words = test.docs.distinct_words();
+        let passes = cfg.passes.max(1);
+        let stream = (0..passes).flat_map(|pass| {
+            let mut pass_cfg = scfg;
+            pass_cfg.seed = scfg.seed.wrapping_add(pass as u64);
+            CorpusStream::new(train, pass_cfg)
+        });
+        Pipeline::new(cfg.pipeline_depth).run(
+            &mut algo,
+            stream,
+            |algo, batch_no, report| {
+                let eval = if cfg.eval_every > 0
+                    && batch_no % cfg.eval_every == 0
+                {
+                    let view = algo.eval_view(&test_words);
+                    Some(predictive_perplexity(
+                        &view,
+                        &algo.eval_params(),
+                        &test.docs,
+                        &proto,
+                    ))
+                } else {
+                    None
+                };
+                metrics.record(batch_no, report, eval);
+                if cfg.checkpoint_every > 0
+                    && batch_no % cfg.checkpoint_every == 0
+                {
+                    algo.checkpoint()?;
+                }
+                if cfg.verbose {
+                    println!(
+                        "[{}] batch {batch_no}: iters={} ppx={:.1} {:.2}s{}",
+                        algo.name(),
+                        report.inner_iters,
+                        report.train_perplexity(),
+                        report.seconds,
+                        eval.map(|p| format!(" eval={p:.1}"))
+                            .unwrap_or_default()
+                    );
+                }
+                Ok(())
+            },
+        )?;
+        algo.checkpoint()?;
+        let view = algo.eval_view(&test_words);
+        let final_perplexity = predictive_perplexity(
+            &view,
             &algo.eval_params(),
             &test.docs,
             &proto,
@@ -239,6 +422,78 @@ mod tests {
             assert!(report.final_perplexity.is_finite());
             assert!(report.final_perplexity < c.n_words() as f64);
         }
+    }
+
+    #[test]
+    fn paged_store_rejected_for_non_foem_algorithms() {
+        // Satellite fix: StoreKind::Paged used to be silently dropped for
+        // every algorithm but FOEM — now it is a hard error.
+        let dir = crate::util::TempDir::new("reject");
+        let c = generate(&SyntheticConfig::small(), 95);
+        for algo in Algorithm::all() {
+            let mut cfg = small_cfg(algo);
+            cfg.store = StoreKind::Paged {
+                path: dir.path().join("phi.bin"),
+                buffer_bytes: 64 << 10,
+            };
+            let mut d = Driver::new(cfg);
+            let result = d.train_corpus(&c);
+            if algo == Algorithm::Foem {
+                assert!(result.is_ok(), "FOEM must accept the paged store");
+            } else {
+                let err = result.expect_err(algo.name()).to_string();
+                assert!(
+                    err.contains("only supported by FOEM"),
+                    "{}: {err}",
+                    algo.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_driver_trains_foem_paged() {
+        let dir = crate::util::TempDir::new("pipe");
+        let c = generate(&SyntheticConfig::small(), 96);
+        let mut cfg = small_cfg(Algorithm::Foem);
+        cfg.store = StoreKind::Paged {
+            path: dir.path().join("phi.bin"),
+            buffer_bytes: 64 << 10,
+        };
+        cfg.pipeline_depth = 2;
+        cfg.n_workers = 2;
+        cfg.checkpoint_every = 2;
+        let mut d = Driver::new(cfg);
+        let report = d.train_corpus(&c).unwrap();
+        assert_eq!(report.algorithm, "FOEM");
+        assert!(report.final_perplexity.is_finite());
+        assert!(report.final_perplexity < c.n_words() as f64);
+        assert!(!report.metrics.eval_trace().is_empty());
+        let io = report.io.expect("paged run reports I/O");
+        assert!(io.prefetched_cols > 0, "prefetcher never ran: {io:?}");
+    }
+
+    #[test]
+    fn pipelined_driver_trains_sem_in_memory() {
+        let c = generate(&SyntheticConfig::small(), 97);
+        let mut cfg = small_cfg(Algorithm::Sem);
+        cfg.pipeline_depth = 1;
+        cfg.eval_every = 0;
+        let mut d = Driver::new(cfg);
+        let report = d.train_corpus(&c).unwrap();
+        assert_eq!(report.algorithm, "SEM");
+        assert!(report.final_perplexity.is_finite());
+        assert!(report.final_perplexity < c.n_words() as f64);
+    }
+
+    #[test]
+    fn pipeline_rejects_non_phased_algorithms() {
+        let c = generate(&SyntheticConfig::small(), 98);
+        let mut cfg = small_cfg(Algorithm::Ovb);
+        cfg.pipeline_depth = 2;
+        let mut d = Driver::new(cfg);
+        let err = d.train_corpus(&c).expect_err("OVB has no phase seam");
+        assert!(err.to_string().contains("three-phase"), "{err}");
     }
 
     #[test]

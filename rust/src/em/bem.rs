@@ -136,8 +136,8 @@ impl Bem {
     /// Fold-in: fit theta for held-out documents with phi frozen (used by
     /// the predictive-perplexity protocol, §2.4). Returns the theta stats
     /// for `docs`.
-    pub fn fold_in(
-        phi: &PhiStats,
+    pub fn fold_in<P: super::PhiAccess>(
+        phi: &P,
         params: &LdaParams,
         docs: &DocWordMatrix,
         n_iters: usize,
@@ -150,7 +150,7 @@ impl Bem {
             theta.doc_mut(d)[topic] += c;
         });
         let mut mu = vec![0.0f32; k];
-        let w_dim = phi.n_words;
+        let w_dim = phi.n_words();
         for _ in 0..n_iters {
             for d in 0..docs.n_docs {
                 let mut fresh = vec![0.0f32; k];
@@ -158,7 +158,7 @@ impl Bem {
                     estep(
                         theta.doc(d),
                         phi.word(w as usize),
-                        &phi.phisum,
+                        phi.phisum(),
                         params,
                         w_dim,
                         &mut mu,

@@ -59,7 +59,7 @@ pub struct FoemConfig {
     /// paper plugs this hole with a full-K first iteration per minibatch,
     /// which costs O(K·NNZ_s); epsilon-greedy slots achieve the same
     /// discovery at O(1) per entry, keeping the cost flat in K (see
-    /// `rust/DESIGN.md` §7).
+    /// `rust/DESIGN.md` §8).
     pub explore_slots: usize,
     /// Compute the exact full-K training log-likelihood at minibatch exit
     /// (one O(K*NNZ_s) pass; needed for training-perplexity traces,
@@ -507,63 +507,106 @@ impl<S: PhiColumnStore> Foem<S> {
         }
     }
 
-    /// Document-sharded parallel path: snapshot the touched columns,
-    /// sweep each shard on a worker thread against private copies, then
-    /// reduce the per-shard [`SsDelta`]s in fixed shard order into the
-    /// global stores. Eq. 33 accumulation semantics are preserved: each
-    /// shard contributes exactly its token mass, so the global mass
-    /// invariant holds for any `P`.
+    /// Document-sharded parallel path: one stage → compute → apply round
+    /// trip of the three-phase trainer seam (the same phases the software
+    /// pipeline [`crate::exec::pipeline`] overlaps across batches).
+    /// Eq. 33 accumulation semantics are preserved: each shard
+    /// contributes exactly its token mass, so the global mass invariant
+    /// holds for any `P` — and, because deltas are taken against the
+    /// staged snapshots and applied additively, for any pipeline depth.
     fn process_minibatch_parallel(&mut self, mb: &Minibatch) -> MinibatchReport {
-        let timer = Timer::start();
-        let k = self.params.n_topics;
-        let w_dim = self.begin_minibatch(mb);
-        let am1 = self.params.am1();
-        let bm1 = self.params.bm1();
-        let wbm1 = self.params.wbm1(w_dim);
+        let staged = self.stage_batch(mb);
+        let delta = Self::compute_batch(&staged);
+        self.apply_batch(&staged, delta)
+    }
 
-        // Shared-read snapshots of the touched columns: one sequential
-        // read per column, after which the stores sit untouched until the
-        // merge — this is what lets PagedPhi feed concurrent workers.
+    /// Phase 1 (stage): per-minibatch entry work plus shared-read
+    /// snapshots of the touched columns of BOTH streams — one sequential,
+    /// non-dirtying read per column, after which the stores sit untouched
+    /// until [`Self::apply_batch`]. Shards the minibatch and draws the
+    /// per-shard RNG streams in shard order (deterministic for a given
+    /// `(seed, n_workers)`), so the returned bundle is fully
+    /// self-contained.
+    pub fn stage_batch(&mut self, mb: &Minibatch) -> FoemStaged {
+        let timer = Timer::start();
+        let w_dim = self.begin_minibatch(mb);
         let phi_snap = self.store.snapshot_columns(&mb.local_words);
         let res_snap = self.res_store.snapshot_columns(&mb.local_words);
-
         let exec = ParallelExecutor::new(self.cfg.n_workers);
         let shards = exec.shard(mb);
-        // Per-shard RNG streams drawn in shard order: deterministic for a
-        // given (seed, n_workers).
         let seeds: Vec<u64> =
             shards.iter().map(|_| self.rng.next_u64()).collect();
+        FoemStaged {
+            params: self.params,
+            cfg: self.cfg,
+            shards,
+            phi_snap,
+            res_snap,
+            phisum0: self.phisum.clone(),
+            w_dim,
+            seeds,
+            local_words: mb.local_words.clone(),
+            tokens: mb.docs.total_tokens(),
+            stage_seconds: timer.seconds(),
+        }
+    }
 
-        let params = self.params;
-        let cfg = self.cfg;
-        let phisum0 = self.phisum.clone();
-        let results = exec.run_sharded(&shards, |shard| {
+    /// Phase 2 (compute): the shard sweeps against the staged snapshots.
+    /// Pure — it touches neither the trainer nor the stores — so the
+    /// pipeline can run it on a background thread while other batches
+    /// stage and apply.
+    pub fn compute_batch(staged: &FoemStaged) -> FoemDelta {
+        let timer = Timer::start();
+        let exec = ParallelExecutor::new(staged.cfg.n_workers);
+        let results = exec.run_sharded(&staged.shards, |shard| {
             run_foem_shard(
-                &params,
-                &cfg,
+                &staged.params,
+                &staged.cfg,
                 shard,
-                &phi_snap,
-                &res_snap,
-                &phisum0,
-                w_dim,
-                seeds[shard.shard_index],
+                &staged.phi_snap,
+                &staged.res_snap,
+                &staged.phisum0,
+                staged.w_dim,
+                staged.seeds[shard.shard_index],
             )
         });
+        FoemDelta { results, compute_seconds: timer.seconds() }
+    }
 
-        // Deterministic reduce (fixed shard order), then ONE
-        // read-modify-write per global column — the Fig. 4 line 8/15 I/O
-        // discipline, paid once per minibatch instead of once per shard.
-        let phi_delta =
-            exec.reduce(k, &mb.local_words, results.iter().map(|r| &r.phi_delta));
-        let res_delta =
-            exec.reduce(k, &mb.local_words, results.iter().map(|r| &r.res_delta));
+    /// Phase 3 (apply): deterministic reduce (fixed shard order), then
+    /// ONE read-modify-write per global column — the Fig. 4 line 8/15 I/O
+    /// discipline, paid once per minibatch instead of once per shard.
+    /// Called in strict batch order by the pipeline.
+    pub fn apply_batch(
+        &mut self,
+        staged: &FoemStaged,
+        delta: FoemDelta,
+    ) -> MinibatchReport {
+        let timer = Timer::start();
+        let k = self.params.n_topics;
+        let am1 = self.params.am1();
+        let bm1 = self.params.bm1();
+        let wbm1 = self.params.wbm1(staged.w_dim);
+        let FoemDelta { results, compute_seconds } = delta;
+        let exec = ParallelExecutor::new(staged.cfg.n_workers);
+
+        let phi_delta = exec.reduce(
+            k,
+            &staged.local_words,
+            results.iter().map(|r| &r.phi_delta),
+        );
+        let res_delta = exec.reduce(
+            k,
+            &staged.local_words,
+            results.iter().map(|r| &r.res_delta),
+        );
         phi_delta.apply_to_store(&mut self.store, &mut self.phisum);
 
         // Residual columns merge additively, clamped at zero: workers
         // each re-derive the selected coordinates from the same snapshot,
         // so overlapping zero-outs may overshoot — residuals are a
         // scheduling heuristic and must only stay non-negative.
-        for (i, &gw) in mb.local_words.iter().enumerate() {
+        for (i, &gw) in staged.local_words.iter().enumerate() {
             let gw = gw as usize;
             let d = res_delta.col(i);
             let mut total = 0.0f32;
@@ -586,7 +629,8 @@ impl<S: PhiColumnStore> Foem<S> {
         let mut ll = 0.0f64;
         if self.cfg.exact_ll {
             let kam1 = k as f32 * am1;
-            let doc_norms: Vec<Vec<f64>> = shards
+            let doc_norms: Vec<Vec<f64>> = staged
+                .shards
                 .iter()
                 .map(|shard| {
                     (0..shard.docs.n_docs)
@@ -599,11 +643,11 @@ impl<S: PhiColumnStore> Foem<S> {
                 })
                 .collect();
             let mut col = vec![0.0f32; k];
-            for &gw in &mb.local_words {
+            for &gw in &staged.local_words {
                 let gw = gw as usize;
                 self.store.load_column(gw, &mut col);
                 for (si, (r, shard)) in
-                    results.iter().zip(&shards).enumerate()
+                    results.iter().zip(&staged.shards).enumerate()
                 {
                     let vm = &shard.vocab_major;
                     let (s, en) = vm.word_range(gw);
@@ -626,9 +670,13 @@ impl<S: PhiColumnStore> Foem<S> {
 
         MinibatchReport {
             inner_iters: inner,
-            seconds: timer.seconds(),
+            // Busy time of this batch's three phases. Under pipelining the
+            // phases of different batches overlap in wall time, so summing
+            // stage+compute+apply (not stage-to-apply elapsed) keeps
+            // Metrics' totals meaningful.
+            seconds: staged.stage_seconds + compute_seconds + timer.seconds(),
             train_ll: ll,
-            tokens: mb.docs.total_tokens(),
+            tokens: staged.tokens,
         }
     }
 
@@ -640,6 +688,76 @@ impl<S: PhiColumnStore> Foem<S> {
     /// Export the dense phi for evaluation.
     pub fn export_phi(&mut self) -> crate::em::PhiStats {
         self.store.export_dense()
+    }
+}
+
+/// Phase-1 output of the three-phase FOEM seam: a self-contained staged
+/// minibatch (shards, column snapshots of both streams, resident totals,
+/// per-shard seeds). Owns everything, so the pipeline can hold several in
+/// flight and hand them to compute workers on other threads.
+pub struct FoemStaged {
+    params: LdaParams,
+    cfg: FoemConfig,
+    shards: Vec<MinibatchShard>,
+    phi_snap: PhiSnapshot,
+    res_snap: PhiSnapshot,
+    phisum0: Vec<f32>,
+    w_dim: usize,
+    seeds: Vec<u64>,
+    local_words: Vec<u32>,
+    tokens: f64,
+    stage_seconds: f64,
+}
+
+impl FoemStaged {
+    /// The staged minibatch's local vocabulary.
+    pub fn local_words(&self) -> &[u32] {
+        &self.local_words
+    }
+}
+
+/// Phase-2 output: per-shard sweep results awaiting the ordered reduce of
+/// [`Foem::apply_batch`].
+pub struct FoemDelta {
+    results: Vec<FoemShardResult>,
+    compute_seconds: f64,
+}
+
+impl<S: PhiColumnStore> crate::exec::pipeline::PhasedTrainer for Foem<S> {
+    type Staged = FoemStaged;
+    type Delta = FoemDelta;
+
+    fn stage(&mut self, mb: &Minibatch) -> FoemStaged {
+        self.stage_batch(mb)
+    }
+
+    fn compute(staged: &FoemStaged) -> FoemDelta {
+        Foem::<S>::compute_batch(staged)
+    }
+
+    fn apply(&mut self, staged: &FoemStaged, delta: FoemDelta) -> MinibatchReport {
+        self.apply_batch(staged, delta)
+    }
+
+    fn process_direct(&mut self, mb: &Minibatch) -> MinibatchReport {
+        self.process_minibatch(mb)
+    }
+
+    fn prefetch(&mut self, mb: &Minibatch) {
+        // Both streams (§3.2): phi and the residual matrix are staged in
+        // lockstep.
+        self.store.prefetch_columns(&mb.local_words);
+        self.res_store.prefetch_columns(&mb.local_words);
+    }
+
+    fn begin_pipeline(&mut self) {
+        self.store.set_async_io(true);
+        self.res_store.set_async_io(true);
+    }
+
+    fn end_pipeline(&mut self) {
+        self.store.set_async_io(false);
+        self.res_store.set_async_io(false);
     }
 }
 

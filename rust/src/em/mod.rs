@@ -93,6 +93,127 @@ impl PhiStats {
     pub fn raw_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
+
+    /// Materialize a read-only [`crate::store::PhiSnapshot`] of the given
+    /// columns (`words` sorted ascending) — the in-memory counterpart of
+    /// `PhiColumnStore::snapshot_columns`, used by the staged trainer
+    /// phases ([`crate::exec::pipeline`]) so SEM's compute phase is
+    /// store-free like FOEM's.
+    pub fn snapshot_columns(&self, words: &[u32]) -> crate::store::PhiSnapshot {
+        let k = self.k;
+        let mut data = vec![0.0f32; words.len() * k];
+        for (i, &w) in words.iter().enumerate() {
+            data[i * k..(i + 1) * k].copy_from_slice(self.word(w as usize));
+        }
+        crate::store::PhiSnapshot::from_parts(k, words.to_vec(), data)
+    }
+}
+
+/// Read-only access to normalizable topic-word statistics — what the
+/// evaluator ([`crate::eval`]) and the fold-in E-step actually need from a
+/// model. Implemented by the dense [`PhiStats`] and by the sparse
+/// [`EvalPhiView`], so evaluation can run against a column subset without
+/// densifying a paged store (which would defeat its memory bound).
+pub trait PhiAccess {
+    /// Number of topics K.
+    fn k(&self) -> usize;
+
+    /// Full vocabulary size W (the Eq. 10 denominator uses `W*(beta-1)`
+    /// regardless of which columns are materialized).
+    fn n_words(&self) -> usize;
+
+    /// Topic totals `phisum(k)`.
+    fn phisum(&self) -> &[f32];
+
+    /// Column of word `w`. Panics if the word is not materialized.
+    fn word(&self, w: usize) -> &[f32];
+}
+
+impl PhiAccess for PhiStats {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n_words(&self) -> usize {
+        self.n_words
+    }
+
+    fn phisum(&self) -> &[f32] {
+        &self.phisum
+    }
+
+    fn word(&self, w: usize) -> &[f32] {
+        &self.data[w * self.k..(w + 1) * self.k]
+    }
+}
+
+/// A sparse, evaluation-ready view of the topic-word statistics: the
+/// columns of a chosen word set plus the resident topic totals. For a
+/// paged store this is O(|words| * K) memory instead of the O(K * W)
+/// `export_dense` would cost — the driver evaluates through this view so
+/// periodic evaluation respects the §3.2 memory bound (and its column
+/// reads show up in [`crate::store::IoStats`] like any other stream
+/// access).
+#[derive(Debug, Clone)]
+pub struct EvalPhiView {
+    k: usize,
+    /// FULL vocabulary size (denominator dimension), not `words.len()`.
+    n_words: usize,
+    /// Sorted global word ids materialized in `data`.
+    words: Vec<u32>,
+    /// `words.len() * k`, column-contiguous.
+    data: Vec<f32>,
+    phisum: Vec<f32>,
+}
+
+impl EvalPhiView {
+    /// Copy the given columns out of a dense [`PhiStats`].
+    pub fn from_dense(phi: &PhiStats, words: &[u32]) -> Self {
+        Self::from_snapshot(
+            phi.snapshot_columns(words),
+            phi.phisum.clone(),
+            phi.n_words,
+        )
+    }
+
+    /// Wrap a store snapshot (already one non-dirtying sequential read per
+    /// column) plus the algorithm's resident topic totals.
+    pub fn from_snapshot(
+        snap: crate::store::PhiSnapshot,
+        phisum: Vec<f32>,
+        n_words: usize,
+    ) -> Self {
+        let (k, words, data) = snap.into_parts();
+        debug_assert_eq!(phisum.len(), k);
+        Self { k, n_words, words, data, phisum }
+    }
+
+    /// Number of materialized columns.
+    pub fn n_columns(&self) -> usize {
+        self.words.len()
+    }
+}
+
+impl PhiAccess for EvalPhiView {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n_words(&self) -> usize {
+        self.n_words
+    }
+
+    fn phisum(&self) -> &[f32] {
+        &self.phisum
+    }
+
+    fn word(&self, w: usize) -> &[f32] {
+        let i = self
+            .words
+            .binary_search(&(w as u32))
+            .unwrap_or_else(|_| panic!("EvalPhiView: word {w} not captured"));
+        &self.data[i * self.k..(i + 1) * self.k]
+    }
 }
 
 /// Document-topic sufficient statistics `theta_hat_{K×D}`, row-contiguous
@@ -360,7 +481,10 @@ pub fn perplexity(ll: f64, n_tokens: f64) -> f64 {
 pub struct MinibatchReport {
     /// Inner sweeps actually run before the convergence check fired.
     pub inner_iters: usize,
-    /// Wall-clock seconds spent.
+    /// Seconds of work spent on this minibatch. For phased trainers this
+    /// is the sum of the stage/compute/apply durations — under pipelining
+    /// those overlap *other* batches' phases in wall time, so per-batch
+    /// values sum to busy time, not elapsed time.
     pub seconds: f64,
     /// Training log-likelihood of the minibatch at exit.
     pub train_ll: f64,

@@ -84,6 +84,11 @@ pub struct Sem {
     /// Minibatches processed so far (the paper's `s`).
     pub step: usize,
     rng: Rng,
+    /// Whether a staged batch has already claimed the cold-start
+    /// bootstrap. Under pipelining several batches are staged before the
+    /// first apply lands, so `phi.total_mass() == 0` alone would make
+    /// each of them re-seed the global stats; only the first may.
+    boot_staged: bool,
 }
 
 impl Sem {
@@ -94,6 +99,7 @@ impl Sem {
             cfg,
             step: 0,
             rng: Rng::new(seed),
+            boot_staged: false,
         }
     }
 
@@ -230,44 +236,88 @@ impl Sem {
         }
     }
 
-    /// Document-sharded parallel path. The Fig. 3 inner loop freezes the
-    /// global phi, so shards only couple through their private theta —
-    /// workers read the shared `PhiStats` concurrently, and the Eq. 20
-    /// fold-in scatters the per-shard [`SsDelta`]s in fixed shard order.
-    /// The scattered mass is `scale * tokens` regardless of how
-    /// responsibilities distribute, so the global mass trajectory matches
-    /// the serial path exactly.
+    /// Document-sharded parallel path: one stage → compute → apply round
+    /// trip of the three-phase trainer seam (the same phases the software
+    /// pipeline [`crate::exec::pipeline`] overlaps across batches). The
+    /// Fig. 3 inner loop freezes the global phi, so shards only couple
+    /// through their private theta — workers read a staged column
+    /// snapshot, and the Eq. 20 fold-in scatters the per-shard
+    /// [`SsDelta`]s in fixed shard order. The scattered mass is
+    /// `scale * tokens` regardless of how responsibilities distribute, so
+    /// the global mass trajectory matches the serial path exactly.
     fn process_minibatch_parallel(&mut self, mb: &Minibatch) -> MinibatchReport {
-        let timer = Timer::start();
-        let k = self.params.n_topics;
-        let tokens = mb.docs.total_tokens();
-        self.step += 1;
-        let bootstrap = self.phi.total_mass() == 0.0;
+        let staged = self.stage_batch(mb);
+        let delta = Self::compute_batch(&staged);
+        self.apply_batch(&staged, delta)
+    }
 
+    /// Phase 1 (stage): step accounting, sharding, per-shard RNG streams
+    /// (drawn in shard order), and a read-only snapshot of the minibatch's
+    /// frozen phi columns + topic totals, so compute is store-free.
+    pub fn stage_batch(&mut self, mb: &Minibatch) -> SemStaged {
+        let timer = Timer::start();
+        self.step += 1;
+        // Exactly ONE batch may claim the cold-start bootstrap: under
+        // pipelining, later batches are staged before the first apply
+        // lands, so the mass check alone would re-seed per batch.
+        let bootstrap = !self.boot_staged && self.phi.total_mass() == 0.0;
+        if bootstrap {
+            self.boot_staged = true;
+        }
         let exec = ParallelExecutor::new(self.cfg.n_workers);
         let shards = exec.shard(mb);
-        // Per-shard RNG streams drawn in shard order (deterministic for a
-        // given seed and worker count).
         let seeds: Vec<u64> =
             shards.iter().map(|_| self.rng.next_u64()).collect();
+        let phi_snap = self.phi.snapshot_columns(&mb.local_words);
+        SemStaged {
+            params: self.params,
+            cfg: self.cfg,
+            shards,
+            phi_snap,
+            phisum0: self.phi.phisum.clone(),
+            w_dim: self.phi.n_words,
+            bootstrap,
+            seeds,
+            step: self.step,
+            tokens: mb.docs.total_tokens(),
+            stage_seconds: timer.seconds(),
+        }
+    }
 
-        let params = self.params;
-        let cfg = self.cfg;
-        let phi = &self.phi;
-        let results = exec.run_sharded(&shards, |shard| {
+    /// Phase 2 (compute): the Fig. 3 inner loops, pure over the staged
+    /// snapshot — safe to run on a background thread.
+    pub fn compute_batch(staged: &SemStaged) -> SemDelta {
+        let timer = Timer::start();
+        let exec = ParallelExecutor::new(staged.cfg.n_workers);
+        let results = exec.run_sharded(&staged.shards, |shard| {
             run_sem_shard(
-                &params,
-                &cfg,
+                &staged.params,
+                &staged.cfg,
                 shard,
-                phi,
-                bootstrap,
-                seeds[shard.shard_index],
+                &staged.phi_snap,
+                &staged.phisum0,
+                staged.w_dim,
+                staged.bootstrap,
+                staged.seeds[shard.shard_index],
             )
         });
+        SemDelta { results, compute_seconds: timer.seconds() }
+    }
 
-        // Cold-start seeding first, mirroring the serial order (seed the
-        // global stats during init, decay afterwards).
-        if bootstrap {
+    /// Phase 3 (apply): cold-start seeding first, mirroring the serial
+    /// order (seed the global stats during init, decay afterwards), then
+    /// the Eq. 20 decay + fixed-order scatter. `rho` uses the step number
+    /// recorded at stage time, so pipelined execution preserves the
+    /// learning-rate schedule exactly.
+    pub fn apply_batch(
+        &mut self,
+        staged: &SemStaged,
+        delta: SemDelta,
+    ) -> MinibatchReport {
+        let timer = Timer::start();
+        let k = self.params.n_topics;
+        let SemDelta { results, compute_seconds } = delta;
+        if staged.bootstrap {
             for r in &results {
                 for (i, &w) in r.boot.words().iter().enumerate() {
                     let src = r.boot.col(i);
@@ -282,7 +332,7 @@ impl Sem {
 
         // Global update (Fig. 3 line 10, Eq. 20): decay, then scatter the
         // per-shard sufficient statistics in fixed shard order.
-        let rho = self.cfg.rate.rho(self.step) as f32;
+        let rho = self.cfg.rate.rho(staged.step) as f32;
         let scale = (self.cfg.scale_s as f32) * rho;
         self.phi.raw_mut().iter_mut().for_each(|x| *x *= 1.0 - rho);
         self.phi.phisum.iter_mut().for_each(|x| *x *= 1.0 - rho);
@@ -302,10 +352,59 @@ impl Sem {
         let ll: f64 = results.iter().map(|r| r.train_ll).sum();
         MinibatchReport {
             inner_iters: iters,
-            seconds: timer.seconds(),
+            // Busy time of this batch's three phases. Under pipelining the
+            // phases of different batches overlap in wall time, so summing
+            // stage+compute+apply (not stage-to-apply elapsed) keeps
+            // Metrics' totals meaningful.
+            seconds: staged.stage_seconds + compute_seconds + timer.seconds(),
             train_ll: ll,
-            tokens,
+            tokens: staged.tokens,
         }
+    }
+}
+
+/// Phase-1 output of the three-phase SEM seam: a self-contained staged
+/// minibatch (shards, frozen-phi column snapshot, resident totals,
+/// per-shard seeds, the Eq. 18 step number).
+pub struct SemStaged {
+    params: LdaParams,
+    cfg: SemConfig,
+    shards: Vec<MinibatchShard>,
+    phi_snap: crate::store::PhiSnapshot,
+    phisum0: Vec<f32>,
+    w_dim: usize,
+    bootstrap: bool,
+    seeds: Vec<u64>,
+    step: usize,
+    tokens: f64,
+    stage_seconds: f64,
+}
+
+/// Phase-2 output: per-shard inner-loop results awaiting the ordered
+/// Eq. 20 scatter of [`Sem::apply_batch`].
+pub struct SemDelta {
+    results: Vec<SemShardResult>,
+    compute_seconds: f64,
+}
+
+impl crate::exec::pipeline::PhasedTrainer for Sem {
+    type Staged = SemStaged;
+    type Delta = SemDelta;
+
+    fn stage(&mut self, mb: &Minibatch) -> SemStaged {
+        self.stage_batch(mb)
+    }
+
+    fn compute(staged: &SemStaged) -> SemDelta {
+        Sem::compute_batch(staged)
+    }
+
+    fn apply(&mut self, staged: &SemStaged, delta: SemDelta) -> MinibatchReport {
+        self.apply_batch(staged, delta)
+    }
+
+    fn process_direct(&mut self, mb: &Minibatch) -> MinibatchReport {
+        self.process_minibatch(mb)
     }
 }
 
@@ -320,19 +419,22 @@ struct SemShardResult {
 }
 
 /// The Fig. 3 inner loop for one document shard: private theta and
-/// responsibilities against the frozen shared phi (copied locally per
-/// shard so an optional bootstrap overlay needs no branching in the hot
-/// loop), with a shard-local convergence check.
+/// responsibilities against the staged snapshot of the frozen phi (copied
+/// locally per shard so an optional bootstrap overlay needs no branching
+/// in the hot loop), with a shard-local convergence check. Store-free by
+/// construction — the snapshot is the only view of the global state.
+#[allow(clippy::too_many_arguments)]
 fn run_sem_shard(
     params: &LdaParams,
     cfg: &SemConfig,
     shard: &MinibatchShard,
-    phi: &PhiStats,
+    phi_snap: &crate::store::PhiSnapshot,
+    phisum0: &[f32],
+    w_dim: usize,
     bootstrap: bool,
     seed: u64,
 ) -> SemShardResult {
     let k = params.n_topics;
-    let w_dim = phi.n_words;
     let docs = &shard.docs;
     let tokens = docs.total_tokens();
     let words = &shard.local_words;
@@ -342,9 +444,11 @@ fn run_sem_shard(
     // Private copies of the frozen phi columns the shard touches.
     let mut lphi = vec![0.0f32; n_local * k];
     for (lw, &gw) in words.iter().enumerate() {
-        lphi[lw * k..(lw + 1) * k].copy_from_slice(phi.word(gw as usize));
+        lphi[lw * k..(lw + 1) * k].copy_from_slice(
+            phi_snap.column(gw).expect("shard word missing from snapshot"),
+        );
     }
-    let mut lphisum = phi.phisum.clone();
+    let mut lphisum = phisum0.to_vec();
     // Per-entry shard-local word slots, resolved off the hot loop.
     let entry_slot: Vec<u32> = docs
         .word_ids

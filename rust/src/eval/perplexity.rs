@@ -11,7 +11,7 @@
 
 use crate::corpus::sparse::DocWordMatrix;
 use crate::em::bem::Bem;
-use crate::em::PhiStats;
+use crate::em::PhiAccess;
 use crate::LdaParams;
 
 /// Evaluation protocol parameters.
@@ -33,9 +33,12 @@ impl Default for EvalProtocol {
 /// Compute the predictive perplexity of `phi` on `test_docs`.
 ///
 /// `params` must be the smoothing parameterization that matches how `phi`
-/// was produced (see `OnlineLda::eval_params`).
-pub fn predictive_perplexity(
-    phi: &PhiStats,
+/// was produced (see `OnlineLda::eval_params`). Generic over
+/// [`PhiAccess`], so it evaluates a dense `PhiStats` and a sparse
+/// `EvalPhiView` (the paged store's memory-bounded evaluation path)
+/// identically — the view only needs the test corpus's columns.
+pub fn predictive_perplexity<P: PhiAccess>(
+    phi: &P,
     params: &LdaParams,
     test_docs: &DocWordMatrix,
     protocol: &EvalProtocol,
@@ -52,8 +55,9 @@ pub fn predictive_perplexity(
     let k = params.n_topics;
     let am1 = params.am1();
     let bm1 = params.bm1();
-    let wbm1 = params.wbm1(phi.n_words);
+    let wbm1 = params.wbm1(phi.n_words());
     let kam1 = k as f32 * am1;
+    let phisum = phi.phisum();
     let mut ll = 0.0f64;
     let mut n = 0.0f64;
     for d in 0..held_out.n_docs {
@@ -67,7 +71,7 @@ pub fn predictive_perplexity(
             let mut p = 0.0f32;
             for i in 0..k {
                 p += (trow[i] + am1) / tden * (col[i] + bm1)
-                    / (phi.phisum[i] + wbm1);
+                    / (phisum[i] + wbm1);
             }
             ll += c as f64 * (p.max(1e-30) as f64).ln();
             n += c as f64;
@@ -81,7 +85,7 @@ mod tests {
     use super::*;
     use crate::corpus::synthetic::{generate, SyntheticConfig};
     use crate::em::bem::Bem;
-    use crate::em::ConvergenceCheck;
+    use crate::em::{ConvergenceCheck, EvalPhiView, PhiStats};
 
     fn setup() -> (crate::corpus::Corpus, crate::corpus::Corpus) {
         let c = generate(&SyntheticConfig::small(), 81);
@@ -142,6 +146,25 @@ mod tests {
         let a = predictive_perplexity(&bem.phi, &p, &test.docs, &proto);
         let b = predictive_perplexity(&bem.phi, &p, &test.docs, &proto);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sparse_view_evaluates_identically_to_dense() {
+        // The driver's memory-bounded evaluation path (EvalPhiView over
+        // just the test vocabulary) must reproduce the dense result
+        // bit-for-bit: same fold-in, same held-out likelihood.
+        let (train, test) = setup();
+        let p = LdaParams::paper_defaults(6);
+        let mut bem = Bem::init(&train.docs, p, 4);
+        for _ in 0..8 {
+            bem.sweep(&train.docs);
+        }
+        let proto = EvalProtocol::default();
+        let dense = predictive_perplexity(&bem.phi, &p, &test.docs, &proto);
+        let test_words = test.docs.distinct_words();
+        let view = EvalPhiView::from_dense(&bem.phi, &test_words);
+        let sparse = predictive_perplexity(&view, &p, &test.docs, &proto);
+        assert_eq!(dense, sparse);
     }
 
     #[test]

@@ -27,6 +27,13 @@
 //! paths, bit-identical to the pre-engine code (same numerics, same
 //! [`crate::store::IoStats`]). See `rust/DESIGN.md` §6 for the full
 //! architecture and the equivalence argument.
+//!
+//! The [`pipeline`] submodule layers a depth-`d` software pipeline on top
+//! of this engine: batches are staged (snapshot + shard), computed on
+//! background threads, and applied in strict batch order, overlapping
+//! parameter I/O with compute (`rust/DESIGN.md` §7).
+
+pub mod pipeline;
 
 use crate::em::SsDelta;
 use crate::stream::{Minibatch, MinibatchShard};

@@ -1,0 +1,221 @@
+//! Pipelined parameter streaming: a depth-`d` software pipeline over the
+//! minibatch stream (`rust/DESIGN.md` §7).
+//!
+//! The synchronous trainer alternates store I/O and compute on one
+//! thread: snapshot batch `t`'s columns, sweep, write back, repeat — so a
+//! paged [`crate::store::paged::PagedPhi`] run pays full disk latency on
+//! the hot path even though batch `t+1`'s column set is known while batch
+//! `t` computes. This module overlaps the two, the pipelined
+//! communication/computation discipline of Yan et al. (*Towards Big Topic
+//! Modeling*), without changing what any single batch computes:
+//!
+//! 1. the trainer is split into the three-phase [`PhasedTrainer`] seam —
+//!    `stage` (store reads → self-contained [`PhasedTrainer::Staged`]),
+//!    `compute` (pure, store-free, runs on a worker thread), `apply`
+//!    (store writes, **strict batch order**);
+//! 2. [`Pipeline::run`] keeps up to `depth` batches in flight: while
+//!    batch `t` computes in the background, the coordinator thread
+//!    applies finished batches and stages the next ones;
+//! 3. a [`crate::stream::Lookahead`] window feeds upcoming batches'
+//!    vocabularies to [`PhasedTrainer::prefetch`], so a store in
+//!    background-I/O mode ([`crate::store::PhiColumnStore::set_async_io`])
+//!    loads batch `t+1`'s columns while batch `t` computes, and flushes
+//!    batch `t-1`'s dirty columns behind the same thread.
+//!
+//! **Determinism / equivalence.** `depth = 0` bypasses the pipeline
+//! entirely ([`PhasedTrainer::process_direct`]) and is bit-identical to
+//! the plain trainer loop — numerics *and* `IoStats` — extending the
+//! `n_workers = 1` invariant of the parallel executor. For `depth >= 1`,
+//! applies happen in strict batch order at fixed points of the loop, and
+//! every RNG draw happens in `stage` (batch order), so a run is exactly
+//! reproducible for a given `(seed, n_workers, depth)`. What changes
+//! versus depth 0 is only *staleness*: a batch is staged against the
+//! store state with up to `depth` applies still pending, the usual
+//! stochastic-approximation trade (Cappé & Moulines' online EM is
+//! indifferent to when statistics are staged as long as the update order
+//! is preserved) — perplexity parity is asserted in
+//! `tests/pipeline_equivalence.rs`.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::em::MinibatchReport;
+use crate::stream::{Lookahead, Minibatch};
+
+/// The three-phase trainer contract the pipeline drives.
+///
+/// The phases split `process_minibatch` at its natural I/O boundaries:
+///
+/// * [`stage`](Self::stage) — everything that touches the stores or the
+///   trainer's RNG: frame shards, materialize column snapshots, draw
+///   per-shard seeds. Returns a self-contained `Staged` bundle.
+/// * [`compute`](Self::compute) — the E-step sweeps, pure over `Staged`
+///   (no `self`): safe to run on a background thread while the trainer
+///   stages/applies other batches.
+/// * [`apply`](Self::apply) — merge the computed delta into the global
+///   stores and scheduler state. The pipeline calls this in strict batch
+///   order.
+pub trait PhasedTrainer {
+    /// Self-contained staged batch (snapshots + shards + seeds).
+    type Staged: Send + Sync + 'static;
+    /// The computed sufficient-statistics delta.
+    type Delta: Send + 'static;
+
+    /// Phase 1: store reads + RNG draws; no global mutation visible to
+    /// `compute`.
+    fn stage(&mut self, mb: &Minibatch) -> Self::Staged;
+
+    /// Phase 2: pure compute over the staged batch (associated function —
+    /// no `self`, so it can run while the trainer is busy elsewhere).
+    fn compute(staged: &Self::Staged) -> Self::Delta;
+
+    /// Phase 3: merge into the global state; strict batch order.
+    fn apply(&mut self, staged: &Self::Staged, delta: Self::Delta) -> MinibatchReport;
+
+    /// The trainer's plain (non-pipelined) path — what `depth = 0` runs.
+    /// Must be the exact `process_minibatch` dispatch so the bypass is
+    /// bit-identical to a hand-written loop.
+    fn process_direct(&mut self, mb: &Minibatch) -> MinibatchReport;
+
+    /// Hint that `mb` will be staged soon (forwarded to the stores'
+    /// background prefetchers). Default: no-op.
+    fn prefetch(&mut self, _mb: &Minibatch) {}
+
+    /// Called once before a pipelined run — e.g. switch stores into
+    /// background-I/O mode. Default: no-op.
+    fn begin_pipeline(&mut self) {}
+
+    /// Called once after a pipelined run (also on error) — e.g. drain
+    /// write-behind buffers and stop I/O threads. Default: no-op.
+    fn end_pipeline(&mut self) {}
+}
+
+/// One batch in flight: its staged bundle (shared with the compute
+/// worker) and the worker's join handle.
+struct InFlight<T: PhasedTrainer> {
+    staged: Arc<T::Staged>,
+    handle: std::thread::JoinHandle<T::Delta>,
+}
+
+/// The depth-`d` software pipeline runner.
+#[derive(Debug, Clone, Copy)]
+pub struct Pipeline {
+    depth: usize,
+}
+
+impl Pipeline {
+    /// `depth` = maximum batches in flight past the apply cursor; `0`
+    /// bypasses the pipeline entirely (bit-identical serial execution).
+    pub fn new(depth: usize) -> Self {
+        Self { depth }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Drive `trainer` over `stream`. `sink` runs after every apply, in
+    /// batch order, with the trainer quiescent (no outstanding borrow of
+    /// its stores) — the coordinator hooks evaluation, checkpointing and
+    /// metrics here.
+    pub fn run<T, I, F>(
+        &self,
+        trainer: &mut T,
+        stream: I,
+        mut sink: F,
+    ) -> anyhow::Result<()>
+    where
+        T: PhasedTrainer,
+        I: Iterator<Item = Minibatch>,
+        F: FnMut(&mut T, usize, &MinibatchReport) -> anyhow::Result<()>,
+    {
+        if self.depth == 0 {
+            for (i, mb) in stream.enumerate() {
+                let report = trainer.process_direct(&mb);
+                sink(trainer, i + 1, &report)?;
+            }
+            return Ok(());
+        }
+        trainer.begin_pipeline();
+        let result = self.run_pipelined(trainer, stream, &mut sink);
+        trainer.end_pipeline();
+        result
+    }
+
+    fn run_pipelined<T, I, F>(
+        &self,
+        trainer: &mut T,
+        stream: I,
+        sink: &mut F,
+    ) -> anyhow::Result<()>
+    where
+        T: PhasedTrainer,
+        I: Iterator<Item = Minibatch>,
+        F: FnMut(&mut T, usize, &MinibatchReport) -> anyhow::Result<()>,
+    {
+        let mut look = Lookahead::new(stream, self.depth);
+        let mut inflight: VecDeque<InFlight<T>> = VecDeque::new();
+        let mut batch_no = 0usize;
+        // Captured as a plain fn pointer so the spawned closure's type
+        // involves only `T::Staged`/`T::Delta` (both `'static` by the
+        // trait bounds), not `T` itself — the trainer may borrow.
+        let compute: fn(&T::Staged) -> T::Delta = T::compute;
+        let mut retire = |trainer: &mut T,
+                          inflight: &mut VecDeque<InFlight<T>>,
+                          batch_no: &mut usize|
+         -> anyhow::Result<()> {
+            let InFlight { staged, handle } =
+                inflight.pop_front().expect("in-flight batch");
+            let delta = handle
+                .join()
+                .map_err(|_| anyhow::anyhow!("pipeline compute worker panicked"))?;
+            *batch_no += 1;
+            let report = trainer.apply(&staged, delta);
+            sink(trainer, *batch_no, &report)
+        };
+        let mut failure: Option<anyhow::Error> = None;
+        while let Some(mb) = look.next() {
+            // Stage this batch (store reads happen here, overlapped with
+            // the in-flight computes), then hand the sweep to a worker.
+            let staged = Arc::new(trainer.stage(&mb));
+            // Queue prefetches for the lookahead window AFTER staging, so
+            // the stage-time reads are not stuck behind them in the I/O
+            // thread's queue.
+            for i in 0..self.depth {
+                if let Some(upcoming) = look.peek(i) {
+                    trainer.prefetch(upcoming);
+                }
+            }
+            let worker = Arc::clone(&staged);
+            let handle = std::thread::spawn(move || compute(&worker));
+            inflight.push_back(InFlight { staged, handle });
+            // Keep at most `depth` batches in flight: retire (apply) the
+            // oldest once the window is full — strict batch order.
+            if inflight.len() > self.depth {
+                if let Err(e) = retire(trainer, &mut inflight, &mut batch_no) {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        while !inflight.is_empty() {
+            if failure.is_some() {
+                // A sink/apply error already stopped the run: applying
+                // further batches would break strict order, but the
+                // workers must still be joined so no compute thread (and
+                // its staged snapshots) outlives the pipeline.
+                let InFlight { handle, .. } =
+                    inflight.pop_front().expect("checked non-empty");
+                let _ = handle.join();
+                continue;
+            }
+            if let Err(e) = retire(trainer, &mut inflight, &mut batch_no) {
+                failure = Some(e);
+            }
+        }
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}

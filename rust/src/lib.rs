@@ -11,8 +11,10 @@
 //!   ([`store`]), the online EM family (BEM / IEM / SEM / **FOEM**,
 //!   [`em`]), the **parallel sharded E-step engine** ([`exec`]) that runs
 //!   each minibatch across `n_workers` document shards with deterministic
-//!   merges, five state-of-the-art online-LDA baselines ([`baselines`]),
-//!   and the evaluation harness ([`eval`]).
+//!   merges, the **pipelined parameter streaming** runner
+//!   ([`exec::pipeline`]) that overlaps column prefetch and write-behind
+//!   with compute, five state-of-the-art online-LDA baselines
+//!   ([`baselines`]), and the evaluation harness ([`eval`]).
 //! * **Layer 2/1 (build time, `python/`)** — the dense minibatch EM
 //!   graphs and the Pallas E-step kernels, AOT-lowered to HLO text and
 //!   executed from Rust through PJRT ([`runtime`]). Python never runs on

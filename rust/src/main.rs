@@ -12,6 +12,8 @@
 //!   foem train --corpus data/docword.enron.txt --algorithm ovb --ds 512
 //!   foem train --corpus synth:nytimes --algorithm foem \
 //!        --store-path /tmp/phi.bin --buffer-mb 64 --verbose true
+//!   foem train --corpus synth:pubmed --algorithm foem --store-path /tmp/phi.bin \
+//!        --buffer-mb 64 --pipeline-depth 2 --n-workers 4
 //!   foem info
 
 use anyhow::{Context, Result};
@@ -26,7 +28,10 @@ fn usage() -> ! {
          train keys: --corpus <synth:NAME|PATH> --algorithm <foem|sem|scvb|ovb|ogs|rvb|soi>\n\
          \x20       --k N --ds N --passes N --seed N --eval-every N --verbose true\n\
          \x20       --store-path PATH --buffer-mb N --lambda-k-topics N --config FILE\n\
-         \x20       --n-workers N  (parallel sharded E-step; 1 = serial)"
+         \x20       --n-workers N  (parallel sharded E-step; 1 = serial)\n\
+         \x20       --pipeline-depth N  (software-pipelined staging: prefetch +\n\
+         \x20                            write-behind overlap compute; 0 = off,\n\
+         \x20                            bit-identical serial; foem/sem only)"
     );
     std::process::exit(2);
 }
@@ -96,11 +101,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
         corpus.n_tokens()
     );
     println!(
-        "algorithm {} K={} D_s={} workers={} store={:?}",
+        "algorithm {} K={} D_s={} workers={} pipeline_depth={} store={:?}",
         cfg.algorithm.name(),
         cfg.n_topics,
         cfg.minibatch_docs,
         cfg.n_workers,
+        cfg.pipeline_depth,
         cfg.store
     );
     let mut driver = Driver::new(cfg);
@@ -116,6 +122,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
             "store I/O: {} col reads, {} col writes, {} buffer hits, {} misses",
             io.col_reads, io.col_writes, io.buffer_hits, io.buffer_misses
         );
+        if io.prefetched_cols + io.prefetch_hits + io.wb_writes > 0 {
+            println!(
+                "overlapped I/O: {} cols prefetched, {} prefetch hits, \
+                 {} write-behind flushes",
+                io.prefetched_cols, io.prefetch_hits, io.wb_writes
+            );
+        }
     }
     Ok(())
 }

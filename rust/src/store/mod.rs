@@ -18,16 +18,31 @@ pub mod paged;
 
 /// I/O accounting used by the Table 5 experiment and the coordinator's
 /// metrics.
+///
+/// The first four counters describe the synchronous column path. The last
+/// three describe the overlapped path of the pipelined trainer
+/// ([`crate::exec::pipeline`]): they stay exactly zero unless a backend's
+/// background I/O mode ([`PhiColumnStore::set_async_io`]) is enabled, so
+/// serial runs keep bit-identical stats.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct IoStats {
-    /// Columns read from disk.
+    /// Columns read from disk on the caller's (critical) path.
     pub col_reads: u64,
-    /// Columns written to disk.
+    /// Columns written to disk on the caller's (critical) path.
     pub col_writes: u64,
     /// Column accesses served from the hot buffer.
     pub buffer_hits: u64,
     /// Column accesses that had to touch the backing store.
     pub buffer_misses: u64,
+    /// Columns loaded ahead of use by the background prefetcher.
+    pub prefetched_cols: u64,
+    /// Column reads served from the prefetch cache instead of blocking on
+    /// disk (these do NOT count as `buffer_misses`).
+    pub prefetch_hits: u64,
+    /// Dirty columns flushed by the write-behind thread, off the critical
+    /// path. Timing-dependent upper-bounded by the logical write count
+    /// (superseded versions of a column may be skipped).
+    pub wb_writes: u64,
 }
 
 /// A detached, read-only snapshot of a set of columns — the shared-read
@@ -79,6 +94,26 @@ impl PhiSnapshot {
     #[inline]
     pub fn column_at(&self, idx: usize) -> &[f32] {
         &self.data[idx * self.k..(idx + 1) * self.k]
+    }
+
+    /// Build a snapshot directly from its parts (used by in-memory
+    /// trainers, e.g. `PhiStats::snapshot_columns`, to feed the same
+    /// staged-compute path the stores use). `data` is column-contiguous,
+    /// `words.len() * k` long.
+    pub fn from_parts(k: usize, words: Vec<u32>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(data.len(), words.len() * k);
+        debug_assert!(
+            words.windows(2).all(|w| w[0] < w[1]),
+            "snapshot words must be sorted and distinct"
+        );
+        Self { k, words, data }
+    }
+
+    /// Decompose into `(k, words, data)` — the inverse of
+    /// [`Self::from_parts`], used to move snapshot storage into an
+    /// evaluation view without a copy.
+    pub fn into_parts(self) -> (usize, Vec<u32>, Vec<f32>) {
+        (self.k, self.words, self.data)
     }
 }
 
@@ -143,6 +178,24 @@ pub trait PhiColumnStore {
     /// "Replace most frequent vocabulary word-topic parameter matrix ...
     /// in buffer memory"). A no-op for in-memory stores.
     fn set_hot_words(&mut self, words: &[u32]);
+
+    /// Hint that the given columns will be snapshotted soon — the
+    /// pipelined trainer calls this with the *next* minibatch's local
+    /// vocabulary while the current minibatch computes, so a disk-backed
+    /// store can stage the reads on its background I/O thread. Only
+    /// meaningful after [`Self::set_async_io`] enabled background I/O; a
+    /// no-op otherwise and for in-memory stores.
+    fn prefetch_columns(&mut self, _words: &[u32]) {}
+
+    /// Switch background I/O (prefetch + write-behind) on or off. While
+    /// enabled, column writes are buffered and flushed by a background
+    /// thread and prefetched columns are served without touching disk on
+    /// the caller's path; disabling drains all buffered state back to the
+    /// backing store. Returns `true` if the backend supports the mode
+    /// (in-memory stores return `false` and ignore the call).
+    fn set_async_io(&mut self, _enabled: bool) -> bool {
+        false
+    }
 
     /// Persist all dirty state to the backing store.
     fn flush(&mut self) -> anyhow::Result<()>;

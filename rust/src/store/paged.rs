@@ -18,15 +18,241 @@
 //! columns are read, mutated and written straight back (one read + one
 //! write per visit — exactly the paper's "read and write wth column of
 //! phi only once at each iteration").
+//!
+//! # Background I/O mode (pipelined parameter streaming)
+//!
+//! [`PhiColumnStore::set_async_io`] switches the store into the overlapped
+//! mode the software pipeline (`exec::pipeline`, `rust/DESIGN.md` §7)
+//! runs on. A single background thread then owns **all** disk traffic:
+//!
+//! * **Prefetch** — [`PhiColumnStore::prefetch_columns`] queues the next
+//!   minibatch's columns; the thread loads them into a prefetch cache
+//!   while the current minibatch computes, so the stage-time snapshot
+//!   reads become cache hits (`IoStats::prefetch_hits`) instead of
+//!   blocking disk reads.
+//! * **Write-behind** — column writes land in a versioned pending map and
+//!   are flushed by the thread off the critical path
+//!   (`IoStats::wb_writes`); reads are always served freshest-first
+//!   (pending write → prefetch cache → disk).
+//!
+//! Because the foreground sends requests over a FIFO channel and blocks on
+//! its own reads, the visible read results are exactly the synchronous
+//! ones — overlap changes *when* I/O happens, never *what* a read sees.
+//! With async I/O off (the default), behavior and [`IoStats`] are
+//! bit-identical to the original synchronous store.
 
+use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
 
 use super::{IoStats, PhiColumnStore};
 
 const MAGIC: u64 = 0xF0E3_14DA_0001;
 const HEADER_BYTES: u64 = 24;
+
+fn col_offset(k: usize, w: usize) -> u64 {
+    HEADER_BYTES + (w * k * 4) as u64
+}
+
+/// Uncounted column read used by both the foreground (sync mode) and the
+/// background I/O thread.
+fn raw_read_col(file: &mut File, k: usize, w: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), k);
+    file.seek(SeekFrom::Start(col_offset(k, w))).expect("seek");
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4)
+    };
+    file.read_exact(bytes).expect("column read");
+}
+
+/// Uncounted column write, shared like [`raw_read_col`].
+fn raw_write_col(file: &mut File, k: usize, w: usize, data: &[f32]) {
+    debug_assert_eq!(data.len(), k);
+    file.seek(SeekFrom::Start(col_offset(k, w))).expect("seek");
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    file.write_all(bytes).expect("column write");
+}
+
+/// Where a routed (async-mode) column read was served from.
+#[derive(Debug, Clone, Copy)]
+enum ReadSource {
+    Disk,
+    Prefetched,
+    WriteBuffer,
+}
+
+/// Requests to the background I/O thread. The channel is FIFO and the
+/// foreground is the only sender, which is what makes the overlapped mode
+/// deterministic: a read queued after a write signal for the same column
+/// always observes the flushed state.
+enum IoReq {
+    /// Synchronous read round-trip (the caller blocks on `resp`).
+    Read {
+        w: usize,
+        resp: SyncSender<(Vec<f32>, ReadSource)>,
+    },
+    /// A pending write was enqueued; flush it if `version` is still
+    /// current (superseded versions are skipped — a later signal covers
+    /// the column).
+    WriteSignal { w: u32, version: u64 },
+    /// Load these columns into the prefetch cache.
+    Prefetch(Vec<u32>),
+    /// Flush every pending write, fsync, then ack with the fsync result
+    /// (so an async-mode checkpoint surfaces durability failures exactly
+    /// like the synchronous path).
+    DrainAndSync { ack: SyncSender<std::io::Result<()>> },
+    Shutdown,
+}
+
+/// State shared between the store and its background I/O thread.
+#[derive(Default)]
+struct AsyncShared {
+    /// Write-behind buffer: word -> (version, column). Freshest data for
+    /// a column not in the hot buffer.
+    pending: Mutex<HashMap<u32, (u64, Vec<f32>)>>,
+    /// Prefetch cache: columns staged ahead of use. Entries are served by
+    /// clone, invalidated whenever the column is written, and bounded by
+    /// the size cap in the prefetch handler.
+    prefetched: Mutex<HashMap<u32, Vec<f32>>>,
+    /// Columns loaded by the prefetcher (background reads).
+    prefetched_cols: AtomicU64,
+    /// Columns flushed by the write-behind path (background writes).
+    wb_writes: AtomicU64,
+}
+
+struct AsyncIo {
+    tx: Sender<IoReq>,
+    shared: Arc<AsyncShared>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// Monotonic version for pending writes (MVCC-light: lets the daemon
+    /// skip flushes that a newer write already superseded).
+    next_version: u64,
+}
+
+/// The background I/O loop: sole owner of disk traffic while async mode
+/// is on.
+fn io_daemon(mut file: File, k: usize, rx: Receiver<IoReq>, shared: Arc<AsyncShared>) {
+    let mut buf = vec![0.0f32; k];
+    for req in rx {
+        match req {
+            IoReq::Read { w, resp } => {
+                let from_pending = shared
+                    .pending
+                    .lock()
+                    .unwrap()
+                    .get(&(w as u32))
+                    .map(|(_, col)| col.clone());
+                let reply = if let Some(col) = from_pending {
+                    (col, ReadSource::WriteBuffer)
+                } else if let Some(col) = shared
+                    .prefetched
+                    .lock()
+                    .unwrap()
+                    .get(&(w as u32))
+                    .cloned()
+                {
+                    // Served by CLONE, not removal: a mid-run evaluation
+                    // pass reads many of the same columns the prefetcher
+                    // just staged for the next batch — consuming the
+                    // entries would evict them right before the stage
+                    // that needed them. Entries are dropped on write
+                    // invalidation or the size cap instead.
+                    (col, ReadSource::Prefetched)
+                } else {
+                    raw_read_col(&mut file, k, w, &mut buf);
+                    (buf.clone(), ReadSource::Disk)
+                };
+                let _ = resp.send(reply);
+            }
+            IoReq::WriteSignal { w, version } => {
+                let col = match shared.pending.lock().unwrap().get(&w) {
+                    Some((v, col)) if *v == version => Some(col.clone()),
+                    _ => None, // superseded by a newer write
+                };
+                if let Some(col) = col {
+                    raw_write_col(&mut file, k, w as usize, &col);
+                    shared.wb_writes.fetch_add(1, Ordering::Relaxed);
+                    // Invalidation order matters for the foreground fast
+                    // path (pending first, then prefetched): the stale
+                    // prefetch copy must be gone BEFORE the pending entry
+                    // stops shadowing it.
+                    shared.prefetched.lock().unwrap().remove(&w);
+                    {
+                        let mut pending = shared.pending.lock().unwrap();
+                        if matches!(pending.get(&w), Some((v, _)) if *v == version)
+                        {
+                            pending.remove(&w);
+                        }
+                    }
+                }
+            }
+            IoReq::Prefetch(words) => {
+                {
+                    // The cache is a hint; keep it bounded even if the
+                    // caller never consumes some entries.
+                    let mut pf = shared.prefetched.lock().unwrap();
+                    if pf.len() > 4 * words.len() + 1024 {
+                        pf.clear();
+                    }
+                }
+                for w in words {
+                    if shared.prefetched.lock().unwrap().contains_key(&w) {
+                        continue;
+                    }
+                    // Freshest-first, same as Read: a pending write beats
+                    // the disk copy.
+                    let from_pending = shared
+                        .pending
+                        .lock()
+                        .unwrap()
+                        .get(&w)
+                        .map(|(_, col)| col.clone());
+                    let col = match from_pending {
+                        Some(col) => col,
+                        None => {
+                            raw_read_col(&mut file, k, w as usize, &mut buf);
+                            buf.clone()
+                        }
+                    };
+                    shared.prefetched_cols.fetch_add(1, Ordering::Relaxed);
+                    shared.prefetched.lock().unwrap().insert(w, col);
+                }
+            }
+            IoReq::DrainAndSync { ack } => {
+                loop {
+                    let next = shared
+                        .pending
+                        .lock()
+                        .unwrap()
+                        .iter()
+                        .next()
+                        .map(|(w, (v, col))| (*w, *v, col.clone()));
+                    let Some((w, version, col)) = next else { break };
+                    raw_write_col(&mut file, k, w as usize, &col);
+                    shared.wb_writes.fetch_add(1, Ordering::Relaxed);
+                    // Same invalidation order as WriteSignal: prefetched
+                    // copy first, then the shadowing pending entry.
+                    shared.prefetched.lock().unwrap().remove(&w);
+                    {
+                        let mut pending = shared.pending.lock().unwrap();
+                        if matches!(pending.get(&w), Some((v, _)) if *v == version)
+                        {
+                            pending.remove(&w);
+                        }
+                    }
+                }
+                let _ = ack.send(file.sync_data());
+            }
+            IoReq::Shutdown => break,
+        }
+    }
+}
 
 /// Disk-backed column store with a bounded hot buffer.
 pub struct PagedPhi {
@@ -46,6 +272,8 @@ pub struct PagedPhi {
     stats: IoStats,
     /// Scratch for non-buffered column visits.
     scratch: Vec<f32>,
+    /// Background prefetch/write-behind machinery; `None` = synchronous.
+    async_io: Option<AsyncIo>,
 }
 
 impl PagedPhi {
@@ -83,6 +311,7 @@ impl PagedPhi {
             max_slots,
             stats: IoStats::default(),
             scratch: vec![0.0; k],
+            async_io: None,
         })
     }
 
@@ -109,6 +338,7 @@ impl PagedPhi {
             max_slots,
             stats: IoStats::default(),
             scratch: vec![0.0; k],
+            async_io: None,
         })
     }
 
@@ -124,33 +354,120 @@ impl PagedPhi {
         self.slot_of.len()
     }
 
-    fn col_offset(&self, w: usize) -> u64 {
-        HEADER_BYTES + (w * self.k * 4) as u64
+    /// Whether background prefetch/write-behind is currently on.
+    pub fn async_io_enabled(&self) -> bool {
+        self.async_io.is_some()
     }
 
     fn read_col_from_disk(&mut self, w: usize, out: &mut [f32]) {
         self.stats.col_reads += 1;
-        self.file
-            .seek(SeekFrom::Start(self.col_offset(w)))
-            .expect("seek");
-        let bytes = unsafe {
-            std::slice::from_raw_parts_mut(
-                out.as_mut_ptr() as *mut u8,
-                out.len() * 4,
-            )
-        };
-        self.file.read_exact(bytes).expect("column read");
+        raw_read_col(&mut self.file, self.k, w, out);
     }
 
     fn write_col_to_disk(&mut self, w: usize, data: &[f32]) {
         self.stats.col_writes += 1;
-        self.file
-            .seek(SeekFrom::Start(self.col_offset(w)))
-            .expect("seek");
-        let bytes = unsafe {
-            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-        };
-        self.file.write_all(bytes).expect("column write");
+        raw_write_col(&mut self.file, self.k, w, data);
+    }
+
+    /// Route a non-hot column read: in sync mode straight off disk; in
+    /// async mode freshest-first — pending write, then prefetch cache
+    /// (both served directly from the shared maps, no round trip), then a
+    /// blocking read through the I/O thread. Counts by source — a
+    /// prefetch hit is NOT a buffer miss, which is exactly the overlap
+    /// the pipeline buys.
+    ///
+    /// The foreground fast path is safe because a stale prefetch copy
+    /// only ever exists while the pending entry for the same column
+    /// shadows it: writes invalidate the cache at enqueue time, and the
+    /// I/O thread re-invalidates BEFORE it drops the pending entry.
+    fn fetch_col(&mut self, w: usize, out: &mut [f32], count_miss: bool) {
+        if let Some(aio) = &self.async_io {
+            let served_pending = {
+                let pending = aio.shared.pending.lock().unwrap();
+                match pending.get(&(w as u32)) {
+                    Some((_, col)) => {
+                        out.copy_from_slice(col);
+                        true
+                    }
+                    None => false,
+                }
+            };
+            if served_pending {
+                self.stats.buffer_hits += 1;
+                return;
+            }
+            let served_prefetch = {
+                let prefetched = aio.shared.prefetched.lock().unwrap();
+                match prefetched.get(&(w as u32)) {
+                    Some(col) => {
+                        out.copy_from_slice(col);
+                        true
+                    }
+                    None => false,
+                }
+            };
+            if served_prefetch {
+                self.stats.prefetch_hits += 1;
+                return;
+            }
+            let (tx, rx) = std::sync::mpsc::sync_channel(1);
+            aio.tx
+                .send(IoReq::Read { w, resp: tx })
+                .expect("store I/O thread alive");
+            let (col, src) = rx.recv().expect("store I/O thread reply");
+            out.copy_from_slice(&col);
+            match src {
+                ReadSource::Disk => {
+                    self.stats.col_reads += 1;
+                    if count_miss {
+                        self.stats.buffer_misses += 1;
+                    }
+                }
+                ReadSource::Prefetched => self.stats.prefetch_hits += 1,
+                ReadSource::WriteBuffer => self.stats.buffer_hits += 1,
+            }
+        } else {
+            if count_miss {
+                self.stats.buffer_misses += 1;
+            }
+            self.read_col_from_disk(w, out);
+        }
+    }
+
+    /// Route a non-hot column write: direct in sync mode, write-behind in
+    /// async mode (versioned pending entry + flush signal; any prefetched
+    /// copy of the column is invalidated immediately).
+    fn put_col(&mut self, w: usize, data: &[f32]) {
+        if let Some(aio) = &mut self.async_io {
+            aio.next_version += 1;
+            let version = aio.next_version;
+            aio.shared.prefetched.lock().unwrap().remove(&(w as u32));
+            aio.shared
+                .pending
+                .lock()
+                .unwrap()
+                .insert(w as u32, (version, data.to_vec()));
+            aio.tx
+                .send(IoReq::WriteSignal { w: w as u32, version })
+                .expect("store I/O thread alive");
+        } else {
+            self.write_col_to_disk(w, data);
+        }
+    }
+
+    /// Block until the I/O thread has flushed every pending write and
+    /// fsynced, propagating the fsync result. No-op in sync mode.
+    fn quiesce_async(&self) -> anyhow::Result<()> {
+        if let Some(aio) = &self.async_io {
+            let (ack, ack_rx) = std::sync::mpsc::sync_channel(1);
+            aio.tx
+                .send(IoReq::DrainAndSync { ack })
+                .map_err(|_| anyhow::anyhow!("store I/O thread is gone"))?;
+            ack_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("store I/O thread is gone"))??;
+        }
+        Ok(())
     }
 
     fn evict_slot(&mut self, slot: usize) {
@@ -158,7 +475,7 @@ impl PagedPhi {
         if self.dirty[slot] {
             let col: Vec<f32> =
                 self.buffer[slot * self.k..(slot + 1) * self.k].to_vec();
-            self.write_col_to_disk(w as usize, &col);
+            self.put_col(w as usize, &col);
             self.dirty[slot] = false;
         }
         self.slot_of.remove(&w);
@@ -224,6 +541,9 @@ impl PhiColumnStore for PagedPhi {
         if n_words <= self.n_words {
             return;
         }
+        // Quiesce the I/O thread so the growth below cannot race an
+        // in-flight background read or write.
+        self.quiesce_async().expect("quiesce store I/O thread");
         self.n_words = n_words;
         self.file
             .set_len(HEADER_BYTES + (self.k * n_words * 4) as u64)
@@ -244,11 +564,10 @@ impl PhiColumnStore for PagedPhi {
         }
         // Miss: stream through scratch — read, mutate, write back (Fig. 4
         // lines 8 and 15).
-        self.stats.buffer_misses += 1;
         let mut scratch = std::mem::take(&mut self.scratch);
-        self.read_col_from_disk(w, &mut scratch);
+        self.fetch_col(w, &mut scratch, true);
         let r = f(&mut scratch);
-        self.write_col_to_disk(w, &scratch);
+        self.put_col(w, &scratch);
         self.scratch = scratch;
         r
     }
@@ -260,8 +579,7 @@ impl PhiColumnStore for PagedPhi {
             out.copy_from_slice(&self.buffer[slot * self.k..(slot + 1) * self.k]);
             return;
         }
-        self.stats.buffer_misses += 1;
-        self.read_col_from_disk(w, out);
+        self.fetch_col(w, out, true);
     }
 
     fn store_column(&mut self, w: usize, data: &[f32]) {
@@ -274,7 +592,7 @@ impl PhiColumnStore for PagedPhi {
             return;
         }
         self.stats.buffer_misses += 1;
-        self.write_col_to_disk(w, data);
+        self.put_col(w, data);
     }
 
     fn set_hot_words(&mut self, words: &[u32]) {
@@ -313,12 +631,66 @@ impl PhiColumnStore for PagedPhi {
                 }
             };
             let mut col = vec![0.0f32; self.k];
-            self.read_col_from_disk(w as usize, &mut col);
+            self.fetch_col(w as usize, &mut col, false);
             self.buffer[slot * self.k..(slot + 1) * self.k].copy_from_slice(&col);
             self.word_of_slot[slot] = w;
             self.dirty[slot] = false;
             self.slot_of.insert(w, slot);
         }
+    }
+
+    fn prefetch_columns(&mut self, words: &[u32]) {
+        let Some(aio) = &self.async_io else { return };
+        // Hot columns never touch the daemon, so prefetching them would
+        // only orphan cache entries.
+        let wanted: Vec<u32> = words
+            .iter()
+            .copied()
+            .filter(|w| {
+                (*w as usize) < self.n_words && !self.slot_of.contains_key(w)
+            })
+            .collect();
+        if !wanted.is_empty() {
+            let _ = aio.tx.send(IoReq::Prefetch(wanted));
+        }
+    }
+
+    fn set_async_io(&mut self, enabled: bool) -> bool {
+        if enabled {
+            if self.async_io.is_none() {
+                let file =
+                    self.file.try_clone().expect("clone store file handle");
+                let shared = Arc::new(AsyncShared::default());
+                let worker_shared = Arc::clone(&shared);
+                let (tx, rx) = std::sync::mpsc::channel();
+                let k = self.k;
+                let handle = std::thread::Builder::new()
+                    .name("phi-io".into())
+                    .spawn(move || io_daemon(file, k, rx, worker_shared))
+                    .expect("spawn store I/O thread");
+                self.async_io = Some(AsyncIo {
+                    tx,
+                    shared,
+                    handle: Some(handle),
+                    next_version: 0,
+                });
+            }
+        } else if let Some(mut aio) = self.async_io.take() {
+            // Drain the write-behind buffer, then stop the thread and fold
+            // its counters into the resident stats.
+            let (ack, ack_rx) = std::sync::mpsc::sync_channel(1);
+            if aio.tx.send(IoReq::DrainAndSync { ack }).is_ok() {
+                let _ = ack_rx.recv();
+            }
+            let _ = aio.tx.send(IoReq::Shutdown);
+            if let Some(h) = aio.handle.take() {
+                let _ = h.join();
+            }
+            self.stats.prefetched_cols +=
+                aio.shared.prefetched_cols.load(Ordering::Relaxed);
+            self.stats.wb_writes += aio.shared.wb_writes.load(Ordering::Relaxed);
+        }
+        true
     }
 
     fn flush(&mut self) -> anyhow::Result<()> {
@@ -331,6 +703,18 @@ impl PhiColumnStore for PagedPhi {
             })
             .map(|(s, &w)| (s, w))
             .collect();
+        if self.async_io.is_some() {
+            // Route the hot-buffer write-backs through the write-behind
+            // path, then drain everything and fsync on the I/O thread.
+            for (slot, w) in slots {
+                let col: Vec<f32> =
+                    self.buffer[slot * self.k..(slot + 1) * self.k].to_vec();
+                self.put_col(w as usize, &col);
+                self.dirty[slot] = false;
+            }
+            self.quiesce_async()?;
+            return Ok(());
+        }
         for (slot, w) in slots {
             let col: Vec<f32> =
                 self.buffer[slot * self.k..(slot + 1) * self.k].to_vec();
@@ -342,12 +726,20 @@ impl PhiColumnStore for PagedPhi {
     }
 
     fn io_stats(&self) -> IoStats {
-        self.stats
+        let mut s = self.stats;
+        if let Some(aio) = &self.async_io {
+            s.prefetched_cols += aio.shared.prefetched_cols.load(Ordering::Relaxed);
+            s.wb_writes += aio.shared.wb_writes.load(Ordering::Relaxed);
+        }
+        s
     }
 }
 
 impl Drop for PagedPhi {
     fn drop(&mut self) {
+        // Stop the I/O thread first (drains pending writes), then persist
+        // whatever is still dirty in the hot buffer.
+        self.set_async_io(false);
         let _ = self.flush();
     }
 }
@@ -355,7 +747,6 @@ impl Drop for PagedPhi {
 #[cfg(test)]
 mod tests {
     use super::*;
-    
 
     fn new_store(k: usize, w: usize, buf_cols: usize) -> (crate::util::TempDir, PagedPhi) {
         let dir = crate::util::TempDir::new("t");
@@ -376,6 +767,10 @@ mod tests {
         // reads.
         assert!(s.io_stats().col_reads >= 5);
         assert_eq!(s.io_stats().col_writes, 2);
+        // Background-I/O counters stay zero in synchronous mode.
+        assert_eq!(s.io_stats().prefetched_cols, 0);
+        assert_eq!(s.io_stats().prefetch_hits, 0);
+        assert_eq!(s.io_stats().wb_writes, 0);
     }
 
     #[test]
@@ -480,5 +875,76 @@ mod tests {
             assert!((col[0] - truth[w][0]).abs() < 1e-4, "w={w}");
             assert!((col[1] - truth[w][1]).abs() < 1e-4, "w={w}");
         }
+    }
+
+    #[test]
+    fn async_io_round_trip_prefetch_and_write_behind() {
+        let (_d, mut s) = new_store(4, 16, 2);
+        assert!(s.set_async_io(true));
+        assert!(s.async_io_enabled());
+        s.prefetch_columns(&[3, 5, 7]);
+        // A write-behind write followed by a read must see the new data
+        // (served from the pending buffer or the flushed file).
+        s.with_column(3, |c| c.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]));
+        assert_eq!(s.read_column(3), vec![1.0, 2.0, 3.0, 4.0]);
+        // A prefetched, never-written column reads its disk value.
+        assert_eq!(s.read_column(5), vec![0.0; 4]);
+        s.flush().unwrap();
+        assert!(s.set_async_io(false));
+        let io = s.io_stats();
+        assert!(io.prefetched_cols >= 3, "{io:?}");
+        assert!(io.prefetch_hits >= 1, "{io:?}");
+        assert!(io.wb_writes >= 1, "{io:?}");
+        // Back in synchronous mode the data is durable.
+        assert_eq!(s.read_column(3), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn async_io_matches_sync_contents_under_churn() {
+        // Same churn as the sync test, with the background I/O mode on:
+        // prefetches, write-behind, hot-set evictions and reads must never
+        // lose or reorder an update.
+        let (_d, mut s) = new_store(2, 20, 4);
+        s.set_async_io(true);
+        let mut truth = vec![[0.0f32; 2]; 20];
+        let mut rng = crate::util::Rng::new(5);
+        for round in 0..30 {
+            let hot: Vec<u32> =
+                (0..4).map(|_| rng.below(20) as u32).collect();
+            s.set_hot_words(&hot);
+            let ahead: Vec<u32> =
+                (0..6).map(|_| rng.below(20) as u32).collect();
+            s.prefetch_columns(&ahead);
+            for _ in 0..10 {
+                let w = rng.below(20);
+                let inc = (round + 1) as f32;
+                s.with_column(w, |c| {
+                    c[0] += inc;
+                    c[1] += 0.5;
+                });
+                truth[w][0] += inc;
+                truth[w][1] += 0.5;
+            }
+        }
+        s.flush().unwrap();
+        s.set_async_io(false);
+        for w in 0..20 {
+            let col = s.read_column(w);
+            assert!((col[0] - truth[w][0]).abs() < 1e-4, "w={w}");
+            assert!((col[1] - truth[w][1]).abs() < 1e-4, "w={w}");
+        }
+    }
+
+    #[test]
+    fn async_io_survives_capacity_growth() {
+        let (_d, mut s) = new_store(2, 3, 1);
+        s.set_async_io(true);
+        s.with_column(2, |c| c.copy_from_slice(&[1.0, 1.0]));
+        s.ensure_capacity(10);
+        assert_eq!(s.n_words(), 10);
+        assert_eq!(s.read_column(9), vec![0.0, 0.0]);
+        assert_eq!(s.read_column(2), vec![1.0, 1.0]);
+        s.set_async_io(false);
+        assert_eq!(s.read_column(2), vec![1.0, 1.0]);
     }
 }

@@ -181,6 +181,55 @@ impl<'a> Iterator for CorpusStream<'a> {
     }
 }
 
+/// Bounded lookahead over a minibatch stream: the framing seam of the
+/// software pipeline ([`crate::exec::pipeline`]). `next` yields batches in
+/// order while keeping up to `ahead` upcoming batches framed, so the
+/// pipeline can [`Lookahead::peek`] at batch `t+1..t+d`'s local
+/// vocabularies and hand them to the stores' prefetchers while batch `t`
+/// computes.
+pub struct Lookahead<I: Iterator<Item = Minibatch>> {
+    inner: I,
+    buf: std::collections::VecDeque<Minibatch>,
+    ahead: usize,
+}
+
+impl<I: Iterator<Item = Minibatch>> Lookahead<I> {
+    pub fn new(inner: I, ahead: usize) -> Self {
+        Self { inner, buf: std::collections::VecDeque::new(), ahead }
+    }
+
+    /// The `i`-th upcoming minibatch: after `next` has returned batch
+    /// `t`, `peek(0)` is batch `t+1`. Only the `ahead` batches past the
+    /// cursor are framed; `i >= ahead` or stream exhaustion yields
+    /// `None`.
+    pub fn peek(&self, i: usize) -> Option<&Minibatch> {
+        self.buf.get(i)
+    }
+
+    /// How many upcoming batches are currently framed.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+impl<I: Iterator<Item = Minibatch>> Iterator for Lookahead<I> {
+    type Item = Minibatch;
+
+    fn next(&mut self) -> Option<Minibatch> {
+        let out = match self.buf.pop_front() {
+            Some(mb) => Some(mb),
+            None => self.inner.next(),
+        };
+        while self.buf.len() < self.ahead {
+            match self.inner.next() {
+                Some(mb) => self.buf.push_back(mb),
+                None => break,
+            }
+        }
+        out
+    }
+}
+
 /// Endless stream: cycles passes over the corpus forever, reshuffling each
 /// pass when configured. Minibatch indices keep increasing across passes
 /// so learning-rate schedules keep decaying — this is the "lifelong topic
@@ -364,6 +413,40 @@ mod tests {
         };
         assert!((mass(&plain) - mass(&shuf)).abs() < 1e-6);
         assert_ne!(plain[0].docs.word_ids, shuf[0].docs.word_ids);
+    }
+
+    #[test]
+    fn lookahead_peeks_without_reordering() {
+        let c = corpus();
+        let cfg = StreamConfig { minibatch_docs: 50, ..Default::default() };
+        let plain: Vec<_> = CorpusStream::new(&c, cfg).collect();
+        let mut look = Lookahead::new(CorpusStream::new(&c, cfg), 2);
+        let mut seen = Vec::new();
+        while let Some(mb) = look.next() {
+            // peek(i) must be exactly the batches next() will yield.
+            for i in 0..2 {
+                if let Some(up) = look.peek(i) {
+                    assert_eq!(up.index, mb.index + i + 1);
+                }
+            }
+            assert!(look.buffered() <= 2);
+            seen.push(mb.index);
+        }
+        assert_eq!(
+            seen,
+            plain.iter().map(|b| b.index).collect::<Vec<_>>(),
+            "lookahead must not reorder or drop batches"
+        );
+        assert_eq!(look.peek(0).map(|b| b.index), None);
+    }
+
+    #[test]
+    fn lookahead_zero_is_a_plain_iterator() {
+        let c = corpus();
+        let cfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+        let look = Lookahead::new(CorpusStream::new(&c, cfg), 0);
+        assert!(look.peek(0).is_none());
+        assert_eq!(look.count(), 4);
     }
 
     #[test]
