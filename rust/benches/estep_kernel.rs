@@ -1,0 +1,276 @@
+//! E-step working-set bench: the slot-compressed responsibility arena
+//! (`em::resp`, O(NNZ·S)) vs the historical dense `nnz × K` buffer, on
+//! the same scheduled exclude/recompute/renormalize sweep — the Table 3
+//! space/time trade the arena PR targets. One bench iteration is one
+//! minibatch-equivalent: reset + one-hot init + `SWEEPS` scheduled
+//! sweeps over every word, with identical float math and identical
+//! selections on both sides (verified bitwise before timing).
+//!
+//! Emits `BENCH_estep.json` lines (per-impl rows plus a summary row with
+//! the bytes ratio and speedup per configuration) so the perf trajectory
+//! accumulates across PRs:
+//!
+//!     cargo bench --bench estep_kernel
+//!     scripts/bench.sh   # writes BENCH_estep.json at the repo root
+
+use foem::em::resp::{self, RespArena, SweepKernel};
+use foem::em::schedule::TopicSubset;
+use foem::util::bench::{black_box, run};
+use foem::util::Rng;
+use std::time::Duration;
+
+const EXPLORE_SLOTS: usize = 4;
+const SWEEPS: usize = 3;
+const WORDS: usize = 128;
+const ENTRIES_PER_WORD: usize = 32;
+const DOCS: usize = 512;
+
+struct Workload {
+    k: usize,
+    nnz: usize,
+    doc_ids: Vec<u32>,
+    counts: Vec<f32>,
+    init_topics: Vec<usize>,
+    /// Residual columns driving per-word topic selection, word-major.
+    res_cols: Vec<f32>,
+    /// Initial phi columns, word-major.
+    phi_cols: Vec<f32>,
+    phisum0: Vec<f32>,
+}
+
+impl Workload {
+    fn new(k: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let nnz = WORDS * ENTRIES_PER_WORD;
+        Self {
+            k,
+            nnz,
+            doc_ids: (0..nnz).map(|e| ((e * 7) % DOCS) as u32).collect(),
+            counts: (0..nnz).map(|e| (e % 3 + 1) as f32).collect(),
+            init_topics: (0..nnz).map(|_| rng.below(k)).collect(),
+            res_cols: (0..WORDS * k).map(|_| rng.next_f32() * 4.0).collect(),
+            phi_cols: (0..WORDS * k)
+                .map(|_| rng.next_f32() * 2.0 + 0.1)
+                .collect(),
+            phisum0: (0..k).map(|_| rng.next_f32() * 100.0 + 10.0).collect(),
+        }
+    }
+
+    /// The word's selection for a given sweep: top-`n_sel` residuals with
+    /// the last slot swapped for a rotating pseudo-exploration topic, so
+    /// the scheduled support widens across sweeps like in real FOEM.
+    fn select(&self, w: usize, sweep: usize, n_sel: usize, sel: &mut Vec<u32>) {
+        resp::top_n_indices(
+            &self.res_cols[w * self.k..(w + 1) * self.k],
+            n_sel,
+            sel,
+        );
+        if n_sel < self.k {
+            let cand = ((w * 31 + sweep * 17 + 5) % self.k) as u32;
+            if !sel.contains(&cand) {
+                let last = sel.len() - 1;
+                sel[last] = cand;
+            }
+        }
+    }
+}
+
+/// Reusable dense-baseline state (the historical layout).
+struct DenseState {
+    mu: Vec<f32>,
+    theta: Vec<f32>,
+    phi: Vec<f32>,
+    phisum: Vec<f32>,
+}
+
+/// One minibatch-equivalent on the dense `nnz × K` buffer — the
+/// pre-arena code shape: zero the matrix, one-hot init, scheduled
+/// exclude/recompute/include sweeps with K-strided row access.
+fn run_dense(wl: &Workload, st: &mut DenseState, n_sel: usize) -> f32 {
+    let k = wl.k;
+    st.mu.clear();
+    st.mu.resize(wl.nnz * k, 0.0);
+    st.theta.clear();
+    st.theta.resize(DOCS * k, 0.0);
+    st.phi.clear();
+    st.phi.extend_from_slice(&wl.phi_cols);
+    st.phisum.clear();
+    st.phisum.extend_from_slice(&wl.phisum0);
+    for e in 0..wl.nnz {
+        st.mu[e * k + wl.init_topics[e]] = 1.0;
+        st.theta[wl.doc_ids[e] as usize * k + wl.init_topics[e]] +=
+            wl.counts[e];
+    }
+    let (am1, bm1, wbm1) = (0.01f32, 0.01f32, 0.01 * WORDS as f32);
+    let mut sel: Vec<u32> = Vec::with_capacity(n_sel);
+    let mut scratch = vec![0.0f32; n_sel];
+    let mut fresh = vec![0.0f32; n_sel];
+    for sweep in 0..SWEEPS {
+        for w in 0..WORDS {
+            wl.select(w, sweep, n_sel, &mut sel);
+            fresh.iter_mut().for_each(|x| *x = 0.0);
+            let col = &mut st.phi[w * k..(w + 1) * k];
+            let base = w * ENTRIES_PER_WORD;
+            for off in 0..ENTRIES_PER_WORD {
+                let e = base + off;
+                let d = wl.doc_ids[e] as usize;
+                let c = wl.counts[e];
+                let mu_row = &mut st.mu[e * k..(e + 1) * k];
+                let th = &mut st.theta[d * k..(d + 1) * k];
+                let mut m_old = 0.0f32;
+                for &kk in &sel {
+                    m_old += mu_row[kk as usize];
+                }
+                if m_old <= 1e-12 {
+                    continue;
+                }
+                let mut z = 0.0f32;
+                for (j, &kk) in sel.iter().enumerate() {
+                    let kk = kk as usize;
+                    let excl = c * mu_row[kk];
+                    let u = (th[kk] - excl + am1) * (col[kk] - excl + bm1)
+                        / (st.phisum[kk] - excl + wbm1);
+                    scratch[j] = u.max(0.0);
+                    z += scratch[j];
+                }
+                if z <= 0.0 {
+                    continue;
+                }
+                let renorm = m_old / z;
+                for (j, &kk) in sel.iter().enumerate() {
+                    let kk = kk as usize;
+                    let new = scratch[j] * renorm;
+                    let delta = c * (new - mu_row[kk]);
+                    th[kk] += delta;
+                    col[kk] += delta;
+                    st.phisum[kk] += delta;
+                    fresh[j] += delta.abs();
+                    mu_row[kk] = new;
+                }
+            }
+        }
+    }
+    st.theta.iter().sum()
+}
+
+/// Reusable arena state.
+struct ArenaState {
+    mu: RespArena,
+    kern: SweepKernel,
+    theta: Vec<f32>,
+    phi: Vec<f32>,
+    phisum: Vec<f32>,
+}
+
+/// The same minibatch-equivalent through `em::resp` (shared kernel over
+/// slot-compressed lanes).
+fn run_arena(wl: &Workload, st: &mut ArenaState, n_sel: usize) -> f32 {
+    let k = wl.k;
+    st.mu.reset(k, wl.nnz, resp::lane_capacity(n_sel, EXPLORE_SLOTS, k));
+    st.theta.clear();
+    st.theta.resize(DOCS * k, 0.0);
+    st.phi.clear();
+    st.phi.extend_from_slice(&wl.phi_cols);
+    st.phisum.clear();
+    st.phisum.extend_from_slice(&wl.phisum0);
+    for e in 0..wl.nnz {
+        st.mu.set_one_hot(e, wl.init_topics[e]);
+        st.theta[wl.doc_ids[e] as usize * k + wl.init_topics[e]] +=
+            wl.counts[e];
+    }
+    let (am1, bm1, wbm1) = (0.01f32, 0.01f32, 0.01 * WORDS as f32);
+    let mut sel: Vec<u32> = Vec::with_capacity(n_sel);
+    let mut fresh = vec![0.0f32; n_sel];
+    for sweep in 0..SWEEPS {
+        for w in 0..WORDS {
+            wl.select(w, sweep, n_sel, &mut sel);
+            fresh.iter_mut().for_each(|x| *x = 0.0);
+            let col = &mut st.phi[w * k..(w + 1) * k];
+            let base = w * ENTRIES_PER_WORD;
+            resp::sweep_word(
+                &mut st.mu,
+                &mut st.kern,
+                &sel,
+                base,
+                &wl.doc_ids[base..base + ENTRIES_PER_WORD],
+                &wl.counts[base..base + ENTRIES_PER_WORD],
+                &mut st.theta,
+                col,
+                &mut st.phisum,
+                am1,
+                bm1,
+                wbm1,
+                &mut fresh,
+            );
+        }
+    }
+    st.theta.iter().sum()
+}
+
+fn main() {
+    let budget = Duration::from_millis(900);
+    println!(
+        "== E-step working set: dense nnz*K vs responsibility arena \
+         (NNZ={}, {SWEEPS} sweeps) ==",
+        WORDS * ENTRIES_PER_WORD
+    );
+    for &k in &[64usize, 256, 1024] {
+        for (label, subset) in
+            [("fixed10", TopicSubset::Fixed(10)), ("all", TopicSubset::All)]
+        {
+            let n_sel = subset.size(k);
+            let wl = Workload::new(k, 7 + k as u64);
+            let mut ds = DenseState {
+                mu: Vec::new(),
+                theta: Vec::new(),
+                phi: Vec::new(),
+                phisum: Vec::new(),
+            };
+            let mut ar = ArenaState {
+                mu: RespArena::new(),
+                kern: SweepKernel::new(),
+                theta: Vec::new(),
+                phi: Vec::new(),
+                phisum: Vec::new(),
+            };
+            // Bit-identity guard: both sides must produce the same
+            // numbers before their times mean anything.
+            let cd = run_dense(&wl, &mut ds, n_sel);
+            let ca = run_arena(&wl, &mut ar, n_sel);
+            assert_eq!(
+                cd.to_bits(),
+                ca.to_bits(),
+                "dense/arena diverged at k={k} {label}"
+            );
+            let dense_bytes = wl.nnz * k * 4;
+            let arena_bytes = ar.mu.bytes();
+
+            let rd = run(&format!("estep_dense_k{k}_{label}"), budget, || {
+                black_box(run_dense(&wl, &mut ds, n_sel));
+            });
+            let ra = run(&format!("estep_arena_k{k}_{label}"), budget, || {
+                black_box(run_arena(&wl, &mut ar, n_sel));
+            });
+
+            for (imp, rep, bytes) in
+                [("dense", &rd, dense_bytes), ("arena", &ra, arena_bytes)]
+            {
+                println!(
+                    "BENCH_estep.json {{\"bench\":\"estep_kernel\",\
+                     \"k\":{k},\"subset\":\"{label}\",\"impl\":\"{imp}\",\
+                     \"mean_ns\":{:.0},\"p50_ns\":{:.0},\
+                     \"resp_bytes\":{bytes},\"entries\":{},\
+                     \"sweeps\":{SWEEPS}}}",
+                    rep.mean_ns, rep.p50_ns, wl.nnz
+                );
+            }
+            println!(
+                "BENCH_estep.json {{\"bench\":\"estep_kernel_summary\",\
+                 \"k\":{k},\"subset\":\"{label}\",\
+                 \"resp_bytes_ratio\":{:.2},\"speedup\":{:.3}}}",
+                dense_bytes as f64 / arena_bytes as f64,
+                rd.mean_ns / ra.mean_ns
+            );
+        }
+    }
+}

@@ -1,24 +1,27 @@
-//! Benchmarks of the dynamic scheduler (§3.1): the `O(K)` partial
-//! top-lambda_k selection vs a full sort, and residual bookkeeping.
+//! Benchmarks of the dynamic-scheduling primitives (§3.1) as the
+//! trainers actually run them: the `O(K)` scan-based top-lambda_k topic
+//! selection (`resp::top_n_indices`) vs a full sort, and the per-sweep
+//! word ordering by resident residual totals.
 //!
 //!     cargo bench --bench scheduling
 
-use foem::em::schedule::{ResidualScheduler, TopicSubset};
+use foem::em::resp::top_n_indices;
+use foem::em::schedule::TopicSubset;
 use foem::util::bench::{black_box, run};
 use foem::util::Rng;
 use std::time::Duration;
 
 fn main() {
     let budget = Duration::from_millis(600);
-    println!("== top-10 topic selection: partial select vs full sort ==");
+    println!("== top-10 topic selection: linear scan vs full sort ==");
     for &k in &[64usize, 256, 1024, 4096, 16384] {
         let mut rng = Rng::new(1);
         let res: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
-        let mut sched = ResidualScheduler::new(k, 1);
-        sched.set_word_residuals(0, &res);
-        run(&format!("partial_select_k{k}"), budget, || {
-            let top = sched.top_topics(0, TopicSubset::Fixed(10));
-            black_box(top[0]);
+        let n = TopicSubset::Fixed(10).size(k);
+        let mut sel: Vec<u32> = Vec::with_capacity(n);
+        run(&format!("scan_select_k{k}"), budget, || {
+            top_n_indices(black_box(&res), n, &mut sel);
+            black_box(sel[0]);
         });
         let res2 = res.clone();
         run(&format!("full_sort_k{k}"), budget, || {
@@ -30,28 +33,39 @@ fn main() {
         });
     }
 
-    println!("\n== per-sweep word ordering (W_s local words) ==");
+    println!("\n== per-sweep word ordering (W_s local words, by r_w) ==");
+    // The trainers sort a hoisted index Vec by the resident residual
+    // totals each sweep (Eq. 37) — this is that loop, verbatim.
     for &ws in &[512usize, 2048, 8192] {
         let mut rng = Rng::new(2);
-        let mut sched = ResidualScheduler::new(8, ws);
-        for lw in 0..ws {
-            let res: Vec<f32> = (0..8).map(|_| rng.next_f32()).collect();
-            sched.set_word_residuals(lw, &res);
-        }
+        let r_totals: Vec<f32> = (0..ws).map(|_| rng.next_f32()).collect();
+        let mut order: Vec<u32> = Vec::with_capacity(ws);
         run(&format!("word_order_ws{ws}"), budget, || {
-            let order = sched.word_order(1.0);
-            black_box(order.len());
+            order.clear();
+            order.extend(0..ws as u32);
+            order.sort_unstable_by(|&a, &b| {
+                let ra = r_totals[a as usize];
+                let rb = r_totals[b as usize];
+                rb.partial_cmp(&ra).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            black_box(order[0]);
         });
     }
 
-    println!("\n== residual update (accumulate + overwrite) ==");
+    println!("\n== selection at TopicSubset sizes ==");
     for &k in &[256usize, 1024] {
         let mut rng = Rng::new(3);
-        let mut sched = ResidualScheduler::new(k, 64);
-        let fresh: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
-        run(&format!("residual_set_k{k}"), budget, || {
-            sched.set_word_residuals(7, black_box(&fresh));
-            black_box(sched.word_total(7));
-        });
+        let res: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+        for (label, subset) in [
+            ("fixed10", TopicSubset::Fixed(10)),
+            ("frac10", TopicSubset::Fraction(0.1)),
+        ] {
+            let n = subset.size(k);
+            let mut sel: Vec<u32> = Vec::with_capacity(n);
+            run(&format!("select_{label}_k{k}"), budget, || {
+                top_n_indices(black_box(&res), n, &mut sel);
+                black_box(sel.len());
+            });
+        }
     }
 }

@@ -183,6 +183,7 @@ impl OnlineLda for Ogs {
             seconds: timer.seconds(),
             train_ll: ll,
             tokens,
+            ..Default::default()
         }
     }
 

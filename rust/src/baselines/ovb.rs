@@ -235,6 +235,7 @@ impl OnlineLda for Ovb {
             seconds: timer.seconds(),
             train_ll: ll,
             tokens,
+            ..Default::default()
         }
     }
 

@@ -210,6 +210,7 @@ impl OnlineLda for Soi {
             seconds: timer.seconds(),
             train_ll: ll,
             tokens,
+            ..Default::default()
         }
     }
 

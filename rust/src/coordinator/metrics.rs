@@ -15,6 +15,11 @@ pub struct BatchRecord {
     pub elapsed: f64,
     /// Predictive perplexity if an eval fired after this minibatch.
     pub eval_perplexity: Option<f64>,
+    /// Responsibility-arena bytes of this minibatch (O(NNZ·S) working
+    /// set, summed over concurrent shard workers).
+    pub resp_bytes: usize,
+    /// Auxiliary per-minibatch scratch bytes.
+    pub scratch_bytes: usize,
 }
 
 /// Aggregated run metrics.
@@ -23,6 +28,10 @@ pub struct Metrics {
     pub records: Vec<BatchRecord>,
     pub total_tokens: f64,
     pub total_seconds: f64,
+    /// Largest per-minibatch responsibility working set seen in the run.
+    pub peak_resp_bytes: usize,
+    /// Largest per-minibatch auxiliary scratch seen in the run.
+    pub peak_scratch_bytes: usize,
 }
 
 impl Metrics {
@@ -38,6 +47,9 @@ impl Metrics {
     ) {
         self.total_tokens += report.tokens;
         self.total_seconds += report.seconds;
+        self.peak_resp_bytes = self.peak_resp_bytes.max(report.resp_bytes);
+        self.peak_scratch_bytes =
+            self.peak_scratch_bytes.max(report.scratch_bytes);
         self.records.push(BatchRecord {
             index,
             inner_iters: report.inner_iters,
@@ -46,6 +58,8 @@ impl Metrics {
             train_perplexity: report.train_perplexity(),
             elapsed: self.total_seconds,
             eval_perplexity,
+            resp_bytes: report.resp_bytes,
+            scratch_bytes: report.scratch_bytes,
         });
     }
 
@@ -79,11 +93,12 @@ impl Metrics {
     /// CSV dump (header + rows) for external plotting.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "batch,inner_iters,seconds,tokens,train_ppx,elapsed,eval_ppx\n",
+            "batch,inner_iters,seconds,tokens,train_ppx,elapsed,eval_ppx,\
+             resp_bytes,scratch_bytes\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{:.6},{},{:.3},{:.6},{}\n",
+                "{},{},{:.6},{},{:.3},{:.6},{},{},{}\n",
                 r.index,
                 r.inner_iters,
                 r.seconds,
@@ -93,6 +108,8 @@ impl Metrics {
                 r.eval_perplexity
                     .map(|p| format!("{p:.3}"))
                     .unwrap_or_default(),
+                r.resp_bytes,
+                r.scratch_bytes,
             ));
         }
         out
@@ -104,7 +121,14 @@ mod tests {
     use super::*;
 
     fn report(seconds: f64, tokens: f64) -> MinibatchReport {
-        MinibatchReport { inner_iters: 3, seconds, train_ll: -tokens, tokens }
+        MinibatchReport {
+            inner_iters: 3,
+            seconds,
+            train_ll: -tokens,
+            tokens,
+            resp_bytes: tokens as usize,
+            scratch_bytes: 2 * tokens as usize,
+        }
     }
 
     #[test]
@@ -116,6 +140,8 @@ mod tests {
         assert!((m.total_tokens - 400.0).abs() < 1e-9);
         assert!((m.tokens_per_second() - 400.0).abs() < 1e-6);
         assert!((m.mean_inner_iters() - 3.0).abs() < 1e-9);
+        assert_eq!(m.peak_resp_bytes, 300);
+        assert_eq!(m.peak_scratch_bytes, 600);
     }
 
     #[test]

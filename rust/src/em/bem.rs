@@ -125,6 +125,7 @@ impl Bem {
             seconds: timer.seconds(),
             train_ll: last_ll,
             tokens,
+            ..Default::default()
         }
     }
 

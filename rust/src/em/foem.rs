@@ -27,6 +27,7 @@
 //! Resident state is O(K + W): the topic totals `phisum` and the
 //! per-word residual totals `r_w` (Eq. 37).
 
+use super::resp::{self, RespArena, SweepKernel};
 use super::schedule::TopicSubset;
 use super::{MinibatchReport, SsDelta};
 use crate::corpus::vocab::VocabGrowth;
@@ -117,45 +118,12 @@ pub struct Foem<S: PhiColumnStore> {
     rng: Rng,
     /// Inner iterations of the last minibatch (diagnostics).
     pub last_inner_iters: usize,
-    /// Grow-only scratch reused across minibatches (mu, theta) — avoids a
-    /// multi-MB allocate+zero on every minibatch (§Perf).
-    mu_scratch: Vec<f32>,
+    /// Grow-only scratch reused across minibatches (responsibility
+    /// arena, sweep kernel, theta) — avoids a multi-MB allocate+zero on
+    /// every minibatch (§Perf, `rust/DESIGN.md` §8).
+    resp_scratch: RespArena,
+    kern_scratch: SweepKernel,
     theta_scratch: Vec<f32>,
-}
-
-/// Scan-based top-`n` selection: one pass over `vals`, maintaining the
-/// current top set in `out` (descending-ish, unordered). ~K comparisons
-/// with a tiny constant — measurably faster than quickselect on an index
-/// array for the n=10 regime FOEM lives in (§Perf).
-#[inline]
-fn top_n_indices(vals: &[f32], n: usize, out: &mut Vec<u32>) {
-    out.clear();
-    if n >= vals.len() {
-        out.extend(0..vals.len() as u32);
-        return;
-    }
-    // Seed with the first n indices, tracking the minimum.
-    let mut min_pos = 0usize;
-    for i in 0..n {
-        out.push(i as u32);
-        if vals[i] < vals[out[min_pos] as usize] {
-            min_pos = i;
-        }
-    }
-    let mut min_val = vals[out[min_pos] as usize];
-    for (i, &v) in vals.iter().enumerate().skip(n) {
-        if v > min_val {
-            out[min_pos] = i as u32;
-            // Re-find the minimum of the small set.
-            min_pos = 0;
-            for j in 1..n {
-                if vals[out[j] as usize] < vals[out[min_pos] as usize] {
-                    min_pos = j;
-                }
-            }
-            min_val = vals[out[min_pos] as usize];
-        }
-    }
 }
 
 impl<S: PhiColumnStore> Foem<S> {
@@ -182,7 +150,8 @@ impl<S: PhiColumnStore> Foem<S> {
             growth: VocabGrowth::new(),
             rng: Rng::new(seed),
             last_inner_iters: 0,
-            mu_scratch: Vec::new(),
+            resp_scratch: RespArena::new(),
+            kern_scratch: SweepKernel::new(),
             theta_scratch: Vec::new(),
         }
     }
@@ -268,14 +237,17 @@ impl<S: PhiColumnStore> Foem<S> {
         let nnz = vm.nnz();
         let tokens = mb.docs.total_tokens();
 
-        // Local state: responsibilities (vocab-major entry order) and
-        // local doc-topic stats. mu rows start one-hot, so the paper's
-        // K×NNZ_s responsibility matrix is materialized dense here (as in
-        // Table 3's FOEM space row) but only the scheduled coordinates
-        // are ever rewritten. Buffers are reused across minibatches.
-        let mut mu = std::mem::take(&mut self.mu_scratch);
-        mu.clear();
-        mu.resize(nnz * k, 0.0);
+        // Local state: slot-compressed responsibilities (vocab-major
+        // entry order) and local doc-topic stats. Only the scheduled
+        // coordinates of an entry are ever written, so the arena holds
+        // them in O(NNZ_s·S) lanes instead of the Table 3 dense
+        // K×NNZ_s matrix — bit-identical semantics, see `em::resp`.
+        // Buffers are reused across minibatches.
+        let n_sel = self.cfg.topic_subset.size(k);
+        let lane_cap = resp::lane_capacity(n_sel, self.cfg.explore_slots, k);
+        let mut mu = std::mem::take(&mut self.resp_scratch);
+        mu.reset(k, nnz, lane_cap);
+        let mut kern = std::mem::take(&mut self.kern_scratch);
         let mut theta = std::mem::take(&mut self.theta_scratch);
         theta.clear();
         theta.resize(mb.docs.n_docs * k, 0.0);
@@ -303,7 +275,7 @@ impl<S: PhiColumnStore> Foem<S> {
                         let c = vm.counts[i];
                         let topic = rng.below(k);
                         assigned.push(topic as u32);
-                        mu[(e_base + off) * k + topic] = 1.0;
+                        mu.set_one_hot(e_base + off, topic);
                         theta[d * k + topic] += c;
                         col[topic] += c;
                         phisum[topic] += c;
@@ -333,17 +305,20 @@ impl<S: PhiColumnStore> Foem<S> {
 
         // --- Inner time-efficient IEM sweeps (Fig. 4 lines 5-18). ---
         // No full-K scan: topic subsets come from the persistent streamed
-        // residual columns.
-        let n_sel = self.cfg.topic_subset.size(k);
+        // residual columns. The exclude/recompute/renormalize work runs
+        // through the shared cache-blocked kernel (`resp::sweep_word`).
         let mut inner = 0usize;
         let mut sel: Vec<u32> = Vec::with_capacity(n_sel);
-        let mut scratch_mu = vec![0.0f32; n_sel];
         let mut fresh_res = vec![0.0f32; n_sel];
         let mut rcol_buf = vec![0.0f32; k];
+        // Visit-order scratch, hoisted out of the sweep loop (refilled
+        // and re-sorted per sweep, never re-allocated).
+        let mut order: Vec<u32> = Vec::with_capacity(n_local);
         for t in 0..self.cfg.max_inner_iters {
             // Word visit order: descending r_w, top lambda_w fraction
             // (Eq. 37 / Fig. 4 line 17).
-            let mut order: Vec<u32> = (0..n_local as u32).collect();
+            order.clear();
+            order.extend(0..n_local as u32);
             {
                 let r_totals = &self.r_totals;
                 let words = &mb.local_words;
@@ -378,12 +353,13 @@ impl<S: PhiColumnStore> Foem<S> {
                 let phisum = &mut self.phisum;
                 let r_totals = &mut self.r_totals;
                 let mu = &mut mu;
+                let kern = &mut kern;
                 let theta = &mut theta;
                 // Residual column: one read (topic selection) + one write
                 // (fresh residuals) per visit — the Fig. 4 line 8/15
                 // streaming discipline, applied to r as per §3.2.
                 res_store.load_column(gw, &mut rcol_buf);
-                top_n_indices(&rcol_buf, n_sel, &mut sel);
+                resp::top_n_indices(&rcol_buf, n_sel, &mut sel);
                 // Epsilon-greedy exploration: swap the tail of the
                 // selection for uniform random topics so unvisited-but-
                 // good topics can surface (see FoemConfig::explore_slots).
@@ -407,48 +383,21 @@ impl<S: PhiColumnStore> Foem<S> {
                 }
                 fresh_res.iter_mut().for_each(|x| *x = 0.0);
                 store.with_column(gw, |col| {
-                    for (off, i) in (s..en).enumerate() {
-                        let e = base + off;
-                        let d = vm.doc_ids[i] as usize;
-                        let c = vm.counts[i];
-                        let mu_row = &mut mu[e * k..(e + 1) * k];
-                        let th = &mut theta[d * k..(d + 1) * k];
-                        // Retained mass within the subset (Eq. 38).
-                        let mut m_old = 0.0f32;
-                        for &kk in &sel {
-                            m_old += mu_row[kk as usize];
-                        }
-                        if m_old <= 1e-12 {
-                            continue;
-                        }
-                        // Exclude + recompute on the subset (Eq. 13).
-                        let mut z = 0.0f32;
-                        for (j, &kk) in sel.iter().enumerate() {
-                            let kk = kk as usize;
-                            let excl = c * mu_row[kk];
-                            let u = (th[kk] - excl + am1)
-                                * (col[kk] - excl + bm1)
-                                / (phisum[kk] - excl + wbm1);
-                            scratch_mu[j] = u.max(0.0);
-                            z += scratch_mu[j];
-                        }
-                        if z <= 0.0 {
-                            continue;
-                        }
-                        let renorm = m_old / z;
-                        // Include new responsibilities + residuals
-                        // (Fig. 4 lines 12-13).
-                        for (j, &kk) in sel.iter().enumerate() {
-                            let kk = kk as usize;
-                            let new = scratch_mu[j] * renorm;
-                            let delta = c * (new - mu_row[kk]);
-                            th[kk] += delta;
-                            col[kk] += delta;
-                            phisum[kk] += delta;
-                            fresh_res[j] += delta.abs();
-                            mu_row[kk] = new;
-                        }
-                    }
+                    resp::sweep_word(
+                        mu,
+                        kern,
+                        &sel,
+                        base,
+                        &vm.doc_ids[s..en],
+                        &vm.counts[s..en],
+                        theta,
+                        col,
+                        phisum,
+                        am1,
+                        bm1,
+                        wbm1,
+                        &mut fresh_res,
+                    );
                 });
                 // Write the fresh residuals back into the streamed
                 // column; update the resident total incrementally.
@@ -495,8 +444,20 @@ impl<S: PhiColumnStore> Foem<S> {
             }
         }
 
+        // Working-set telemetry: the O(NNZ·S) arena plus the principal
+        // auxiliary scratch of this minibatch.
+        let resp_bytes = mu.bytes();
+        let scratch_bytes = theta.len() * 4
+            + rcol_buf.len() * 4
+            + order.capacity() * 4
+            + kern.bytes()
+            + entry_base.len() * std::mem::size_of::<usize>()
+            + word_mass.len() * 4
+            + (sel.capacity() + fresh_res.len()) * 4;
+
         // Hand the scratch buffers back for the next minibatch.
-        self.mu_scratch = mu;
+        self.resp_scratch = mu;
+        self.kern_scratch = kern;
         self.theta_scratch = theta;
 
         MinibatchReport {
@@ -504,6 +465,8 @@ impl<S: PhiColumnStore> Foem<S> {
             seconds: timer.seconds(),
             train_ll: ll,
             tokens,
+            resp_bytes,
+            scratch_bytes,
         }
     }
 
@@ -668,6 +631,15 @@ impl<S: PhiColumnStore> Foem<S> {
             }
         }
 
+        // Workers ran concurrently, so the batch's peak working set is
+        // the SUM of the per-shard arenas and scratch.
+        let resp_bytes = results.iter().map(|r| r.resp_bytes).sum();
+        let scratch_bytes = results.iter().map(|r| r.scratch_bytes).sum();
+        // The shard thetas are no longer needed — recycle them.
+        for r in results {
+            crate::exec::scratch::put_f32(r.theta);
+        }
+
         MinibatchReport {
             inner_iters: inner,
             // Busy time of this batch's three phases. Under pipelining the
@@ -677,6 +649,8 @@ impl<S: PhiColumnStore> Foem<S> {
             seconds: staged.stage_seconds + compute_seconds + timer.seconds(),
             train_ll: ll,
             tokens: staged.tokens,
+            resp_bytes,
+            scratch_bytes,
         }
     }
 
@@ -768,15 +742,23 @@ struct FoemShardResult {
     phi_delta: SsDelta,
     /// Residual delta vs the residual snapshot.
     res_delta: SsDelta,
-    /// Shard-local doc-topic stats (kept for the optional exact-LL pass).
+    /// Shard-local doc-topic stats (kept for the optional exact-LL pass;
+    /// recycled into [`crate::exec::scratch`] by the apply phase).
     theta: Vec<f32>,
+    /// This worker's peak responsibility-arena bytes.
+    resp_bytes: usize,
+    /// This worker's auxiliary scratch bytes.
+    scratch_bytes: usize,
 }
 
 /// The FOEM inner loop (Fig. 4 lines 3-18) for one document shard, run
 /// against worker-private copies of the snapshot columns. The math is the
-/// serial algorithm's verbatim; only the storage differs: updates land in
-/// private dense arrays, and the net change vs the snapshot is returned
-/// as [`SsDelta`]s for the executor's deterministic merge.
+/// serial algorithm's verbatim — the same shared kernel
+/// ([`resp::sweep_word`]) over a worker-private responsibility arena;
+/// only the storage differs: updates land in private arrays checked out
+/// of the grow-only [`crate::exec::scratch`] pool, and the net change vs
+/// the snapshot is returned as [`SsDelta`]s for the executor's
+/// deterministic merge.
 #[allow(clippy::too_many_arguments)]
 fn run_foem_shard(
     params: &LdaParams,
@@ -799,14 +781,25 @@ fn run_foem_shard(
     let tokens = shard.docs.total_tokens();
     let mut rng = Rng::new(seed);
 
+    // Worker scratch: arena + kernel + column copies from the grow-only
+    // pool; theta is a loose pool buffer because it outlives this
+    // function inside the shard result (exact-LL pass at apply time).
+    let mut ws = crate::exec::scratch::take();
+    let mut kern = std::mem::take(&mut ws.kern);
+    let mut mu = std::mem::take(&mut ws.arena);
+    let n_sel = cfg.topic_subset.size(k);
+    mu.reset(k, nnz, resp::lane_capacity(n_sel, cfg.explore_slots, k));
+
     // Private working copies of the touched columns plus resident totals.
-    let mut phi = vec![0.0f32; n_local * k];
-    let mut res = vec![0.0f32; n_local * k];
-    for (lw, &gw) in words.iter().enumerate() {
-        phi[lw * k..(lw + 1) * k].copy_from_slice(
+    let mut phi = std::mem::take(&mut ws.col_a);
+    phi.clear();
+    let mut res = std::mem::take(&mut ws.col_b);
+    res.clear();
+    for &gw in words.iter() {
+        phi.extend_from_slice(
             phi_snap.column(gw).expect("shard word missing from snapshot"),
         );
-        res[lw * k..(lw + 1) * k].copy_from_slice(
+        res.extend_from_slice(
             res_snap.column(gw).expect("shard word missing from snapshot"),
         );
     }
@@ -815,8 +808,8 @@ fn run_foem_shard(
         .map(|lw| res[lw * k..(lw + 1) * k].iter().sum())
         .collect();
 
-    let mut mu = vec![0.0f32; nnz * k];
-    let mut theta = vec![0.0f32; shard.docs.n_docs * k];
+    let mut theta = crate::exec::scratch::take_f32();
+    theta.resize(shard.docs.n_docs * k, 0.0);
 
     // Init (Fig. 4 line 3): random hard assignments accumulated into the
     // private state (Eq. 33 accumulation form).
@@ -830,7 +823,7 @@ fn run_foem_shard(
                 let d = vm.doc_ids[i] as usize;
                 let c = vm.counts[i];
                 let topic = rng.below(k);
-                mu[(e_base + off) * k + topic] = 1.0;
+                mu.set_one_hot(e_base + off, topic);
                 theta[d * k + topic] += c;
                 col[topic] += c;
                 phisum[topic] += c;
@@ -841,8 +834,8 @@ fn run_foem_shard(
         }
     }
 
-    // Local word -> base entry offset in `mu`; per-word token mass for
-    // the per-word convergence cutoff.
+    // Local word -> base entry offset in the arena; per-word token mass
+    // for the per-word convergence cutoff.
     let mut entry_base = vec![0usize; n_local + 1];
     let mut word_mass = vec![0.0f32; n_local];
     for (lw, &gw) in words.iter().enumerate() {
@@ -851,14 +844,16 @@ fn run_foem_shard(
         word_mass[lw] = vm.word_counts(gw as usize).iter().sum();
     }
 
-    // Inner time-efficient IEM sweeps (Fig. 4 lines 5-18), private state.
-    let n_sel = cfg.topic_subset.size(k);
+    // Inner time-efficient IEM sweeps (Fig. 4 lines 5-18), private state,
+    // through the shared kernel. The visit-order Vec is hoisted out of
+    // the sweep loop (pool-recycled across batches).
     let mut inner = 0usize;
     let mut sel: Vec<u32> = Vec::with_capacity(n_sel);
-    let mut scratch_mu = vec![0.0f32; n_sel];
     let mut fresh_res = vec![0.0f32; n_sel];
+    let mut order = std::mem::take(&mut ws.idx);
     for t in 0..cfg.max_inner_iters {
-        let mut order: Vec<u32> = (0..n_local as u32).collect();
+        order.clear();
+        order.extend(0..n_local as u32);
         order.sort_unstable_by(|&a, &b| {
             let ra = r_totals[a as usize];
             let rb = r_totals[b as usize];
@@ -879,7 +874,7 @@ fn run_foem_shard(
             let (s, en) = vm.word_range(gw);
             let base = entry_base[lw];
             let rcol = &mut res[lw * k..(lw + 1) * k];
-            top_n_indices(rcol, n_sel, &mut sel);
+            resp::top_n_indices(rcol, n_sel, &mut sel);
             if n_sel < k && cfg.explore_slots > 0 {
                 let swaps = cfg.explore_slots.min(n_sel / 2);
                 for j in 0..swaps {
@@ -897,45 +892,21 @@ fn run_foem_shard(
             }
             fresh_res.iter_mut().for_each(|x| *x = 0.0);
             let col = &mut phi[lw * k..(lw + 1) * k];
-            for (off, i) in (s..en).enumerate() {
-                let e = base + off;
-                let d = vm.doc_ids[i] as usize;
-                let c = vm.counts[i];
-                let mu_row = &mut mu[e * k..(e + 1) * k];
-                let th = &mut theta[d * k..(d + 1) * k];
-                // Retained mass within the subset (Eq. 38).
-                let mut m_old = 0.0f32;
-                for &kk in &sel {
-                    m_old += mu_row[kk as usize];
-                }
-                if m_old <= 1e-12 {
-                    continue;
-                }
-                // Exclude + recompute on the subset (Eq. 13).
-                let mut z = 0.0f32;
-                for (j, &kk) in sel.iter().enumerate() {
-                    let kk = kk as usize;
-                    let excl = c * mu_row[kk];
-                    let u = (th[kk] - excl + am1) * (col[kk] - excl + bm1)
-                        / (phisum[kk] - excl + wbm1);
-                    scratch_mu[j] = u.max(0.0);
-                    z += scratch_mu[j];
-                }
-                if z <= 0.0 {
-                    continue;
-                }
-                let renorm = m_old / z;
-                for (j, &kk) in sel.iter().enumerate() {
-                    let kk = kk as usize;
-                    let new = scratch_mu[j] * renorm;
-                    let delta = c * (new - mu_row[kk]);
-                    th[kk] += delta;
-                    col[kk] += delta;
-                    phisum[kk] += delta;
-                    fresh_res[j] += delta.abs();
-                    mu_row[kk] = new;
-                }
-            }
+            resp::sweep_word(
+                &mut mu,
+                &mut kern,
+                &sel,
+                base,
+                &vm.doc_ids[s..en],
+                &vm.counts[s..en],
+                &mut theta,
+                col,
+                &mut phisum,
+                am1,
+                bm1,
+                wbm1,
+                &mut fresh_res,
+            );
             let mut word_moved = 0.0f32;
             for (j, &kk) in sel.iter().enumerate() {
                 rcol[kk as usize] += fresh_res[j];
@@ -967,7 +938,35 @@ fn run_foem_shard(
             }
         }
     }
-    FoemShardResult { inner_iters: inner, phi_delta, res_delta, theta }
+
+    let resp_bytes = mu.bytes();
+    let scratch_bytes = theta.len() * 4
+        + phi.len() * 4
+        + res.len() * 4
+        + phisum.len() * 4
+        + r_totals.len() * 4
+        + order.capacity() * 4
+        + kern.bytes()
+        + entry_base.len() * std::mem::size_of::<usize>()
+        + word_mass.len() * 4
+        + (sel.capacity() + fresh_res.len()) * 4;
+
+    // Return the bundle for the next shard/batch.
+    ws.arena = mu;
+    ws.kern = kern;
+    ws.col_a = phi;
+    ws.col_b = res;
+    ws.idx = order;
+    crate::exec::scratch::put(ws);
+
+    FoemShardResult {
+        inner_iters: inner,
+        phi_delta,
+        res_delta,
+        theta,
+        resp_bytes,
+        scratch_bytes,
+    }
 }
 
 impl Foem<crate::store::InMemoryPhi> {
@@ -1047,6 +1046,501 @@ impl Foem<crate::store::paged::PagedPhi> {
         self.store.checkpoint(self.step, &self.phisum)?;
         self.res_store.flush()?;
         Ok(())
+    }
+}
+
+/// The pre-arena dense E-step implementation, kept verbatim as the
+/// bit-identity oracle for the responsibility arena: `mu` is the full
+/// `nnz × K` matrix and every loop is the historical code. The
+/// equivalence tests drive the serial, sharded and pipelined paths
+/// through BOTH implementations from identical seeds and assert bitwise
+/// equality of every number (and of `IoStats`).
+#[cfg(test)]
+pub(crate) mod dense_ref {
+    use super::*;
+
+    /// The historical serial Fig. 4 path (dense `nnz × K` mu).
+    pub fn process_minibatch_serial_dense<S: PhiColumnStore>(
+        f: &mut Foem<S>,
+        mb: &Minibatch,
+    ) -> MinibatchReport {
+        let timer = Timer::start();
+        let k = f.params.n_topics;
+        let w_dim = f.begin_minibatch(mb);
+        let am1 = f.params.am1();
+        let bm1 = f.params.bm1();
+        let wbm1 = f.params.wbm1(w_dim);
+
+        let vm = &mb.vocab_major;
+        let n_local = mb.local_words.len();
+        let nnz = vm.nnz();
+        let tokens = mb.docs.total_tokens();
+
+        let mut mu = vec![0.0f32; nnz * k];
+        let mut theta = vec![0.0f32; mb.docs.n_docs * k];
+
+        // Init (Fig. 4 line 3).
+        {
+            let store = &mut f.store;
+            let res_store = &mut f.res_store;
+            let phisum = &mut f.phisum;
+            let r_totals = &mut f.r_totals;
+            let rng = &mut f.rng;
+            let mut e_base = 0usize;
+            let mut assigned: Vec<u32> = Vec::new();
+            for &gw in &mb.local_words {
+                let gw = gw as usize;
+                let (s, en) = vm.word_range(gw);
+                assigned.clear();
+                let mut delta_r = 0.0f32;
+                store.with_column(gw, |col| {
+                    for (off, i) in (s..en).enumerate() {
+                        let d = vm.doc_ids[i] as usize;
+                        let c = vm.counts[i];
+                        let topic = rng.below(k);
+                        assigned.push(topic as u32);
+                        mu[(e_base + off) * k + topic] = 1.0;
+                        theta[d * k + topic] += c;
+                        col[topic] += c;
+                        phisum[topic] += c;
+                    }
+                });
+                res_store.with_column(gw, |rcol| {
+                    for (off, i) in (s..en).enumerate() {
+                        let c = vm.counts[i];
+                        rcol[assigned[off] as usize] += c;
+                        delta_r += c;
+                    }
+                });
+                r_totals[gw] += delta_r;
+                e_base += en - s;
+            }
+        }
+
+        let mut entry_base = vec![0usize; n_local + 1];
+        let mut word_mass = vec![0.0f32; n_local];
+        for (lw, &gw) in mb.local_words.iter().enumerate() {
+            let (s, e) = vm.word_range(gw as usize);
+            entry_base[lw + 1] = entry_base[lw] + (e - s);
+            word_mass[lw] = vm.word_counts(gw as usize).iter().sum();
+        }
+
+        // Inner sweeps (Fig. 4 lines 5-18), dense exclude/include.
+        let n_sel = f.cfg.topic_subset.size(k);
+        let mut inner = 0usize;
+        let mut sel: Vec<u32> = Vec::with_capacity(n_sel);
+        let mut scratch_mu = vec![0.0f32; n_sel];
+        let mut fresh_res = vec![0.0f32; n_sel];
+        let mut rcol_buf = vec![0.0f32; k];
+        for t in 0..f.cfg.max_inner_iters {
+            let mut order: Vec<u32> = (0..n_local as u32).collect();
+            {
+                let r_totals = &f.r_totals;
+                let words = &mb.local_words;
+                order.sort_unstable_by(|&a, &b| {
+                    let ra = r_totals[words[a as usize] as usize];
+                    let rb = r_totals[words[b as usize] as usize];
+                    rb.partial_cmp(&ra).unwrap_or(std::cmp::Ordering::Equal)
+                });
+            }
+            let keep = ((f.cfg.lambda_w as f64 * n_local as f64).ceil()
+                as usize)
+                .clamp(1, n_local);
+            order.truncate(keep);
+
+            let mut moved = 0.0f64;
+            for &lw in &order {
+                let lw = lw as usize;
+                let gw = mb.local_words[lw] as usize;
+                if (f.r_totals[gw] as f64)
+                    < f.cfg.residual_tol * word_mass[lw] as f64
+                {
+                    break;
+                }
+                let (s, en) = vm.word_range(gw);
+                let base = entry_base[lw];
+                let store = &mut f.store;
+                let res_store = &mut f.res_store;
+                let phisum = &mut f.phisum;
+                let r_totals = &mut f.r_totals;
+                let mu = &mut mu;
+                let theta = &mut theta;
+                res_store.load_column(gw, &mut rcol_buf);
+                resp::top_n_indices(&rcol_buf, n_sel, &mut sel);
+                if n_sel < k && f.cfg.explore_slots > 0 {
+                    let swaps = f.cfg.explore_slots.min(n_sel / 2);
+                    for j in 0..swaps {
+                        let cand = f.rng.below(k) as u32;
+                        if !sel.contains(&cand) {
+                            let pos = sel.len() - 1 - j;
+                            sel[pos] = cand;
+                        }
+                    }
+                }
+                let mut removed = 0.0f32;
+                for &kk in &sel {
+                    removed += rcol_buf[kk as usize];
+                    rcol_buf[kk as usize] = 0.0;
+                }
+                fresh_res.iter_mut().for_each(|x| *x = 0.0);
+                store.with_column(gw, |col| {
+                    for (off, i) in (s..en).enumerate() {
+                        let e = base + off;
+                        let d = vm.doc_ids[i] as usize;
+                        let c = vm.counts[i];
+                        let mu_row = &mut mu[e * k..(e + 1) * k];
+                        let th = &mut theta[d * k..(d + 1) * k];
+                        let mut m_old = 0.0f32;
+                        for &kk in &sel {
+                            m_old += mu_row[kk as usize];
+                        }
+                        if m_old <= 1e-12 {
+                            continue;
+                        }
+                        let mut z = 0.0f32;
+                        for (j, &kk) in sel.iter().enumerate() {
+                            let kk = kk as usize;
+                            let excl = c * mu_row[kk];
+                            let u = (th[kk] - excl + am1)
+                                * (col[kk] - excl + bm1)
+                                / (phisum[kk] - excl + wbm1);
+                            scratch_mu[j] = u.max(0.0);
+                            z += scratch_mu[j];
+                        }
+                        if z <= 0.0 {
+                            continue;
+                        }
+                        let renorm = m_old / z;
+                        for (j, &kk) in sel.iter().enumerate() {
+                            let kk = kk as usize;
+                            let new = scratch_mu[j] * renorm;
+                            let delta = c * (new - mu_row[kk]);
+                            th[kk] += delta;
+                            col[kk] += delta;
+                            phisum[kk] += delta;
+                            fresh_res[j] += delta.abs();
+                            mu_row[kk] = new;
+                        }
+                    }
+                });
+                let mut word_moved = 0.0f32;
+                for (j, &kk) in sel.iter().enumerate() {
+                    rcol_buf[kk as usize] += fresh_res[j];
+                    word_moved += fresh_res[j];
+                }
+                res_store.store_column(gw, &rcol_buf);
+                r_totals[gw] = (r_totals[gw] - removed + word_moved).max(0.0);
+                moved += word_moved as f64;
+            }
+            inner = t + 1;
+            if moved / tokens < f.cfg.residual_tol {
+                break;
+            }
+        }
+        f.last_inner_iters = inner;
+
+        // Exact training LL (optional O(K*NNZ_s) pass).
+        let mut ll = 0.0f64;
+        if f.cfg.exact_ll {
+            let kam1 = k as f32 * am1;
+            let doc_norms: Vec<f64> = (0..mb.docs.n_docs)
+                .map(|d| ((mb.docs.doc_len(d) + kam1) as f64).max(1e-300).ln())
+                .collect();
+            for &gw in &mb.local_words {
+                let gw = gw as usize;
+                let (s, en) = vm.word_range(gw);
+                let col = f.store.read_column(gw);
+                for i in s..en {
+                    let d = vm.doc_ids[i] as usize;
+                    let c = vm.counts[i];
+                    let th = &theta[d * k..(d + 1) * k];
+                    let mut z = 0.0f32;
+                    for kk in 0..k {
+                        z += (th[kk] + am1) * (col[kk] + bm1)
+                            / (f.phisum[kk] + wbm1);
+                    }
+                    ll += c as f64
+                        * (((z as f64).max(1e-300)).ln() - doc_norms[d]);
+                }
+            }
+        }
+
+        MinibatchReport {
+            inner_iters: inner,
+            seconds: timer.seconds(),
+            train_ll: ll,
+            tokens,
+            resp_bytes: mu.len() * 4,
+            scratch_bytes: theta.len() * 4,
+        }
+    }
+
+    /// The historical shard worker (dense `nnz × K` mu).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_foem_shard_dense(
+        params: &LdaParams,
+        cfg: &FoemConfig,
+        shard: &MinibatchShard,
+        phi_snap: &PhiSnapshot,
+        res_snap: &PhiSnapshot,
+        phisum0: &[f32],
+        w_dim: usize,
+        seed: u64,
+    ) -> FoemShardResult {
+        let k = params.n_topics;
+        let am1 = params.am1();
+        let bm1 = params.bm1();
+        let wbm1 = params.wbm1(w_dim);
+        let vm = &shard.vocab_major;
+        let words = &shard.local_words;
+        let n_local = words.len();
+        let nnz = vm.nnz();
+        let tokens = shard.docs.total_tokens();
+        let mut rng = Rng::new(seed);
+
+        let mut phi = vec![0.0f32; n_local * k];
+        let mut res = vec![0.0f32; n_local * k];
+        for (lw, &gw) in words.iter().enumerate() {
+            phi[lw * k..(lw + 1) * k].copy_from_slice(
+                phi_snap.column(gw).expect("shard word missing from snapshot"),
+            );
+            res[lw * k..(lw + 1) * k].copy_from_slice(
+                res_snap.column(gw).expect("shard word missing from snapshot"),
+            );
+        }
+        let mut phisum = phisum0.to_vec();
+        let mut r_totals: Vec<f32> = (0..n_local)
+            .map(|lw| res[lw * k..(lw + 1) * k].iter().sum())
+            .collect();
+
+        let mut mu = vec![0.0f32; nnz * k];
+        let mut theta = vec![0.0f32; shard.docs.n_docs * k];
+
+        {
+            let mut e_base = 0usize;
+            for (lw, &gw) in words.iter().enumerate() {
+                let (s, en) = vm.word_range(gw as usize);
+                let col = &mut phi[lw * k..(lw + 1) * k];
+                let rcol = &mut res[lw * k..(lw + 1) * k];
+                for (off, i) in (s..en).enumerate() {
+                    let d = vm.doc_ids[i] as usize;
+                    let c = vm.counts[i];
+                    let topic = rng.below(k);
+                    mu[(e_base + off) * k + topic] = 1.0;
+                    theta[d * k + topic] += c;
+                    col[topic] += c;
+                    phisum[topic] += c;
+                    rcol[topic] += c;
+                    r_totals[lw] += c;
+                }
+                e_base += en - s;
+            }
+        }
+
+        let mut entry_base = vec![0usize; n_local + 1];
+        let mut word_mass = vec![0.0f32; n_local];
+        for (lw, &gw) in words.iter().enumerate() {
+            let (s, e) = vm.word_range(gw as usize);
+            entry_base[lw + 1] = entry_base[lw] + (e - s);
+            word_mass[lw] = vm.word_counts(gw as usize).iter().sum();
+        }
+
+        let n_sel = cfg.topic_subset.size(k);
+        let mut inner = 0usize;
+        let mut sel: Vec<u32> = Vec::with_capacity(n_sel);
+        let mut scratch_mu = vec![0.0f32; n_sel];
+        let mut fresh_res = vec![0.0f32; n_sel];
+        for t in 0..cfg.max_inner_iters {
+            let mut order: Vec<u32> = (0..n_local as u32).collect();
+            order.sort_unstable_by(|&a, &b| {
+                let ra = r_totals[a as usize];
+                let rb = r_totals[b as usize];
+                rb.partial_cmp(&ra).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let keep =
+                ((cfg.lambda_w as f64 * n_local as f64).ceil() as usize)
+                    .clamp(1, n_local);
+            order.truncate(keep);
+
+            let mut moved = 0.0f64;
+            for &lw in &order {
+                let lw = lw as usize;
+                let gw = words[lw] as usize;
+                if (r_totals[lw] as f64)
+                    < cfg.residual_tol * word_mass[lw] as f64
+                {
+                    break;
+                }
+                let (s, en) = vm.word_range(gw);
+                let base = entry_base[lw];
+                let rcol = &mut res[lw * k..(lw + 1) * k];
+                resp::top_n_indices(rcol, n_sel, &mut sel);
+                if n_sel < k && cfg.explore_slots > 0 {
+                    let swaps = cfg.explore_slots.min(n_sel / 2);
+                    for j in 0..swaps {
+                        let cand = rng.below(k) as u32;
+                        if !sel.contains(&cand) {
+                            let pos = sel.len() - 1 - j;
+                            sel[pos] = cand;
+                        }
+                    }
+                }
+                let mut removed = 0.0f32;
+                for &kk in &sel {
+                    removed += rcol[kk as usize];
+                    rcol[kk as usize] = 0.0;
+                }
+                fresh_res.iter_mut().for_each(|x| *x = 0.0);
+                let col = &mut phi[lw * k..(lw + 1) * k];
+                for (off, i) in (s..en).enumerate() {
+                    let e = base + off;
+                    let d = vm.doc_ids[i] as usize;
+                    let c = vm.counts[i];
+                    let mu_row = &mut mu[e * k..(e + 1) * k];
+                    let th = &mut theta[d * k..(d + 1) * k];
+                    let mut m_old = 0.0f32;
+                    for &kk in &sel {
+                        m_old += mu_row[kk as usize];
+                    }
+                    if m_old <= 1e-12 {
+                        continue;
+                    }
+                    let mut z = 0.0f32;
+                    for (j, &kk) in sel.iter().enumerate() {
+                        let kk = kk as usize;
+                        let excl = c * mu_row[kk];
+                        let u = (th[kk] - excl + am1)
+                            * (col[kk] - excl + bm1)
+                            / (phisum[kk] - excl + wbm1);
+                        scratch_mu[j] = u.max(0.0);
+                        z += scratch_mu[j];
+                    }
+                    if z <= 0.0 {
+                        continue;
+                    }
+                    let renorm = m_old / z;
+                    for (j, &kk) in sel.iter().enumerate() {
+                        let kk = kk as usize;
+                        let new = scratch_mu[j] * renorm;
+                        let delta = c * (new - mu_row[kk]);
+                        th[kk] += delta;
+                        col[kk] += delta;
+                        phisum[kk] += delta;
+                        fresh_res[j] += delta.abs();
+                        mu_row[kk] = new;
+                    }
+                }
+                let mut word_moved = 0.0f32;
+                for (j, &kk) in sel.iter().enumerate() {
+                    rcol[kk as usize] += fresh_res[j];
+                    word_moved += fresh_res[j];
+                }
+                r_totals[lw] =
+                    (r_totals[lw] - removed + word_moved).max(0.0);
+                moved += word_moved as f64;
+            }
+            inner = t + 1;
+            if moved / tokens.max(1.0) < cfg.residual_tol {
+                break;
+            }
+        }
+
+        let mut phi_delta = SsDelta::zeros(k, words.clone());
+        let mut res_delta = SsDelta::zeros(k, words.clone());
+        for (lw, &gw) in words.iter().enumerate() {
+            let psnap = phi_snap.column(gw).expect("snapshot column");
+            let rsnap = res_snap.column(gw).expect("snapshot column");
+            for kk in 0..k {
+                let dp = phi[lw * k + kk] - psnap[kk];
+                if dp != 0.0 {
+                    phi_delta.add_at(lw, kk, dp);
+                }
+                let dr = res[lw * k + kk] - rsnap[kk];
+                if dr != 0.0 {
+                    res_delta.add_at(lw, kk, dr);
+                }
+            }
+        }
+        FoemShardResult {
+            inner_iters: inner,
+            phi_delta,
+            res_delta,
+            theta,
+            resp_bytes: mu.len() * 4,
+            scratch_bytes: 0,
+        }
+    }
+
+    /// Phase-2 compute through the dense shard worker.
+    pub fn compute_batch_dense(staged: &FoemStaged) -> FoemDelta {
+        let timer = Timer::start();
+        let exec = ParallelExecutor::new(staged.cfg.n_workers);
+        let results = exec.run_sharded(&staged.shards, |shard| {
+            run_foem_shard_dense(
+                &staged.params,
+                &staged.cfg,
+                shard,
+                &staged.phi_snap,
+                &staged.res_snap,
+                &staged.phisum0,
+                staged.w_dim,
+                staged.seeds[shard.shard_index],
+            )
+        });
+        FoemDelta { results, compute_seconds: timer.seconds() }
+    }
+
+    /// A [`PhasedTrainer`] whose compute phase is the dense reference —
+    /// drives the REAL stage/apply/pipeline code, so a pipelined run of
+    /// this wrapper is exactly what `main`'s pre-arena build produced.
+    pub struct DenseFoem<S: PhiColumnStore>(pub Foem<S>);
+
+    impl<S: PhiColumnStore> crate::exec::pipeline::PhasedTrainer
+        for DenseFoem<S>
+    {
+        type Staged = FoemStaged;
+        type Delta = FoemDelta;
+
+        fn stage(&mut self, mb: &Minibatch) -> FoemStaged {
+            self.0.stage_batch(mb)
+        }
+
+        fn compute(staged: &FoemStaged) -> FoemDelta {
+            compute_batch_dense(staged)
+        }
+
+        fn apply(
+            &mut self,
+            staged: &FoemStaged,
+            delta: FoemDelta,
+        ) -> MinibatchReport {
+            self.0.apply_batch(staged, delta)
+        }
+
+        fn process_direct(&mut self, mb: &Minibatch) -> MinibatchReport {
+            if self.0.cfg.n_workers <= 1 {
+                process_minibatch_serial_dense(&mut self.0, mb)
+            } else {
+                let staged = self.0.stage_batch(mb);
+                let delta = compute_batch_dense(&staged);
+                self.0.apply_batch(&staged, delta)
+            }
+        }
+
+        fn prefetch(&mut self, mb: &Minibatch) {
+            self.0.store.prefetch_columns(&mb.local_words);
+            self.0.res_store.prefetch_columns(&mb.local_words);
+        }
+
+        fn begin_pipeline(&mut self) {
+            self.0.store.set_async_io(true);
+            self.0.res_store.set_async_io(true);
+        }
+
+        fn end_pipeline(&mut self) {
+            self.0.store.set_async_io(false);
+            self.0.res_store.set_async_io(false);
+        }
     }
 }
 
@@ -1359,6 +1853,186 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Bitwise comparison of two trained FOEM states (phi, phisum,
+    /// residual totals).
+    fn assert_states_identical<S: PhiColumnStore>(
+        a: &mut Foem<S>,
+        b: &mut Foem<S>,
+    ) {
+        let da = a.export_phi();
+        let db = b.export_phi();
+        assert_eq!(da.raw().len(), db.raw().len());
+        for (i, (x, y)) in da.raw().iter().zip(db.raw()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "phi diverged at {i}");
+        }
+        for (i, (x, y)) in a.phisum.iter().zip(&b.phisum).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "phisum diverged at {i}");
+        }
+        for (i, (x, y)) in a.r_totals.iter().zip(&b.r_totals).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "r_totals diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn arena_serial_bit_identical_to_dense_reference() {
+        // The tentpole invariant: the slot-compressed arena changes the
+        // storage, not one bit of the math — across sparse lanes, lanes
+        // with exploration, and the dense-layout (All) fallback.
+        let c = corpus();
+        let k = 32;
+        let p = LdaParams::paper_defaults(k);
+        for (subset, explore) in [
+            (TopicSubset::Fixed(3), 1usize), // tiny lanes -> spill path
+            (TopicSubset::Fixed(10), 4),     // paper production shape
+            (TopicSubset::All, 4),           // dense-layout fallback
+        ] {
+            let mut cfg = FoemConfig::paper();
+            cfg.topic_subset = subset;
+            cfg.explore_slots = explore;
+            let mk = || Foem::new(p, InMemoryPhi::zeros(k, c.n_words()), cfg, 123);
+            let (mut a, mut b) = (mk(), mk());
+            let scfg =
+                StreamConfig { minibatch_docs: 64, ..Default::default() };
+            let mut spilled = false;
+            for mb in CorpusStream::new(&c, scfg) {
+                let ra = a.process_minibatch_serial(&mb);
+                let rb = dense_ref::process_minibatch_serial_dense(&mut b, &mb);
+                assert_eq!(
+                    ra.train_ll.to_bits(),
+                    rb.train_ll.to_bits(),
+                    "{subset:?} ll diverged"
+                );
+                assert_eq!(ra.inner_iters, rb.inner_iters, "{subset:?}");
+                spilled |= a.resp_scratch.spill_len() > 0;
+            }
+            assert_states_identical(&mut a, &mut b);
+            if subset == TopicSubset::Fixed(3) {
+                assert!(spilled, "spill path never exercised");
+            }
+        }
+    }
+
+    #[test]
+    fn arena_serial_paged_matches_dense_reference_io() {
+        // Same invariant on the disk-backed store, including the full
+        // IoStats: the arena must not change WHAT the store sees either.
+        let dir = crate::util::TempDir::new("arena-io");
+        let c = corpus();
+        let k = 16;
+        let p = LdaParams::paper_defaults(k);
+        let mut cfg = FoemConfig::paper();
+        cfg.topic_subset = TopicSubset::Fixed(4);
+        cfg.hot_words = 8;
+        let mk = |name: &str| {
+            Foem::paged_create(
+                p,
+                &dir.path().join(name),
+                c.n_words(),
+                16 * k * 4,
+                cfg,
+                9,
+            )
+            .unwrap()
+        };
+        let (mut a, mut b) = (mk("a.bin"), mk("b.bin"));
+        let scfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+        for mb in CorpusStream::new(&c, scfg) {
+            let ra = a.process_minibatch_serial(&mb);
+            let rb = dense_ref::process_minibatch_serial_dense(&mut b, &mb);
+            assert_eq!(ra.train_ll.to_bits(), rb.train_ll.to_bits());
+        }
+        assert_eq!(a.store.io_stats(), b.store.io_stats());
+        assert_eq!(a.res_store.io_stats(), b.res_store.io_stats());
+        assert_states_identical(&mut a, &mut b);
+    }
+
+    #[test]
+    fn arena_parallel_bit_identical_to_dense_reference() {
+        // n_workers = 4: identical per-shard seeds + identical shard
+        // kernels must reduce to identical deltas, applies and reports.
+        let c = corpus();
+        let k = 32;
+        let p = LdaParams::paper_defaults(k);
+        let mut cfg = FoemConfig::paper();
+        cfg.topic_subset = TopicSubset::Fixed(6);
+        cfg.explore_slots = 2;
+        cfg.n_workers = 4;
+        let mk = || Foem::new(p, InMemoryPhi::zeros(k, c.n_words()), cfg, 7);
+        let (mut a, mut b) = (mk(), mk());
+        let scfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+        for mb in CorpusStream::new(&c, scfg) {
+            let sa = a.stage_batch(&mb);
+            let da = Foem::<InMemoryPhi>::compute_batch(&sa);
+            let ra = a.apply_batch(&sa, da);
+            let sb = b.stage_batch(&mb);
+            let db = dense_ref::compute_batch_dense(&sb);
+            let rb = b.apply_batch(&sb, db);
+            assert_eq!(ra.train_ll.to_bits(), rb.train_ll.to_bits());
+            assert_eq!(ra.inner_iters, rb.inner_iters);
+        }
+        assert_states_identical(&mut a, &mut b);
+    }
+
+    #[test]
+    fn arena_pipelined_paged_bit_identical_to_dense_reference() {
+        // depth = 2 over the paged store: the arena side and the dense
+        // reference (wrapped as a PhasedTrainer) run the SAME pipeline
+        // machinery, so numerics must agree bit-for-bit. Of the IoStats
+        // only the deterministic counters are compared: at depth >= 1
+        // the write-behind supersede counter (wb_writes) and the
+        // pending/prefetch hit split race against the I/O thread by
+        // design (see store/paged.rs) — the depth-0 and serial tests pin
+        // the full struct.
+        use crate::exec::pipeline::Pipeline;
+        let dir = crate::util::TempDir::new("arena-pipe");
+        let c = corpus();
+        let k = 16;
+        let p = LdaParams::paper_defaults(k);
+        let mut cfg = FoemConfig::paper();
+        cfg.topic_subset = TopicSubset::Fixed(4);
+        cfg.explore_slots = 2;
+        cfg.n_workers = 2;
+        cfg.hot_words = 8;
+        let mk = |name: &str| {
+            Foem::paged_create(
+                p,
+                &dir.path().join(name),
+                c.n_words(),
+                16 * k * 4,
+                cfg,
+                5,
+            )
+            .unwrap()
+        };
+        let mut a = mk("a.bin");
+        let mut b = dense_ref::DenseFoem(mk("b.bin"));
+        let scfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+
+        let mut trace_a: Vec<(u64, usize)> = Vec::new();
+        Pipeline::new(2)
+            .run(&mut a, CorpusStream::new(&c, scfg), |_, _, r| {
+                trace_a.push((r.train_ll.to_bits(), r.inner_iters));
+                Ok(())
+            })
+            .unwrap();
+        let mut trace_b: Vec<(u64, usize)> = Vec::new();
+        Pipeline::new(2)
+            .run(&mut b, CorpusStream::new(&c, scfg), |_, _, r| {
+                trace_b.push((r.train_ll.to_bits(), r.inner_iters));
+                Ok(())
+            })
+            .unwrap();
+
+        assert_eq!(trace_a, trace_b, "pipelined trace diverged");
+        let (ia, ib) = (a.store.io_stats(), b.0.store.io_stats());
+        assert_eq!(ia.col_writes, ib.col_writes);
+        let total_reads = |io: &crate::store::IoStats| {
+            io.col_reads + io.buffer_hits + io.prefetch_hits
+        };
+        assert_eq!(total_reads(&ia), total_reads(&ib));
+        assert_states_identical(&mut a, &mut b.0);
     }
 
     #[test]

@@ -7,23 +7,43 @@
 //! same sweep.  Equivalent to CVB0 and asynchronous BP (§2.2); converges
 //! in fewer sweeps than BEM at the price of storing the full
 //! responsibility matrix `mu_{K×NNZ}` (the memory wall motivating FOEM).
+//!
+//! The exclude/include update itself is the shared kernel
+//! [`resp::update_entry`] over the full-K selection — the same code FOEM
+//! runs on its scheduled subsets — so the Eq. 13 loop exists once in the
+//! crate. Two deliberate differences vs the pre-kernel loop:
+//!
+//! * the renormalization is the kernel's mass-preserving Eq. 38 form
+//!   (`m_old / z`, not `1 / z`); since IEM rows always hold mass ≈ 1
+//!   this matches to float accuracy and keeps row sums from drifting;
+//! * the degenerate `z <= 0` recompute (only reachable when `alpha < 1`
+//!   / `beta < 1` make the Eq. 13 factors negative — never with this
+//!   crate's MAP setting `alpha = beta = 1.01`) now *skips* the entry,
+//!   keeping its last valid responsibilities and mass-consistent stats,
+//!   where the historical loop zeroed the row and removed its mass.
 
+use super::resp::{self, RespArena, SweepKernel};
 use super::{perplexity, ConvergenceCheck, MinibatchReport, PhiStats, ThetaStats};
 use crate::corpus::sparse::DocWordMatrix;
 use crate::util::{Rng, Timer};
 use crate::LdaParams;
 
-/// Incremental EM trainer state. `mu` is dense `[nnz][K]`.
+/// Incremental EM trainer state. Responsibilities live in a dense-layout
+/// [`RespArena`] (IEM updates every coordinate, so there is no sparsity
+/// to exploit — `resp.lane_dense(e)` is the historical `mu[e*k..(e+1)*k]`
+/// row in the doc-major order of the input matrix).
 pub struct Iem {
     pub params: LdaParams,
     pub theta: ThetaStats,
     pub phi: PhiStats,
-    /// Responsibilities, entry-major: `mu[e*k..(e+1)*k]` for nnz entry `e`
-    /// in the doc-major order of the input matrix.
-    pub mu: Vec<f32>,
+    /// Responsibilities, entry-major, dense arena layout.
+    pub resp: RespArena,
     /// Sweep order of entries; reshuffled per sweep ("in random order",
     /// Fig. 2 line 3).
     order: Vec<u32>,
+    /// The identity selection (all K topics) fed to the shared kernel.
+    sel_all: Vec<u32>,
+    kern: SweepKernel,
     rng: Rng,
     pub perplexity_trace: Vec<f64>,
 }
@@ -34,14 +54,15 @@ impl Iem {
         let nnz = docs.nnz();
         let mut theta = ThetaStats::zeros(k, docs.n_docs);
         let mut phi = PhiStats::zeros(k, docs.n_words);
-        let mut mu = vec![0.0f32; nnz * k];
+        let mut resp = RespArena::new();
+        resp.reset(k, nnz, k);
         let mut rng = Rng::new(seed);
         // Hard init: entry e's mass on one topic; mu row is the indicator.
         let mut e = 0usize;
         for d in 0..docs.n_docs {
             for (w, c) in docs.iter_doc(d) {
                 let topic = rng.below(k);
-                mu[e * k + topic] = 1.0;
+                resp.set_one_hot(e, topic);
                 theta.doc_mut(d)[topic] += c;
                 phi.word_mut(w as usize)[topic] += c;
                 phi.phisum[topic] += c;
@@ -53,8 +74,10 @@ impl Iem {
             params,
             theta,
             phi,
-            mu,
+            resp,
             order,
+            sel_all: (0..k as u32).collect(),
+            kern: SweepKernel::new(),
             rng,
             perplexity_trace: Vec::new(),
         }
@@ -81,42 +104,38 @@ impl Iem {
         let kam1 = k as f32 * am1;
         let doc_lens: Vec<f32> =
             (0..docs.n_docs).map(|d| docs.doc_len(d)).collect();
-        let mut fresh = vec![0.0f32; k];
+        // Residual accumulator required by the kernel signature; IEM has
+        // no scheduler to feed, so it is write-only here.
+        let mut fresh_res = vec![0.0f32; k];
         let mut ll = 0.0f64;
         for &e in &self.order {
             let e = e as usize;
             let d = entry_doc[e] as usize;
             let w = docs.word_ids[e] as usize;
             let c = docs.counts[e];
-            let mu_row = &mut self.mu[e * k..(e + 1) * k];
             let theta_d = self.theta.doc_mut(d);
             let (phi_w, phisum) = self.phi.word_and_sum_mut(w);
-            // Exclude the entry's own contribution (Eqs. 14-16) and
-            // compute the new responsibility in one pass.
-            let mut z = 0.0f32;
-            for i in 0..k {
-                let excl_t = theta_d[i] - c * mu_row[i];
-                let excl_p = phi_w[i] - c * mu_row[i];
-                let excl_s = phisum[i] - c * mu_row[i];
-                let v = (excl_t + am1) * (excl_p + bm1) / (excl_s + wbm1);
-                fresh[i] = v.max(0.0);
-                z += fresh[i];
-            }
+            // Exclude + recompute + include over all K topics — the
+            // shared Eq. 13/38 kernel with the identity selection.
+            let out = resp::update_entry(
+                &mut self.resp,
+                &mut self.kern,
+                e,
+                &self.sel_all,
+                c,
+                theta_d,
+                phi_w,
+                phisum,
+                am1,
+                bm1,
+                wbm1,
+                &mut fresh_res,
+            );
             // z excludes this entry's own mass c, so the theta normalizer
             // is (doc mass - c + K*(alpha-1)).
             let doc_norm =
                 (((doc_lens[d] - c + kam1) as f64).max(1e-300)).ln();
-            ll += c as f64 * (((z as f64).max(1e-300)).ln() - doc_norm);
-            let inv = if z > 0.0 { 1.0 / z } else { 0.0 };
-            // Include the fresh responsibility (Fig. 2 line 6).
-            for i in 0..k {
-                let new = fresh[i] * inv;
-                let delta = c * (new - mu_row[i]);
-                theta_d[i] += delta;
-                phi_w[i] += delta;
-                phisum[i] += delta;
-                mu_row[i] = new;
-            }
+            ll += c as f64 * (((out.z as f64).max(1e-300)).ln() - doc_norm);
         }
         ll
     }
@@ -144,6 +163,8 @@ impl Iem {
             seconds: timer.seconds(),
             train_ll: last_ll,
             tokens,
+            resp_bytes: self.resp.bytes(),
+            scratch_bytes: self.kern.bytes(),
         }
     }
 
@@ -156,7 +177,7 @@ impl Iem {
         let mut e = 0usize;
         for d in 0..docs.n_docs {
             for (w, c) in docs.iter_doc(d) {
-                let mu_row = &self.mu[e * k..(e + 1) * k];
+                let mu_row = self.resp.lane_dense(e);
                 for i in 0..k {
                     theta.doc_mut(d)[i] += c * mu_row[i];
                 }
@@ -213,9 +234,8 @@ mod tests {
         let p = LdaParams::paper_defaults(6);
         let mut iem = Iem::init(&docs, p, 1);
         iem.sweep(&docs);
-        let k = p.n_topics;
         for e in 0..docs.nnz() {
-            let s: f32 = iem.mu[e * k..(e + 1) * k].iter().sum();
+            let s: f32 = iem.resp.lane_dense(e).iter().sum();
             assert!((s - 1.0).abs() < 1e-4, "entry {e}: {s}");
         }
     }

@@ -1,12 +1,14 @@
 //! The EM framework for LDA (paper §2): shared sufficient-statistics
-//! types, the Eq. 11 / Eq. 13 E-step inner loops, and the four EM
-//! algorithms — batch ([`bem`]), incremental ([`iem`]), stepwise
-//! ([`sem`]) and the paper's contribution, fast online EM ([`foem`]) with
-//! its residual scheduler ([`schedule`]).
+//! types, the Eq. 11 / Eq. 13 E-step inner loops, the slot-compressed
+//! responsibility arena and shared sweep kernel ([`resp`]), and the four
+//! EM algorithms — batch ([`bem`]), incremental ([`iem`]), stepwise
+//! ([`sem`]) and the paper's contribution, fast online EM ([`foem`])
+//! with its subset schedule ([`schedule`]).
 
 pub mod bem;
 pub mod foem;
 pub mod iem;
+pub mod resp;
 pub mod schedule;
 pub mod sem;
 
@@ -228,6 +230,19 @@ pub struct ThetaStats {
 impl ThetaStats {
     pub fn zeros(k: usize, n_docs: usize) -> Self {
         Self { k, n_docs, data: vec![0.0; k * n_docs] }
+    }
+
+    /// Like [`ThetaStats::zeros`], but over a recycled backing buffer
+    /// (grow-only scratch discipline — see [`crate::exec::scratch`]).
+    pub fn from_buffer(k: usize, n_docs: usize, mut buf: Vec<f32>) -> Self {
+        buf.clear();
+        buf.resize(k * n_docs, 0.0);
+        Self { k, n_docs, data: buf }
+    }
+
+    /// Hand the backing buffer back for recycling.
+    pub fn into_buffer(self) -> Vec<f32> {
+        self.data
     }
 
     #[inline]
@@ -490,6 +505,16 @@ pub struct MinibatchReport {
     pub train_ll: f64,
     /// Token mass of the minibatch.
     pub tokens: f64,
+    /// Peak bytes of responsibility storage this minibatch — the
+    /// [`crate::em::resp::RespArena`] backing store (summed across
+    /// concurrent shard workers), i.e. the O(NNZ·S) working-set claim
+    /// made observable. `0` for algorithms without per-entry
+    /// responsibilities.
+    pub resp_bytes: usize,
+    /// Bytes of auxiliary per-minibatch scratch (doc-topic buffers,
+    /// column copies, sweep-order/selection scratch), summed across
+    /// concurrent shard workers.
+    pub scratch_bytes: usize,
 }
 
 impl MinibatchReport {

@@ -1,0 +1,815 @@
+//! The responsibility arena — FOEM's O(NNZ·S) E-step working set — and
+//! the shared exclude–recompute–renormalize sweep kernel.
+//!
+//! The paper's complexity table (Table 3) charges FOEM `O(K·NNZ_s)`
+//! *space* for the per-minibatch responsibility matrix even though
+//! dynamic scheduling (§3.1) only ever rewrites the `lambda_k·K ≈ 10`
+//! scheduled coordinates per entry. This module drops that gap: each
+//! non-zero entry stores its active `(topic, weight)` pairs in a
+//! fixed-width **lane** of `S = n_sel + explore_slots` slots, with a
+//! growable **spill** chain for the rare entry whose selected support
+//! keeps widening across sweeps, so the working set is O(NNZ·S) instead
+//! of O(NNZ·K) and the Eq. 13/38 sweep reads contiguous lanes instead of
+//! K-strided rows (*Inference in topic models: sparsity and trade-off*,
+//! Than & Ho, studies exactly this trade).
+//!
+//! **Bit-identity contract.** The arena is a drop-in for the dense
+//! `nnz × K` buffer: a lookup of a topic that was never written returns
+//! exactly `0.0`, writes at the scheduled coordinates store exactly the
+//! value the dense code stored, and [`update_entry`] performs the same
+//! float operations in the same `sel` order as the historical dense
+//! loops in `em::foem` / `em::iem`. Serial FOEM, the sharded executor
+//! and the pipelined runner therefore produce bit-identical numerics
+//! (and `IoStats`) to the pre-arena dense implementation — no config
+//! flag needed. Guarded by the `dense_ref` tests in `em::foem` and the
+//! sparse-vs-dense kernel tests below. See `rust/DESIGN.md` §8.
+//!
+//! When the scheduled subset covers all K topics (`TopicSubset::All`,
+//! IEM, SEM's inherently dense responsibilities) the arena switches to a
+//! **dense layout** — direct-indexed K-wide lanes, i.e. exactly the old
+//! buffer — so one storage type serves all four trainer kernels.
+
+/// Sentinel for an empty lane slot.
+pub const NO_TOPIC: u32 = u32::MAX;
+/// Sentinel for "no spill chain" / end of chain.
+const NO_SPILL: u32 = u32::MAX;
+/// Sentinel for "topic not present in this entry" during slot resolve.
+const NO_SLOT: u32 = u32::MAX;
+/// High bit marks a resolved slot as living in the spill arena.
+const SPILL_BIT: u32 = 1 << 31;
+
+/// Lane width for a scheduled sweep: the selected subset plus the
+/// ε-greedy exploration slots, clamped at K (at which point the arena
+/// uses the dense layout — a sparse lane as wide as K would be slower
+/// than direct indexing).
+pub fn lane_capacity(n_sel: usize, explore_slots: usize, k: usize) -> usize {
+    (n_sel + explore_slots).min(k)
+}
+
+/// Slot-compressed responsibility storage for the non-zero entries of
+/// one minibatch (or shard). Grow-only: [`RespArena::reset`] reshapes
+/// the arena for the next batch without releasing capacity, so a reused
+/// arena allocates nothing in steady state.
+#[derive(Debug, Default)]
+pub struct RespArena {
+    k: usize,
+    /// Slots per entry. `lane_cap == k` selects the dense layout.
+    lane_cap: usize,
+    n_entries: usize,
+    /// Sparse layout only: `n_entries * lane_cap` topic ids
+    /// (`NO_TOPIC` = free; occupied slots are a prefix of the lane).
+    topics: Vec<u32>,
+    /// Weights: `n_entries * lane_cap` (sparse) or `n_entries * k`
+    /// (dense, direct-indexed — the historical layout).
+    weights: Vec<f32>,
+    /// Sparse layout only: head of entry `e`'s spill chain.
+    spill_head: Vec<u32>,
+    spill_topics: Vec<u32>,
+    spill_weights: Vec<f32>,
+    spill_next: Vec<u32>,
+}
+
+impl RespArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reshape for a batch of `n_entries` entries over `k` topics with
+    /// `lane_cap` slots per entry (`>= k` selects the dense layout).
+    /// Keeps capacity; O(n_entries · lane_cap) zeroing, the same cost
+    /// the dense buffer paid per batch at width K.
+    pub fn reset(&mut self, k: usize, n_entries: usize, lane_cap: usize) {
+        assert!(k > 0, "RespArena needs k > 0");
+        self.k = k;
+        self.lane_cap = lane_cap.clamp(1, k);
+        self.n_entries = n_entries;
+        self.topics.clear();
+        self.weights.clear();
+        self.spill_head.clear();
+        self.spill_topics.clear();
+        self.spill_weights.clear();
+        self.spill_next.clear();
+        if self.is_dense() {
+            self.weights.resize(n_entries * k, 0.0);
+        } else {
+            self.topics.resize(n_entries * self.lane_cap, NO_TOPIC);
+            self.weights.resize(n_entries * self.lane_cap, 0.0);
+            self.spill_head.resize(n_entries, NO_SPILL);
+        }
+    }
+
+    /// Dense (direct-indexed) layout?
+    #[inline]
+    pub fn is_dense(&self) -> bool {
+        self.lane_cap == self.k
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn n_entries(&self) -> usize {
+        self.n_entries
+    }
+
+    #[inline]
+    pub fn lane_cap(&self) -> usize {
+        self.lane_cap
+    }
+
+    /// Number of spill nodes allocated so far (diagnostics/tests).
+    pub fn spill_len(&self) -> usize {
+        self.spill_topics.len()
+    }
+
+    /// Bytes of backing storage currently committed — the telemetry
+    /// behind `MinibatchReport::resp_bytes`.
+    pub fn bytes(&self) -> usize {
+        self.topics.len() * 4
+            + self.weights.len() * 4
+            + self.spill_head.len() * 4
+            + self.spill_topics.len() * 4
+            + self.spill_weights.len() * 4
+            + self.spill_next.len() * 4
+    }
+
+    /// Hard-init entry `e` to all mass on `topic` (Fig. 2/3/4 line "random
+    /// hard assignments"). The entry's lane must still be empty.
+    #[inline]
+    pub fn set_one_hot(&mut self, e: usize, topic: usize) {
+        if self.is_dense() {
+            self.weights[e * self.k + topic] = 1.0;
+        } else {
+            let base = e * self.lane_cap;
+            debug_assert_eq!(self.topics[base], NO_TOPIC, "lane not empty");
+            self.topics[base] = topic as u32;
+            self.weights[base] = 1.0;
+        }
+    }
+
+    /// Responsibility of `(e, topic)`; exactly `0.0` when the coordinate
+    /// was never written — the dense-buffer semantics.
+    pub fn get(&self, e: usize, topic: usize) -> f32 {
+        if self.is_dense() {
+            return self.weights[e * self.k + topic];
+        }
+        let base = e * self.lane_cap;
+        let t = topic as u32;
+        for s in 0..self.lane_cap {
+            let lt = self.topics[base + s];
+            if lt == NO_TOPIC {
+                return 0.0;
+            }
+            if lt == t {
+                return self.weights[base + s];
+            }
+        }
+        let mut idx = self.spill_head[e];
+        while idx != NO_SPILL {
+            let i = idx as usize;
+            if self.spill_topics[i] == t {
+                return self.spill_weights[i];
+            }
+            idx = self.spill_next[i];
+        }
+        0.0
+    }
+
+    /// Write `(e, topic) = v`, inserting the coordinate if absent (a
+    /// fresh zero is not inserted — indistinguishable from absent).
+    pub fn set(&mut self, e: usize, topic: usize, v: f32) {
+        if self.is_dense() {
+            self.weights[e * self.k + topic] = v;
+            return;
+        }
+        let base = e * self.lane_cap;
+        let t = topic as u32;
+        for s in 0..self.lane_cap {
+            let lt = self.topics[base + s];
+            if lt == t {
+                self.weights[base + s] = v;
+                return;
+            }
+            if lt == NO_TOPIC {
+                if v != 0.0 {
+                    self.topics[base + s] = t;
+                    self.weights[base + s] = v;
+                }
+                return;
+            }
+        }
+        let mut idx = self.spill_head[e];
+        while idx != NO_SPILL {
+            let i = idx as usize;
+            if self.spill_topics[i] == t {
+                self.spill_weights[i] = v;
+                return;
+            }
+            idx = self.spill_next[i];
+        }
+        if v != 0.0 {
+            self.push_spill(e, t, v);
+        }
+    }
+
+    /// Entry support: occupied lane slots + spill-chain length.
+    pub fn support(&self, e: usize) -> usize {
+        if self.is_dense() {
+            return self
+                .weights[e * self.k..(e + 1) * self.k]
+                .iter()
+                .filter(|&&w| w != 0.0)
+                .count();
+        }
+        let base = e * self.lane_cap;
+        let mut n = 0usize;
+        for s in 0..self.lane_cap {
+            if self.topics[base + s] == NO_TOPIC {
+                break;
+            }
+            n += 1;
+        }
+        let mut idx = self.spill_head[e];
+        while idx != NO_SPILL {
+            n += 1;
+            idx = self.spill_next[idx as usize];
+        }
+        n
+    }
+
+    /// Dense-layout lane of entry `e` — the historical `mu[e*k..(e+1)*k]`
+    /// row, for the inherently dense kernels (SEM's Eq. 11 E-step, IEM).
+    #[inline]
+    pub fn lane_dense(&self, e: usize) -> &[f32] {
+        debug_assert!(self.is_dense(), "lane_dense needs the dense layout");
+        &self.weights[e * self.k..(e + 1) * self.k]
+    }
+
+    /// Mutable dense-layout lane of entry `e`.
+    #[inline]
+    pub fn lane_dense_mut(&mut self, e: usize) -> &mut [f32] {
+        debug_assert!(self.is_dense(), "lane_dense needs the dense layout");
+        &mut self.weights[e * self.k..(e + 1) * self.k]
+    }
+
+    #[inline]
+    fn push_spill(&mut self, e: usize, topic: u32, v: f32) -> u32 {
+        let idx = self.spill_topics.len() as u32;
+        debug_assert!(idx & SPILL_BIT == 0, "spill arena overflow");
+        self.spill_topics.push(topic);
+        self.spill_weights.push(v);
+        self.spill_next.push(self.spill_head[e]);
+        self.spill_head[e] = idx;
+        idx
+    }
+}
+
+/// Per-sweep scratch of the shared kernel: the K-length selection mark
+/// (topic → position in `sel`, maintained per word by [`sweep_word`]) and
+/// the `n_sel`-length resolve/recompute buffers. Grow-only; one per
+/// worker.
+#[derive(Debug, Default)]
+pub struct SweepKernel {
+    /// `mark[topic] = j + 1` when `sel[j] == topic`, else 0.
+    mark: Vec<u32>,
+    /// Entry's current responsibility at each `sel` position.
+    mu_old: Vec<f32>,
+    /// Resolved storage slot per `sel` position (`NO_SLOT`, lane index,
+    /// or `SPILL_BIT | spill index`).
+    slot_of: Vec<u32>,
+    /// Recomputed unnormalized responsibilities (the Eq. 13 numerators).
+    scratch_mu: Vec<f32>,
+}
+
+impl SweepKernel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Scratch bytes currently committed (telemetry).
+    pub fn bytes(&self) -> usize {
+        self.mark.len() * 4
+            + self.mu_old.len() * 4
+            + self.slot_of.len() * 4
+            + self.scratch_mu.len() * 4
+    }
+
+    #[inline]
+    fn ensure_sel(&mut self, n_sel: usize) {
+        if self.scratch_mu.len() < n_sel {
+            self.mu_old.resize(n_sel, 0.0);
+            self.slot_of.resize(n_sel, NO_SLOT);
+            self.scratch_mu.resize(n_sel, 0.0);
+        }
+    }
+
+    /// Install the selection mark for one word's sweep (sparse layout).
+    #[inline]
+    fn begin_word(&mut self, k: usize, sel: &[u32]) {
+        self.ensure_sel(sel.len());
+        if self.mark.len() < k {
+            self.mark.resize(k, 0);
+        }
+        for (j, &kk) in sel.iter().enumerate() {
+            self.mark[kk as usize] = j as u32 + 1;
+        }
+    }
+
+    /// Clear the selection mark (only the touched coordinates).
+    #[inline]
+    fn end_word(&mut self, sel: &[u32]) {
+        for &kk in sel {
+            self.mark[kk as usize] = 0;
+        }
+    }
+}
+
+/// Outcome of one entry update — what callers need for convergence
+/// bookkeeping (FOEM) and log-likelihood accumulation (IEM).
+#[derive(Debug, Clone, Copy)]
+pub struct EntryOutcome {
+    /// Responsibility mass the entry held on `sel` before the update
+    /// (the Eq. 38 renormalization budget).
+    pub m_old: f32,
+    /// Unnormalized recompute total (the Eq. 13 normalizer over `sel`);
+    /// `0.0` when the update was skipped before the recompute.
+    pub z: f32,
+    /// False when a degenerate guard (`m_old ≈ 0` or `z <= 0`) skipped
+    /// the update, leaving all state untouched.
+    pub updated: bool,
+}
+
+/// The shared Eq. 13/38 exclude–recompute–renormalize update of a single
+/// non-zero entry over the scheduled subset `sel` — the one copy of the
+/// loop previously hand-rolled in FOEM's serial path, FOEM's shard
+/// worker, and IEM.
+///
+/// Exactly the historical dense float ops, in `sel` order:
+/// `m_old = Σ_j mu[sel_j]`; skip if `m_old <= 1e-12`; per `j` exclude the
+/// entry's own mass and recompute `u_j` (clamped at 0); skip if
+/// `z = Σ u_j <= 0`; include `new_j = u_j · m_old / z`, pushing
+/// `delta_j = c·(new_j − mu[sel_j])` into `th`/`col`/`phisum` and
+/// `|delta_j|` into `fresh_res[j]`.
+///
+/// For a sparse-layout arena this must run inside a [`sweep_word`]
+/// bracket (the selection mark is per word); the dense layout has no
+/// such requirement — IEM calls it entry-at-a-time.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn update_entry(
+    arena: &mut RespArena,
+    kern: &mut SweepKernel,
+    e: usize,
+    sel: &[u32],
+    c: f32,
+    th: &mut [f32],
+    col: &mut [f32],
+    phisum: &mut [f32],
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    fresh_res: &mut [f32],
+) -> EntryOutcome {
+    kern.ensure_sel(sel.len());
+    if arena.is_dense() {
+        update_entry_dense(arena, kern, e, sel, c, th, col, phisum, am1, bm1, wbm1, fresh_res)
+    } else {
+        update_entry_sparse(arena, kern, e, sel, c, th, col, phisum, am1, bm1, wbm1, fresh_res)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn update_entry_dense(
+    arena: &mut RespArena,
+    kern: &mut SweepKernel,
+    e: usize,
+    sel: &[u32],
+    c: f32,
+    th: &mut [f32],
+    col: &mut [f32],
+    phisum: &mut [f32],
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    fresh_res: &mut [f32],
+) -> EntryOutcome {
+    let k = arena.k;
+    let row = &mut arena.weights[e * k..(e + 1) * k];
+    // Retained mass within the subset (Eq. 38).
+    let mut m_old = 0.0f32;
+    for &kk in sel {
+        m_old += row[kk as usize];
+    }
+    if m_old <= 1e-12 {
+        return EntryOutcome { m_old, z: 0.0, updated: false };
+    }
+    // Exclude + recompute on the subset (Eq. 13).
+    let mut z = 0.0f32;
+    for (j, &kk) in sel.iter().enumerate() {
+        let kk = kk as usize;
+        let excl = c * row[kk];
+        let u = (th[kk] - excl + am1) * (col[kk] - excl + bm1)
+            / (phisum[kk] - excl + wbm1);
+        kern.scratch_mu[j] = u.max(0.0);
+        z += kern.scratch_mu[j];
+    }
+    if z <= 0.0 {
+        return EntryOutcome { m_old, z, updated: false };
+    }
+    let renorm = m_old / z;
+    // Include new responsibilities + residuals (Fig. 4 lines 12-13).
+    for (j, &kk) in sel.iter().enumerate() {
+        let kk = kk as usize;
+        let new = kern.scratch_mu[j] * renorm;
+        let delta = c * (new - row[kk]);
+        th[kk] += delta;
+        col[kk] += delta;
+        phisum[kk] += delta;
+        fresh_res[j] += delta.abs();
+        row[kk] = new;
+    }
+    EntryOutcome { m_old, z, updated: true }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn update_entry_sparse(
+    arena: &mut RespArena,
+    kern: &mut SweepKernel,
+    e: usize,
+    sel: &[u32],
+    c: f32,
+    th: &mut [f32],
+    col: &mut [f32],
+    phisum: &mut [f32],
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    fresh_res: &mut [f32],
+) -> EntryOutcome {
+    let n_sel = sel.len();
+    debug_assert!(kern.mark.len() >= arena.k, "sparse update outside sweep_word");
+    // Resolve the entry's stored coordinates against the selection mark:
+    // one scan of the contiguous lane (+ rare spill chain) instead of
+    // n_sel strided probes of a K-wide row.
+    kern.mu_old[..n_sel].fill(0.0);
+    kern.slot_of[..n_sel].fill(NO_SLOT);
+    let cap = arena.lane_cap;
+    let base = e * cap;
+    let mut n_occ = cap;
+    for s in 0..cap {
+        let t = arena.topics[base + s];
+        if t == NO_TOPIC {
+            n_occ = s;
+            break;
+        }
+        let m = kern.mark[t as usize];
+        if m != 0 {
+            kern.mu_old[(m - 1) as usize] = arena.weights[base + s];
+            kern.slot_of[(m - 1) as usize] = s as u32;
+        }
+    }
+    let mut idx = arena.spill_head[e];
+    while idx != NO_SPILL {
+        let i = idx as usize;
+        let m = kern.mark[arena.spill_topics[i] as usize];
+        if m != 0 {
+            kern.mu_old[(m - 1) as usize] = arena.spill_weights[i];
+            kern.slot_of[(m - 1) as usize] = SPILL_BIT | idx;
+        }
+        idx = arena.spill_next[i];
+    }
+
+    // Retained mass within the subset (Eq. 38) — summed in `sel` order,
+    // matching the dense loop's float rounding exactly.
+    let mut m_old = 0.0f32;
+    for &m in &kern.mu_old[..n_sel] {
+        m_old += m;
+    }
+    if m_old <= 1e-12 {
+        return EntryOutcome { m_old, z: 0.0, updated: false };
+    }
+    // Exclude + recompute on the subset (Eq. 13).
+    let mut z = 0.0f32;
+    for (j, &kk) in sel.iter().enumerate() {
+        let kk = kk as usize;
+        let excl = c * kern.mu_old[j];
+        let u = (th[kk] - excl + am1) * (col[kk] - excl + bm1)
+            / (phisum[kk] - excl + wbm1);
+        kern.scratch_mu[j] = u.max(0.0);
+        z += kern.scratch_mu[j];
+    }
+    if z <= 0.0 {
+        return EntryOutcome { m_old, z, updated: false };
+    }
+    let renorm = m_old / z;
+    // Include new responsibilities + residuals (Fig. 4 lines 12-13).
+    for (j, &kk) in sel.iter().enumerate() {
+        let new = kern.scratch_mu[j] * renorm;
+        let delta = c * (new - kern.mu_old[j]);
+        let kk = kk as usize;
+        th[kk] += delta;
+        col[kk] += delta;
+        phisum[kk] += delta;
+        fresh_res[j] += delta.abs();
+        let slot = kern.slot_of[j];
+        if slot == NO_SLOT {
+            // A fresh zero is indistinguishable from absent: skip the
+            // insert so degenerate coordinates never consume slots.
+            if new != 0.0 {
+                if n_occ < cap {
+                    arena.topics[base + n_occ] = kk as u32;
+                    arena.weights[base + n_occ] = new;
+                    n_occ += 1;
+                } else {
+                    arena.push_spill(e, kk as u32, new);
+                }
+            }
+        } else if slot & SPILL_BIT != 0 {
+            arena.spill_weights[(slot & !SPILL_BIT) as usize] = new;
+        } else {
+            arena.weights[base + slot as usize] = new;
+        }
+    }
+    EntryOutcome { m_old, z, updated: true }
+}
+
+/// The cache-blocked per-word sweep shared by FOEM's serial path and its
+/// shard worker: with the word's phi column, the selection, and the
+/// selection mark pinned, linearly scan the word's contiguous entry
+/// range (vocab-major order) applying [`update_entry`] to each non-zero.
+/// `doc_ids`/`counts` are the word's slices of the vocab-major matrix;
+/// `entry_base` is the word's first arena entry index; `theta` is the
+/// K-strided doc-topic buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_word(
+    arena: &mut RespArena,
+    kern: &mut SweepKernel,
+    sel: &[u32],
+    entry_base: usize,
+    doc_ids: &[u32],
+    counts: &[f32],
+    theta: &mut [f32],
+    col: &mut [f32],
+    phisum: &mut [f32],
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    fresh_res: &mut [f32],
+) {
+    let k = arena.k;
+    kern.begin_word(k, sel);
+    for (off, (&d, &c)) in doc_ids.iter().zip(counts).enumerate() {
+        let d = d as usize;
+        let th = &mut theta[d * k..(d + 1) * k];
+        update_entry(
+            arena,
+            kern,
+            entry_base + off,
+            sel,
+            c,
+            th,
+            col,
+            phisum,
+            am1,
+            bm1,
+            wbm1,
+            fresh_res,
+        );
+    }
+    kern.end_word(sel);
+}
+
+/// Scan-based top-`n` selection: one pass over `vals`, maintaining the
+/// current top set in `out` (descending-ish, unordered). ~K comparisons
+/// with a tiny constant — measurably faster than quickselect on an index
+/// array for the n=10 regime FOEM lives in (`rust/DESIGN.md` §8).
+#[inline]
+pub fn top_n_indices(vals: &[f32], n: usize, out: &mut Vec<u32>) {
+    out.clear();
+    if n >= vals.len() {
+        out.extend(0..vals.len() as u32);
+        return;
+    }
+    // Seed with the first n indices, tracking the minimum.
+    let mut min_pos = 0usize;
+    for i in 0..n {
+        out.push(i as u32);
+        if vals[i] < vals[out[min_pos] as usize] {
+            min_pos = i;
+        }
+    }
+    let mut min_val = vals[out[min_pos] as usize];
+    for (i, &v) in vals.iter().enumerate().skip(n) {
+        if v > min_val {
+            out[min_pos] = i as u32;
+            // Re-find the minimum of the small set.
+            min_pos = 0;
+            for j in 1..n {
+                if vals[out[j] as usize] < vals[out[min_pos] as usize] {
+                    min_pos = j;
+                }
+            }
+            min_val = vals[out[min_pos] as usize];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dense_layout_is_direct_indexed() {
+        let mut a = RespArena::new();
+        a.reset(8, 4, 8);
+        assert!(a.is_dense());
+        a.set_one_hot(2, 5);
+        assert_eq!(a.get(2, 5), 1.0);
+        assert_eq!(a.get(2, 4), 0.0);
+        a.set(2, 4, 0.25);
+        assert_eq!(a.lane_dense(2)[4], 0.25);
+        assert_eq!(a.bytes(), 4 * 8 * 4);
+    }
+
+    #[test]
+    fn sparse_get_set_roundtrip_with_spill() {
+        let mut a = RespArena::new();
+        // Lane of 2 slots over K=16: the third distinct topic spills.
+        a.reset(16, 3, 2);
+        assert!(!a.is_dense());
+        a.set(1, 3, 0.5);
+        a.set(1, 9, 0.25);
+        assert_eq!(a.spill_len(), 0);
+        a.set(1, 12, 0.125); // lane full -> spill
+        a.set(1, 14, 0.0625); // deeper chain
+        assert_eq!(a.spill_len(), 2);
+        assert_eq!(a.get(1, 3), 0.5);
+        assert_eq!(a.get(1, 9), 0.25);
+        assert_eq!(a.get(1, 12), 0.125);
+        assert_eq!(a.get(1, 14), 0.0625);
+        assert_eq!(a.get(1, 0), 0.0);
+        assert_eq!(a.support(1), 4);
+        // Updates in place, both lane and spill.
+        a.set(1, 9, 0.75);
+        a.set(1, 14, 0.875);
+        assert_eq!(a.get(1, 9), 0.75);
+        assert_eq!(a.get(1, 14), 0.875);
+        assert_eq!(a.spill_len(), 2, "update must not re-insert");
+        // Other entries untouched.
+        assert_eq!(a.support(0), 0);
+        assert_eq!(a.get(0, 3), 0.0);
+    }
+
+    #[test]
+    fn fresh_zero_writes_do_not_consume_slots() {
+        let mut a = RespArena::new();
+        a.reset(16, 1, 2);
+        a.set(0, 5, 0.0);
+        assert_eq!(a.support(0), 0);
+        a.set(0, 1, 1.0);
+        a.set(0, 2, 1.0);
+        a.set(0, 7, 0.0); // lane full, but zero -> no spill
+        assert_eq!(a.spill_len(), 0);
+        assert_eq!(a.get(0, 7), 0.0);
+        // A present coordinate CAN hold zero (written as an update).
+        a.set(0, 1, 0.0);
+        assert_eq!(a.get(0, 1), 0.0);
+        assert_eq!(a.support(0), 2);
+    }
+
+    #[test]
+    fn reset_reuses_capacity_and_clears_state() {
+        let mut a = RespArena::new();
+        a.reset(16, 2, 2);
+        a.set(0, 1, 1.0);
+        a.set(0, 2, 1.0);
+        a.set(0, 3, 1.0); // spill
+        assert_eq!(a.spill_len(), 1);
+        a.reset(16, 2, 2);
+        assert_eq!(a.spill_len(), 0);
+        for t in 0..16 {
+            assert_eq!(a.get(0, t), 0.0);
+            assert_eq!(a.get(1, t), 0.0);
+        }
+        // Dense <-> sparse flips are clean too.
+        a.reset(4, 2, 8);
+        assert!(a.is_dense());
+        assert_eq!(a.get(1, 3), 0.0);
+    }
+
+    /// The load-bearing property: the sparse kernel performs exactly the
+    /// dense kernel's float ops — same inputs, bitwise-equal outputs on
+    /// every mutated buffer — including when lanes overflow into spill.
+    #[test]
+    fn sparse_kernel_bit_identical_to_dense_kernel() {
+        let k = 32usize;
+        let n_entries = 12usize;
+        let mut rng = Rng::new(42);
+        // Tiny lane (2 slots) + 6-topic selections force heavy spill.
+        for &lane_cap in &[2usize, 6, 10] {
+            let mut dense = RespArena::new();
+            dense.reset(k, n_entries, k);
+            let mut sparse = RespArena::new();
+            sparse.reset(k, n_entries, lane_cap);
+            let mut kd = SweepKernel::new();
+            let mut ks = SweepKernel::new();
+
+            let mut th_d: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 4.0).collect();
+            let mut col_d: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 2.0).collect();
+            let mut ps_d: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 50.0 + 1.0).collect();
+            let mut th_s = th_d.clone();
+            let mut col_s = col_d.clone();
+            let mut ps_s = ps_d.clone();
+
+            for e in 0..n_entries {
+                let t = rng.below(k);
+                dense.set_one_hot(e, t);
+                sparse.set_one_hot(e, t);
+            }
+
+            for round in 0..8 {
+                // A fresh selection of 6 distinct topics per round.
+                let mut sel: Vec<u32> = Vec::new();
+                while sel.len() < 6 {
+                    let cand = rng.below(k) as u32;
+                    if !sel.contains(&cand) {
+                        sel.push(cand);
+                    }
+                }
+                let mut fr_d = vec![0.0f32; sel.len()];
+                let mut fr_s = vec![0.0f32; sel.len()];
+                let counts: Vec<f32> =
+                    (0..n_entries).map(|e| (e % 3 + 1) as f32).collect();
+                let docs: Vec<u32> = vec![0; n_entries];
+                sweep_word(
+                    &mut dense, &mut kd, &sel, 0, &docs, &counts,
+                    &mut th_d, &mut col_d, &mut ps_d, 0.01, 0.01, 0.32,
+                    &mut fr_d,
+                );
+                sweep_word(
+                    &mut sparse, &mut ks, &sel, 0, &docs, &counts,
+                    &mut th_s, &mut col_s, &mut ps_s, 0.01, 0.01, 0.32,
+                    &mut fr_s,
+                );
+                for i in 0..k {
+                    assert_eq!(
+                        th_d[i].to_bits(),
+                        th_s[i].to_bits(),
+                        "theta diverged (cap={lane_cap} round={round} k={i})"
+                    );
+                    assert_eq!(col_d[i].to_bits(), col_s[i].to_bits());
+                    assert_eq!(ps_d[i].to_bits(), ps_s[i].to_bits());
+                }
+                for j in 0..sel.len() {
+                    assert_eq!(fr_d[j].to_bits(), fr_s[j].to_bits());
+                }
+                for e in 0..n_entries {
+                    for t in 0..k {
+                        assert_eq!(
+                            dense.get(e, t).to_bits(),
+                            sparse.get(e, t).to_bits(),
+                            "mu diverged (cap={lane_cap} e={e} t={t})"
+                        );
+                    }
+                }
+            }
+            if lane_cap == 2 {
+                assert!(sparse.spill_len() > 0, "spill path never exercised");
+            }
+            assert!(
+                sparse.bytes() < dense.bytes(),
+                "sparse arena not smaller: {} vs {}",
+                sparse.bytes(),
+                dense.bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn lane_capacity_clamps_at_k() {
+        assert_eq!(lane_capacity(10, 4, 1024), 14);
+        assert_eq!(lane_capacity(10, 4, 8), 8);
+        assert_eq!(lane_capacity(8, 0, 8), 8);
+    }
+
+    #[test]
+    fn top_n_indices_returns_true_top_set() {
+        let vals = [0.1f32, 5.0, 0.2, 9.0, 0.0, 3.0];
+        let mut out = Vec::new();
+        top_n_indices(&vals, 3, &mut out);
+        let mut top = out.clone();
+        top.sort_unstable();
+        assert_eq!(top, vec![1, 3, 5]);
+        // n >= len is the identity.
+        top_n_indices(&vals, 6, &mut out);
+        assert_eq!(out.len(), 6);
+    }
+}

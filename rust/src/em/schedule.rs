@@ -1,4 +1,4 @@
-//! Residual-based dynamic scheduling (paper §3.1, Fig. 5).
+//! Residual-based dynamic scheduling policy (paper §3.1, Fig. 5).
 //!
 //! IEM's responsibilities converge to fixed points; the triangle
 //! inequality (Eq. 34) bounds the distance to the fixed point from below
@@ -11,6 +11,14 @@
 //!   * per word updates only the `lambda_k * K` topics with the largest
 //!     `r_w(k)` (partial selection, not a full sort — §3.1's "partial
 //!     sorting" note), renormalizing within the subset by Eq. 38.
+//!
+//! This module holds the *policy knob* ([`TopicSubset`], how many topics
+//! to schedule). The mechanism lives where it runs: the trainers derive
+//! the word visit order directly from their resident `r_totals` (the
+//! `r_w` of Eq. 37, streamed with the residual matrix per §3.2), and the
+//! per-word topic selection is [`crate::em::resp::top_n_indices`] over
+//! the word's residual column, feeding the shared sweep kernel in
+//! [`crate::em::resp`].
 
 /// How many topics to schedule per word.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -38,114 +46,10 @@ impl TopicSubset {
     }
 }
 
-/// Residual state for one minibatch: `[W_s local words][K]` residual
-/// matrix, per-word totals, and scratch for top-k selection.
-pub struct ResidualScheduler {
-    pub k: usize,
-    /// Number of local words W_s.
-    pub n_local: usize,
-    /// `r_w(k)`, local-word-major.
-    r_wk: Vec<f32>,
-    /// `r_w = sum_k r_w(k)`.
-    r_w: Vec<f32>,
-    /// Scratch index buffer for partial selection.
-    idx: Vec<u32>,
-}
-
-impl ResidualScheduler {
-    pub fn new(k: usize, n_local: usize) -> Self {
-        Self {
-            k,
-            n_local,
-            r_wk: vec![0.0; k * n_local],
-            r_w: vec![0.0; n_local],
-            idx: (0..k as u32).collect(),
-        }
-    }
-
-    #[inline]
-    pub fn word_residuals(&self, lw: usize) -> &[f32] {
-        &self.r_wk[lw * self.k..(lw + 1) * self.k]
-    }
-
-    #[inline]
-    pub fn word_total(&self, lw: usize) -> f32 {
-        self.r_w[lw]
-    }
-
-    /// Overwrite word `lw`'s residual vector with freshly accumulated
-    /// values (Fig. 4 line 12 computes them during the column visit).
-    pub fn set_word_residuals(&mut self, lw: usize, fresh: &[f32]) {
-        let row = &mut self.r_wk[lw * self.k..(lw + 1) * self.k];
-        row.copy_from_slice(fresh);
-        self.r_w[lw] = fresh.iter().sum();
-    }
-
-    /// Update only the entries in `topics`, leaving the rest (their
-    /// residual information is retained so unvisited topics can win
-    /// selection later — without this, scheduling starves).
-    pub fn set_word_residuals_sparse(
-        &mut self,
-        lw: usize,
-        topics: &[u32],
-        fresh: &[f32],
-    ) {
-        let row = &mut self.r_wk[lw * self.k..(lw + 1) * self.k];
-        for (&t, &f) in topics.iter().zip(fresh) {
-            row[t as usize] = f;
-        }
-        self.r_w[lw] = row.iter().sum();
-    }
-
-    /// Select the `subset.size(k)` topics of word `lw` with the largest
-    /// residuals. Returns a sorted-by-residual-descending slice of topic
-    /// ids. `O(K)` via `select_nth_unstable`, matching the paper's
-    /// partial-sorting cost argument.
-    pub fn top_topics(&mut self, lw: usize, subset: TopicSubset) -> &[u32] {
-        let n = subset.size(self.k);
-        if n >= self.k {
-            // Identity order; no selection needed.
-            for (i, x) in self.idx.iter_mut().enumerate() {
-                *x = i as u32;
-            }
-            return &self.idx;
-        }
-        let row = &self.r_wk[lw * self.k..(lw + 1) * self.k];
-        for (i, x) in self.idx.iter_mut().enumerate() {
-            *x = i as u32;
-        }
-        self.idx.select_nth_unstable_by(n - 1, |&a, &b| {
-            row[b as usize]
-                .partial_cmp(&row[a as usize])
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        &self.idx[..n]
-    }
-
-    /// Word visit order for one sweep: local word ids sorted by `r_w`
-    /// descending, truncated to `ceil(lambda_w * W_s)`.
-    pub fn word_order(&self, lambda_w: f32) -> Vec<u32> {
-        let mut order: Vec<u32> = (0..self.n_local as u32).collect();
-        order.sort_unstable_by(|&a, &b| {
-            self.r_w[b as usize]
-                .partial_cmp(&self.r_w[a as usize])
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        let keep = ((lambda_w as f64 * self.n_local as f64).ceil() as usize)
-            .clamp(1, self.n_local);
-        order.truncate(keep);
-        order
-    }
-
-    /// Total residual mass (convergence diagnostic: → 0 as IEM converges).
-    pub fn total_residual(&self) -> f64 {
-        self.r_w.iter().map(|&x| x as f64).sum()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::em::resp::top_n_indices;
 
     #[test]
     fn subset_sizes() {
@@ -158,48 +62,23 @@ mod tests {
     }
 
     #[test]
-    fn top_topics_returns_true_top_set() {
-        let mut s = ResidualScheduler::new(6, 2);
-        s.set_word_residuals(0, &[0.1, 5.0, 0.2, 9.0, 0.0, 3.0]);
-        let mut top: Vec<u32> =
-            s.top_topics(0, TopicSubset::Fixed(3)).to_vec();
+    fn subset_sized_selection_returns_true_top_set() {
+        // The §3.1 partial selection at a TopicSubset-derived size must
+        // return the true top set of a residual column.
+        let res = [0.1f32, 5.0, 0.2, 9.0, 0.0, 3.0];
+        let n = TopicSubset::Fixed(3).size(res.len());
+        let mut top = Vec::new();
+        top_n_indices(&res, n, &mut top);
         top.sort_unstable();
         assert_eq!(top, vec![1, 3, 5]);
     }
 
     #[test]
-    fn top_topics_all_is_identity() {
-        let mut s = ResidualScheduler::new(4, 1);
-        s.set_word_residuals(0, &[0.0, 1.0, 2.0, 3.0]);
-        assert_eq!(s.top_topics(0, TopicSubset::All).len(), 4);
-    }
-
-    #[test]
-    fn word_order_sorts_by_residual() {
-        let mut s = ResidualScheduler::new(2, 4);
-        s.set_word_residuals(0, &[1.0, 0.0]);
-        s.set_word_residuals(1, &[5.0, 1.0]);
-        s.set_word_residuals(2, &[0.0, 0.5]);
-        s.set_word_residuals(3, &[2.0, 2.0]);
-        assert_eq!(s.word_order(1.0), vec![1, 3, 0, 2]);
-        assert_eq!(s.word_order(0.5), vec![1, 3]);
-        assert_eq!(s.word_order(0.0), vec![1]); // clamped to >= 1
-    }
-
-    #[test]
-    fn sparse_update_preserves_unvisited_residuals() {
-        let mut s = ResidualScheduler::new(4, 1);
-        s.set_word_residuals(0, &[1.0, 2.0, 3.0, 4.0]);
-        s.set_word_residuals_sparse(0, &[1, 3], &[0.5, 0.1]);
-        assert_eq!(s.word_residuals(0), &[1.0, 0.5, 3.0, 0.1]);
-        assert!((s.word_total(0) - 4.6).abs() < 1e-6);
-    }
-
-    #[test]
-    fn total_residual_tracks_mass() {
-        let mut s = ResidualScheduler::new(2, 2);
-        s.set_word_residuals(0, &[1.0, 1.0]);
-        s.set_word_residuals(1, &[0.5, 0.0]);
-        assert!((s.total_residual() - 2.5).abs() < 1e-9);
+    fn all_subset_selection_is_identity_sized() {
+        let res = [0.0f32, 1.0, 2.0, 3.0];
+        let n = TopicSubset::All.size(res.len());
+        let mut top = Vec::new();
+        top_n_indices(&res, n, &mut top);
+        assert_eq!(top.len(), 4);
     }
 }

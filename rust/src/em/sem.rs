@@ -13,6 +13,7 @@
 //! SCVB (Foulds et al.) is equivalent to this algorithm (§2.5); the
 //! `baselines::scvb` wrapper reuses this core with its own defaults.
 
+use super::resp::RespArena;
 use super::{
     perplexity, ConvergenceCheck, MinibatchReport, PhiStats, SsDelta,
     ThetaStats,
@@ -89,6 +90,13 @@ pub struct Sem {
     /// first apply lands, so `phi.total_mass() == 0` alone would make
     /// each of them re-seed the global stats; only the first may.
     boot_staged: bool,
+    /// Grow-only scratch reused across minibatches: the dense-layout
+    /// responsibility arena (SEM recomputes every entry over all K, so
+    /// its responsibilities are inherently dense) and the theta double
+    /// buffer — avoids the historical nnz×K + per-sweep allocations.
+    resp_scratch: RespArena,
+    theta_scratch: Vec<f32>,
+    theta_new_scratch: Vec<f32>,
 }
 
 impl Sem {
@@ -100,6 +108,9 @@ impl Sem {
             step: 0,
             rng: Rng::new(seed),
             boot_staged: false,
+            resp_scratch: RespArena::new(),
+            theta_scratch: Vec::new(),
+            theta_new_scratch: Vec::new(),
         }
     }
 
@@ -129,16 +140,25 @@ impl Sem {
         self.step += 1;
 
         // Local init (Fig. 3 line 2): random hard assignments -> theta.
-        let mut theta = ThetaStats::zeros(k, docs.n_docs);
+        // SEM recomputes every entry's responsibility over all K topics
+        // per sweep (Eq. 11), so the arena runs in its dense layout —
+        // the historical nnz×K buffer, now grow-only reused across
+        // minibatches instead of re-allocated from scratch.
+        let mut theta = ThetaStats::from_buffer(
+            k,
+            docs.n_docs,
+            std::mem::take(&mut self.theta_scratch),
+        );
         let nnz = docs.nnz();
-        let mut mu = vec![0.0f32; nnz * k];
+        let mut mu = std::mem::take(&mut self.resp_scratch);
+        mu.reset(k, nnz, k);
         let bootstrap = self.phi.total_mass() == 0.0;
         {
             let mut e = 0usize;
             for d in 0..docs.n_docs {
                 for (w, c) in docs.iter_doc(d) {
                     let topic = self.rng.below(k);
-                    mu[e * k + topic] = 1.0;
+                    mu.set_one_hot(e, topic);
                     theta.doc_mut(d)[topic] += c;
                     if bootstrap {
                         // Cold start (phi_hat^0 == 0): seed the global
@@ -167,17 +187,24 @@ impl Sem {
         let mut iters = 0usize;
         let mut last_ll = f64::NEG_INFINITY;
         let kam1 = k as f32 * am1;
+        // Double-buffered doc-topic stats: zero + swap per sweep instead
+        // of a fresh allocation per sweep.
+        let mut theta_new = ThetaStats::from_buffer(
+            k,
+            docs.n_docs,
+            std::mem::take(&mut self.theta_new_scratch),
+        );
         for t in 0..self.cfg.max_inner_iters {
             let mut ll = 0.0f64;
             let mut e = 0usize;
-            let mut theta_new = ThetaStats::zeros(k, docs.n_docs);
+            theta_new.fill_zero();
             for d in 0..docs.n_docs {
                 let theta_d = theta.doc(d);
                 let doc_norm =
                     ((docs.doc_len(d) + kam1) as f64).max(1e-300).ln();
                 for (w, c) in docs.iter_doc(d) {
                     let w = w as usize;
-                    let mu_row = &mut mu[e * k..(e + 1) * k];
+                    let mu_row = mu.lane_dense_mut(e);
                     let z = super::estep_unnormalized(
                         theta_d,
                         self.phi.word(w),
@@ -194,13 +221,14 @@ impl Sem {
                     ll += c as f64
                         * (((z as f64).max(1e-300)).ln() - doc_norm);
                     let trow = theta_new.doc_mut(d);
+                    let mu_row = mu.lane_dense(e);
                     for i in 0..k {
                         trow[i] += c * mu_row[i];
                     }
                     e += 1;
                 }
             }
-            theta = theta_new;
+            std::mem::swap(&mut theta, &mut theta_new);
             last_ll = ll;
             iters = t + 1;
             if check.update(t, perplexity(ll, tokens)) {
@@ -217,7 +245,7 @@ impl Sem {
         let mut e = 0usize;
         for d in 0..docs.n_docs {
             for (w, c) in docs.iter_doc(d) {
-                let mu_row = &mu[e * k..(e + 1) * k];
+                let mu_row = mu.lane_dense(e);
                 let (col, phisum) = self.phi.word_and_sum_mut(w as usize);
                 for i in 0..k {
                     let v = scale * c * mu_row[i];
@@ -228,11 +256,20 @@ impl Sem {
             }
         }
 
+        let resp_bytes = mu.bytes();
+        let scratch_bytes = (theta.raw().len() + theta_new.raw().len()) * 4;
+        // Hand the scratch buffers back for the next minibatch.
+        self.resp_scratch = mu;
+        self.theta_scratch = theta.into_buffer();
+        self.theta_new_scratch = theta_new.into_buffer();
+
         MinibatchReport {
             inner_iters: iters,
             seconds: timer.seconds(),
             train_ll: last_ll,
             tokens,
+            resp_bytes,
+            scratch_bytes,
         }
     }
 
@@ -359,6 +396,10 @@ impl Sem {
             seconds: staged.stage_seconds + compute_seconds + timer.seconds(),
             train_ll: ll,
             tokens: staged.tokens,
+            // Workers ran concurrently: the batch's peak working set is
+            // the sum of the per-shard arenas and scratch.
+            resp_bytes: results.iter().map(|r| r.resp_bytes).sum(),
+            scratch_bytes: results.iter().map(|r| r.scratch_bytes).sum(),
         }
     }
 }
@@ -416,6 +457,10 @@ struct SemShardResult {
     stats: SsDelta,
     /// Cold-start hard-init mass (empty unless bootstrapping).
     boot: SsDelta,
+    /// This worker's responsibility-arena bytes (dense layout).
+    resp_bytes: usize,
+    /// This worker's auxiliary scratch bytes.
+    scratch_bytes: usize,
 }
 
 /// The Fig. 3 inner loop for one document shard: private theta and
@@ -441,29 +486,34 @@ fn run_sem_shard(
     let n_local = words.len();
     let mut rng = Rng::new(seed);
 
+    // Worker scratch from the grow-only pool: frozen-phi copies, the
+    // dense-layout responsibility arena, the theta double buffer, the
+    // entry→slot map.
+    let mut ws = crate::exec::scratch::take();
+
     // Private copies of the frozen phi columns the shard touches.
-    let mut lphi = vec![0.0f32; n_local * k];
-    for (lw, &gw) in words.iter().enumerate() {
-        lphi[lw * k..(lw + 1) * k].copy_from_slice(
+    let mut lphi = std::mem::take(&mut ws.col_a);
+    lphi.clear();
+    for &gw in words.iter() {
+        lphi.extend_from_slice(
             phi_snap.column(gw).expect("shard word missing from snapshot"),
         );
     }
     let mut lphisum = phisum0.to_vec();
     // Per-entry shard-local word slots, resolved off the hot loop.
-    let entry_slot: Vec<u32> = docs
-        .word_ids
-        .iter()
-        .map(|w| {
-            words.binary_search(w).expect("entry word in shard vocabulary")
-                as u32
-        })
-        .collect();
+    let mut entry_slot = std::mem::take(&mut ws.idx);
+    entry_slot.clear();
+    entry_slot.extend(docs.word_ids.iter().map(|w| {
+        words.binary_search(w).expect("entry word in shard vocabulary") as u32
+    }));
 
     // Local init (Fig. 3 line 2): random hard assignments -> theta, plus
     // cold-start seeding of the (private) global stats.
-    let mut theta = ThetaStats::zeros(k, docs.n_docs);
+    let mut theta =
+        ThetaStats::from_buffer(k, docs.n_docs, std::mem::take(&mut ws.theta));
     let nnz = docs.nnz();
-    let mut mu = vec![0.0f32; nnz * k];
+    let mut mu = std::mem::take(&mut ws.arena);
+    mu.reset(k, nnz, k);
     let mut boot =
         SsDelta::zeros(k, if bootstrap { words.clone() } else { Vec::new() });
     {
@@ -471,7 +521,7 @@ fn run_sem_shard(
         for d in 0..docs.n_docs {
             for (_w, c) in docs.iter_doc(d) {
                 let topic = rng.below(k);
-                mu[e * k + topic] = 1.0;
+                mu.set_one_hot(e, topic);
                 theta.doc_mut(d)[topic] += c;
                 if bootstrap {
                     let lw = entry_slot[e] as usize;
@@ -493,16 +543,19 @@ fn run_sem_shard(
         ConvergenceCheck::new(cfg.threshold, cfg.check_every, cfg.max_inner_iters);
     let mut iters = 0usize;
     let mut last_ll = f64::NEG_INFINITY;
+    // Double-buffered doc-topic stats (zero + swap per sweep).
+    let mut theta_new =
+        ThetaStats::from_buffer(k, docs.n_docs, std::mem::take(&mut ws.col_b));
     for t in 0..cfg.max_inner_iters {
         let mut ll = 0.0f64;
         let mut e = 0usize;
-        let mut theta_new = ThetaStats::zeros(k, docs.n_docs);
+        theta_new.fill_zero();
         for d in 0..docs.n_docs {
             let theta_d = theta.doc(d);
             let doc_norm = ((docs.doc_len(d) + kam1) as f64).max(1e-300).ln();
             for (_w, c) in docs.iter_doc(d) {
                 let lw = entry_slot[e] as usize;
-                let mu_row = &mut mu[e * k..(e + 1) * k];
+                let mu_row = mu.lane_dense_mut(e);
                 let z = super::estep_unnormalized(
                     theta_d,
                     &lphi[lw * k..(lw + 1) * k],
@@ -524,7 +577,7 @@ fn run_sem_shard(
                 e += 1;
             }
         }
-        theta = theta_new;
+        std::mem::swap(&mut theta, &mut theta_new);
         last_ll = ll;
         iters = t + 1;
         if check.update(t, perplexity(ll, tokens)) {
@@ -538,7 +591,7 @@ fn run_sem_shard(
     for d in 0..docs.n_docs {
         for (_w, c) in docs.iter_doc(d) {
             let lw = entry_slot[e] as usize;
-            let mu_row = &mu[e * k..(e + 1) * k];
+            let mu_row = mu.lane_dense(e);
             for i in 0..k {
                 if mu_row[i] != 0.0 {
                     stats.add_at(lw, i, c * mu_row[i]);
@@ -547,7 +600,30 @@ fn run_sem_shard(
             e += 1;
         }
     }
-    SemShardResult { inner_iters: iters, train_ll: last_ll, stats, boot }
+
+    let resp_bytes = mu.bytes();
+    let scratch_bytes = (theta.raw().len()
+        + theta_new.raw().len()
+        + lphi.len()
+        + lphisum.len()) * 4
+        + entry_slot.len() * 4;
+
+    // Return the bundle for the next shard/batch.
+    ws.arena = mu;
+    ws.col_a = lphi;
+    ws.col_b = theta_new.into_buffer();
+    ws.theta = theta.into_buffer();
+    ws.idx = entry_slot;
+    crate::exec::scratch::put(ws);
+
+    SemShardResult {
+        inner_iters: iters,
+        train_ll: last_ll,
+        stats,
+        boot,
+        resp_bytes,
+        scratch_bytes,
+    }
 }
 
 #[cfg(test)]

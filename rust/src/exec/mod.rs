@@ -38,6 +38,77 @@ pub mod pipeline;
 use crate::em::SsDelta;
 use crate::stream::{Minibatch, MinibatchShard};
 
+pub mod scratch {
+    //! Grow-only worker scratch recycling for the shard kernels.
+    //!
+    //! The serial trainer paths recycle their big per-minibatch buffers
+    //! through `&mut self` fields; shard workers can't — they run as
+    //! scoped threads inside an associated `compute` function with no
+    //! trainer to hang state off. This process-wide pool restores the
+    //! grow-only discipline: a worker checks a [`WorkerScratch`] out at
+    //! shard entry and returns it at exit, so steady-state minibatches
+    //! allocate nothing on the shard path either. Buffers are fully
+    //! re-initialized on reuse (`RespArena::reset`, clear + refill), so
+    //! which worker gets which buffer never reaches the numerics.
+
+    use crate::em::resp::{RespArena, SweepKernel};
+    use std::sync::Mutex;
+
+    /// One worker's reusable buffers. Field roles by kernel:
+    /// FOEM shard — `col_a` = private phi columns, `col_b` = private
+    /// residual columns, `idx` = sweep order; SEM shard — `col_a` =
+    /// frozen-phi copies, `theta`/`col_b` = the doc-topic double buffer,
+    /// `idx` = entry→slot map.
+    #[derive(Debug, Default)]
+    pub struct WorkerScratch {
+        pub arena: RespArena,
+        pub kern: SweepKernel,
+        pub theta: Vec<f32>,
+        pub col_a: Vec<f32>,
+        pub col_b: Vec<f32>,
+        pub idx: Vec<u32>,
+    }
+
+    /// Upper bound on pooled bundles/buffers: enough for any sane
+    /// worker × pipeline-depth product, small enough that a burst can't
+    /// pin unbounded memory.
+    const POOL_MAX: usize = 64;
+
+    static POOL: Mutex<Vec<WorkerScratch>> = Mutex::new(Vec::new());
+    static F32_POOL: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+
+    /// Check a scratch bundle out (empty bundle if the pool is dry).
+    pub fn take() -> WorkerScratch {
+        POOL.lock().ok().and_then(|mut p| p.pop()).unwrap_or_default()
+    }
+
+    /// Return a bundle for reuse.
+    pub fn put(s: WorkerScratch) {
+        if let Ok(mut p) = POOL.lock() {
+            if p.len() < POOL_MAX {
+                p.push(s);
+            }
+        }
+    }
+
+    /// Check a loose `f32` buffer out — for buffers that outlive the
+    /// bundle (e.g. the FOEM shard theta, which travels in the shard
+    /// result until the apply phase's exact-LL pass is done).
+    pub fn take_f32() -> Vec<f32> {
+        F32_POOL.lock().ok().and_then(|mut p| p.pop()).unwrap_or_default()
+    }
+
+    /// Return a loose buffer for reuse.
+    pub fn put_f32(mut v: Vec<f32>) {
+        v.clear();
+        if let Ok(mut p) = F32_POOL.lock() {
+            if p.len() < POOL_MAX {
+                p.push(v);
+            }
+        }
+    }
+}
+
 /// The parallel minibatch executor: worker-count policy plus the fan-out
 /// and deterministic-reduce primitives every parallel trainer routes
 /// through.

@@ -7,7 +7,9 @@
 //!
 //! * **Layer 3 (this crate)** — the paper's system contribution: the
 //!   streaming coordinator, the residual-based **dynamic scheduler**
-//!   ([`em::schedule`]), the disk-backed **parameter streaming** store
+//!   ([`em::schedule`] policy + the slot-compressed **responsibility
+//!   arena** and shared sweep kernel, [`em::resp`]), the disk-backed
+//!   **parameter streaming** store
 //!   ([`store`]), the online EM family (BEM / IEM / SEM / **FOEM**,
 //!   [`em`]), the **parallel sharded E-step engine** ([`exec`]) that runs
 //!   each minibatch across `n_workers` document shards with deterministic

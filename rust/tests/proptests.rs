@@ -6,7 +6,8 @@
 use foem::corpus::sparse::DocWordMatrix;
 use foem::corpus::synthetic::{generate, SyntheticConfig};
 use foem::em::foem::{Foem, FoemConfig};
-use foem::em::schedule::{ResidualScheduler, TopicSubset};
+use foem::em::resp::top_n_indices;
+use foem::em::schedule::TopicSubset;
 use foem::em::{bem::Bem, iem::Iem, PhiStats};
 use foem::store::paged::PagedPhi;
 use foem::store::{InMemoryPhi, PhiColumnStore};
@@ -102,7 +103,7 @@ fn prop_iem_mu_is_distribution() {
             iem.sweep(&docs);
         }
         for e in 0..docs.nnz() {
-            let row = &iem.mu[e * k..(e + 1) * k];
+            let row = iem.resp.lane_dense(e);
             let s: f32 = row.iter().sum();
             assert!((s - 1.0).abs() < 1e-3, "case {case} entry {e}: {s}");
             assert!(row.iter().all(|&x| x >= -1e-6));
@@ -110,22 +111,20 @@ fn prop_iem_mu_is_distribution() {
     }
 }
 
-/// Property: the scheduler's top-topic selection always returns the true
-/// top set (cross-checked against a full sort), for any residual vector.
+/// Property: the trainers' top-topic selection (`resp::top_n_indices` at
+/// a `TopicSubset`-derived size) always returns the true top set
+/// (cross-checked against a full sort), for any residual vector.
 #[test]
 fn prop_scheduler_topk_exact() {
     let mut rng = Rng::new(4000);
+    let mut sel: Vec<u32> = Vec::new();
     for _case in 0..100 {
         let k = rng.below(40) + 2;
-        let n = rng.below(k) + 1;
-        let mut sched = ResidualScheduler::new(k, 1);
+        let n = TopicSubset::Fixed(rng.below(k) + 1).size(k);
         let res: Vec<f32> = (0..k).map(|_| rng.next_f32() * 10.0).collect();
-        sched.set_word_residuals(0, &res);
-        let got: std::collections::HashSet<u32> = sched
-            .top_topics(0, TopicSubset::Fixed(n))
-            .iter()
-            .copied()
-            .collect();
+        top_n_indices(&res, n, &mut sel);
+        let got: std::collections::HashSet<u32> =
+            sel.iter().copied().collect();
         let mut idx: Vec<u32> = (0..k as u32).collect();
         idx.sort_by(|&a, &b| {
             res[b as usize].partial_cmp(&res[a as usize]).unwrap()

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Run the perf-trajectory benches and collect their JSON lines at the
+# repo root:
+#
+#   scripts/bench.sh            # writes BENCH_estep.json + BENCH_pipeline.json
+#
+# Each bench prints human-readable summaries to stderr and emits one
+# `BENCH_<name>.json {…}` marker line per configuration; this script
+# strips the markers into pure JSON-lines files the next PR's numbers
+# can be diffed against.
+set -euo pipefail
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$root/rust"
+
+run_bench() {
+    local bench="$1" out="$2"
+    echo ">> cargo bench --bench $bench" >&2
+    cargo bench --bench "$bench" \
+        | tee /dev/stderr \
+        | sed -n "s/^BENCH_${out}\.json //p" >"$root/BENCH_${out}.json"
+    echo ">> wrote $root/BENCH_${out}.json ($(wc -l <"$root/BENCH_${out}.json") rows)" >&2
+}
+
+run_bench estep_kernel estep
+run_bench streaming_pipeline pipeline
