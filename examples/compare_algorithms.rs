@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
 
     let scfg = StreamConfig { minibatch_docs: ds, shuffle: false, seed: 3 };
     let scale_s = CorpusStream::new(&train, scfg).batches_per_pass() as f64;
-    let proto = EvalProtocol { fold_in_iters: 20, seed: 0 };
+    let proto = EvalProtocol { fold_in_iters: 20, seed: 0, ..Default::default() };
 
     struct Run {
         name: &'static str,

@@ -9,9 +9,12 @@
 //!
 //!     cargo run --release --example lifelong_stream
 
+use foem::baselines::OnlineLda;
 use foem::corpus::synthetic::{generate, SyntheticConfig};
 use foem::em::foem::{Foem, FoemConfig};
+use foem::eval::{predictive_perplexity, EvalProtocol};
 use foem::store::paged::PagedPhi;
+use foem::store::PhiColumnStore;
 use foem::stream::{CorpusStream, StreamConfig};
 use foem::LdaParams;
 
@@ -27,7 +30,20 @@ fn main() -> anyhow::Result<()> {
     fc.n_workers = 2; // lifelong streams ride the parallel E-step too
     let mut algo = Foem::paged_create(p, &store_path, 1, 1 << 20, fc, 0)?;
 
-    println!("epoch | new vocab | effective W | train ppx | phi mass");
+    // Unseen-document inference per epoch: scheduled fold-in (10 topics
+    // per doc + exploration, per-doc cutoff, 2 workers) over a sparse
+    // eval view of the paged store — the serving path, never a K×W
+    // densification.
+    let proto = EvalProtocol {
+        fold_in_iters: 30,
+        seed: 7,
+        subset: foem::em::schedule::TopicSubset::Fixed(10),
+        tol: 1e-2,
+        workers: 2,
+        ..Default::default()
+    };
+
+    println!("epoch | new vocab | effective W | train ppx | eval ppx | phi mass");
     for epoch in 0..4u64 {
         // Each epoch introduces fresh vocabulary: words are drawn from
         // [0, 600*(epoch+1)).
@@ -36,13 +52,22 @@ fn main() -> anyhow::Result<()> {
         cfg.n_words = 600 * (epoch as usize + 1);
         cfg.name = format!("epoch-{epoch}");
         let c = generate(&cfg, 1000 + epoch);
+        // Hold out 40 docs of this epoch's discourse for predictive eval.
+        let (train, held) = c.split(40, epoch);
         let scfg = StreamConfig { minibatch_docs: 100, ..Default::default() };
         let mut last_ppx = f64::NAN;
-        for mb in CorpusStream::new(&c, scfg) {
+        for mb in CorpusStream::new(&train, scfg) {
             last_ppx = algo.process_minibatch(&mb).train_perplexity();
         }
+        // Held-out docs may carry words the training split never showed;
+        // grow capacity so the eval view can materialize their columns
+        // (zero columns — smoothed by beta — for the truly unseen).
+        algo.store.ensure_capacity(held.docs.n_words);
+        let view = algo.eval_view(&held.docs.distinct_words());
+        let eval_ppx =
+            predictive_perplexity(&view, &algo.eval_params(), &held.docs, &proto);
         println!(
-            "{epoch:>5} | {:>9} | {:>11} | {last_ppx:>9.1} | {:>9.0}",
+            "{epoch:>5} | {:>9} | {:>11} | {last_ppx:>9.1} | {eval_ppx:>8.1} | {:>8.0}",
             c.n_words(),
             algo.effective_w(),
             algo.phisum_total()

@@ -1,0 +1,123 @@
+//! Fold-in inference bench: the dense reference protocol (synchronous
+//! full-K sweeps — the engine's `TopicSubset::All` path, bit-identical
+//! to the historical `Bem::fold_in`) vs the residual-scheduled engine,
+//! at K ∈ {64, 256, 1024} × workers ∈ {1, 4}. One bench iteration is one
+//! complete fold-in of the evaluation corpus — the unit of work every
+//! periodic driver evaluation pays.
+//!
+//! Emits `BENCH_foldin.json` lines (per-impl rows plus a summary row
+//! with the scheduled-vs-dense speedup per configuration):
+//!
+//!     cargo bench --bench foldin
+//!     scripts/bench.sh   # writes BENCH_foldin.json at the repo root
+//!
+//! The acceptance claim: at K = 1024 the scheduled engine (10 + 2
+//! topics per doc per sweep) beats the dense reference, because its
+//! sweep cost is O(NNZ·S) instead of O(NNZ·K).
+
+use foem::corpus::synthetic::{generate, SyntheticConfig};
+use foem::em::infer::{fold_in_with_report, FoldInConfig};
+use foem::em::PhiStats;
+use foem::util::bench::{black_box, run};
+use foem::util::Rng;
+use foem::LdaParams;
+use std::time::Duration;
+
+const SWEEPS: usize = 20;
+
+/// A synthetic trained-phi stand-in: positive random mass. Fold-in cost
+/// does not depend on phi being a converged model.
+fn synth_phi(k: usize, w: usize, seed: u64) -> PhiStats {
+    let mut rng = Rng::new(seed);
+    let mut phi = PhiStats::zeros(k, w);
+    let mut col = vec![0.0f32; k];
+    for ww in 0..w {
+        for x in col.iter_mut() {
+            *x = rng.next_f32() * 3.0 + 0.05;
+        }
+        phi.add_to_word(ww, &col);
+    }
+    phi
+}
+
+fn main() {
+    let budget = Duration::from_millis(600);
+    let mut cfg = SyntheticConfig::small();
+    cfg.n_docs = 256;
+    let corpus = generate(&cfg, 42);
+    let docs = &corpus.docs;
+    println!(
+        "== fold-in inference: dense reference vs scheduled engine \
+         (D={} NNZ={} sweeps={SWEEPS}) ==",
+        docs.n_docs,
+        docs.nnz()
+    );
+
+    for &k in &[64usize, 256, 1024] {
+        let p = LdaParams::paper_defaults(k);
+        let phi = synth_phi(k, corpus.n_words(), 7 + k as u64);
+        for &workers in &[1usize, 4] {
+            let mut dense_cfg = FoldInConfig::dense(SWEEPS);
+            dense_cfg.n_workers = workers;
+            let mut sched_cfg = FoldInConfig::scheduled(10, SWEEPS);
+            sched_cfg.tol = 0.0; // same fixed budget on both sides
+            sched_cfg.n_workers = workers;
+
+            // Sanity guard before timing: both engines must preserve the
+            // per-document token mass (the fold-in invariant).
+            let mut resp_bytes = [0usize; 2];
+            for (i, c) in [&dense_cfg, &sched_cfg].into_iter().enumerate() {
+                let (theta, rep) = fold_in_with_report(&phi, &p, docs, c, 1);
+                resp_bytes[i] = rep.resp_bytes;
+                for d in 0..docs.n_docs {
+                    let (got, want) = (theta.doc_total(d), docs.doc_len(d));
+                    assert!(
+                        (got - want).abs() < want.max(1.0) * 1e-3,
+                        "doc {d}: theta mass {got} vs tokens {want}"
+                    );
+                }
+            }
+
+            let rd = run(
+                &format!("foldin_dense_k{k}_w{workers}"),
+                budget,
+                || {
+                    black_box(fold_in_with_report(
+                        &phi, &p, docs, &dense_cfg, 1,
+                    ));
+                },
+            );
+            let rs = run(
+                &format!("foldin_sched_k{k}_w{workers}"),
+                budget,
+                || {
+                    black_box(fold_in_with_report(
+                        &phi, &p, docs, &sched_cfg, 1,
+                    ));
+                },
+            );
+
+            for (imp, rep, bytes) in [
+                ("dense", &rd, resp_bytes[0]),
+                ("scheduled", &rs, resp_bytes[1]),
+            ] {
+                println!(
+                    "BENCH_foldin.json {{\"bench\":\"foldin\",\"k\":{k},\
+                     \"workers\":{workers},\"impl\":\"{imp}\",\
+                     \"mean_ns\":{:.0},\"p50_ns\":{:.0},\
+                     \"resp_bytes\":{bytes},\"docs\":{},\"nnz\":{},\
+                     \"sweeps\":{SWEEPS}}}",
+                    rep.mean_ns,
+                    rep.p50_ns,
+                    docs.n_docs,
+                    docs.nnz()
+                );
+            }
+            println!(
+                "BENCH_foldin.json {{\"bench\":\"foldin_summary\",\
+                 \"k\":{k},\"workers\":{workers},\"speedup\":{:.3}}}",
+                rd.mean_ns / rs.mean_ns
+            );
+        }
+    }
+}

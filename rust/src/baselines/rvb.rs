@@ -151,8 +151,13 @@ impl OnlineLda for Rvb {
         // negative per-token LL (worse fit => larger residual).
         let phi = self.inner.export_phi();
         let p = self.inner.eval_params();
-        let theta =
-            crate::em::bem::Bem::fold_in(&phi, &p, &mb.docs, 3, mb.index as u64);
+        let theta = crate::em::infer::fold_in(
+            &phi,
+            &p,
+            &mb.docs,
+            &crate::em::infer::FoldInConfig::dense(3),
+            mb.index as u64,
+        );
         let mut per_doc = vec![0.0f32; mb.docs.n_docs];
         for d in 0..mb.docs.n_docs {
             let mut ll = 0.0f64;

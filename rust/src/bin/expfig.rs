@@ -120,7 +120,7 @@ fn train_timed(
     trace_every: usize,
 ) -> (f64, f64, Vec<(f64, f64)>) {
     let scfg = StreamConfig { minibatch_docs: ds, shuffle: false, seed: 3 };
-    let proto = EvalProtocol { fold_in_iters: 20, seed: 0 };
+    let proto = EvalProtocol { fold_in_iters: 20, seed: 0, ..Default::default() };
     let mut train_secs = 0.0f64;
     let mut trace = Vec::new();
     let mut batch_no = 0usize;
@@ -493,7 +493,7 @@ fn ablation() {
     let k = 50;
     let p = LdaParams::paper_defaults(k);
     let scfg = StreamConfig { minibatch_docs: 256, shuffle: false, seed: 3 };
-    let proto = EvalProtocol { fold_in_iters: 20, seed: 0 };
+    let proto = EvalProtocol { fold_in_iters: 20, seed: 0, ..Default::default() };
     let variants: Vec<(&str, FoemConfig)> = vec![
         ("full FOEM (default)", FoemConfig::paper()),
         ("no exploration", {

@@ -104,6 +104,15 @@ pub struct RunConfig {
     /// trainer loop (numerics and IoStats). `>= 1` overlaps store
     /// prefetch and write-behind with compute (FOEM and SEM only).
     pub pipeline_depth: usize,
+    /// Topics scheduled per document by the fold-in inference engine
+    /// during periodic/final evaluation (`em::infer`); `0` = all K (the
+    /// historical dense protocol). The default mirrors FOEM's production
+    /// `lambda_k*K = 10`, so evaluation cost scales with NNZ·S instead
+    /// of NNZ·K.
+    pub fold_in_subset: usize,
+    /// Worker threads for fold-in evaluation (documents are independent
+    /// given a frozen phi, so this parallelizes embarrassingly).
+    pub fold_in_workers: usize,
     pub seed: u64,
     /// Print per-minibatch progress lines.
     pub verbose: bool,
@@ -128,6 +137,8 @@ impl Default for RunConfig {
             checkpoint_every: 0,
             n_workers: 1,
             pipeline_depth: 0,
+            fold_in_subset: 10,
+            fold_in_workers: 1,
             seed: 42,
             verbose: false,
         }
@@ -165,6 +176,30 @@ impl RunConfig {
         }
     }
 
+    /// The evaluation protocol of the driver's periodic/final predictive
+    /// perplexity: 30 fold-in sweeps through the configured fold-in
+    /// subset/workers. Scheduled subsets run with the per-document
+    /// convergence cutoff on; `fold_in_subset == 0` disables the cutoff
+    /// too, so it reproduces the historical dense protocol exactly
+    /// (full budget, no skipping — the `em::infer` bitwise-reference
+    /// configuration). Shared by the plain and pipelined run loops so
+    /// they cannot drift.
+    pub fn eval_protocol(&self) -> crate::eval::EvalProtocol {
+        let (subset, tol) = if self.fold_in_subset == 0 {
+            (TopicSubset::All, 0.0)
+        } else {
+            (TopicSubset::Fixed(self.fold_in_subset), 1e-2)
+        };
+        crate::eval::EvalProtocol {
+            fold_in_iters: 30,
+            seed: self.seed,
+            subset,
+            tol,
+            workers: self.fold_in_workers.max(1),
+            ..Default::default()
+        }
+    }
+
     /// Apply one `key value` pair (config file line or `--key value`).
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
@@ -183,6 +218,8 @@ impl RunConfig {
             "checkpoint_every" => self.checkpoint_every = value.parse()?,
             "n_workers" | "workers" => self.n_workers = value.parse()?,
             "pipeline_depth" => self.pipeline_depth = value.parse()?,
+            "fold_in_subset" => self.fold_in_subset = value.parse()?,
+            "fold_in_workers" => self.fold_in_workers = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "verbose" => self.verbose = value.parse()?,
             "store" => {
@@ -273,7 +310,30 @@ mod tests {
         assert_eq!(c.n_workers, 2);
         c.set("pipeline_depth", "3").unwrap();
         assert_eq!(c.pipeline_depth, 3);
+        c.set("fold_in_subset", "16").unwrap();
+        c.set("fold_in_workers", "4").unwrap();
+        assert_eq!(c.fold_in_subset, 16);
+        assert_eq!(c.fold_in_workers, 4);
         assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn eval_protocol_reflects_fold_in_knobs() {
+        use crate::em::schedule::TopicSubset;
+        let mut c = RunConfig::default();
+        let proto = c.eval_protocol();
+        assert_eq!(proto.subset, TopicSubset::Fixed(10));
+        assert_eq!(proto.workers, 1);
+        assert_eq!(proto.seed, c.seed);
+        assert!(proto.tol > 0.0);
+        c.set("fold_in_subset", "0").unwrap();
+        c.set("fold_in_workers", "3").unwrap();
+        let proto = c.eval_protocol();
+        assert_eq!(proto.subset, TopicSubset::All);
+        assert_eq!(proto.workers, 3);
+        // subset 0 must reproduce the historical dense protocol exactly:
+        // no convergence cutoff, full sweep budget.
+        assert_eq!(proto.tol, 0.0);
     }
 
     #[test]

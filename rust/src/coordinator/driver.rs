@@ -8,7 +8,7 @@ use crate::baselines::{ogs, ovb, rvb, scvb, soi, OnlineLda};
 use crate::corpus::Corpus;
 use crate::em::foem::{Foem, FoemConfig};
 use crate::em::sem::{Sem, SemConfig};
-use crate::eval::{predictive_perplexity, EvalProtocol};
+use crate::eval::predictive_perplexity;
 use crate::exec::pipeline::{PhasedTrainer, Pipeline};
 use crate::store::InMemoryPhi;
 use crate::stream::{CorpusStream, StreamConfig};
@@ -164,7 +164,10 @@ impl Driver {
         let scale_s = per_pass as f64;
         let mut algo = self.build_algorithm(train.n_words(), scale_s)?;
         let mut metrics = Metrics::new();
-        let proto = EvalProtocol { fold_in_iters: 30, seed: self.cfg.seed };
+        // Periodic/final eval runs the fold-in inference engine with the
+        // configured subset/workers (`--fold-in-subset`,
+        // `--fold-in-workers`), so evaluation cost scales with NNZ·S.
+        let proto = self.cfg.eval_protocol();
         let test_words = test.docs.distinct_words();
 
         let mut batch_no = 0usize;
@@ -295,7 +298,7 @@ impl Driver {
             seed: cfg.seed,
         };
         let mut metrics = Metrics::new();
-        let proto = EvalProtocol { fold_in_iters: 30, seed: cfg.seed };
+        let proto = cfg.eval_protocol();
         let test_words = test.docs.distinct_words();
         let passes = cfg.passes.max(1);
         let stream = (0..passes).flat_map(|pass| {
@@ -407,6 +410,22 @@ mod tests {
         assert!(report.io.is_some());
         assert!(dir.path().join("phi.bin").exists());
         assert!(report.final_perplexity.is_finite());
+    }
+
+    #[test]
+    fn driver_eval_uses_scheduled_parallel_fold_in() {
+        // The fold-in knobs must reach the evaluator: a run with a
+        // scheduled subset + 2 eval workers produces a sane eval trace.
+        let c = generate(&SyntheticConfig::small(), 99);
+        let mut cfg = small_cfg(Algorithm::Foem);
+        cfg.n_topics = 24;
+        cfg.fold_in_subset = 8;
+        cfg.fold_in_workers = 2;
+        let mut d = Driver::new(cfg);
+        let report = d.train_corpus(&c).unwrap();
+        assert!(!report.metrics.eval_trace().is_empty());
+        assert!(report.final_perplexity > 1.0);
+        assert!(report.final_perplexity < c.n_words() as f64);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! Monotonically improves the LDA log-likelihood (Eq. 12).
 
 use super::{
-    estep, perplexity, train_log_likelihood, ConvergenceCheck, MinibatchReport,
+    perplexity, train_log_likelihood, ConvergenceCheck, MinibatchReport,
     PhiStats, ThetaStats,
 };
 use crate::corpus::sparse::DocWordMatrix;
@@ -133,46 +133,6 @@ impl Bem {
     pub fn log_likelihood(&self, docs: &DocWordMatrix) -> f64 {
         train_log_likelihood(docs, &self.theta, &self.phi, &self.params)
     }
-
-    /// Fold-in: fit theta for held-out documents with phi frozen (used by
-    /// the predictive-perplexity protocol, §2.4). Returns the theta stats
-    /// for `docs`.
-    pub fn fold_in<P: super::PhiAccess>(
-        phi: &P,
-        params: &LdaParams,
-        docs: &DocWordMatrix,
-        n_iters: usize,
-        seed: u64,
-    ) -> ThetaStats {
-        let k = params.n_topics;
-        let mut theta = ThetaStats::zeros(k, docs.n_docs);
-        let mut rng = Rng::new(seed);
-        super::init_hard_assignments(docs, k, &mut rng, |d, _, c, topic| {
-            theta.doc_mut(d)[topic] += c;
-        });
-        let mut mu = vec![0.0f32; k];
-        let w_dim = phi.n_words();
-        for _ in 0..n_iters {
-            for d in 0..docs.n_docs {
-                let mut fresh = vec![0.0f32; k];
-                for (w, c) in docs.iter_doc(d) {
-                    estep(
-                        theta.doc(d),
-                        phi.word(w as usize),
-                        phi.phisum(),
-                        params,
-                        w_dim,
-                        &mut mu,
-                    );
-                    for i in 0..k {
-                        fresh[i] += c * mu[i];
-                    }
-                }
-                theta.doc_mut(d).copy_from_slice(&fresh);
-            }
-        }
-        theta
-    }
 }
 
 #[cfg(test)]
@@ -248,17 +208,4 @@ mod tests {
         assert!(tr[tr.len() - 1] <= tr[0]);
     }
 
-    #[test]
-    fn fold_in_produces_consistent_theta() {
-        let docs = small_docs();
-        let p = LdaParams::paper_defaults(5);
-        let mut bem = Bem::init(&docs, p, 2);
-        for _ in 0..5 {
-            bem.sweep(&docs);
-        }
-        let theta = Bem::fold_in(&bem.phi, &p, &docs, 10, 9);
-        for d in 0..docs.n_docs {
-            assert!((theta.doc_total(d) - docs.doc_len(d)).abs() < 1e-2);
-        }
-    }
 }

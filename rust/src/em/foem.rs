@@ -1685,7 +1685,13 @@ mod tests {
         p: &LdaParams,
     ) -> f64 {
         let phi = foem.export_phi();
-        let theta = crate::em::bem::Bem::fold_in(&phi, p, &c.docs, 20, 1);
+        let theta = crate::em::infer::fold_in(
+            &phi,
+            p,
+            &c.docs,
+            &crate::em::infer::FoldInConfig::dense(20),
+            1,
+        );
         let ll = crate::em::train_log_likelihood(&c.docs, &theta, &phi, p);
         crate::em::perplexity(ll, c.n_tokens())
     }

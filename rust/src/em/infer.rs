@@ -1,0 +1,638 @@
+//! Fold-in inference engine: fit `theta` for **unseen** documents with
+//! the topic-word statistics frozen — the serving path behind the
+//! paper's predictive-perplexity protocol (§2.4) and its "infers the
+//! topic distribution from the previously unseen documents incrementally
+//! with constant memory" claim.
+//!
+//! The engine reuses the training machinery instead of duplicating it:
+//!
+//! * **Shared kernel.** Scheduled configurations run every non-zero
+//!   entry through the Eq. 13/38 exclude–recompute–renormalize kernel
+//!   ([`resp::update_entry_theta`] — the theta-only M-step variant of
+//!   the training kernel: an unseen document's mass was never
+//!   accumulated into `phi`, so `col`/`phisum` stay frozen) over a
+//!   slot-compressed [`resp::RespArena`], so the per-document working
+//!   set is O(NNZ·S), not O(NNZ·K).
+//! * **Residual scheduling** (§3.1, per document instead of per word):
+//!   each document keeps a K-length residual row; every sweep updates
+//!   only its top `n_sel` residual topics plus ε-greedy exploration
+//!   slots, and a document whose residual mass falls below the per-token
+//!   tolerance is skipped for the rest of the fold-in — FOEM's inner
+//!   convergence cutoff, applied per doc.
+//! * **Worker parallelism.** Documents are independent given a frozen
+//!   `phi`, so the engine shards the document range across
+//!   [`crate::exec::ParallelExecutor::run_ranged`] workers; worker
+//!   buffers come from the grow-only [`crate::exec::scratch`] pool, so a
+//!   steady-state evaluation loop allocates almost nothing.
+//! * **Storage-generic.** Generic over [`PhiAccess`], so it serves the
+//!   dense in-memory [`super::PhiStats`] and the paged store's sparse
+//!   [`super::EvalPhiView`] (the §3.2 memory-bounded evaluation path —
+//!   its column reads are counted in `IoStats` at snapshot time)
+//!   identically.
+//!
+//! **Determinism / equivalence contract.** `TopicSubset::All` selects
+//! the *synchronous* full-K sweep — per document, Eq. 11
+//! responsibilities from the pre-sweep theta, rebuilt row — which with
+//! one worker and `tol = 0` performs bit-for-bit the float ops of the
+//! historical dense `Bem::fold_in` (retained verbatim as
+//! `dense_ref::fold_in` under `#[cfg(test)]`, the same oracle pattern
+//! as `em::foem::dense_ref`). Scheduled subsets run the incremental kernel
+//! and stay within a small relative perplexity of the dense protocol
+//! (tolerance-tested). Every configuration is deterministic in
+//! `(seed, n_workers)`: shard `i` draws its hard-init stream from a
+//! seed derived from `(seed, i)`, with shard 0 using `seed` itself so a
+//! 1-worker run reproduces the reference exactly. See `rust/DESIGN.md`
+//! §9.
+
+use super::resp;
+use super::schedule::TopicSubset;
+use super::{estep, PhiAccess, ThetaStats};
+use crate::corpus::sparse::DocWordMatrix;
+use crate::util::Rng;
+use crate::LdaParams;
+
+/// Fold-in engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FoldInConfig {
+    /// Topics scheduled per document and sweep. `All` (or any size that
+    /// clamps to K) selects the synchronous dense sweep — the historical
+    /// fold-in protocol; smaller subsets run the scheduled incremental
+    /// kernel.
+    pub subset: TopicSubset,
+    /// ε-greedy exploration slots inside the scheduled subset (ignored
+    /// by the dense path) — same discovery mechanism as
+    /// `FoemConfig::explore_slots`.
+    pub explore_slots: usize,
+    /// Sweep budget.
+    pub max_sweeps: usize,
+    /// Per-document convergence cutoff: a document is skipped once the
+    /// responsibility mass moved per token falls below this, and the
+    /// shard stops early once every document converged. `0.0` disables
+    /// the cutoff (fixed budget — the bitwise-reference configuration).
+    pub tol: f64,
+    /// Worker threads ([`crate::exec::ParallelExecutor::run_ranged`]
+    /// over contiguous document ranges). `1` is the exact serial path.
+    pub n_workers: usize,
+}
+
+impl FoldInConfig {
+    /// The historical dense protocol: synchronous full-K sweeps, fixed
+    /// budget, serial. Bit-identical to the pre-engine `Bem::fold_in`.
+    pub fn dense(max_sweeps: usize) -> Self {
+        Self {
+            subset: TopicSubset::All,
+            explore_slots: 0,
+            max_sweeps,
+            tol: 0.0,
+            n_workers: 1,
+        }
+    }
+
+    /// The paper-shaped scheduled protocol: `n_sel` topics per document
+    /// per sweep plus exploration, with the per-document cutoff on.
+    /// Exploration defaults to 2 slots: enough for topic discovery,
+    /// while keeping entry support — and with it the O(NNZ·S) arena —
+    /// from widening toward K over a long sweep budget.
+    pub fn scheduled(n_sel: usize, max_sweeps: usize) -> Self {
+        Self {
+            subset: TopicSubset::Fixed(n_sel),
+            explore_slots: 2,
+            max_sweeps,
+            tol: 1e-2,
+            n_workers: 1,
+        }
+    }
+}
+
+/// Telemetry of one fold-in invocation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FoldInReport {
+    /// Sweeps actually run (max across shards).
+    pub sweeps: usize,
+    /// Peak responsibility-arena bytes, summed across concurrent shards
+    /// (`0` for the memoryless dense path).
+    pub resp_bytes: usize,
+    /// Auxiliary scratch bytes (theta, residual rows, kernel buffers),
+    /// summed across concurrent shards.
+    pub scratch_bytes: usize,
+}
+
+/// Fold-in: fit theta for `docs` with `phi` frozen. See the module docs
+/// for the scheduling and determinism contract.
+pub fn fold_in<P: PhiAccess + Sync>(
+    phi: &P,
+    params: &LdaParams,
+    docs: &DocWordMatrix,
+    cfg: &FoldInConfig,
+    seed: u64,
+) -> ThetaStats {
+    fold_in_with_report(phi, params, docs, cfg, seed).0
+}
+
+/// [`fold_in`] plus the working-set / convergence telemetry.
+pub fn fold_in_with_report<P: PhiAccess + Sync>(
+    phi: &P,
+    params: &LdaParams,
+    docs: &DocWordMatrix,
+    cfg: &FoldInConfig,
+    seed: u64,
+) -> (ThetaStats, FoldInReport) {
+    let k = params.n_topics;
+    let exec = crate::exec::ParallelExecutor::new(cfg.n_workers);
+    let outs = exec.run_ranged(docs.n_docs, |i, range| {
+        fold_shard(phi, params, docs, cfg, range, shard_seed(seed, i as u64))
+    });
+    // Assemble the contiguous per-shard theta chunks into one buffer and
+    // recycle the shard buffers.
+    let mut data = vec![0.0f32; k * docs.n_docs];
+    let mut report = FoldInReport::default();
+    let mut cursor = 0usize;
+    for out in outs {
+        data[cursor..cursor + out.theta.len()].copy_from_slice(&out.theta);
+        cursor += out.theta.len();
+        crate::exec::scratch::put_f32(out.theta);
+        report.sweeps = report.sweeps.max(out.sweeps);
+        report.resp_bytes += out.resp_bytes;
+        report.scratch_bytes += out.scratch_bytes;
+    }
+    debug_assert_eq!(cursor, data.len());
+    (ThetaStats::from_raw(k, docs.n_docs, data), report)
+}
+
+/// Shard `i`'s hard-init stream seed. Shard 0 uses `seed` verbatim so a
+/// 1-worker run draws exactly the historical `Bem::fold_in` init stream.
+#[inline]
+fn shard_seed(seed: u64, i: u64) -> u64 {
+    seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// One shard worker's output: its contiguous theta rows (a recycled pool
+/// buffer — the caller copies and returns it) plus telemetry.
+struct ShardOut {
+    theta: Vec<f32>,
+    sweeps: usize,
+    resp_bytes: usize,
+    scratch_bytes: usize,
+}
+
+/// Fold one contiguous document range in. Dispatches on the *effective*
+/// subset size: a subset that covers all K topics runs the synchronous
+/// dense sweep (the bitwise-reference path); anything smaller runs the
+/// residual-scheduled incremental kernel.
+fn fold_shard<P: PhiAccess>(
+    phi: &P,
+    params: &LdaParams,
+    docs: &DocWordMatrix,
+    cfg: &FoldInConfig,
+    range: std::ops::Range<usize>,
+    seed: u64,
+) -> ShardOut {
+    let n_sel = cfg.subset.size(params.n_topics);
+    if n_sel >= params.n_topics {
+        fold_shard_dense(phi, params, docs, cfg, range, seed)
+    } else {
+        fold_shard_scheduled(phi, params, docs, cfg, range, seed, n_sel)
+    }
+}
+
+/// Synchronous full-K fold-in of one document range: per document, all
+/// responsibilities from the pre-sweep theta row ([`estep`], Eq. 11),
+/// re-accumulated into a fresh row — exactly the historical
+/// `Bem::fold_in` float ops (no responsibility storage needed: the
+/// synchronous iterate is memoryless in mu). With `tol > 0`, converged
+/// documents are skipped and the shard exits once all have converged.
+fn fold_shard_dense<P: PhiAccess>(
+    phi: &P,
+    params: &LdaParams,
+    docs: &DocWordMatrix,
+    cfg: &FoldInConfig,
+    range: std::ops::Range<usize>,
+    seed: u64,
+) -> ShardOut {
+    let k = params.n_topics;
+    let n = range.len();
+    let w_dim = phi.n_words();
+    let mut ws = crate::exec::scratch::take();
+    let mut theta = crate::exec::scratch::take_f32();
+    theta.resize(n * k, 0.0);
+    let mut mu = std::mem::take(&mut ws.col_a);
+    mu.clear();
+    mu.resize(k, 0.0);
+    let mut fresh = std::mem::take(&mut ws.col_b);
+    fresh.clear();
+    fresh.resize(k, 0.0);
+
+    // Hard init (the historical init_hard_assignments stream).
+    let mut rng = Rng::new(seed);
+    for (ld, d) in range.clone().enumerate() {
+        for (_w, c) in docs.iter_doc(d) {
+            let topic = rng.below(k);
+            theta[ld * k + topic] += c;
+        }
+    }
+
+    let use_cutoff = cfg.tol > 0.0;
+    let doc_lens: Vec<f32> =
+        range.clone().map(|d| docs.doc_len(d)).collect();
+    let mut active: Vec<bool> = range
+        .clone()
+        .map(|d| {
+            let (s, e) = docs.doc_range(d);
+            s != e
+        })
+        .collect();
+
+    let mut sweeps = 0usize;
+    for _ in 0..cfg.max_sweeps {
+        sweeps += 1;
+        let mut any_moved = !use_cutoff;
+        for (ld, d) in range.clone().enumerate() {
+            if use_cutoff && !active[ld] {
+                continue;
+            }
+            let th = &mut theta[ld * k..(ld + 1) * k];
+            fresh.iter_mut().for_each(|x| *x = 0.0);
+            for (w, c) in docs.iter_doc(d) {
+                estep(th, phi.word(w as usize), phi.phisum(), params, w_dim, &mut mu);
+                for i in 0..k {
+                    fresh[i] += c * mu[i];
+                }
+            }
+            if use_cutoff {
+                let mut moved = 0.0f64;
+                for i in 0..k {
+                    moved += (fresh[i] - th[i]).abs() as f64;
+                }
+                if moved < cfg.tol * doc_lens[ld] as f64 {
+                    active[ld] = false;
+                } else {
+                    any_moved = true;
+                }
+            }
+            th.copy_from_slice(&fresh[..k]);
+        }
+        if use_cutoff && !any_moved {
+            break;
+        }
+    }
+
+    let scratch_bytes = theta.len() * 4
+        + mu.len() * 4
+        + fresh.len() * 4
+        + doc_lens.len() * 4
+        + active.len();
+    ws.col_a = mu;
+    ws.col_b = fresh;
+    crate::exec::scratch::put(ws);
+    ShardOut { theta, sweeps, resp_bytes: 0, scratch_bytes }
+}
+
+/// Residual-scheduled fold-in of one document range through the shared
+/// theta-only kernel over a slot-compressed arena (`n_sel < K`).
+#[allow(clippy::too_many_arguments)]
+fn fold_shard_scheduled<P: PhiAccess>(
+    phi: &P,
+    params: &LdaParams,
+    docs: &DocWordMatrix,
+    cfg: &FoldInConfig,
+    range: std::ops::Range<usize>,
+    seed: u64,
+    n_sel: usize,
+) -> ShardOut {
+    let k = params.n_topics;
+    let n = range.len();
+    let am1 = params.am1();
+    let bm1 = params.bm1();
+    let wbm1 = params.wbm1(phi.n_words());
+    let entry_start = docs.doc_ptr[range.start] as usize;
+    let nnz = docs.doc_ptr[range.end] as usize - entry_start;
+
+    let mut ws = crate::exec::scratch::take();
+    let mut arena = std::mem::take(&mut ws.arena);
+    arena.reset(k, nnz, resp::lane_capacity(n_sel, cfg.explore_slots, k));
+    let mut kern = std::mem::take(&mut ws.kern);
+    let mut theta = crate::exec::scratch::take_f32();
+    theta.resize(n * k, 0.0);
+    // Per-document residual rows `r_d(k)` + resident totals — the §3.1
+    // scheduling state, per doc instead of per word.
+    let mut res = std::mem::take(&mut ws.col_a);
+    res.clear();
+    res.resize(n * k, 0.0);
+    let mut r_tot = std::mem::take(&mut ws.col_b);
+    r_tot.clear();
+    r_tot.resize(n, 0.0);
+
+    // Hard init: one-hot responsibilities accumulated into theta; the
+    // moved mass seeds the residuals so selection immediately favors
+    // each document's assigned topics (Fig. 4 line 3's pattern).
+    let mut rng = Rng::new(seed);
+    {
+        let mut e = 0usize;
+        for (ld, d) in range.clone().enumerate() {
+            for (_w, c) in docs.iter_doc(d) {
+                let topic = rng.below(k);
+                arena.set_one_hot(e, topic);
+                theta[ld * k + topic] += c;
+                res[ld * k + topic] += c;
+                r_tot[ld] += c;
+                e += 1;
+            }
+        }
+    }
+
+    let use_cutoff = cfg.tol > 0.0;
+    let doc_lens: Vec<f32> =
+        range.clone().map(|d| docs.doc_len(d)).collect();
+    let tokens: f64 = doc_lens.iter().map(|&x| x as f64).sum();
+
+    let mut sel: Vec<u32> = Vec::with_capacity(n_sel);
+    let mut fresh_res = vec![0.0f32; n_sel];
+    let mut sweeps = 0usize;
+    for _ in 0..cfg.max_sweeps {
+        sweeps += 1;
+        let mut moved_total = 0.0f64;
+        for ld in 0..n {
+            if use_cutoff
+                && (r_tot[ld] as f64) < cfg.tol * doc_lens[ld] as f64
+            {
+                continue;
+            }
+            let d = range.start + ld;
+            let (s, en) = docs.doc_range(d);
+            if s == en {
+                continue;
+            }
+            // Topic selection from the doc's residual row (Eq. 36/37
+            // applied per document) + ε-greedy exploration.
+            let rcol = &mut res[ld * k..(ld + 1) * k];
+            resp::top_n_indices(rcol, n_sel, &mut sel);
+            if cfg.explore_slots > 0 {
+                let swaps = cfg.explore_slots.min(n_sel / 2);
+                for j in 0..swaps {
+                    let cand = rng.below(k) as u32;
+                    if !sel.contains(&cand) {
+                        let pos = sel.len() - 1 - j;
+                        sel[pos] = cand;
+                    }
+                }
+            }
+            // Selected residuals are re-accumulated below (assignment
+            // semantics); track removed mass for the incremental total.
+            let mut removed = 0.0f32;
+            for &kk in &sel {
+                removed += rcol[kk as usize];
+                rcol[kk as usize] = 0.0;
+            }
+            fresh_res.iter_mut().for_each(|x| *x = 0.0);
+            kern.begin_selection(k, &sel);
+            let th = &mut theta[ld * k..(ld + 1) * k];
+            let e_base = docs.doc_ptr[d] as usize - entry_start;
+            for (off, i) in (s..en).enumerate() {
+                resp::update_entry_theta(
+                    &mut arena,
+                    &mut kern,
+                    e_base + off,
+                    &sel,
+                    docs.counts[i],
+                    th,
+                    phi.word(docs.word_ids[i] as usize),
+                    phi.phisum(),
+                    am1,
+                    bm1,
+                    wbm1,
+                    &mut fresh_res,
+                );
+            }
+            kern.end_selection(&sel);
+            let mut doc_moved = 0.0f32;
+            for (j, &kk) in sel.iter().enumerate() {
+                rcol[kk as usize] += fresh_res[j];
+                doc_moved += fresh_res[j];
+            }
+            r_tot[ld] = (r_tot[ld] - removed + doc_moved).max(0.0);
+            moved_total += doc_moved as f64;
+        }
+        if use_cutoff && moved_total / tokens.max(1.0) < cfg.tol {
+            break;
+        }
+    }
+
+    let resp_bytes = arena.bytes();
+    let scratch_bytes = theta.len() * 4
+        + res.len() * 4
+        + r_tot.len() * 4
+        + doc_lens.len() * 4
+        + kern.bytes()
+        + (sel.capacity() + fresh_res.len()) * 4;
+    ws.arena = arena;
+    ws.kern = kern;
+    ws.col_a = res;
+    ws.col_b = r_tot;
+    crate::exec::scratch::put(ws);
+    ShardOut { theta, sweeps, resp_bytes, scratch_bytes }
+}
+
+/// The historical `Bem::fold_in` (pre-engine), kept verbatim as the
+/// bitwise oracle for the dense/serial configuration — the same pattern
+/// as `em::foem::dense_ref`. Only change: the per-doc `fresh` buffer is
+/// hoisted out of the sweep loop (same values, no per-doc allocation —
+/// the satellite fix the engine gets from the scratch pool).
+#[cfg(test)]
+pub(crate) mod dense_ref {
+    use super::*;
+
+    pub fn fold_in<P: PhiAccess>(
+        phi: &P,
+        params: &LdaParams,
+        docs: &DocWordMatrix,
+        n_iters: usize,
+        seed: u64,
+    ) -> ThetaStats {
+        let k = params.n_topics;
+        let mut theta = ThetaStats::zeros(k, docs.n_docs);
+        let mut rng = Rng::new(seed);
+        super::super::init_hard_assignments(docs, k, &mut rng, |d, _, c, topic| {
+            theta.doc_mut(d)[topic] += c;
+        });
+        let mut mu = vec![0.0f32; k];
+        let mut fresh = vec![0.0f32; k];
+        let w_dim = phi.n_words();
+        for _ in 0..n_iters {
+            for d in 0..docs.n_docs {
+                fresh.iter_mut().for_each(|x| *x = 0.0);
+                for (w, c) in docs.iter_doc(d) {
+                    estep(
+                        theta.doc(d),
+                        phi.word(w as usize),
+                        phi.phisum(),
+                        params,
+                        w_dim,
+                        &mut mu,
+                    );
+                    for i in 0..k {
+                        fresh[i] += c * mu[i];
+                    }
+                }
+                theta.doc_mut(d).copy_from_slice(&fresh);
+            }
+        }
+        theta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synthetic::{generate, SyntheticConfig};
+    use crate::em::bem::Bem;
+    use crate::em::PhiStats;
+
+    fn trained_phi(k: usize, seed: u64) -> (PhiStats, crate::corpus::Corpus) {
+        let c = generate(&SyntheticConfig::small(), seed);
+        let p = LdaParams::paper_defaults(k);
+        let mut bem = Bem::init(&c.docs, p, seed);
+        for _ in 0..6 {
+            bem.sweep(&c.docs);
+        }
+        (bem.phi.clone(), c)
+    }
+
+    #[test]
+    fn dense_serial_bit_identical_to_reference() {
+        let k = 12;
+        let (phi, c) = trained_phi(k, 31);
+        let p = LdaParams::paper_defaults(k);
+        let cfg = FoldInConfig::dense(10);
+        let theta = fold_in(&phi, &p, &c.docs, &cfg, 99);
+        let reference = dense_ref::fold_in(&phi, &p, &c.docs, 10, 99);
+        assert_eq!(theta.raw().len(), reference.raw().len());
+        for (i, (a, b)) in theta.raw().iter().zip(reference.raw()).enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "theta diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn oversized_fixed_subset_degrades_to_dense_path() {
+        // Fixed(n >= K) clamps to All: same dispatch, same bits.
+        let k = 8;
+        let (phi, c) = trained_phi(k, 32);
+        let p = LdaParams::paper_defaults(k);
+        let mut cfg = FoldInConfig::dense(8);
+        cfg.subset = TopicSubset::Fixed(10);
+        let a = fold_in(&phi, &p, &c.docs, &cfg, 5);
+        let b = fold_in(&phi, &p, &c.docs, &FoldInConfig::dense(8), 5);
+        assert_eq!(a.raw(), b.raw());
+    }
+
+    #[test]
+    fn fold_in_produces_consistent_theta() {
+        // Per-doc theta mass == doc token mass, on BOTH paths (the
+        // scheduled kernel is mass-preserving per entry).
+        let k = 24;
+        let (phi, c) = trained_phi(k, 33);
+        let p = LdaParams::paper_defaults(k);
+        for cfg in [FoldInConfig::dense(10), FoldInConfig::scheduled(8, 30)] {
+            let theta = fold_in(&phi, &p, &c.docs, &cfg, 9);
+            for d in 0..c.docs.n_docs {
+                assert!(
+                    (theta.doc_total(d) - c.docs.doc_len(d)).abs() < 1e-2,
+                    "doc {d} ({cfg:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_fold_in_is_deterministic() {
+        let k = 16;
+        let (phi, c) = trained_phi(k, 34);
+        let p = LdaParams::paper_defaults(k);
+        for mut cfg in [FoldInConfig::dense(6), FoldInConfig::scheduled(6, 20)]
+        {
+            cfg.n_workers = 4;
+            let a = fold_in(&phi, &p, &c.docs, &cfg, 77);
+            let b = fold_in(&phi, &p, &c.docs, &cfg, 77);
+            assert_eq!(a.raw(), b.raw(), "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn per_doc_cutoff_stops_early_and_stays_close() {
+        // A sharply trained phi (K matches the generator) makes per-doc
+        // fold-in converge quickly, so the cutoff has real headroom.
+        let k = 10;
+        let c = generate(&SyntheticConfig::small(), 35);
+        let p = LdaParams::paper_defaults(k);
+        let mut bem = Bem::init(&c.docs, p, 35);
+        for _ in 0..25 {
+            bem.sweep(&c.docs);
+        }
+        let phi = bem.phi.clone();
+        let full = FoldInConfig::dense(80);
+        let (theta_full, rep_full) =
+            fold_in_with_report(&phi, &p, &c.docs, &full, 3);
+        assert_eq!(rep_full.sweeps, 80, "tol=0 must run the whole budget");
+        let mut cut = full;
+        cut.tol = 3e-3;
+        let (theta_cut, rep_cut) =
+            fold_in_with_report(&phi, &p, &c.docs, &cut, 3);
+        assert!(
+            rep_cut.sweeps < 80,
+            "cutoff never fired: {} sweeps",
+            rep_cut.sweeps
+        );
+        for d in 0..c.docs.n_docs {
+            let l1: f32 = theta_full
+                .doc(d)
+                .iter()
+                .zip(theta_cut.doc(d))
+                .map(|(a, b)| (a - b).abs())
+                .sum();
+            assert!(
+                l1 < c.docs.doc_len(d) * 0.08,
+                "doc {d} drifted: L1 {l1}"
+            );
+        }
+    }
+
+    #[test]
+    fn scheduled_engine_reports_sub_dense_working_set() {
+        // A bounded sweep budget bounds each entry's cumulative support
+        // (every sweep can insert at most the selected coordinates), so
+        // the arena undercuts the dense nnz × K buffer.
+        let k = 256;
+        let (phi, c) = trained_phi(k, 36);
+        let p = LdaParams::paper_defaults(k);
+        let mut cfg = FoldInConfig::scheduled(10, 10);
+        cfg.explore_slots = 0;
+        let (_, rep) = fold_in_with_report(&phi, &p, &c.docs, &cfg, 1);
+        let dense_bytes = c.docs.nnz() * k * 4;
+        assert!(rep.resp_bytes > 0);
+        assert!(
+            rep.resp_bytes < dense_bytes,
+            "arena {} not below dense {dense_bytes}",
+            rep.resp_bytes
+        );
+    }
+
+    #[test]
+    fn empty_documents_are_handled() {
+        let k = 6;
+        let (phi, _) = trained_phi(k, 37);
+        let p = LdaParams::paper_defaults(k);
+        let r0: &[(u32, f32)] = &[(0, 2.0), (3, 1.0)];
+        let r1: &[(u32, f32)] = &[]; // empty doc
+        let r2: &[(u32, f32)] = &[(5, 4.0)];
+        let docs = DocWordMatrix::from_rows(phi.n_words, &[r0, r1, r2]);
+        for mut cfg in
+            [FoldInConfig::dense(20), FoldInConfig::scheduled(3, 20)]
+        {
+            cfg.tol = 1e-3;
+            let theta = fold_in(&phi, &p, &docs, &cfg, 4);
+            assert_eq!(theta.doc_total(1), 0.0, "{cfg:?}");
+            assert!((theta.doc_total(0) - 3.0).abs() < 1e-3);
+            assert!((theta.doc_total(2) - 4.0).abs() < 1e-3);
+        }
+    }
+}

@@ -1,13 +1,15 @@
 //! The EM framework for LDA (paper §2): shared sufficient-statistics
 //! types, the Eq. 11 / Eq. 13 E-step inner loops, the slot-compressed
-//! responsibility arena and shared sweep kernel ([`resp`]), and the four
+//! responsibility arena and shared sweep kernel ([`resp`]), the four
 //! EM algorithms — batch ([`bem`]), incremental ([`iem`]), stepwise
 //! ([`sem`]) and the paper's contribution, fast online EM ([`foem`])
-//! with its subset schedule ([`schedule`]).
+//! with its subset schedule ([`schedule`]) — plus the fold-in inference
+//! engine for unseen documents ([`infer`]).
 
 pub mod bem;
 pub mod foem;
 pub mod iem;
+pub mod infer;
 pub mod resp;
 pub mod schedule;
 pub mod sem;
@@ -245,6 +247,14 @@ impl ThetaStats {
         self.data
     }
 
+    /// Wrap an already-filled row-contiguous buffer (`k * n_docs` long) —
+    /// the fold-in engine ([`infer`]) assembles per-shard results into
+    /// one buffer and lifts it into stats without a copy.
+    pub fn from_raw(k: usize, n_docs: usize, data: Vec<f32>) -> Self {
+        debug_assert_eq!(data.len(), k * n_docs);
+        Self { k, n_docs, data }
+    }
+
     #[inline]
     pub fn doc(&self, d: usize) -> &[f32] {
         &self.data[d * self.k..(d + 1) * self.k]
@@ -456,6 +466,11 @@ pub fn init_hard_assignments(
 /// Training-set word log-likelihood of a (theta, phi) state:
 /// `sum_{w,d} x_{w,d} log sum_k theta_d(k) phi_w(k)` with the Eq. 9/10
 /// normalizations. `exp(-ll/ntokens)` is the paper's training perplexity.
+///
+/// The per-token mixture probability and the theta normalizer accumulate
+/// in f64: a K-term f32 sum loses ~`K·ε` relative accuracy, which is
+/// material at K ≥ 1024 (same eval-path fix as
+/// `eval::predictive_perplexity`).
 pub fn train_log_likelihood(
     docs: &DocWordMatrix,
     theta: &ThetaStats,
@@ -465,19 +480,20 @@ pub fn train_log_likelihood(
     let am1 = params.am1();
     let bm1 = params.bm1();
     let wbm1 = params.wbm1(phi.n_words);
-    let kam1 = params.n_topics as f32 * am1;
+    let kam1 = (params.n_topics as f32 * am1) as f64;
     let mut ll = 0.0f64;
     for d in 0..docs.n_docs {
         let trow = theta.doc(d);
-        let tden = trow.iter().sum::<f32>() + kam1;
+        let tden =
+            trow.iter().map(|&x| x as f64).sum::<f64>() + kam1;
         for (w, c) in docs.iter_doc(d) {
             let pcol = phi.word(w as usize);
-            let mut p = 0.0f32;
+            let mut p = 0.0f64;
             for i in 0..params.n_topics {
-                p += (trow[i] + am1) / tden * (pcol[i] + bm1)
-                    / (phi.phisum[i] + wbm1);
+                p += (trow[i] + am1) as f64 / tden * (pcol[i] + bm1) as f64
+                    / (phi.phisum[i] + wbm1) as f64;
             }
-            ll += c as f64 * (p.max(1e-30) as f64).ln();
+            ll += c as f64 * p.max(1e-300).ln();
         }
     }
     ll

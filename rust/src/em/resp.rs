@@ -324,6 +324,97 @@ impl SweepKernel {
             self.mark[kk as usize] = 0;
         }
     }
+
+    /// Public selection bracket: install the mark for a run of
+    /// [`update_entry`] / [`update_entry_theta`] calls sharing one `sel`.
+    /// The training sweep brackets per *word* ([`sweep_word`]); the
+    /// fold-in engine (`em::infer`) brackets per *document* — same
+    /// mechanism, different grain.
+    #[inline]
+    pub fn begin_selection(&mut self, k: usize, sel: &[u32]) {
+        self.begin_word(k, sel);
+    }
+
+    /// Close a [`SweepKernel::begin_selection`] bracket.
+    #[inline]
+    pub fn end_selection(&mut self, sel: &[u32]) {
+        self.end_word(sel);
+    }
+}
+
+/// Resolve entry `e`'s stored coordinates against the installed selection
+/// mark: one scan of the contiguous lane (+ rare spill chain) fills
+/// `kern.mu_old` / `kern.slot_of` for every `sel` position, instead of
+/// `n_sel` strided probes of a K-wide row. Returns `(base, n_occ)` — the
+/// entry's lane base index and occupied-slot count. Shared by the
+/// training ([`update_entry`]) and fold-in ([`update_entry_theta`])
+/// variants of the kernel.
+#[inline]
+fn resolve_sparse(
+    arena: &RespArena,
+    kern: &mut SweepKernel,
+    e: usize,
+    n_sel: usize,
+) -> (usize, usize) {
+    kern.mu_old[..n_sel].fill(0.0);
+    kern.slot_of[..n_sel].fill(NO_SLOT);
+    let cap = arena.lane_cap;
+    let base = e * cap;
+    let mut n_occ = cap;
+    for s in 0..cap {
+        let t = arena.topics[base + s];
+        if t == NO_TOPIC {
+            n_occ = s;
+            break;
+        }
+        let m = kern.mark[t as usize];
+        if m != 0 {
+            kern.mu_old[(m - 1) as usize] = arena.weights[base + s];
+            kern.slot_of[(m - 1) as usize] = s as u32;
+        }
+    }
+    let mut idx = arena.spill_head[e];
+    while idx != NO_SPILL {
+        let i = idx as usize;
+        let m = kern.mark[arena.spill_topics[i] as usize];
+        if m != 0 {
+            kern.mu_old[(m - 1) as usize] = arena.spill_weights[i];
+            kern.slot_of[(m - 1) as usize] = SPILL_BIT | idx;
+        }
+        idx = arena.spill_next[i];
+    }
+    (base, n_occ)
+}
+
+/// Write `new` back at a [`resolve_sparse`]-resolved `slot` of entry `e`
+/// (in-place lane / in-place spill / lane append / spill insert) — the
+/// storage half shared by both kernel variants. A fresh zero is
+/// indistinguishable from absent, so it never consumes a slot.
+#[inline]
+fn store_resolved(
+    arena: &mut RespArena,
+    e: usize,
+    base: usize,
+    n_occ: &mut usize,
+    slot: u32,
+    kk: usize,
+    new: f32,
+) {
+    if slot == NO_SLOT {
+        if new != 0.0 {
+            if *n_occ < arena.lane_cap {
+                arena.topics[base + *n_occ] = kk as u32;
+                arena.weights[base + *n_occ] = new;
+                *n_occ += 1;
+            } else {
+                arena.push_spill(e, kk as u32, new);
+            }
+        }
+    } else if slot & SPILL_BIT != 0 {
+        arena.spill_weights[(slot & !SPILL_BIT) as usize] = new;
+    } else {
+        arena.weights[base + slot as usize] = new;
+    }
 }
 
 /// Outcome of one entry update — what callers need for convergence
@@ -452,36 +543,7 @@ fn update_entry_sparse(
 ) -> EntryOutcome {
     let n_sel = sel.len();
     debug_assert!(kern.mark.len() >= arena.k, "sparse update outside sweep_word");
-    // Resolve the entry's stored coordinates against the selection mark:
-    // one scan of the contiguous lane (+ rare spill chain) instead of
-    // n_sel strided probes of a K-wide row.
-    kern.mu_old[..n_sel].fill(0.0);
-    kern.slot_of[..n_sel].fill(NO_SLOT);
-    let cap = arena.lane_cap;
-    let base = e * cap;
-    let mut n_occ = cap;
-    for s in 0..cap {
-        let t = arena.topics[base + s];
-        if t == NO_TOPIC {
-            n_occ = s;
-            break;
-        }
-        let m = kern.mark[t as usize];
-        if m != 0 {
-            kern.mu_old[(m - 1) as usize] = arena.weights[base + s];
-            kern.slot_of[(m - 1) as usize] = s as u32;
-        }
-    }
-    let mut idx = arena.spill_head[e];
-    while idx != NO_SPILL {
-        let i = idx as usize;
-        let m = kern.mark[arena.spill_topics[i] as usize];
-        if m != 0 {
-            kern.mu_old[(m - 1) as usize] = arena.spill_weights[i];
-            kern.slot_of[(m - 1) as usize] = SPILL_BIT | idx;
-        }
-        idx = arena.spill_next[i];
-    }
+    let (base, mut n_occ) = resolve_sparse(arena, kern, e, n_sel);
 
     // Retained mass within the subset (Eq. 38) — summed in `sel` order,
     // matching the dense loop's float rounding exactly.
@@ -516,23 +578,106 @@ fn update_entry_sparse(
         phisum[kk] += delta;
         fresh_res[j] += delta.abs();
         let slot = kern.slot_of[j];
-        if slot == NO_SLOT {
-            // A fresh zero is indistinguishable from absent: skip the
-            // insert so degenerate coordinates never consume slots.
-            if new != 0.0 {
-                if n_occ < cap {
-                    arena.topics[base + n_occ] = kk as u32;
-                    arena.weights[base + n_occ] = new;
-                    n_occ += 1;
-                } else {
-                    arena.push_spill(e, kk as u32, new);
-                }
-            }
-        } else if slot & SPILL_BIT != 0 {
-            arena.spill_weights[(slot & !SPILL_BIT) as usize] = new;
-        } else {
-            arena.weights[base + slot as usize] = new;
+        store_resolved(arena, e, base, &mut n_occ, slot, kk, new);
+    }
+    EntryOutcome { m_old, z, updated: true }
+}
+
+/// The fold-in variant of [`update_entry`]: the same
+/// exclude–recompute–renormalize update with a **theta-only M-step**.
+/// An unseen document's mass was never accumulated into the topic-word
+/// statistics, so there is nothing to exclude from `col`/`phisum` and
+/// nothing to write back there — `phi` stays frozen (read-only) and only
+/// the document's theta row moves. Everything else is the Eq. 13/38
+/// kernel verbatim: same resolve (`resolve_sparse`), same `sel`-order
+/// float ops, same mass-preserving renormalization, same write-back
+/// (`store_resolved`). Used by the fold-in inference engine
+/// (`em::infer`); sparse layouts must run inside a
+/// [`SweepKernel::begin_selection`] bracket.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn update_entry_theta(
+    arena: &mut RespArena,
+    kern: &mut SweepKernel,
+    e: usize,
+    sel: &[u32],
+    c: f32,
+    th: &mut [f32],
+    col: &[f32],
+    phisum: &[f32],
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    fresh_res: &mut [f32],
+) -> EntryOutcome {
+    kern.ensure_sel(sel.len());
+    if arena.is_dense() {
+        let k = arena.k;
+        let row = &mut arena.weights[e * k..(e + 1) * k];
+        let mut m_old = 0.0f32;
+        for &kk in sel {
+            m_old += row[kk as usize];
         }
+        if m_old <= 1e-12 {
+            return EntryOutcome { m_old, z: 0.0, updated: false };
+        }
+        let mut z = 0.0f32;
+        for (j, &kk) in sel.iter().enumerate() {
+            let kk = kk as usize;
+            let excl = c * row[kk];
+            let u = (th[kk] - excl + am1) * (col[kk] + bm1)
+                / (phisum[kk] + wbm1);
+            kern.scratch_mu[j] = u.max(0.0);
+            z += kern.scratch_mu[j];
+        }
+        if z <= 0.0 {
+            return EntryOutcome { m_old, z, updated: false };
+        }
+        let renorm = m_old / z;
+        for (j, &kk) in sel.iter().enumerate() {
+            let kk = kk as usize;
+            let new = kern.scratch_mu[j] * renorm;
+            let delta = c * (new - row[kk]);
+            th[kk] += delta;
+            fresh_res[j] += delta.abs();
+            row[kk] = new;
+        }
+        return EntryOutcome { m_old, z, updated: true };
+    }
+
+    let n_sel = sel.len();
+    debug_assert!(
+        kern.mark.len() >= arena.k,
+        "sparse theta update outside begin_selection"
+    );
+    let (base, mut n_occ) = resolve_sparse(arena, kern, e, n_sel);
+    let mut m_old = 0.0f32;
+    for &m in &kern.mu_old[..n_sel] {
+        m_old += m;
+    }
+    if m_old <= 1e-12 {
+        return EntryOutcome { m_old, z: 0.0, updated: false };
+    }
+    let mut z = 0.0f32;
+    for (j, &kk) in sel.iter().enumerate() {
+        let kk = kk as usize;
+        let excl = c * kern.mu_old[j];
+        let u =
+            (th[kk] - excl + am1) * (col[kk] + bm1) / (phisum[kk] + wbm1);
+        kern.scratch_mu[j] = u.max(0.0);
+        z += kern.scratch_mu[j];
+    }
+    if z <= 0.0 {
+        return EntryOutcome { m_old, z, updated: false };
+    }
+    let renorm = m_old / z;
+    for (j, &kk) in sel.iter().enumerate() {
+        let new = kern.scratch_mu[j] * renorm;
+        let delta = c * (new - kern.mu_old[j]);
+        let kk = kk as usize;
+        th[kk] += delta;
+        fresh_res[j] += delta.abs();
+        store_resolved(arena, e, base, &mut n_occ, kern.slot_of[j], kk, new);
     }
     EntryOutcome { m_old, z, updated: true }
 }
@@ -791,6 +936,124 @@ mod tests {
                 dense.bytes()
             );
         }
+    }
+
+    /// Same property for the fold-in variant: sparse lanes and the dense
+    /// layout perform identical float ops — and phi stays untouched.
+    #[test]
+    fn theta_kernel_sparse_bit_identical_to_dense_layout() {
+        let k = 24usize;
+        let n_entries = 10usize;
+        let mut rng = Rng::new(11);
+        for &lane_cap in &[2usize, 5, 8] {
+            let mut dense = RespArena::new();
+            dense.reset(k, n_entries, k);
+            let mut sparse = RespArena::new();
+            sparse.reset(k, n_entries, lane_cap);
+            let mut kd = SweepKernel::new();
+            let mut ks = SweepKernel::new();
+
+            let mut th_d: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 4.0).collect();
+            let mut th_s = th_d.clone();
+            let col: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 2.0 + 0.1).collect();
+            let phisum: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 50.0 + 1.0).collect();
+            let (col0, ps0) = (col.clone(), phisum.clone());
+
+            for e in 0..n_entries {
+                let t = rng.below(k);
+                dense.set_one_hot(e, t);
+                sparse.set_one_hot(e, t);
+            }
+
+            for round in 0..6 {
+                let mut sel: Vec<u32> = Vec::new();
+                while sel.len() < 5 {
+                    let cand = rng.below(k) as u32;
+                    if !sel.contains(&cand) {
+                        sel.push(cand);
+                    }
+                }
+                let mut fr_d = vec![0.0f32; sel.len()];
+                let mut fr_s = vec![0.0f32; sel.len()];
+                kd.begin_selection(k, &sel);
+                ks.begin_selection(k, &sel);
+                for e in 0..n_entries {
+                    let c = (e % 3 + 1) as f32;
+                    update_entry_theta(
+                        &mut dense, &mut kd, e, &sel, c, &mut th_d, &col,
+                        &phisum, 0.01, 0.01, 0.32, &mut fr_d,
+                    );
+                    update_entry_theta(
+                        &mut sparse, &mut ks, e, &sel, c, &mut th_s, &col,
+                        &phisum, 0.01, 0.01, 0.32, &mut fr_s,
+                    );
+                }
+                kd.end_selection(&sel);
+                ks.end_selection(&sel);
+                for i in 0..k {
+                    assert_eq!(
+                        th_d[i].to_bits(),
+                        th_s[i].to_bits(),
+                        "theta diverged (cap={lane_cap} round={round} k={i})"
+                    );
+                }
+                for j in 0..sel.len() {
+                    assert_eq!(fr_d[j].to_bits(), fr_s[j].to_bits());
+                }
+                for e in 0..n_entries {
+                    for t in 0..k {
+                        assert_eq!(
+                            dense.get(e, t).to_bits(),
+                            sparse.get(e, t).to_bits(),
+                            "mu diverged (cap={lane_cap} e={e} t={t})"
+                        );
+                    }
+                }
+            }
+            // The theta-only M-step must leave phi frozen.
+            assert_eq!(col, col0);
+            assert_eq!(phisum, ps0);
+            if lane_cap == 2 {
+                assert!(sparse.spill_len() > 0, "spill path never exercised");
+            }
+        }
+    }
+
+    /// The fold-in kernel preserves each entry's responsibility mass (and
+    /// therefore each document's theta mass) up to float noise — the
+    /// Eq. 38 renormalization budget is redistributed, never created.
+    #[test]
+    fn theta_kernel_preserves_entry_mass() {
+        let k = 16usize;
+        let mut a = RespArena::new();
+        a.reset(k, 1, k);
+        a.set_one_hot(0, 3);
+        let mut kern = SweepKernel::new();
+        let mut th: Vec<f32> = (0..k).map(|i| i as f32 * 0.1 + 0.5).collect();
+        let col: Vec<f32> = (0..k).map(|i| (i % 5) as f32 + 0.2).collect();
+        let phisum: Vec<f32> = vec![20.0; k];
+        let sel: Vec<u32> = (0..k as u32).collect();
+        let th_mass0: f32 = th.iter().sum();
+        let mut fr = vec![0.0f32; k];
+        for _ in 0..5 {
+            kern.begin_selection(k, &sel);
+            let out = update_entry_theta(
+                &mut a, &mut kern, 0, &sel, 2.0, &mut th, &col, &phisum,
+                0.01, 0.01, 0.16, &mut fr,
+            );
+            kern.end_selection(&sel);
+            assert!(out.updated);
+            let mass: f32 = (0..k).map(|t| a.get(0, t)).sum();
+            assert!((mass - 1.0).abs() < 1e-5, "entry mass drifted: {mass}");
+        }
+        let th_mass: f32 = th.iter().sum();
+        assert!(
+            (th_mass - th_mass0).abs() < 1e-3,
+            "theta mass drifted: {th_mass0} -> {th_mass}"
+        );
     }
 
     #[test]

@@ -157,6 +157,57 @@ impl ParallelExecutor {
         })
     }
 
+    /// Split `[0, n_items)` into at most `n_workers` contiguous ranges —
+    /// the same even-split rule as [`Minibatch::shard`], for workloads
+    /// that shard by plain index ranges instead of minibatch structure
+    /// (the fold-in engine's document sharding, `em::infer`).
+    pub fn partition(&self, n_items: usize) -> Vec<std::ops::Range<usize>> {
+        let p = self.n_workers.clamp(1, n_items.max(1));
+        let mut out = Vec::with_capacity(p);
+        let mut start = 0usize;
+        for i in 0..p {
+            let remaining = p - i;
+            let take = (n_items - start).div_ceil(remaining);
+            out.push(start..start + take);
+            start += take;
+            if start >= n_items {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Run `worker(shard_index, range)` once per [`Self::partition`]
+    /// range. A single range runs inline on the calling thread (the exact
+    /// serial path); otherwise each range gets a scoped OS thread.
+    /// Results come back in range order regardless of completion order.
+    pub fn run_ranged<T, F>(&self, n_items: usize, worker: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, std::ops::Range<usize>) -> T + Sync,
+    {
+        let ranges = self.partition(n_items);
+        if ranges.len() <= 1 {
+            return ranges
+                .into_iter()
+                .enumerate()
+                .map(|(i, r)| worker(i, r))
+                .collect();
+        }
+        std::thread::scope(|scope| {
+            let worker = &worker;
+            let handles: Vec<_> = ranges
+                .into_iter()
+                .enumerate()
+                .map(|(i, r)| scope.spawn(move || worker(i, r)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("ranged worker panicked"))
+                .collect()
+        })
+    }
+
     /// Deterministic reduction: merge per-shard deltas, in the order the
     /// iterator yields them (callers pass shard order), into a fresh
     /// accumulator over `words` (the minibatch's local vocabulary).
@@ -237,5 +288,41 @@ mod tests {
     fn worker_count_is_clamped() {
         assert_eq!(ParallelExecutor::new(0).n_workers(), 1);
         assert_eq!(ParallelExecutor::new(8).n_workers(), 8);
+    }
+
+    #[test]
+    fn partition_covers_range_evenly() {
+        let exec = ParallelExecutor::new(4);
+        let ranges = exec.partition(10);
+        assert_eq!(ranges.len(), 4);
+        // Contiguous, exhaustive, near-even.
+        let mut cursor = 0usize;
+        for r in &ranges {
+            assert_eq!(r.start, cursor);
+            assert!(r.len() == 2 || r.len() == 3);
+            cursor = r.end;
+        }
+        assert_eq!(cursor, 10);
+        // Fewer items than workers: one range per item.
+        assert_eq!(exec.partition(2).len(), 2);
+        assert_eq!(exec.partition(2), vec![0..1, 1..2]);
+        // Empty input degrades to one empty range.
+        assert_eq!(exec.partition(0), vec![0..0]);
+        // Serial executor returns the identity range.
+        assert_eq!(ParallelExecutor::new(1).partition(7), vec![0..7]);
+    }
+
+    #[test]
+    fn run_ranged_returns_in_range_order_and_parallelizes() {
+        let exec = ParallelExecutor::new(3);
+        let out = exec.run_ranged(9, |i, r| (i, r.start, r.end));
+        assert_eq!(out, vec![(0, 0, 3), (1, 3, 6), (2, 6, 9)]);
+        let main_id = std::thread::current().id();
+        let ids = exec.run_ranged(9, |_, _| std::thread::current().id());
+        assert!(ids.iter().all(|&id| id != main_id));
+        // Single range runs inline.
+        let ids = ParallelExecutor::new(1)
+            .run_ranged(9, |_, _| std::thread::current().id());
+        assert_eq!(ids, vec![main_id]);
     }
 }

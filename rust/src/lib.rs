@@ -15,8 +15,10 @@
 //!   each minibatch across `n_workers` document shards with deterministic
 //!   merges, the **pipelined parameter streaming** runner
 //!   ([`exec::pipeline`]) that overlaps column prefetch and write-behind
-//!   with compute, five state-of-the-art online-LDA baselines
-//!   ([`baselines`]), and the evaluation harness ([`eval`]).
+//!   with compute, the **fold-in inference engine** ([`em::infer`]) that
+//!   serves unseen-document inference through the same scheduled sparse
+//!   kernel, five state-of-the-art online-LDA baselines ([`baselines`]),
+//!   and the evaluation harness ([`eval`]).
 //! * **Layer 2/1 (build time, `python/`)** — the dense minibatch EM
 //!   graphs and the Pallas E-step kernels, AOT-lowered to HLO text and
 //!   executed from Rust through PJRT ([`runtime`]). Python never runs on

@@ -31,7 +31,10 @@ fn usage() -> ! {
          \x20       --n-workers N  (parallel sharded E-step; 1 = serial)\n\
          \x20       --pipeline-depth N  (software-pipelined staging: prefetch +\n\
          \x20                            write-behind overlap compute; 0 = off,\n\
-         \x20                            bit-identical serial; foem/sem only)"
+         \x20                            bit-identical serial; foem/sem only)\n\
+         \x20       --fold-in-subset N  (topics per doc scheduled by the eval\n\
+         \x20                            fold-in engine; 0 = all K dense)\n\
+         \x20       --fold-in-workers N  (parallel fold-in over doc shards)"
     );
     std::process::exit(2);
 }

@@ -192,7 +192,11 @@ fn parallel_foem_within_tolerance_of_serial() {
     let (train, test) = c.split(50, 1);
     let k = 8;
     let p = LdaParams::paper_defaults(k);
-    let proto = foem::eval::EvalProtocol { fold_in_iters: 30, seed: 0 };
+    let proto = foem::eval::EvalProtocol {
+        fold_in_iters: 30,
+        seed: 0,
+        ..Default::default()
+    };
     let run = |workers: usize| -> f64 {
         let mut fc = FoemConfig::paper();
         fc.n_workers = workers;

@@ -170,7 +170,11 @@ fn run_paged_foem(
     }
     let mass = algo.phisum_total();
     let phi = algo.export_phi();
-    let proto = foem::eval::EvalProtocol { fold_in_iters: 30, seed: 0 };
+    let proto = foem::eval::EvalProtocol {
+        fold_in_iters: 30,
+        seed: 0,
+        ..Default::default()
+    };
     let ppx = foem::eval::predictive_perplexity(&phi, &p, &test.docs, &proto);
     (ppx, algo.store.io_stats(), mass)
 }

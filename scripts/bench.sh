@@ -2,7 +2,8 @@
 # Run the perf-trajectory benches and collect their JSON lines at the
 # repo root:
 #
-#   scripts/bench.sh            # writes BENCH_estep.json + BENCH_pipeline.json
+#   scripts/bench.sh    # writes BENCH_estep.json + BENCH_pipeline.json
+#                       #        + BENCH_foldin.json
 #
 # Each bench prints human-readable summaries to stderr and emits one
 # `BENCH_<name>.json {…}` marker line per configuration; this script
@@ -24,3 +25,4 @@ run_bench() {
 
 run_bench estep_kernel estep
 run_bench streaming_pipeline pipeline
+run_bench foldin foldin
