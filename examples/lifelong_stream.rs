@@ -12,7 +12,7 @@
 use foem::baselines::OnlineLda;
 use foem::corpus::synthetic::{generate, SyntheticConfig};
 use foem::em::foem::{Foem, FoemConfig};
-use foem::eval::{predictive_perplexity, EvalProtocol};
+use foem::eval::EvalProtocol;
 use foem::store::paged::PagedPhi;
 use foem::store::PhiColumnStore;
 use foem::stream::{CorpusStream, StreamConfig};
@@ -61,11 +61,10 @@ fn main() -> anyhow::Result<()> {
         }
         // Held-out docs may carry words the training split never showed;
         // grow capacity so the eval view can materialize their columns
-        // (zero columns — smoothed by beta — for the truly unseen).
+        // (zero columns — smoothed by beta — for the truly unseen), then
+        // evaluate through the shared view-over-test-vocabulary helper.
         algo.store.ensure_capacity(held.docs.n_words);
-        let view = algo.eval_view(&held.docs.distinct_words());
-        let eval_ppx =
-            predictive_perplexity(&view, &algo.eval_params(), &held.docs, &proto);
+        let eval_ppx = algo.eval_perplexity(&held.docs, &proto);
         println!(
             "{epoch:>5} | {:>9} | {:>11} | {last_ppx:>9.1} | {eval_ppx:>8.1} | {:>8.0}",
             c.n_words(),

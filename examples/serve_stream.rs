@@ -1,0 +1,120 @@
+//! Train and serve from one process: a FOEM trainer publishes
+//! epoch-tagged model snapshots to a `serve::ModelRegistry` while a
+//! `serve::Server` answers unseen-document inference requests against
+//! them concurrently — the paper's "infers the topic distribution from
+//! previously unseen documents incrementally" claim, under live traffic.
+//!
+//! The two sides never share mutable state: the trainer's only output is
+//! an atomic snapshot swap (`--serve-publish-every`), and every request
+//! either follows the latest epoch or pins one explicitly. A request
+//! pinned to epoch E is bit-deterministic no matter how many epochs the
+//! trainer publishes meanwhile (`rust/DESIGN.md` §10).
+//!
+//!     cargo run --release --example serve_stream
+
+use foem::coordinator::config::RunConfig;
+use foem::coordinator::driver::Driver;
+use foem::corpus::synthetic::{generate, SyntheticConfig};
+use foem::serve::{ModelRegistry, Server};
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // One corpus: most documents train, 60 become the live traffic.
+    let corpus = generate(&SyntheticConfig::small(), 11);
+    let (train, live) = corpus.split(60, 0);
+    let requests: Vec<Vec<(u32, f32)>> = (0..live.docs.n_docs)
+        .map(|d| live.docs.iter_doc(d).collect())
+        .collect();
+
+    let cfg = RunConfig {
+        n_topics: 32,
+        minibatch_docs: 64,
+        passes: 4,
+        serve_publish_every: 1, // publish after every minibatch
+        serve_workers: 2,
+        ..RunConfig::default()
+    };
+    let registry = Arc::new(ModelRegistry::new());
+    let server = Server::start(Arc::clone(&registry), cfg.serve_config());
+
+    // The trainer runs on its own thread; the main thread is traffic.
+    let trainer = {
+        let registry = Arc::clone(&registry);
+        std::thread::spawn(move || {
+            Driver::new(cfg).with_registry(registry).train_corpus(&train)
+        })
+    };
+
+    // Wait for the first published epoch, then drive request waves until
+    // training completes. Bail out (surfacing the training error) if the
+    // trainer dies before ever publishing.
+    while registry.latest().is_none() {
+        if trainer.is_finished() {
+            trainer.join().expect("trainer thread")?;
+            anyhow::bail!("trainer finished without publishing an epoch");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let mut epochs_seen = BTreeSet::new();
+    let mut waves = 0usize;
+    loop {
+        let pending: Vec<_> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, doc)| server.submit(doc.clone(), i as u64))
+            .collect::<anyhow::Result<_>>()?;
+        for p in pending {
+            epochs_seen.insert(p.wait()?.epoch);
+        }
+        waves += 1;
+        if trainer.is_finished() {
+            break;
+        }
+    }
+    let train_report = trainer.join().expect("trainer thread")?;
+
+    // One last request pinned to the final epoch: reproducible serving
+    // against a frozen model, while the registry stays live.
+    let final_snap = registry.latest().expect("final epoch");
+    let resp = server
+        .submit_pinned(requests[0].clone(), 0, Arc::clone(&final_snap))?
+        .wait()?;
+    println!(
+        "pinned request @ epoch {}: perplexity {:.1}, {} sweeps, {:?}",
+        final_snap.epoch(),
+        resp.perplexity,
+        resp.sweeps,
+        resp.latency
+    );
+
+    let serve_report = server.shutdown();
+    println!(
+        "trainer: {} final predictive perplexity {:.1}",
+        train_report.algorithm, train_report.final_perplexity
+    );
+    println!(
+        "registry: {} epochs published, {} live at shutdown",
+        registry.current_epoch(),
+        registry.live_epochs().len()
+    );
+    println!(
+        "traffic: {} request waves, epochs observed {:?}",
+        waves, epochs_seen
+    );
+    println!(
+        "serving: {} docs in {} batches (mean {:.1}/batch), \
+         {:.0} docs/s, latency p50 {:.0}µs p99 {:.0}µs",
+        serve_report.docs,
+        serve_report.batches,
+        serve_report.mean_batch_docs,
+        serve_report.docs_per_sec,
+        serve_report.p50_latency_us,
+        serve_report.p99_latency_us
+    );
+    anyhow::ensure!(
+        !epochs_seen.is_empty(),
+        "traffic never observed a published epoch"
+    );
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Serving-layer bench: end-to-end request throughput and latency of
+//! the snapshot-isolated server (`serve::Server`) over a published model
+//! snapshot, at workers ∈ {1, 4} × fold-in subset ∈ {Fixed(10), All}.
+//! One configuration submits every request of the evaluation corpus in
+//! waves and reports docs/sec plus p50/p99 submit-to-completion latency
+//! from the server's own `ServeReport`.
+//!
+//! Emits `BENCH_serve.json` lines:
+//!
+//!     cargo bench --bench serve
+//!     scripts/bench.sh   # writes BENCH_serve.json at the repo root
+//!
+//! The claim under test: the scheduled subset keeps per-request cost
+//! O(NNZ·S) instead of O(NNZ·K), so at serving-sized K the Fixed(10)
+//! configuration sustains a higher docs/sec at lower tail latency, and
+//! workers scale throughput until the queue is the bottleneck.
+
+use foem::corpus::synthetic::{generate, SyntheticConfig};
+use foem::em::infer::FoldInConfig;
+use foem::em::schedule::TopicSubset;
+use foem::em::{EvalPhiView, PhiStats};
+use foem::serve::{ModelRegistry, ServeConfig, Server};
+use foem::util::Rng;
+use foem::LdaParams;
+use std::sync::Arc;
+
+const SWEEPS: usize = 20;
+const WAVES: usize = 3;
+
+/// A synthetic trained-phi stand-in: positive random mass (serving cost
+/// does not depend on phi being a converged model).
+fn synth_phi(k: usize, w: usize, seed: u64) -> PhiStats {
+    let mut rng = Rng::new(seed);
+    let mut phi = PhiStats::zeros(k, w);
+    let mut col = vec![0.0f32; k];
+    for ww in 0..w {
+        for x in col.iter_mut() {
+            *x = rng.next_f32() * 3.0 + 0.05;
+        }
+        phi.add_to_word(ww, &col);
+    }
+    phi
+}
+
+fn main() {
+    let k = 256usize;
+    let mut cfg = SyntheticConfig::small();
+    cfg.n_docs = 192;
+    let corpus = generate(&cfg, 42);
+    let requests: Vec<Vec<(u32, f32)>> = (0..corpus.docs.n_docs)
+        .map(|d| corpus.docs.iter_doc(d).collect())
+        .collect();
+    let params = LdaParams::paper_defaults(k);
+    let phi = synth_phi(k, corpus.n_words(), 7);
+    let words: Vec<u32> = (0..corpus.n_words() as u32).collect();
+    println!(
+        "== serving layer: docs/sec + latency (K={k} D={} NNZ={} \
+         sweeps={SWEEPS} waves={WAVES}) ==",
+        corpus.docs.n_docs,
+        corpus.docs.nnz()
+    );
+
+    for &workers in &[1usize, 4] {
+        for (subset_name, subset, tol) in [
+            ("fixed10", TopicSubset::Fixed(10), 1e-2),
+            ("all", TopicSubset::All, 0.0),
+        ] {
+            let registry = Arc::new(ModelRegistry::new());
+            registry.publish(
+                EvalPhiView::from_dense(&phi, &words),
+                params,
+            );
+            let serve_cfg = ServeConfig {
+                max_batch_docs: 32,
+                queue_docs: 1024,
+                workers,
+                fold_in: FoldInConfig {
+                    subset,
+                    explore_slots: 2,
+                    max_sweeps: SWEEPS,
+                    tol,
+                    n_workers: 1,
+                },
+            };
+            // Warmup pass on a throwaway server (fills the process-wide
+            // scratch pool and checks results), then a fresh server so
+            // the timed report contains only the measured waves.
+            let warm = Server::start(Arc::clone(&registry), serve_cfg);
+            for (i, doc) in requests.iter().enumerate() {
+                let resp = warm
+                    .submit(doc.clone(), i as u64)
+                    .expect("submit")
+                    .wait()
+                    .expect("warmup response");
+                assert_eq!(resp.theta.len(), k, "bad theta length");
+                let mass: f32 = resp.theta.iter().sum();
+                let want: f32 = doc.iter().map(|&(_, c)| c).sum();
+                assert!(
+                    (mass - want).abs() < want.max(1.0) * 1e-2,
+                    "doc {i}: theta mass {mass} vs tokens {want}"
+                );
+            }
+            warm.shutdown();
+
+            let server = Server::start(Arc::clone(&registry), serve_cfg);
+            for wave in 0..WAVES {
+                let pending: Vec<_> = requests
+                    .iter()
+                    .enumerate()
+                    .map(|(i, doc)| {
+                        server
+                            .submit(doc.clone(), (wave * 1000 + i) as u64)
+                            .expect("submit")
+                    })
+                    .collect();
+                for p in pending {
+                    p.wait().expect("response");
+                }
+            }
+            let report = server.shutdown();
+            let timed_docs = report.docs;
+            println!(
+                "serve_k{k}_w{workers}_{subset_name}: {} docs \
+                 ({} batches, mean {:.1}/batch)  {:.0} docs/s  \
+                 p50 {:.0}µs  p99 {:.0}µs",
+                timed_docs,
+                report.batches,
+                report.mean_batch_docs,
+                report.docs_per_sec,
+                report.p50_latency_us,
+                report.p99_latency_us
+            );
+            println!(
+                "BENCH_serve.json {{\"bench\":\"serve\",\"k\":{k},\
+                 \"workers\":{workers},\"subset\":\"{subset_name}\",\
+                 \"docs\":{},\"batches\":{},\"mean_batch_docs\":{:.2},\
+                 \"docs_per_sec\":{:.1},\"p50_us\":{:.1},\
+                 \"p99_us\":{:.1},\"sweeps\":{SWEEPS}}}",
+                timed_docs,
+                report.batches,
+                report.mean_batch_docs,
+                report.docs_per_sec,
+                report.p50_latency_us,
+                report.p99_latency_us
+            );
+        }
+    }
+}

@@ -52,6 +52,26 @@ pub trait OnlineLda {
         crate::em::EvalPhiView::from_dense(&self.export_phi(), words)
     }
 
+    /// Predictive perplexity of this model on `test_docs` through a
+    /// sparse [`Self::eval_view`] over exactly the test vocabulary —
+    /// THE way to evaluate a live model. Every caller (both driver run
+    /// loops, the examples, the serving layer's publish path) routes
+    /// through here instead of hand-rolling the view+evaluate snippet,
+    /// so the "eval view over the test vocabulary" recipe exists once.
+    fn eval_perplexity(
+        &mut self,
+        test_docs: &crate::corpus::sparse::DocWordMatrix,
+        protocol: &crate::eval::EvalProtocol,
+    ) -> f64 {
+        let view = self.eval_view(&test_docs.distinct_words());
+        crate::eval::predictive_perplexity(
+            &view,
+            &self.eval_params(),
+            test_docs,
+            protocol,
+        )
+    }
+
     /// The smoothing parameters the *evaluator* should use to normalize
     /// the exported statistics (Eqs. 9/10 form). EM-family algorithms use
     /// `alpha-1 = beta-1 = 0.01`; GS/CVB-family statistics are smoothed

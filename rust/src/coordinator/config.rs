@@ -113,6 +113,22 @@ pub struct RunConfig {
     /// Worker threads for fold-in evaluation (documents are independent
     /// given a frozen phi, so this parallelizes embarrassingly).
     pub fold_in_workers: usize,
+    /// Publish an epoch-tagged serving snapshot to the driver's attached
+    /// [`crate::serve::ModelRegistry`] every N minibatches, plus once at
+    /// the end of the run (0 = never publish). No effect unless a
+    /// registry is attached (`Driver::with_registry`).
+    pub serve_publish_every: usize,
+    /// Most requests the serving batcher coalesces into one dispatched
+    /// inference minibatch (must be >= 1).
+    pub serve_batch_docs: usize,
+    /// Bound of the serving request queue — the backpressure knob (must
+    /// be >= 1).
+    pub serve_queue_docs: usize,
+    /// Worker threads a serving batch fans out over.
+    pub serve_workers: usize,
+    /// Topics scheduled per document by the serving fold-in (`0` = all K,
+    /// the dense reference protocol) — mirrors `fold_in_subset`.
+    pub serve_subset: usize,
     pub seed: u64,
     /// Print per-minibatch progress lines.
     pub verbose: bool,
@@ -139,6 +155,11 @@ impl Default for RunConfig {
             pipeline_depth: 0,
             fold_in_subset: 10,
             fold_in_workers: 1,
+            serve_publish_every: 0,
+            serve_batch_docs: 32,
+            serve_queue_docs: 256,
+            serve_workers: 1,
+            serve_subset: 10,
             seed: 42,
             verbose: false,
         }
@@ -200,6 +221,33 @@ impl RunConfig {
         }
     }
 
+    /// The serving policy ([`crate::serve::ServeConfig`]) this run
+    /// configuration induces: 30 fold-in sweeps per request through the
+    /// configured serving subset/workers. `serve_subset == 0` selects
+    /// the dense reference protocol (full K, no convergence cutoff —
+    /// the `em::infer` bitwise-reference configuration), mirroring
+    /// [`RunConfig::eval_protocol`] so the two paths cannot drift.
+    pub fn serve_config(&self) -> crate::serve::ServeConfig {
+        use crate::em::infer::FoldInConfig;
+        let (subset, tol) = if self.serve_subset == 0 {
+            (TopicSubset::All, 0.0)
+        } else {
+            (TopicSubset::Fixed(self.serve_subset), 1e-2)
+        };
+        crate::serve::ServeConfig {
+            max_batch_docs: self.serve_batch_docs.max(1),
+            queue_docs: self.serve_queue_docs.max(1),
+            workers: self.serve_workers.max(1),
+            fold_in: FoldInConfig {
+                subset,
+                explore_slots: 2,
+                max_sweeps: 30,
+                tol,
+                n_workers: 1,
+            },
+        }
+    }
+
     /// Apply one `key value` pair (config file line or `--key value`).
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
@@ -220,6 +268,21 @@ impl RunConfig {
             "pipeline_depth" => self.pipeline_depth = value.parse()?,
             "fold_in_subset" => self.fold_in_subset = value.parse()?,
             "fold_in_workers" => self.fold_in_workers = value.parse()?,
+            "serve_publish_every" => {
+                self.serve_publish_every = value.parse()?
+            }
+            "serve_batch_docs" => {
+                let n: usize = value.parse()?;
+                anyhow::ensure!(n >= 1, "serve_batch_docs must be >= 1");
+                self.serve_batch_docs = n;
+            }
+            "serve_queue_docs" => {
+                let n: usize = value.parse()?;
+                anyhow::ensure!(n >= 1, "serve_queue_docs must be >= 1");
+                self.serve_queue_docs = n;
+            }
+            "serve_workers" => self.serve_workers = value.parse()?,
+            "serve_subset" => self.serve_subset = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "verbose" => self.verbose = value.parse()?,
             "store" => {
@@ -334,6 +397,52 @@ mod tests {
         // subset 0 must reproduce the historical dense protocol exactly:
         // no convergence cutoff, full sweep budget.
         assert_eq!(proto.tol, 0.0);
+    }
+
+    #[test]
+    fn serve_knobs_round_trip() {
+        use crate::em::schedule::TopicSubset;
+        let mut c = RunConfig::default();
+        // Defaults: publishing off, sane batching, paper-shaped subset.
+        assert_eq!(c.serve_publish_every, 0);
+        assert_eq!(c.serve_batch_docs, 32);
+        assert_eq!(c.serve_queue_docs, 256);
+        assert_eq!(c.serve_workers, 1);
+        assert_eq!(c.serve_subset, 10);
+        c.set("serve_publish_every", "5").unwrap();
+        c.set("serve_batch_docs", "16").unwrap();
+        c.set("serve_queue_docs", "64").unwrap();
+        c.set("serve_workers", "4").unwrap();
+        c.set("serve_subset", "8").unwrap();
+        assert_eq!(c.serve_publish_every, 5);
+        let sc = c.serve_config();
+        assert_eq!(sc.max_batch_docs, 16);
+        assert_eq!(sc.queue_docs, 64);
+        assert_eq!(sc.workers, 4);
+        assert_eq!(sc.fold_in.subset, TopicSubset::Fixed(8));
+        assert_eq!(sc.fold_in.n_workers, 1, "per-request fold-in is serial");
+        assert!(sc.fold_in.tol > 0.0);
+        // subset 0 must reproduce the dense reference protocol exactly:
+        // full K, no convergence cutoff (mirrors eval_protocol).
+        c.set("serve_subset", "0").unwrap();
+        let sc = c.serve_config();
+        assert_eq!(sc.fold_in.subset, TopicSubset::All);
+        assert_eq!(sc.fold_in.tol, 0.0);
+    }
+
+    #[test]
+    fn serve_knob_invalid_values_error() {
+        let mut c = RunConfig::default();
+        assert!(c.set("serve_batch_docs", "0").is_err());
+        assert!(c.set("serve_queue_docs", "0").is_err());
+        assert!(c.set("serve_publish_every", "abc").is_err());
+        assert!(c.set("serve_workers", "-1").is_err());
+        assert!(c.set("serve_subset", "1.5").is_err());
+        // Failed sets leave the config untouched.
+        assert_eq!(c.serve_batch_docs, 32);
+        assert_eq!(c.serve_queue_docs, 256);
+        assert_eq!(c.serve_workers, 1);
+        assert_eq!(c.serve_subset, 10);
     }
 
     #[test]

@@ -8,11 +8,12 @@ use crate::baselines::{ogs, ovb, rvb, scvb, soi, OnlineLda};
 use crate::corpus::Corpus;
 use crate::em::foem::{Foem, FoemConfig};
 use crate::em::sem::{Sem, SemConfig};
-use crate::eval::predictive_perplexity;
 use crate::exec::pipeline::{PhasedTrainer, Pipeline};
+use crate::serve::ModelRegistry;
 use crate::store::InMemoryPhi;
 use crate::stream::{CorpusStream, StreamConfig};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Result of a training run.
 #[derive(Debug)]
@@ -26,11 +27,51 @@ pub struct TrainReport {
 /// Builds algorithms from config and drives training runs.
 pub struct Driver {
     pub cfg: RunConfig,
+    /// Attached serving registry ([`crate::serve`]): when set and
+    /// `cfg.serve_publish_every > 0`, the run publishes an epoch-tagged
+    /// model snapshot every N minibatches (plus once at the end), so a
+    /// concurrent [`crate::serve::Server`] answers requests against the
+    /// live model while training continues.
+    pub registry: Option<Arc<ModelRegistry>>,
 }
 
 impl Driver {
     pub fn new(cfg: RunConfig) -> Self {
-        Self { cfg }
+        Self { cfg, registry: None }
+    }
+
+    /// Attach a serving registry (builder style) — see
+    /// [`Driver::registry`] and `examples/serve_stream.rs`.
+    pub fn with_registry(mut self, registry: Arc<ModelRegistry>) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// The publish vocabulary of a serving run: every column, so any
+    /// request vocabulary is materialized in the snapshot. `None` when
+    /// this run does not publish (no registry / publishing disabled).
+    ///
+    /// Cost note: a publish is an O(K·W) snapshot copy (for a paged
+    /// store, a full sequential column scan), so at big-model W the
+    /// §3.2 memory bound does NOT extend to serving publishes — pick a
+    /// `serve_publish_every` cadence the copy cost can amortize. A
+    /// bounded alternative (hot-vocabulary or lazily materialized
+    /// snapshots) is deliberately left to a follow-up; see
+    /// `rust/DESIGN.md` §10.
+    fn serve_words(&self, n_words: usize) -> Option<Vec<u32>> {
+        (self.registry.is_some() && self.cfg.serve_publish_every > 0)
+            .then(|| (0..n_words as u32).collect())
+    }
+
+    /// Publish the model's current state to the attached registry — one
+    /// column-snapshot read (`OnlineLda::eval_view`) per publish, an
+    /// atomic swap on the registry side.
+    fn publish_snapshot<A: OnlineLda + ?Sized>(
+        registry: &ModelRegistry,
+        algo: &mut A,
+        words: &[u32],
+    ) {
+        registry.publish(algo.eval_view(words), algo.eval_params());
     }
 
     /// Error for the one store/algorithm combination that cannot work:
@@ -168,7 +209,7 @@ impl Driver {
         // configured subset/workers (`--fold-in-subset`,
         // `--fold-in-workers`), so evaluation cost scales with NNZ·S.
         let proto = self.cfg.eval_protocol();
-        let test_words = test.docs.distinct_words();
+        let serve_words = self.serve_words(train.n_words());
 
         let mut batch_no = 0usize;
         for pass in 0..self.cfg.passes.max(1) {
@@ -177,16 +218,17 @@ impl Driver {
             for mb in CorpusStream::new(train, pass_cfg) {
                 batch_no += 1;
                 let report = algo.process_minibatch(&mb);
+                if let (Some(words), Some(reg)) =
+                    (&serve_words, &self.registry)
+                {
+                    if batch_no % self.cfg.serve_publish_every == 0 {
+                        Self::publish_snapshot(reg, algo.as_mut(), words);
+                    }
+                }
                 let eval = if self.cfg.eval_every > 0
                     && batch_no % self.cfg.eval_every == 0
                 {
-                    let view = algo.eval_view(&test_words);
-                    Some(predictive_perplexity(
-                        &view,
-                        &algo.eval_params(),
-                        &test.docs,
-                        &proto,
-                    ))
+                    Some(algo.eval_perplexity(&test.docs, &proto))
                 } else {
                     None
                 };
@@ -210,13 +252,11 @@ impl Driver {
             }
         }
         algo.checkpoint()?;
-        let view = algo.eval_view(&test_words);
-        let final_perplexity = predictive_perplexity(
-            &view,
-            &algo.eval_params(),
-            &test.docs,
-            &proto,
-        );
+        // Final publish so serving always sees the end-of-run model.
+        if let (Some(words), Some(reg)) = (&serve_words, &self.registry) {
+            Self::publish_snapshot(reg, algo.as_mut(), words);
+        }
+        let final_perplexity = algo.eval_perplexity(&test.docs, &proto);
         Ok(TrainReport {
             algorithm: algo.name(),
             final_perplexity,
@@ -299,7 +339,8 @@ impl Driver {
         };
         let mut metrics = Metrics::new();
         let proto = cfg.eval_protocol();
-        let test_words = test.docs.distinct_words();
+        let serve_words = self.serve_words(train.n_words());
+        let registry = &self.registry;
         let passes = cfg.passes.max(1);
         let stream = (0..passes).flat_map(|pass| {
             let mut pass_cfg = scfg;
@@ -310,16 +351,15 @@ impl Driver {
             &mut algo,
             stream,
             |algo, batch_no, report| {
+                if let (Some(words), Some(reg)) = (&serve_words, registry) {
+                    if batch_no % cfg.serve_publish_every == 0 {
+                        Self::publish_snapshot(reg, algo, words);
+                    }
+                }
                 let eval = if cfg.eval_every > 0
                     && batch_no % cfg.eval_every == 0
                 {
-                    let view = algo.eval_view(&test_words);
-                    Some(predictive_perplexity(
-                        &view,
-                        &algo.eval_params(),
-                        &test.docs,
-                        &proto,
-                    ))
+                    Some(algo.eval_perplexity(&test.docs, &proto))
                 } else {
                     None
                 };
@@ -344,13 +384,11 @@ impl Driver {
             },
         )?;
         algo.checkpoint()?;
-        let view = algo.eval_view(&test_words);
-        let final_perplexity = predictive_perplexity(
-            &view,
-            &algo.eval_params(),
-            &test.docs,
-            &proto,
-        );
+        // Final publish so serving always sees the end-of-run model.
+        if let (Some(words), Some(reg)) = (&serve_words, registry) {
+            Self::publish_snapshot(reg, &mut algo, words);
+        }
+        let final_perplexity = algo.eval_perplexity(&test.docs, &proto);
         Ok(TrainReport {
             algorithm: algo.name(),
             final_perplexity,
@@ -513,6 +551,51 @@ mod tests {
         let mut d = Driver::new(cfg);
         let err = d.train_corpus(&c).expect_err("OVB has no phase seam");
         assert!(err.to_string().contains("three-phase"), "{err}");
+    }
+
+    #[test]
+    fn driver_publishes_serving_snapshots() {
+        use crate::em::PhiAccess;
+        let c = generate(&SyntheticConfig::small(), 101);
+        let mut cfg = small_cfg(Algorithm::Foem);
+        cfg.eval_every = 0;
+        cfg.serve_publish_every = 2;
+        let registry = Arc::new(ModelRegistry::new());
+        let mut d = Driver::new(cfg).with_registry(Arc::clone(&registry));
+        d.train_corpus(&c).unwrap();
+        // At least one periodic publish plus the final one.
+        assert!(registry.current_epoch() >= 2, "{}", registry.current_epoch());
+        let snap = registry.latest().unwrap();
+        assert_eq!(snap.k(), 6);
+        // The publish vocabulary is the FULL vocabulary, so any request
+        // is materialized in the snapshot.
+        assert_eq!(snap.view().n_columns(), c.n_words());
+        assert!(snap.phisum().iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn pipelined_driver_publishes_serving_snapshots() {
+        let c = generate(&SyntheticConfig::small(), 102);
+        let mut cfg = small_cfg(Algorithm::Sem);
+        cfg.eval_every = 0;
+        cfg.pipeline_depth = 1;
+        cfg.serve_publish_every = 1;
+        let registry = Arc::new(ModelRegistry::new());
+        let mut d = Driver::new(cfg).with_registry(Arc::clone(&registry));
+        d.train_corpus(&c).unwrap();
+        assert!(registry.current_epoch() >= 2, "{}", registry.current_epoch());
+    }
+
+    #[test]
+    fn attached_registry_without_publish_knob_stays_silent() {
+        let c = generate(&SyntheticConfig::small(), 103);
+        let mut cfg = small_cfg(Algorithm::Foem);
+        cfg.eval_every = 0;
+        // serve_publish_every stays at its default of 0.
+        let registry = Arc::new(ModelRegistry::new());
+        let mut d = Driver::new(cfg).with_registry(Arc::clone(&registry));
+        d.train_corpus(&c).unwrap();
+        assert_eq!(registry.current_epoch(), 0);
     }
 
     #[test]

@@ -196,6 +196,18 @@ impl EvalPhiView {
     pub fn n_columns(&self) -> usize {
         self.words.len()
     }
+
+    /// The sorted global word ids materialized in this view.
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Whether word `w`'s column is materialized — callers that cannot
+    /// tolerate the [`PhiAccess::word`] panic (e.g. the serving layer
+    /// validating request vocabularies) check this first.
+    pub fn has_word(&self, w: u32) -> bool {
+        self.words.binary_search(&w).is_ok()
+    }
 }
 
 impl PhiAccess for EvalPhiView {

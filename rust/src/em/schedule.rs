@@ -21,6 +21,24 @@
 //! [`crate::em::resp`].
 
 /// How many topics to schedule per word.
+///
+/// # Examples
+///
+/// [`TopicSubset::size`] resolves the policy against a concrete K —
+/// fractions round up with a float-artifact guard, fixed counts clamp
+/// into `[1, K]`:
+///
+/// ```
+/// use foem::em::schedule::TopicSubset;
+///
+/// assert_eq!(TopicSubset::All.size(100), 100);
+/// assert_eq!(TopicSubset::Fixed(10).size(100), 10);
+/// assert_eq!(TopicSubset::Fixed(10).size(4), 4); // clamped to K
+/// assert_eq!(TopicSubset::Fraction(0.1).size(100), 10);
+/// // A subset that covers all of K degrades to the dense (`All`) path
+/// // in every consumer (trainers, fold-in, serving).
+/// assert_eq!(TopicSubset::Fixed(64).size(32), 32);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum TopicSubset {
     /// All K topics (plain IEM).

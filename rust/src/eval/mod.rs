@@ -3,4 +3,4 @@
 
 pub mod perplexity;
 
-pub use perplexity::{predictive_perplexity, EvalProtocol};
+pub use perplexity::{log_likelihood, predictive_perplexity, EvalProtocol};

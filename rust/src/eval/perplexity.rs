@@ -24,6 +24,35 @@ use crate::LdaParams;
 /// Evaluation protocol parameters. The fold-in fields mirror
 /// [`FoldInConfig`]; the defaults reproduce the historical dense
 /// protocol exactly (synchronous full-K sweeps, fixed budget, serial).
+///
+/// # Examples
+///
+/// The knobs map one-to-one onto the fold-in engine configuration — a
+/// scheduled, parallel protocol selects the incremental kernel with a
+/// per-document convergence cutoff:
+///
+/// ```
+/// use foem::em::schedule::TopicSubset;
+/// use foem::eval::EvalProtocol;
+///
+/// let proto = EvalProtocol {
+///     subset: TopicSubset::Fixed(10),
+///     tol: 1e-2,
+///     workers: 4,
+///     ..Default::default()
+/// };
+/// let cfg = proto.fold_in_config();
+/// assert_eq!(cfg.subset, TopicSubset::Fixed(10));
+/// assert_eq!(cfg.n_workers, 4);
+/// assert_eq!(cfg.max_sweeps, 50); // the default fold_in_iters budget
+///
+/// // The defaults are the historical dense reference protocol:
+/// // full-K synchronous sweeps, fixed budget, serial.
+/// let dense = EvalProtocol::default().fold_in_config();
+/// assert_eq!(dense.subset, TopicSubset::All);
+/// assert_eq!(dense.tol, 0.0);
+/// assert_eq!(dense.n_workers, 1);
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct EvalProtocol {
     /// Fold-in sweep budget on the observed 80% (the paper uses up to
@@ -89,18 +118,24 @@ pub fn predictive_perplexity<P: PhiAccess + Sync>(
         &protocol.fold_in_config(),
         protocol.seed ^ 0x5EED,
     );
-    let (ll, n) = held_out_log_likelihood(phi, params, &theta, &held_out);
+    let (ll, n) = log_likelihood(phi, params, &theta, &held_out);
     crate::em::perplexity(ll, n)
 }
 
-/// Held-out log-likelihood of `held_out` under `(theta, phi)` — the
-/// Eq. 21 numerator, accumulated in f64 (per-token mixture sum AND the
-/// theta normalizer). Returns `(log-likelihood, token mass)`.
-fn held_out_log_likelihood<P: PhiAccess>(
+/// Log-likelihood of `docs` under `(theta, phi)` — the Eq. 21 numerator,
+/// accumulated in f64 (per-token mixture sum AND the theta normalizer).
+/// Returns `(log-likelihood, token mass)`; feed it to
+/// [`crate::em::perplexity`] for the Eq. 21 outer form.
+///
+/// `theta` is indexed by document: row `d` scores `docs` row `d`. Shared
+/// by the held-out side of [`predictive_perplexity`] and by the serving
+/// layer's per-request perplexity ([`crate::serve`]), so the two paths
+/// cannot drift numerically.
+pub fn log_likelihood<P: PhiAccess>(
     phi: &P,
     params: &LdaParams,
     theta: &ThetaStats,
-    held_out: &DocWordMatrix,
+    docs: &DocWordMatrix,
 ) -> (f64, f64) {
     let k = params.n_topics;
     let am1 = params.am1();
@@ -110,13 +145,13 @@ fn held_out_log_likelihood<P: PhiAccess>(
     let phisum = phi.phisum();
     let mut ll = 0.0f64;
     let mut n = 0.0f64;
-    for d in 0..held_out.n_docs {
+    for d in 0..docs.n_docs {
         let trow = theta.doc(d);
         let tden = trow.iter().map(|&x| x as f64).sum::<f64>() + kam1;
         if tden <= 0.0 {
             continue;
         }
-        for (w, c) in held_out.iter_doc(d) {
+        for (w, c) in docs.iter_doc(d) {
             let col = phi.word(w as usize);
             let mut p = 0.0f64;
             for i in 0..k {
@@ -290,7 +325,7 @@ mod tests {
             proto.seed ^ 0x5EED,
         );
         let (ll, n) =
-            held_out_log_likelihood(&bem.phi, &p, &theta, &held_out);
+            log_likelihood(&bem.phi, &p, &theta, &held_out);
         let reference = crate::em::perplexity(ll, n);
         assert_eq!(engine, reference);
     }
@@ -372,7 +407,7 @@ mod tests {
             rows.iter().map(|r| r.as_slice()).collect();
         let held = DocWordMatrix::from_rows(w, &refs);
 
-        let (ll, n) = held_out_log_likelihood(&phi, &p, &theta, &held);
+        let (ll, n) = log_likelihood(&phi, &p, &theta, &held);
 
         // All-f64 reference, computed independently.
         let am1 = p.am1() as f64;

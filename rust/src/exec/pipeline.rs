@@ -55,6 +55,68 @@ use crate::stream::{Lookahead, Minibatch};
 /// * [`apply`](Self::apply) — merge the computed delta into the global
 ///   stores and scheduler state. The pipeline calls this in strict batch
 ///   order.
+///
+/// # Examples
+///
+/// A minimal phased trainer whose whole "model" is the token mass it has
+/// absorbed — `stage` snapshots the batch, `compute` is pure, `apply`
+/// merges — driven through a depth-2 pipeline:
+///
+/// ```
+/// use foem::corpus::sparse::DocWordMatrix;
+/// use foem::em::MinibatchReport;
+/// use foem::exec::pipeline::{PhasedTrainer, Pipeline};
+/// use foem::stream::Minibatch;
+///
+/// struct MassTrainer {
+///     total: f64,
+/// }
+///
+/// impl PhasedTrainer for MassTrainer {
+///     type Staged = DocWordMatrix;
+///     type Delta = f64;
+///
+///     fn stage(&mut self, mb: &Minibatch) -> DocWordMatrix {
+///         mb.docs.clone()
+///     }
+///
+///     fn compute(staged: &DocWordMatrix) -> f64 {
+///         staged.total_tokens()
+///     }
+///
+///     fn apply(&mut self, _s: &DocWordMatrix, d: f64) -> MinibatchReport {
+///         self.total += d;
+///         MinibatchReport { tokens: d, ..Default::default() }
+///     }
+///
+///     fn process_direct(&mut self, mb: &Minibatch) -> MinibatchReport {
+///         let staged = self.stage(mb);
+///         let delta = Self::compute(&staged);
+///         self.apply(&staged, delta)
+///     }
+/// }
+///
+/// let batches: Vec<Minibatch> = (0..4)
+///     .map(|i| {
+///         let row: &[(u32, f32)] = &[(0, 1.0 + i as f32)];
+///         Minibatch::new(i + 1, DocWordMatrix::from_rows(1, &[row]))
+///     })
+///     .collect();
+///
+/// // Depth 2: up to two batches in flight; applies stay in batch order.
+/// let mut trainer = MassTrainer { total: 0.0 };
+/// Pipeline::new(2)
+///     .run(&mut trainer, batches.clone().into_iter(), |_, _, _| Ok(()))
+///     .unwrap();
+/// assert_eq!(trainer.total, 1.0 + 2.0 + 3.0 + 4.0);
+///
+/// // Depth 0 bypasses the pipeline (`process_direct`) — same result.
+/// let mut serial = MassTrainer { total: 0.0 };
+/// Pipeline::new(0)
+///     .run(&mut serial, batches.into_iter(), |_, _, _| Ok(()))
+///     .unwrap();
+/// assert_eq!(serial.total, trainer.total);
+/// ```
 pub trait PhasedTrainer {
     /// Self-contained staged batch (snapshots + shards + seeds).
     type Staged: Send + Sync + 'static;

@@ -17,8 +17,10 @@
 //!   ([`exec::pipeline`]) that overlaps column prefetch and write-behind
 //!   with compute, the **fold-in inference engine** ([`em::infer`]) that
 //!   serves unseen-document inference through the same scheduled sparse
-//!   kernel, five state-of-the-art online-LDA baselines ([`baselines`]),
-//!   and the evaluation harness ([`eval`]).
+//!   kernel, the **snapshot-isolated serving layer** ([`serve`]) that
+//!   batches live inference traffic against epoch-tagged model snapshots
+//!   while training continues, five state-of-the-art online-LDA
+//!   baselines ([`baselines`]), and the evaluation harness ([`eval`]).
 //! * **Layer 2/1 (build time, `python/`)** — the dense minibatch EM
 //!   graphs and the Pallas E-step kernels, AOT-lowered to HLO text and
 //!   executed from Rust through PJRT ([`runtime`]). Python never runs on
@@ -49,6 +51,7 @@ pub mod em;
 pub mod eval;
 pub mod exec;
 pub mod runtime;
+pub mod serve;
 pub mod store;
 pub mod stream;
 pub mod util;

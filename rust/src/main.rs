@@ -34,7 +34,11 @@ fn usage() -> ! {
          \x20                            bit-identical serial; foem/sem only)\n\
          \x20       --fold-in-subset N  (topics per doc scheduled by the eval\n\
          \x20                            fold-in engine; 0 = all K dense)\n\
-         \x20       --fold-in-workers N  (parallel fold-in over doc shards)"
+         \x20       --fold-in-workers N  (parallel fold-in over doc shards)\n\
+         \x20       --serve-* keys  (serving layer policy for embedders that\n\
+         \x20                        attach a serve::ModelRegistry; `foem train`\n\
+         \x20                        itself starts no server — see the serve\n\
+         \x20                        module docs and examples/serve_stream.rs)"
     );
     std::process::exit(2);
 }

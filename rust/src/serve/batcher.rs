@@ -1,0 +1,561 @@
+//! The request batcher: coalesces incoming documents into minibatches
+//! and runs them through the fold-in inference engine on a persistent
+//! dispatcher with a pooled worker fan-out.
+//!
+//! **Flow.** [`Server::submit`] enqueues a request on a *bounded* queue
+//! (`ServeConfig::queue_docs`) — a full queue blocks the submitter
+//! (backpressure), and [`Server::try_submit`] instead fails fast and
+//! counts the rejection. The dispatcher thread drains up to
+//! `max_batch_docs` pending requests into one batch, resolves each
+//! request's snapshot (its pinned epoch, else the registry's current
+//! one), and fans the batch out over
+//! [`crate::exec::ParallelExecutor::run_ranged`] — each worker folds its
+//! request range in through [`crate::em::infer`], whose buffers come
+//! from the grow-only [`crate::exec::scratch`] pool, so a steady-state
+//! serving loop allocates almost nothing per request beyond its reply.
+//!
+//! **Determinism.** Every request is folded in with `n_workers = 1` and
+//! its own seed — batch composition and pool size parallelize *across*
+//! requests, never inside one — so a request's `(theta, perplexity)` is
+//! a pure function of `(snapshot, doc, seed, fold_in config)`:
+//! bit-identical to an offline [`crate::em::infer::fold_in`] +
+//! [`crate::eval::log_likelihood`] run against the same snapshot, no
+//! matter what else is in flight (`tests/serve_equivalence.rs`).
+
+use super::registry::{ModelRegistry, ModelSnapshot};
+use super::ServeConfig;
+use crate::corpus::sparse::DocWordMatrix;
+use crate::em::infer;
+use crate::em::PhiAccess;
+use crate::exec::ParallelExecutor;
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One served inference result.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    /// Epoch of the snapshot the request was evaluated against.
+    pub epoch: u64,
+    /// Unnormalized document-topic statistics `theta_hat_d` (length K);
+    /// normalize with `(theta + alpha-1) / (sum + K(alpha-1))` (Eq. 9).
+    pub theta: Vec<f32>,
+    /// Perplexity of the request's own tokens under the inferred mixture
+    /// (lower = better explained by the pinned model).
+    pub perplexity: f64,
+    /// Fold-in sweeps actually run (per-doc convergence may stop early).
+    pub sweeps: usize,
+    /// Submit-to-completion latency, queueing included.
+    pub latency: Duration,
+}
+
+/// Reply channel alias (a request's one-shot response slot).
+type Reply = mpsc::Sender<Result<InferResponse, String>>;
+
+/// What the workers see: the request minus its reply channel (the reply
+/// stays on the dispatcher thread; `mpsc::Sender` need not be `Sync`).
+struct Payload {
+    doc: Vec<(u32, f32)>,
+    seed: u64,
+    pin: Option<Arc<ModelSnapshot>>,
+    submitted: Instant,
+}
+
+struct Job {
+    payload: Payload,
+    reply: Reply,
+}
+
+/// Handle to an in-flight request.
+pub struct PendingResponse {
+    rx: mpsc::Receiver<Result<InferResponse, String>>,
+}
+
+impl PendingResponse {
+    /// Block until the response arrives.
+    pub fn wait(self) -> anyhow::Result<InferResponse> {
+        match self.rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(anyhow::anyhow!(e)),
+            Err(_) => Err(anyhow::anyhow!(
+                "serve: server shut down before responding"
+            )),
+        }
+    }
+}
+
+/// Aggregate serving telemetry, collected by the dispatcher.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    /// Requests answered successfully.
+    pub docs: u64,
+    /// Requests answered with an error (no snapshot, bad vocabulary).
+    pub failed: u64,
+    /// Requests refused by [`Server::try_submit`] backpressure.
+    pub rejected: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Token mass served.
+    pub tokens: f64,
+    /// Mean coalesced batch size in requests.
+    pub mean_batch_docs: f64,
+    /// Successful requests per wall-clock second (server start to last
+    /// completion).
+    pub docs_per_sec: f64,
+    /// Median submit-to-completion latency, microseconds.
+    pub p50_latency_us: f64,
+    /// 99th-percentile submit-to-completion latency, microseconds.
+    pub p99_latency_us: f64,
+}
+
+/// Cap on retained latency samples: a long-running server keeps a
+/// sliding window (overwrite ring) instead of unbounded history, so
+/// memory stays fixed and [`Server::report`]'s sort stays O(cap log cap)
+/// no matter how much traffic has been served.
+const LATENCY_SAMPLE_CAP: usize = 1 << 16;
+
+#[derive(Debug, Default)]
+struct MetricsInner {
+    docs: u64,
+    failed: u64,
+    rejected: u64,
+    batches: u64,
+    tokens: f64,
+    /// Sliding window of per-request latencies (ring once full).
+    latencies_ns: Vec<u64>,
+    /// Total latency samples ever taken (ring write cursor).
+    samples: u64,
+    window: Duration,
+}
+
+/// Shared metrics sink (dispatcher writes, [`Server::report`] reads).
+#[derive(Debug)]
+struct ServeMetrics {
+    started: Instant,
+    inner: Mutex<MetricsInner>,
+}
+
+impl ServeMetrics {
+    fn start() -> Self {
+        Self { started: Instant::now(), inner: Mutex::default() }
+    }
+
+    fn note_rejected(&self) {
+        self.inner.lock().expect("metrics lock").rejected += 1;
+    }
+
+    fn note_request(&self, ok: bool, tokens: f64, latency: Duration) {
+        let mut g = self.inner.lock().expect("metrics lock");
+        if ok {
+            g.docs += 1;
+            g.tokens += tokens;
+        } else {
+            g.failed += 1;
+        }
+        let sample = latency.as_nanos() as u64;
+        if g.latencies_ns.len() < LATENCY_SAMPLE_CAP {
+            g.latencies_ns.push(sample);
+        } else {
+            let at = (g.samples % LATENCY_SAMPLE_CAP as u64) as usize;
+            g.latencies_ns[at] = sample;
+        }
+        g.samples += 1;
+        g.window = self.started.elapsed();
+    }
+
+    fn note_batch(&self) {
+        self.inner.lock().expect("metrics lock").batches += 1;
+    }
+
+    fn report(&self) -> ServeReport {
+        let g = self.inner.lock().expect("metrics lock");
+        let mut lat = g.latencies_ns.clone();
+        lat.sort_unstable();
+        let pct = |q: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            lat[((lat.len() - 1) as f64 * q) as usize] as f64 / 1e3
+        };
+        let secs = g.window.as_secs_f64();
+        ServeReport {
+            docs: g.docs,
+            failed: g.failed,
+            rejected: g.rejected,
+            batches: g.batches,
+            tokens: g.tokens,
+            mean_batch_docs: if g.batches > 0 {
+                (g.docs + g.failed) as f64 / g.batches as f64
+            } else {
+                0.0
+            },
+            docs_per_sec: if secs > 0.0 { g.docs as f64 / secs } else { 0.0 },
+            p50_latency_us: pct(0.5),
+            p99_latency_us: pct(0.99),
+        }
+    }
+}
+
+/// The serving front end: owns the bounded request queue and the
+/// dispatcher thread. See the module docs for the batching and
+/// determinism contract.
+pub struct Server {
+    tx: Option<SyncSender<Job>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<ServeMetrics>,
+    queue_docs: usize,
+}
+
+impl Server {
+    /// Start the dispatcher over `registry` with the given policy.
+    pub fn start(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> Self {
+        let cfg = cfg.normalized();
+        let queue_docs = cfg.queue_docs;
+        let (tx, rx) = mpsc::sync_channel::<Job>(queue_docs);
+        let metrics = Arc::new(ServeMetrics::start());
+        let worker_metrics = Arc::clone(&metrics);
+        let dispatcher = std::thread::Builder::new()
+            .name("foem-serve-dispatch".into())
+            .spawn(move || dispatch_loop(rx, registry, cfg, worker_metrics))
+            .expect("spawn serve dispatcher");
+        Self {
+            tx: Some(tx),
+            dispatcher: Some(dispatcher),
+            metrics,
+            queue_docs,
+        }
+    }
+
+    /// Submit a document (sparse `(word_id, count)` pairs, counts > 0)
+    /// for inference against the *current* epoch at execution time.
+    /// Blocks while the queue is full — the backpressure path.
+    pub fn submit(
+        &self,
+        doc: Vec<(u32, f32)>,
+        seed: u64,
+    ) -> anyhow::Result<PendingResponse> {
+        self.enqueue(doc, seed, None, true)
+    }
+
+    /// Submit pinned to `snapshot`: the request evaluates against that
+    /// epoch even if the trainer publishes newer ones meanwhile.
+    pub fn submit_pinned(
+        &self,
+        doc: Vec<(u32, f32)>,
+        seed: u64,
+        snapshot: Arc<ModelSnapshot>,
+    ) -> anyhow::Result<PendingResponse> {
+        self.enqueue(doc, seed, Some(snapshot), true)
+    }
+
+    /// Non-blocking [`Server::submit`]: errors immediately when the
+    /// queue is full (counted in [`ServeReport::rejected`]) instead of
+    /// applying backpressure to the caller.
+    pub fn try_submit(
+        &self,
+        doc: Vec<(u32, f32)>,
+        seed: u64,
+    ) -> anyhow::Result<PendingResponse> {
+        self.enqueue(doc, seed, None, false)
+    }
+
+    fn enqueue(
+        &self,
+        doc: Vec<(u32, f32)>,
+        seed: u64,
+        pin: Option<Arc<ModelSnapshot>>,
+        block: bool,
+    ) -> anyhow::Result<PendingResponse> {
+        let (reply, rx) = mpsc::channel();
+        let job = Job {
+            payload: Payload { doc, seed, pin, submitted: Instant::now() },
+            reply,
+        };
+        let tx = self.tx.as_ref().expect("server already shut down");
+        if block {
+            tx.send(job)
+                .map_err(|_| anyhow::anyhow!("serve: dispatcher stopped"))?;
+        } else {
+            match tx.try_send(job) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) => {
+                    self.metrics.note_rejected();
+                    anyhow::bail!(
+                        "serve: request queue full ({} docs)",
+                        self.queue_docs
+                    );
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    anyhow::bail!("serve: dispatcher stopped")
+                }
+            }
+        }
+        Ok(PendingResponse { rx })
+    }
+
+    /// Current serving telemetry.
+    pub fn report(&self) -> ServeReport {
+        self.metrics.report()
+    }
+
+    /// Stop accepting requests, drain the queue, join the dispatcher and
+    /// return the final telemetry.
+    pub fn shutdown(mut self) -> ServeReport {
+        self.stop();
+        self.metrics.report()
+    }
+
+    fn stop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+struct RunOut {
+    epoch: u64,
+    theta: Vec<f32>,
+    perplexity: f64,
+    sweeps: usize,
+    tokens: f64,
+}
+
+/// Fold one request in against `snap` — exactly the float ops of an
+/// offline `em::infer::fold_in` + `eval::log_likelihood` run (the
+/// equivalence contract; see the module docs).
+fn run_one(
+    snap: &ModelSnapshot,
+    payload: &Payload,
+    fold_in: &infer::FoldInConfig,
+) -> Result<RunOut, String> {
+    for &(w, c) in &payload.doc {
+        if w as usize >= snap.n_words() {
+            return Err(format!(
+                "word id {w} outside the snapshot vocabulary ({} words)",
+                snap.n_words()
+            ));
+        }
+        if !snap.view().has_word(w) {
+            return Err(format!(
+                "word id {w} not materialized in the published snapshot"
+            ));
+        }
+        if !c.is_finite() || c <= 0.0 {
+            return Err(format!("word {w} has non-positive count {c}"));
+        }
+    }
+    let rows: [&[(u32, f32)]; 1] = [&payload.doc];
+    let docs = DocWordMatrix::from_rows(snap.n_words(), &rows);
+    let mut cfg = *fold_in;
+    // Per-request determinism: the pool parallelizes across requests,
+    // never inside one.
+    cfg.n_workers = 1;
+    let (theta, rep) = infer::fold_in_with_report(
+        snap.view(),
+        snap.params(),
+        &docs,
+        &cfg,
+        payload.seed,
+    );
+    let (ll, n) =
+        crate::eval::log_likelihood(snap.view(), snap.params(), &theta, &docs);
+    Ok(RunOut {
+        epoch: snap.epoch(),
+        theta: theta.doc(0).to_vec(),
+        perplexity: crate::em::perplexity(ll, n),
+        sweeps: rep.sweeps,
+        tokens: n,
+    })
+}
+
+/// Minimum requests per worker range before the dispatcher fans a batch
+/// out to scoped threads. `run_ranged` runs a single range inline on the
+/// dispatcher thread, so batches up to this size pay zero thread
+/// spawn/join cost — under light traffic the spawn overhead would
+/// otherwise be a real fraction of p50 latency. (Long-lived pool
+/// workers would remove the spawn cost at every batch size; that swap
+/// stays behind this function's seam.)
+const MIN_DOCS_PER_WORKER: usize = 4;
+
+fn dispatch_loop(
+    rx: Receiver<Job>,
+    registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
+    metrics: Arc<ServeMetrics>,
+) {
+    while let Ok(first) = rx.recv() {
+        // Coalesce whatever else is already queued, up to the batch cap.
+        let mut jobs = vec![first];
+        while jobs.len() < cfg.max_batch_docs {
+            match rx.try_recv() {
+                Ok(job) => jobs.push(job),
+                Err(_) => break,
+            }
+        }
+        // One snapshot resolution per batch for the unpinned requests:
+        // every request of a batch that asked for "latest" sees the same
+        // epoch.
+        let latest = registry.latest();
+        let (payloads, replies): (Vec<Payload>, Vec<Reply>) =
+            jobs.into_iter().map(|j| (j.payload, j.reply)).unzip();
+        let fan_out = cfg
+            .workers
+            .min(payloads.len().div_ceil(MIN_DOCS_PER_WORKER));
+        let exec = ParallelExecutor::new(fan_out);
+        let outs = exec.run_ranged(payloads.len(), |_, range| {
+            range
+                .map(|i| {
+                    let p = &payloads[i];
+                    match p.pin.as_deref().or(latest.as_deref()) {
+                        None => Err(
+                            "no model snapshot published yet".to_string()
+                        ),
+                        Some(snap) => run_one(snap, p, &cfg.fold_in),
+                    }
+                })
+                .collect::<Vec<_>>()
+        });
+        metrics.note_batch();
+        let results: Vec<Result<RunOut, String>> =
+            outs.into_iter().flatten().collect();
+        debug_assert_eq!(results.len(), payloads.len());
+        for ((payload, reply), result) in
+            payloads.iter().zip(replies).zip(results)
+        {
+            let latency = payload.submitted.elapsed();
+            let response = result.map(|out| {
+                metrics.note_request(true, out.tokens, latency);
+                InferResponse {
+                    epoch: out.epoch,
+                    theta: out.theta,
+                    perplexity: out.perplexity,
+                    sweeps: out.sweeps,
+                    latency,
+                }
+            });
+            if response.is_err() {
+                metrics.note_request(false, 0.0, latency);
+            }
+            // A dropped receiver just means the client went away.
+            let _ = reply.send(response);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::em::{EvalPhiView, PhiStats};
+    use crate::LdaParams;
+
+    fn registry_with_model(
+        k: usize,
+        w: usize,
+    ) -> (Arc<ModelRegistry>, LdaParams) {
+        let p = LdaParams::paper_defaults(k);
+        let mut rng = crate::util::Rng::new(3);
+        let mut phi = PhiStats::zeros(k, w);
+        let mut col = vec![0.0f32; k];
+        for word in 0..w {
+            for x in col.iter_mut() {
+                *x = rng.next_f32() * 2.0 + 0.05;
+            }
+            phi.add_to_word(word, &col);
+        }
+        let words: Vec<u32> = (0..w as u32).collect();
+        let reg = Arc::new(ModelRegistry::new());
+        reg.publish(EvalPhiView::from_dense(&phi, &words), p);
+        (reg, p)
+    }
+
+    #[test]
+    fn serves_a_batch_of_requests() {
+        let (reg, p) = registry_with_model(8, 32);
+        let server = Server::start(Arc::clone(&reg), ServeConfig::default());
+        let pend: Vec<_> = (0..10)
+            .map(|i| {
+                let doc = vec![(i as u32, 2.0), (i as u32 + 8, 1.0)];
+                server.submit(doc, i as u64).unwrap()
+            })
+            .collect();
+        for pr in pend {
+            let resp = pr.wait().unwrap();
+            assert_eq!(resp.epoch, 1);
+            assert_eq!(resp.theta.len(), p.n_topics);
+            let mass: f32 = resp.theta.iter().sum();
+            assert!((mass - 3.0).abs() < 1e-2, "theta mass {mass}");
+            assert!(resp.perplexity.is_finite() && resp.perplexity > 1.0);
+            assert!(resp.sweeps >= 1);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.docs, 10);
+        assert_eq!(report.failed, 0);
+        assert!(report.batches >= 1);
+        assert!(report.docs_per_sec > 0.0);
+        assert!(report.p99_latency_us >= report.p50_latency_us);
+    }
+
+    #[test]
+    fn empty_registry_and_bad_words_fail_cleanly() {
+        let reg = Arc::new(ModelRegistry::new());
+        let server = Server::start(Arc::clone(&reg), ServeConfig::default());
+        let err = server
+            .submit(vec![(0, 1.0)], 1)
+            .unwrap()
+            .wait()
+            .expect_err("no snapshot published");
+        assert!(err.to_string().contains("no model snapshot"), "{err}");
+        // Publish, then request a word outside the vocabulary.
+        let (reg2, _) = registry_with_model(4, 8);
+        let server2 = Server::start(reg2, ServeConfig::default());
+        let err = server2
+            .submit(vec![(99, 1.0)], 1)
+            .unwrap()
+            .wait()
+            .expect_err("out-of-vocabulary word");
+        assert!(err.to_string().contains("vocabulary"), "{err}");
+        let report = server2.shutdown();
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.docs, 0);
+    }
+
+    #[test]
+    fn unpinned_requests_follow_the_latest_epoch() {
+        let (reg, p) = registry_with_model(4, 8);
+        let server = Server::start(Arc::clone(&reg), ServeConfig::default());
+        let r1 = server.submit(vec![(0, 1.0)], 1).unwrap().wait().unwrap();
+        assert_eq!(r1.epoch, 1);
+        // Re-publish; the same submission now evaluates against epoch 2.
+        let snap = reg.latest().unwrap();
+        reg.publish(
+            EvalPhiView::from_dense(
+                &{
+                    let mut phi = PhiStats::zeros(4, 8);
+                    for w in 0..8 {
+                        phi.add_to_word(w, &[1.0, 2.0, 3.0, 4.0]);
+                    }
+                    phi
+                },
+                &(0..8u32).collect::<Vec<_>>(),
+            ),
+            p,
+        );
+        let r2 = server.submit(vec![(0, 1.0)], 1).unwrap().wait().unwrap();
+        assert_eq!(r2.epoch, 2);
+        // The pinned epoch is still available for pinned submissions.
+        let r3 = server
+            .submit_pinned(vec![(0, 1.0)], 1, snap)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r3.epoch, 1);
+        drop(server);
+    }
+}

@@ -1,0 +1,117 @@
+//! Snapshot-isolated serving: concurrent unseen-document inference over
+//! a live training loop.
+//!
+//! The paper's FOEM "infers the topic distribution from previously
+//! unseen documents incrementally with constant memory" — [`crate::em::infer`]
+//! is that engine, and this module is the layer that *serves* it while a
+//! trainer keeps mutating the model (the ROADMAP's "heavy traffic" north
+//! star). It is the first place in the crate where training-side
+//! mutation and read-side traffic coexist, and the whole design reduces
+//! that to one rule: **readers never see a mutable model** —
+//!
+//! * [`ModelRegistry`] — the trainer periodically publishes an immutable,
+//!   epoch-tagged [`ModelSnapshot`] (one store column-snapshot read via
+//!   `OnlineLda::eval_view`, wrapped in an `Arc`, installed with an
+//!   atomic swap). Old epochs retire by reference count the moment
+//!   their last pinned reader drops.
+//! * [`Server`] / request batcher — incoming documents coalesce on a
+//!   bounded queue (backpressure) into minibatches, which a persistent
+//!   dispatcher fans out over [`crate::exec::ParallelExecutor::run_ranged`]
+//!   workers running the scheduled [`crate::em::infer`] engine (scratch
+//!   from the grow-only [`crate::exec::scratch`] pool). Each response
+//!   carries per-doc theta, the doc's perplexity under the pinned model,
+//!   and its latency; [`ServeReport`] aggregates docs/sec and p50/p99.
+//!
+//! **Epoch-pinned determinism.** A request pinned to epoch `E` returns
+//! bit-identical `(theta, perplexity)` to an offline
+//! [`crate::em::infer::fold_in`] run against that snapshot — batching,
+//! pool size and concurrent publishing cannot reach the numerics because
+//! each request folds in serially (`n_workers = 1`) with its own seed
+//! against frozen state. Asserted in `tests/serve_equivalence.rs`;
+//! see `rust/DESIGN.md` §10 for the full argument.
+//!
+//! # Examples
+//!
+//! Publish a model and serve a request against it:
+//!
+//! ```
+//! use foem::em::{EvalPhiView, PhiStats};
+//! use foem::serve::{ModelRegistry, ServeConfig, Server};
+//! use foem::LdaParams;
+//! use std::sync::Arc;
+//!
+//! // A (tiny, untrained) model: uniform mass over 4 topics × 8 words.
+//! let (k, w) = (4, 8);
+//! let mut phi = PhiStats::zeros(k, w);
+//! for word in 0..w {
+//!     phi.add_to_word(word, &vec![0.1; k]);
+//! }
+//! let words: Vec<u32> = (0..w as u32).collect();
+//! let registry = Arc::new(ModelRegistry::new());
+//! registry.publish(
+//!     EvalPhiView::from_dense(&phi, &words),
+//!     LdaParams::paper_defaults(k),
+//! );
+//!
+//! let server = Server::start(Arc::clone(&registry), ServeConfig::default());
+//! let pending = server.submit(vec![(0, 2.0), (3, 1.0)], 7).unwrap();
+//! let resp = pending.wait().unwrap();
+//! assert_eq!(resp.epoch, 1);
+//! assert_eq!(resp.theta.len(), k);
+//!
+//! let report = server.shutdown();
+//! assert_eq!(report.docs, 1);
+//! ```
+
+mod batcher;
+mod registry;
+
+pub use batcher::{InferResponse, PendingResponse, ServeReport, Server};
+pub use registry::{ModelRegistry, ModelSnapshot};
+
+use crate::em::infer::FoldInConfig;
+
+/// Serving policy: queueing, batching, worker fan-out and the fold-in
+/// protocol every request runs. Built from the run configuration by
+/// [`crate::coordinator::config::RunConfig::serve_config`] (the
+/// `serve_*` knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Most requests coalesced into one dispatched batch.
+    pub max_batch_docs: usize,
+    /// Bound of the request queue — the backpressure knob:
+    /// [`Server::submit`] blocks and [`Server::try_submit`] fails once
+    /// this many requests are pending.
+    pub queue_docs: usize,
+    /// Worker threads a batch fans out over (requests are independent
+    /// given a frozen snapshot).
+    pub workers: usize,
+    /// Per-request fold-in protocol. `n_workers` is forced to 1 at
+    /// execution time — parallelism lives across requests, so each
+    /// request stays bit-deterministic in `(snapshot, doc, seed)`.
+    pub fold_in: FoldInConfig,
+}
+
+impl Default for ServeConfig {
+    /// Paper-shaped serving defaults: scheduled fold-in (10 topics + 2
+    /// exploration slots per doc per sweep, per-doc convergence cutoff),
+    /// modest batches, one worker.
+    fn default() -> Self {
+        Self {
+            max_batch_docs: 32,
+            queue_docs: 256,
+            workers: 1,
+            fold_in: FoldInConfig::scheduled(10, 30),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Clamp degenerate values (zero sizes) to their minimum of 1.
+    pub(crate) fn normalized(mut self) -> Self {
+        self.max_batch_docs = self.max_batch_docs.max(1);
+        self.queue_docs = self.queue_docs.max(1);
+        self.workers = self.workers.max(1);
+        self
+    }
+}

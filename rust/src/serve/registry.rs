@@ -1,0 +1,216 @@
+//! Epoch-tagged model snapshots and the registry the trainer publishes
+//! them through.
+//!
+//! The registry is the *only* shared state between the training loop and
+//! the serving path, and it is deliberately tiny: an atomic swap of an
+//! `Arc<ModelSnapshot>`. Publishing is one column-snapshot read of the
+//! store (`PhiColumnStore::snapshot_columns` via `OnlineLda::eval_view`)
+//! plus an `Arc` allocation; readers never block the trainer and the
+//! trainer never blocks readers. Retirement is reference counting: when a
+//! new epoch is published the registry drops its strong reference to the
+//! old one, so an old epoch lives exactly as long as its last pinned
+//! reader and is freed the moment that reader drops — no epoch GC, no
+//! generation list to compact.
+
+use crate::em::{EvalPhiView, PhiAccess};
+use crate::LdaParams;
+use std::sync::{Arc, Mutex, Weak};
+
+/// One immutable, epoch-tagged publication of the model: the topic-word
+/// view the snapshot was taken over plus the smoothing parameters the
+/// evaluator must use with it ([`crate::baselines::OnlineLda::eval_params`]).
+///
+/// A snapshot is the unit requests pin to: everything a fold-in needs is
+/// frozen inside it, so a request evaluated against epoch `E` is
+/// bit-identical to an offline [`crate::em::infer::fold_in`] run against
+/// this snapshot's view, no matter how many newer epochs the trainer has
+/// published meanwhile (`tests/serve_equivalence.rs`).
+#[derive(Debug)]
+pub struct ModelSnapshot {
+    epoch: u64,
+    params: LdaParams,
+    view: EvalPhiView,
+}
+
+impl ModelSnapshot {
+    /// The publication epoch (1-based; assigned by the registry).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The smoothing parameterization matching how the view was produced.
+    pub fn params(&self) -> &LdaParams {
+        &self.params
+    }
+
+    /// The frozen topic-word view requests are folded in against.
+    pub fn view(&self) -> &EvalPhiView {
+        &self.view
+    }
+}
+
+impl PhiAccess for ModelSnapshot {
+    fn k(&self) -> usize {
+        self.view.k()
+    }
+
+    fn n_words(&self) -> usize {
+        self.view.n_words()
+    }
+
+    fn phisum(&self) -> &[f32] {
+        self.view.phisum()
+    }
+
+    fn word(&self, w: usize) -> &[f32] {
+        self.view.word(w)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    current: Option<Arc<ModelSnapshot>>,
+    last_epoch: u64,
+    /// Weak handles to every epoch ever published and not yet dropped —
+    /// observability only (never keeps an epoch alive).
+    history: Vec<(u64, Weak<ModelSnapshot>)>,
+}
+
+/// The publish/subscribe point between one trainer and any number of
+/// serving readers.
+///
+/// The trainer calls [`ModelRegistry::publish`] with a fresh eval view;
+/// readers call [`ModelRegistry::latest`] to pin the current epoch. Both
+/// are a mutex-guarded pointer swap/clone — the lock is held for O(1),
+/// never across I/O or compute.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish `view` as the next epoch and make it current. Returns the
+    /// new snapshot (the trainer may keep or drop it; the registry holds
+    /// its own reference until the next publish).
+    pub fn publish(
+        &self,
+        view: EvalPhiView,
+        params: LdaParams,
+    ) -> Arc<ModelSnapshot> {
+        let mut g = self.inner.lock().expect("registry lock");
+        g.last_epoch += 1;
+        let snap =
+            Arc::new(ModelSnapshot { epoch: g.last_epoch, params, view });
+        g.history.retain(|(_, w)| w.strong_count() > 0);
+        g.history.push((g.last_epoch, Arc::downgrade(&snap)));
+        g.current = Some(Arc::clone(&snap));
+        snap
+    }
+
+    /// Pin the current epoch (`None` until the first publish). The
+    /// returned `Arc` keeps that epoch alive for as long as the caller
+    /// holds it, regardless of later publishes.
+    pub fn latest(&self) -> Option<Arc<ModelSnapshot>> {
+        self.inner.lock().expect("registry lock").current.clone()
+    }
+
+    /// Epoch of the most recent publish (0 = nothing published yet).
+    pub fn current_epoch(&self) -> u64 {
+        self.inner.lock().expect("registry lock").last_epoch
+    }
+
+    /// Epochs still alive (current + any older epoch a reader still
+    /// pins), ascending. Old epochs disappear from this list as soon as
+    /// their last reader drops — the retirement contract, observable.
+    pub fn live_epochs(&self) -> Vec<u64> {
+        let mut g = self.inner.lock().expect("registry lock");
+        g.history.retain(|(_, w)| w.strong_count() > 0);
+        g.history.iter().map(|(e, _)| *e).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::em::PhiStats;
+
+    fn view(k: usize, w: usize, fill: f32) -> EvalPhiView {
+        let mut phi = PhiStats::zeros(k, w);
+        for word in 0..w {
+            phi.add_to_word(word, &vec![fill; k]);
+        }
+        let words: Vec<u32> = (0..w as u32).collect();
+        EvalPhiView::from_dense(&phi, &words)
+    }
+
+    #[test]
+    fn publish_bumps_epoch_and_swaps_current() {
+        let p = LdaParams::paper_defaults(3);
+        let reg = ModelRegistry::new();
+        assert!(reg.latest().is_none());
+        assert_eq!(reg.current_epoch(), 0);
+        let a = reg.publish(view(3, 4, 1.0), p);
+        assert_eq!(a.epoch(), 1);
+        let b = reg.publish(view(3, 4, 2.0), p);
+        assert_eq!(b.epoch(), 2);
+        let latest = reg.latest().unwrap();
+        assert_eq!(latest.epoch(), 2);
+        assert_eq!(latest.word(0)[0], 2.0);
+        assert_eq!(reg.current_epoch(), 2);
+    }
+
+    #[test]
+    fn old_epoch_retires_when_last_reader_drops() {
+        let p = LdaParams::paper_defaults(2);
+        let reg = ModelRegistry::new();
+        reg.publish(view(2, 2, 1.0), p);
+        let pinned = reg.latest().unwrap();
+        reg.publish(view(2, 2, 2.0), p);
+        // Epoch 1 is still alive: `pinned` holds it.
+        assert_eq!(reg.live_epochs(), vec![1, 2]);
+        assert_eq!(pinned.word(1)[0], 1.0);
+        drop(pinned);
+        // ... and retires the moment its last reader is gone.
+        assert_eq!(reg.live_epochs(), vec![2]);
+    }
+
+    #[test]
+    fn snapshot_is_immutable_across_publishes() {
+        let p = LdaParams::paper_defaults(2);
+        let reg = ModelRegistry::new();
+        let a = reg.publish(view(2, 3, 5.0), p);
+        reg.publish(view(2, 3, 9.0), p);
+        assert_eq!(a.word(2), &[5.0, 5.0]);
+        assert_eq!(a.phisum(), &[15.0, 15.0]);
+    }
+
+    #[test]
+    fn concurrent_readers_see_monotone_epochs() {
+        let p = LdaParams::paper_defaults(2);
+        let reg = ModelRegistry::new();
+        reg.publish(view(2, 2, 1.0), p);
+        std::thread::scope(|s| {
+            let publisher = s.spawn(|| {
+                for i in 0..50 {
+                    reg.publish(view(2, 2, i as f32), p);
+                }
+            });
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let mut last = 0u64;
+                    for _ in 0..200 {
+                        let e = reg.latest().unwrap().epoch();
+                        assert!(e >= last, "epoch went backwards");
+                        last = e;
+                    }
+                });
+            }
+            publisher.join().unwrap();
+        });
+        assert_eq!(reg.current_epoch(), 51);
+    }
+}

@@ -1,0 +1,183 @@
+//! The serving layer's acceptance contract: a request pinned to epoch E
+//! returns bit-identical `(theta, perplexity)` to an offline
+//! `em::infer::fold_in` + `eval::log_likelihood` run against that
+//! epoch's snapshot — while a concurrent trainer keeps publishing new
+//! epochs — and the batcher's backpressure refuses (rather than drops)
+//! overload.
+
+use foem::corpus::sparse::DocWordMatrix;
+use foem::corpus::synthetic::{generate, SyntheticConfig};
+use foem::em::bem::Bem;
+use foem::em::infer::{self, FoldInConfig};
+use foem::em::{EvalPhiView, PhiAccess, PhiStats};
+use foem::serve::{ModelRegistry, ModelSnapshot, ServeConfig, Server};
+use foem::LdaParams;
+use std::sync::Arc;
+
+fn all_words(w: usize) -> Vec<u32> {
+    (0..w as u32).collect()
+}
+
+#[test]
+fn pinned_requests_bit_identical_under_concurrent_publishing() {
+    let k = 16;
+    let corpus = generate(&SyntheticConfig::small(), 5);
+    let params = LdaParams::paper_defaults(k);
+    let mut bem = Bem::init(&corpus.docs, params, 5);
+    for _ in 0..5 {
+        bem.sweep(&corpus.docs);
+    }
+    let words = all_words(corpus.n_words());
+    let registry = Arc::new(ModelRegistry::new());
+    let pinned: Arc<ModelSnapshot> =
+        registry.publish(EvalPhiView::from_dense(&bem.phi, &words), params);
+    let cfg = ServeConfig::default();
+    let server = Server::start(Arc::clone(&registry), cfg);
+
+    // Live requests: the first 24 corpus documents.
+    let requests: Vec<Vec<(u32, f32)>> =
+        (0..24).map(|d| corpus.docs.iter_doc(d).collect()).collect();
+
+    std::thread::scope(|s| {
+        // Concurrent trainer: keeps sweeping and publishing new epochs
+        // the whole time the pinned requests are in flight.
+        let publisher = {
+            let registry = Arc::clone(&registry);
+            let docs = &corpus.docs;
+            let words = &words;
+            s.spawn(move || {
+                for _ in 0..20 {
+                    bem.sweep(docs);
+                    registry.publish(
+                        EvalPhiView::from_dense(&bem.phi, words),
+                        params,
+                    );
+                }
+            })
+        };
+
+        let pending: Vec<_> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, doc)| {
+                server
+                    .submit_pinned(
+                        doc.clone(),
+                        1000 + i as u64,
+                        Arc::clone(&pinned),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for (i, pr) in pending.into_iter().enumerate() {
+            let resp = pr.wait().unwrap();
+            assert_eq!(resp.epoch, pinned.epoch());
+
+            // Offline reference: the same fold-in against the pinned
+            // snapshot, serial, same seed and protocol.
+            let row: [&[(u32, f32)]; 1] = [&requests[i]];
+            let doc = DocWordMatrix::from_rows(pinned.n_words(), &row);
+            let mut fc: FoldInConfig = cfg.fold_in;
+            fc.n_workers = 1;
+            let theta = infer::fold_in(
+                pinned.view(),
+                pinned.params(),
+                &doc,
+                &fc,
+                1000 + i as u64,
+            );
+            assert_eq!(resp.theta.len(), theta.doc(0).len());
+            for (j, (a, b)) in
+                resp.theta.iter().zip(theta.doc(0)).enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "request {i}: theta diverged at topic {j}"
+                );
+            }
+            let (ll, n) = foem::eval::log_likelihood(
+                pinned.view(),
+                pinned.params(),
+                &theta,
+                &doc,
+            );
+            let reference = foem::em::perplexity(ll, n);
+            assert_eq!(
+                resp.perplexity, reference,
+                "request {i}: perplexity diverged"
+            );
+        }
+        publisher.join().unwrap();
+    });
+
+    // The trainer published 20 epochs on top of the pinned one; an
+    // unpinned request now follows the newest.
+    assert_eq!(registry.current_epoch(), 21);
+    let resp = server.submit(requests[0].clone(), 9).unwrap().wait().unwrap();
+    assert_eq!(resp.epoch, 21);
+
+    let report = server.shutdown();
+    assert_eq!(report.docs, 25);
+    assert_eq!(report.failed, 0);
+    assert!(report.p99_latency_us >= report.p50_latency_us);
+
+    // Retirement: the pinned epoch is still alive through our Arc; once
+    // dropped, only the current epoch remains live.
+    assert!(registry.live_epochs().contains(&pinned.epoch()));
+    drop(pinned);
+    assert_eq!(registry.live_epochs(), vec![21]);
+}
+
+#[test]
+fn try_submit_applies_backpressure_when_the_queue_fills() {
+    // A deliberately slow protocol (dense full-K sweeps, fixed budget)
+    // and a tiny queue: a burst of immediate try_submits must overrun
+    // the bound and be refused, never silently dropped.
+    let k = 256;
+    let w = 128;
+    let params = LdaParams::paper_defaults(k);
+    let mut rng = foem::util::Rng::new(9);
+    let mut phi = PhiStats::zeros(k, w);
+    let mut col = vec![0.0f32; k];
+    for word in 0..w {
+        for x in col.iter_mut() {
+            *x = rng.next_f32() + 0.05;
+        }
+        phi.add_to_word(word, &col);
+    }
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish(EvalPhiView::from_dense(&phi, &all_words(w)), params);
+
+    let cfg = ServeConfig {
+        max_batch_docs: 1,
+        queue_docs: 2,
+        workers: 1,
+        fold_in: FoldInConfig::dense(300),
+    };
+    let server = Server::start(Arc::clone(&registry), cfg);
+    let doc: Vec<(u32, f32)> = (0..120u32).map(|word| (word, 1.0)).collect();
+
+    let mut accepted = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..50u64 {
+        match server.try_submit(doc.clone(), i) {
+            Ok(pending) => accepted.push(pending),
+            Err(e) => {
+                rejected += 1;
+                assert!(e.to_string().contains("queue full"), "{e}");
+            }
+        }
+    }
+    assert!(rejected > 0, "50 instant submits never overran a 2-doc queue");
+    assert!(!accepted.is_empty());
+    let n_accepted = accepted.len() as u64;
+    for pending in accepted {
+        let resp = pending.wait().unwrap();
+        assert_eq!(resp.epoch, 1);
+    }
+    let report = server.shutdown();
+    assert_eq!(report.docs, n_accepted);
+    assert_eq!(report.rejected, rejected);
+    assert_eq!(report.failed, 0);
+}

@@ -3,12 +3,14 @@
 # repo root:
 #
 #   scripts/bench.sh    # writes BENCH_estep.json + BENCH_pipeline.json
-#                       #        + BENCH_foldin.json
+#                       #        + BENCH_foldin.json + BENCH_serve.json
 #
 # Each bench prints human-readable summaries to stderr and emits one
 # `BENCH_<name>.json {…}` marker line per configuration; this script
 # strips the markers into pure JSON-lines files the next PR's numbers
-# can be diffed against.
+# can be diffed against. A bench that produces NO marker lines is a
+# broken emitter, not an empty result — the script fails loudly instead
+# of writing an empty file.
 set -euo pipefail
 
 root="$(cd "$(dirname "$0")/.." && pwd)"
@@ -20,9 +22,15 @@ run_bench() {
     cargo bench --bench "$bench" \
         | tee /dev/stderr \
         | sed -n "s/^BENCH_${out}\.json //p" >"$root/BENCH_${out}.json"
+    if ! [ -s "$root/BENCH_${out}.json" ]; then
+        echo "!! bench $bench emitted no BENCH_${out}.json rows" >&2
+        rm -f "$root/BENCH_${out}.json"
+        exit 1
+    fi
     echo ">> wrote $root/BENCH_${out}.json ($(wc -l <"$root/BENCH_${out}.json") rows)" >&2
 }
 
 run_bench estep_kernel estep
 run_bench streaming_pipeline pipeline
 run_bench foldin foldin
+run_bench serve serve
