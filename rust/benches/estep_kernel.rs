@@ -6,15 +6,18 @@
 //! sweeps over every word, with identical float math and identical
 //! selections on both sides (verified bitwise before timing).
 //!
-//! Emits `BENCH_estep.json` lines (per-impl rows plus a summary row with
-//! the bytes ratio and speedup per configuration) so the perf trajectory
-//! accumulates across PRs:
+//! Emits `BENCH_estep.json` lines (per-impl rows — dense, arena, and the
+//! runtime-dispatched SIMD arena tier with its detected ISA — plus a
+//! summary row with the bytes ratio, arena speedup, and scalar-vs-SIMD
+//! speedup per configuration) so the perf trajectory accumulates across
+//! PRs:
 //!
 //!     cargo bench --bench estep_kernel
 //!     scripts/bench.sh   # writes BENCH_estep.json at the repo root
 
 use foem::em::resp::{self, RespArena, SweepKernel};
 use foem::em::schedule::TopicSubset;
+use foem::em::simd::KernelBackend;
 use foem::util::bench::{black_box, run};
 use foem::util::Rng;
 use std::time::Duration;
@@ -233,7 +236,16 @@ fn main() {
                 phi: Vec::new(),
                 phisum: Vec::new(),
             };
-            // Bit-identity guard: both sides must produce the same
+            let mut av = ArenaState {
+                mu: RespArena::new(),
+                kern: SweepKernel::new(),
+                theta: Vec::new(),
+                phi: Vec::new(),
+                phisum: Vec::new(),
+            };
+            av.kern.set_backend(KernelBackend::Simd);
+            let isa = KernelBackend::Simd.resolve();
+            // Bit-identity guard: both scalar sides must produce the same
             // numbers before their times mean anything.
             let cd = run_dense(&wl, &mut ds, n_sel);
             let ca = run_arena(&wl, &mut ar, n_sel);
@@ -241,6 +253,13 @@ fn main() {
                 cd.to_bits(),
                 ca.to_bits(),
                 "dense/arena diverged at k={k} {label}"
+            );
+            // The vector tier reassociates reductions, so it is held to a
+            // tolerance instead of bit identity.
+            let cv = run_arena(&wl, &mut av, n_sel);
+            assert!(
+                (cv - cd).abs() <= cd.abs().max(1.0) * 1e-3,
+                "scalar/simd diverged at k={k} {label}: {cd} vs {cv}"
             );
             let dense_bytes = wl.nnz * k * 4;
             let arena_bytes = ar.mu.bytes();
@@ -251,25 +270,41 @@ fn main() {
             let ra = run(&format!("estep_arena_k{k}_{label}"), budget, || {
                 black_box(run_arena(&wl, &mut ar, n_sel));
             });
+            let rv = run(
+                &format!("estep_arena_simd_k{k}_{label}_{}", isa.name()),
+                budget,
+                || {
+                    black_box(run_arena(&wl, &mut av, n_sel));
+                },
+            );
 
-            for (imp, rep, bytes) in
-                [("dense", &rd, dense_bytes), ("arena", &ra, arena_bytes)]
-            {
+            for (imp, rep, bytes) in [
+                ("dense", &rd, dense_bytes),
+                ("arena", &ra, arena_bytes),
+                ("arena_simd", &rv, arena_bytes),
+            ] {
                 println!(
                     "BENCH_estep.json {{\"bench\":\"estep_kernel\",\
                      \"k\":{k},\"subset\":\"{label}\",\"impl\":\"{imp}\",\
+                     \"isa\":\"{}\",\
                      \"mean_ns\":{:.0},\"p50_ns\":{:.0},\
                      \"resp_bytes\":{bytes},\"entries\":{},\
                      \"sweeps\":{SWEEPS}}}",
-                    rep.mean_ns, rep.p50_ns, wl.nnz
+                    if imp == "arena_simd" { isa.name() } else { "scalar" },
+                    rep.mean_ns,
+                    rep.p50_ns,
+                    wl.nnz
                 );
             }
             println!(
                 "BENCH_estep.json {{\"bench\":\"estep_kernel_summary\",\
                  \"k\":{k},\"subset\":\"{label}\",\
-                 \"resp_bytes_ratio\":{:.2},\"speedup\":{:.3}}}",
+                 \"resp_bytes_ratio\":{:.2},\"speedup\":{:.3},\
+                 \"simd_speedup\":{:.3},\"isa\":\"{}\"}}",
                 dense_bytes as f64 / arena_bytes as f64,
-                rd.mean_ns / ra.mean_ns
+                rd.mean_ns / ra.mean_ns,
+                ra.mean_ns / rv.mean_ns,
+                isa.name()
             );
         }
     }

@@ -80,6 +80,7 @@ fn main() {
                     max_sweeps: SWEEPS,
                     tol,
                     n_workers: 1,
+                    kernel_backend: foem::em::simd::KernelBackend::Auto,
                 },
             };
             // Warmup pass on a throwaway server (fills the process-wide

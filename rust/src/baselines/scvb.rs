@@ -56,6 +56,7 @@ impl Scvb {
             check_every: 1,
             max_inner_iters: cfg.max_inner_iters,
             n_workers: 1,
+            kernel_backend: crate::em::simd::KernelBackend::Scalar,
         };
         Self { inner: Sem::new(params, n_words, sem_cfg, seed) }
     }

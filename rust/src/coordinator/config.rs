@@ -6,6 +6,7 @@
 use crate::em::foem::FoemConfig;
 use crate::em::schedule::TopicSubset;
 use crate::em::sem::LearningRate;
+use crate::em::simd::KernelBackend;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 
@@ -129,6 +130,11 @@ pub struct RunConfig {
     /// Topics scheduled per document by the serving fold-in (`0` = all K,
     /// the dense reference protocol) — mirrors `fold_in_subset`.
     pub serve_subset: usize,
+    /// E-step kernel backend: `scalar` (the bit-identity reference),
+    /// `simd` (force the vector tiers), or `auto` (AVX2+FMA where
+    /// detected, scalar otherwise). Threaded through every consumer of
+    /// the shared sweep kernel — training, fold-in, and serving.
+    pub kernel_backend: KernelBackend,
     pub seed: u64,
     /// Print per-minibatch progress lines.
     pub verbose: bool,
@@ -160,6 +166,7 @@ impl Default for RunConfig {
             serve_queue_docs: 256,
             serve_workers: 1,
             serve_subset: 10,
+            kernel_backend: KernelBackend::Scalar,
             seed: 42,
             verbose: false,
         }
@@ -193,6 +200,7 @@ impl RunConfig {
             // per-minibatch cost stays flat in K (Table 3).
             exact_ll: false,
             n_workers: self.n_workers,
+            kernel_backend: self.kernel_backend,
             ..FoemConfig::paper()
         }
     }
@@ -217,6 +225,7 @@ impl RunConfig {
             subset,
             tol,
             workers: self.fold_in_workers.max(1),
+            kernel_backend: self.kernel_backend,
             ..Default::default()
         }
     }
@@ -244,6 +253,7 @@ impl RunConfig {
                 max_sweeps: 30,
                 tol,
                 n_workers: 1,
+                kernel_backend: self.kernel_backend,
             },
         }
     }
@@ -283,6 +293,9 @@ impl RunConfig {
             }
             "serve_workers" => self.serve_workers = value.parse()?,
             "serve_subset" => self.serve_subset = value.parse()?,
+            "kernel_backend" => {
+                self.kernel_backend = KernelBackend::parse(value)?
+            }
             "seed" => self.seed = value.parse()?,
             "verbose" => self.verbose = value.parse()?,
             "store" => {
@@ -443,6 +456,24 @@ mod tests {
         assert_eq!(c.serve_queue_docs, 256);
         assert_eq!(c.serve_workers, 1);
         assert_eq!(c.serve_subset, 10);
+    }
+
+    #[test]
+    fn kernel_backend_round_trips() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.kernel_backend, KernelBackend::Scalar);
+        c.set("kernel_backend", "simd").unwrap();
+        assert_eq!(c.kernel_backend, KernelBackend::Simd);
+        c.set("kernel_backend", "auto").unwrap();
+        assert_eq!(c.kernel_backend, KernelBackend::Auto);
+        assert!(c.set("kernel_backend", "neon").is_err());
+        // The knob threads through every kernel consumer.
+        assert_eq!(c.foem_config().kernel_backend, KernelBackend::Auto);
+        assert_eq!(c.eval_protocol().kernel_backend, KernelBackend::Auto);
+        assert_eq!(
+            c.serve_config().fold_in.kernel_backend,
+            KernelBackend::Auto
+        );
     }
 
     #[test]

@@ -107,6 +107,7 @@ impl Driver {
         let mut sc = SemConfig::paper(scale_s);
         sc.rate = self.cfg.rate();
         sc.n_workers = self.cfg.n_workers;
+        sc.kernel_backend = self.cfg.kernel_backend;
         sc
     }
 

@@ -75,6 +75,10 @@ pub struct FoemConfig {
     /// per-shard deltas merged deterministically. `1` = the exact serial
     /// path (bit-identical numerics and I/O counters).
     pub n_workers: usize,
+    /// E-step kernel backend ([`crate::em::simd::KernelBackend`]):
+    /// `Scalar` is the bit-identity reference; the SIMD tiers are
+    /// tolerance-class equivalents of the same Eq. 13/38 float program.
+    pub kernel_backend: crate::em::simd::KernelBackend,
 }
 
 impl FoemConfig {
@@ -90,6 +94,7 @@ impl FoemConfig {
             exact_ll: true,
             open_vocabulary: false,
             n_workers: 1,
+            kernel_backend: crate::em::simd::KernelBackend::Scalar,
         }
     }
 
@@ -248,6 +253,7 @@ impl<S: PhiColumnStore> Foem<S> {
         let mut mu = std::mem::take(&mut self.resp_scratch);
         mu.reset(k, nnz, lane_cap);
         let mut kern = std::mem::take(&mut self.kern_scratch);
+        kern.set_backend(self.cfg.kernel_backend);
         let mut theta = std::mem::take(&mut self.theta_scratch);
         theta.clear();
         theta.resize(mb.docs.n_docs * k, 0.0);
@@ -786,6 +792,8 @@ fn run_foem_shard(
     // function inside the shard result (exact-LL pass at apply time).
     let mut ws = crate::exec::scratch::take();
     let mut kern = std::mem::take(&mut ws.kern);
+    // Pooled scratch is grow-only and can carry a stale tier.
+    kern.set_backend(cfg.kernel_backend);
     let mut mu = std::mem::take(&mut ws.arena);
     let n_sel = cfg.topic_subset.size(k);
     mu.reset(k, nnz, resp::lane_capacity(n_sel, cfg.explore_slots, k));

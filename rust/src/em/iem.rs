@@ -108,6 +108,9 @@ impl Iem {
         // no scheduler to feed, so it is write-only here.
         let mut fresh_res = vec![0.0f32; k];
         let mut ll = 0.0f64;
+        // The selection never changes within a sweep, so the kernel
+        // bracket (selection mark + scratch sizing) is opened once.
+        self.kern.begin_selection(k, &self.sel_all);
         for &e in &self.order {
             let e = e as usize;
             let d = entry_doc[e] as usize;
@@ -137,6 +140,7 @@ impl Iem {
                 (((doc_lens[d] - c + kam1) as f64).max(1e-300)).ln();
             ll += c as f64 * (((out.z as f64).max(1e-300)).ln() - doc_norm);
         }
+        self.kern.end_selection(&self.sel_all);
         ll
     }
 

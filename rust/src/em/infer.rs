@@ -46,7 +46,7 @@
 
 use super::resp;
 use super::schedule::TopicSubset;
-use super::{estep, PhiAccess, ThetaStats};
+use super::{estep_isa, PhiAccess, ThetaStats};
 use crate::corpus::sparse::DocWordMatrix;
 use crate::util::Rng;
 use crate::LdaParams;
@@ -73,6 +73,10 @@ pub struct FoldInConfig {
     /// Worker threads ([`crate::exec::ParallelExecutor::run_ranged`]
     /// over contiguous document ranges). `1` is the exact serial path.
     pub n_workers: usize,
+    /// E-step kernel backend ([`crate::em::simd::KernelBackend`]):
+    /// `Scalar` is the bit-identity reference; the SIMD tiers are
+    /// tolerance-class equivalents.
+    pub kernel_backend: crate::em::simd::KernelBackend,
 }
 
 impl FoldInConfig {
@@ -85,6 +89,7 @@ impl FoldInConfig {
             max_sweeps,
             tol: 0.0,
             n_workers: 1,
+            kernel_backend: crate::em::simd::KernelBackend::Scalar,
         }
     }
 
@@ -100,6 +105,7 @@ impl FoldInConfig {
             max_sweeps,
             tol: 1e-2,
             n_workers: 1,
+            kernel_backend: crate::em::simd::KernelBackend::Scalar,
         }
     }
 }
@@ -212,6 +218,8 @@ fn fold_shard_dense<P: PhiAccess>(
     let k = params.n_topics;
     let n = range.len();
     let w_dim = phi.n_words();
+    // Resolve the kernel tier once per shard, not per token.
+    let isa = cfg.kernel_backend.resolve();
     let mut ws = crate::exec::scratch::take();
     let mut theta = crate::exec::scratch::take_f32();
     theta.resize(n * k, 0.0);
@@ -253,7 +261,15 @@ fn fold_shard_dense<P: PhiAccess>(
             let th = &mut theta[ld * k..(ld + 1) * k];
             fresh.iter_mut().for_each(|x| *x = 0.0);
             for (w, c) in docs.iter_doc(d) {
-                estep(th, phi.word(w as usize), phi.phisum(), params, w_dim, &mut mu);
+                estep_isa(
+                    isa,
+                    th,
+                    phi.word(w as usize),
+                    phi.phisum(),
+                    params,
+                    w_dim,
+                    &mut mu,
+                );
                 for i in 0..k {
                     fresh[i] += c * mu[i];
                 }
@@ -311,6 +327,8 @@ fn fold_shard_scheduled<P: PhiAccess>(
     let mut arena = std::mem::take(&mut ws.arena);
     arena.reset(k, nnz, resp::lane_capacity(n_sel, cfg.explore_slots, k));
     let mut kern = std::mem::take(&mut ws.kern);
+    // Pooled scratch is grow-only and can carry a stale tier.
+    kern.set_backend(cfg.kernel_backend);
     let mut theta = crate::exec::scratch::take_f32();
     theta.resize(n * k, 0.0);
     // Per-document residual rows `r_d(k)` + resident totals — the §3.1
@@ -440,6 +458,7 @@ fn fold_shard_scheduled<P: PhiAccess>(
 #[cfg(test)]
 pub(crate) mod dense_ref {
     use super::*;
+    use crate::em::estep;
 
     pub fn fold_in<P: PhiAccess>(
         phi: &P,

@@ -13,6 +13,7 @@ pub mod infer;
 pub mod resp;
 pub mod schedule;
 pub mod sem;
+pub mod simd;
 
 use crate::corpus::sparse::DocWordMatrix;
 use crate::LdaParams;
@@ -432,6 +433,40 @@ pub fn estep_unnormalized(
     z
 }
 
+/// [`estep_unnormalized`] dispatched on a resolved kernel tier:
+/// `Scalar` runs the reference loop above bit-for-bit; the SIMD tiers
+/// run the explicitly vectorized equivalent from [`simd`]
+/// (tolerance-class, not bit-identical — reductions reassociate).
+/// Callers resolve the tier once per run/shard, not per entry.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn estep_unnormalized_isa(
+    isa: simd::KernelIsa,
+    theta_d: &[f32],
+    phi_w: &[f32],
+    phisum: &[f32],
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    mu: &mut [f32],
+) -> f32 {
+    if isa == simd::KernelIsa::Scalar {
+        estep_unnormalized(theta_d, phi_w, phisum, am1, bm1, wbm1, mu)
+    } else {
+        let k = mu.len();
+        simd::estep_unnorm(
+            isa,
+            &theta_d[..k],
+            &phi_w[..k],
+            &phisum[..k],
+            am1,
+            bm1,
+            wbm1,
+            mu,
+        )
+    }
+}
+
 /// Full E-step (Eq. 11): normalized responsibility into `mu`.
 #[inline]
 pub fn estep(
@@ -443,6 +478,35 @@ pub fn estep(
     mu: &mut [f32],
 ) {
     let z = estep_unnormalized(
+        theta_d,
+        phi_w,
+        phisum,
+        params.am1(),
+        params.bm1(),
+        params.wbm1(w_dim),
+        mu,
+    );
+    if z > 0.0 {
+        let inv = 1.0 / z;
+        mu.iter_mut().for_each(|m| *m *= inv);
+    }
+}
+
+/// [`estep`] dispatched on a resolved kernel tier — `Scalar` performs
+/// [`estep`]'s float ops bit-for-bit (see [`estep_unnormalized_isa`]).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn estep_isa(
+    isa: simd::KernelIsa,
+    theta_d: &[f32],
+    phi_w: &[f32],
+    phisum: &[f32],
+    params: &LdaParams,
+    w_dim: usize,
+    mu: &mut [f32],
+) {
+    let z = estep_unnormalized_isa(
+        isa,
         theta_d,
         phi_w,
         phisum,

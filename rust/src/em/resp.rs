@@ -28,6 +28,19 @@
 //! IEM, SEM's inherently dense responsibilities) the arena switches to a
 //! **dense layout** — direct-indexed K-wide lanes, i.e. exactly the old
 //! buffer — so one storage type serves all four trainer kernels.
+//!
+//! **Kernel backends.** [`SweepKernel`] carries a resolved
+//! [`KernelIsa`] tier (set through [`SweepKernel::set_backend`] from the
+//! `kernel_backend` config knob). The default `Scalar` tier runs the
+//! historical loops below verbatim — every bit-identity contract above
+//! holds unconditionally. The SIMD tiers (`em::simd`) run the same
+//! exclude–recompute–renormalize phases with vectorized loads and
+//! reassociated reductions: tolerance-class numerics, gated by the
+//! scalar-vs-SIMD equivalence tests below and the end-to-end perplexity
+//! bands. See `rust/DESIGN.md` §11.
+
+use crate::em::simd::{self, KernelBackend, KernelIsa};
+use crate::util::AlignedF32;
 
 /// Sentinel for an empty lane slot.
 pub const NO_TOPIC: u32 = u32::MAX;
@@ -60,8 +73,9 @@ pub struct RespArena {
     /// (`NO_TOPIC` = free; occupied slots are a prefix of the lane).
     topics: Vec<u32>,
     /// Weights: `n_entries * lane_cap` (sparse) or `n_entries * k`
-    /// (dense, direct-indexed — the historical layout).
-    weights: Vec<f32>,
+    /// (dense, direct-indexed — the historical layout). 32-byte aligned
+    /// for the SIMD tiers' row loads.
+    weights: AlignedF32,
     /// Sparse layout only: head of entry `e`'s spill chain.
     spill_head: Vec<u32>,
     spill_topics: Vec<u32>,
@@ -274,18 +288,41 @@ impl RespArena {
 pub struct SweepKernel {
     /// `mark[topic] = j + 1` when `sel[j] == topic`, else 0.
     mark: Vec<u32>,
-    /// Entry's current responsibility at each `sel` position.
-    mu_old: Vec<f32>,
+    /// Entry's current responsibility at each `sel` position (32-byte
+    /// aligned for the SIMD tiers).
+    mu_old: AlignedF32,
     /// Resolved storage slot per `sel` position (`NO_SLOT`, lane index,
     /// or `SPILL_BIT | spill index`).
     slot_of: Vec<u32>,
     /// Recomputed unnormalized responsibilities (the Eq. 13 numerators).
-    scratch_mu: Vec<f32>,
+    scratch_mu: AlignedF32,
+    /// Per-`sel` writeback deltas (SIMD include loop only).
+    delta: AlignedF32,
+    /// Resolved instruction tier; `Scalar` (the default) runs the
+    /// historical loops verbatim.
+    isa: KernelIsa,
+    /// Was the bracket's `sel` the identity `0..n`? Recomputed by
+    /// `begin_word` when a SIMD tier is active; enables the contiguous
+    /// no-gather fast path on the dense layout.
+    sel_identity: bool,
 }
 
 impl SweepKernel {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Select the kernel backend for subsequent sweeps. Pooled worker
+    /// scratch is grow-only and can carry a stale tier between runs, so
+    /// every scratch checkout re-sets this explicitly.
+    pub fn set_backend(&mut self, backend: KernelBackend) {
+        self.isa = backend.resolve();
+    }
+
+    /// The resolved instruction tier this kernel dispatches to.
+    #[inline]
+    pub fn isa(&self) -> KernelIsa {
+        self.isa
     }
 
     /// Scratch bytes currently committed (telemetry).
@@ -294,6 +331,7 @@ impl SweepKernel {
             + self.mu_old.len() * 4
             + self.slot_of.len() * 4
             + self.scratch_mu.len() * 4
+            + self.delta.len() * 4
     }
 
     #[inline]
@@ -302,6 +340,7 @@ impl SweepKernel {
             self.mu_old.resize(n_sel, 0.0);
             self.slot_of.resize(n_sel, NO_SLOT);
             self.scratch_mu.resize(n_sel, 0.0);
+            self.delta.resize(n_sel, 0.0);
         }
     }
 
@@ -315,6 +354,8 @@ impl SweepKernel {
         for (j, &kk) in sel.iter().enumerate() {
             self.mark[kk as usize] = j as u32 + 1;
         }
+        self.sel_identity = self.isa != KernelIsa::Scalar
+            && sel.iter().enumerate().all(|(j, &kk)| kk as usize == j);
     }
 
     /// Clear the selection mark (only the touched coordinates).
@@ -444,9 +485,10 @@ pub struct EntryOutcome {
 /// `delta_j = c·(new_j − mu[sel_j])` into `th`/`col`/`phisum` and
 /// `|delta_j|` into `fresh_res[j]`.
 ///
-/// For a sparse-layout arena this must run inside a [`sweep_word`]
-/// bracket (the selection mark is per word); the dense layout has no
-/// such requirement — IEM calls it entry-at-a-time.
+/// Must run inside a [`sweep_word`] / [`SweepKernel::begin_selection`]
+/// bracket: the bracket installs the sparse-layout selection mark *and*
+/// sizes the kernel scratch once per selection (the per-entry
+/// `ensure_sel` re-check was hoisted off this hottest path).
 #[allow(clippy::too_many_arguments)]
 #[inline]
 pub fn update_entry(
@@ -463,7 +505,10 @@ pub fn update_entry(
     wbm1: f32,
     fresh_res: &mut [f32],
 ) -> EntryOutcome {
-    kern.ensure_sel(sel.len());
+    debug_assert!(
+        kern.scratch_mu.len() >= sel.len(),
+        "update_entry outside a begin_selection/sweep_word bracket"
+    );
     if arena.is_dense() {
         update_entry_dense(arena, kern, e, sel, c, th, col, phisum, am1, bm1, wbm1, fresh_res)
     } else {
@@ -488,39 +533,127 @@ fn update_entry_dense(
     fresh_res: &mut [f32],
 ) -> EntryOutcome {
     let k = arena.k;
+    let isa = kern.isa;
     let row = &mut arena.weights[e * k..(e + 1) * k];
-    // Retained mass within the subset (Eq. 38).
-    let mut m_old = 0.0f32;
-    for &kk in sel {
-        m_old += row[kk as usize];
+    if isa == KernelIsa::Scalar {
+        // Reference scalar path — the bit-identity contract. Do not
+        // reorder these float ops.
+        let mut m_old = 0.0f32;
+        for &kk in sel {
+            m_old += row[kk as usize];
+        }
+        if m_old <= 1e-12 {
+            return EntryOutcome { m_old, z: 0.0, updated: false };
+        }
+        // Exclude + recompute on the subset (Eq. 13).
+        let mut z = 0.0f32;
+        for (j, &kk) in sel.iter().enumerate() {
+            let kk = kk as usize;
+            let excl = c * row[kk];
+            let u = (th[kk] - excl + am1) * (col[kk] - excl + bm1)
+                / (phisum[kk] - excl + wbm1);
+            kern.scratch_mu[j] = u.max(0.0);
+            z += kern.scratch_mu[j];
+        }
+        if z <= 0.0 {
+            return EntryOutcome { m_old, z, updated: false };
+        }
+        let renorm = m_old / z;
+        // Include new responsibilities + residuals (Fig. 4 lines 12-13).
+        for (j, &kk) in sel.iter().enumerate() {
+            let kk = kk as usize;
+            let new = kern.scratch_mu[j] * renorm;
+            let delta = c * (new - row[kk]);
+            th[kk] += delta;
+            col[kk] += delta;
+            phisum[kk] += delta;
+            fresh_res[j] += delta.abs();
+            row[kk] = new;
+        }
+        return EntryOutcome { m_old, z, updated: true };
     }
+
+    // SIMD-structured path: same three phases, vectorized primitives.
+    let n = sel.len();
+    if kern.sel_identity {
+        // Identity selection (TopicSubset::All): every operand loads
+        // contiguously — no gathers, no scatter loop.
+        let m_old = simd::sum(isa, &row[..n]);
+        if m_old <= 1e-12 {
+            return EntryOutcome { m_old, z: 0.0, updated: false };
+        }
+        let z = simd::recompute_u_contig(
+            isa,
+            &row[..n],
+            &th[..n],
+            &col[..n],
+            &phisum[..n],
+            c,
+            am1,
+            bm1,
+            wbm1,
+            true,
+            &mut kern.scratch_mu[..n],
+        );
+        if z <= 0.0 {
+            return EntryOutcome { m_old, z, updated: false };
+        }
+        let renorm = m_old / z;
+        simd::finalize_delta(
+            isa,
+            renorm,
+            c,
+            &row[..n],
+            &mut kern.scratch_mu[..n],
+            &mut kern.delta[..n],
+            fresh_res,
+        );
+        simd::add_assign(isa, &mut th[..n], &kern.delta[..n]);
+        simd::add_assign(isa, &mut col[..n], &kern.delta[..n]);
+        simd::add_assign(isa, &mut phisum[..n], &kern.delta[..n]);
+        row[..n].copy_from_slice(&kern.scratch_mu[..n]);
+        return EntryOutcome { m_old, z, updated: true };
+    }
+    simd::gather(isa, row, sel, &mut kern.mu_old[..n]);
+    let m_old = simd::sum(isa, &kern.mu_old[..n]);
     if m_old <= 1e-12 {
         return EntryOutcome { m_old, z: 0.0, updated: false };
     }
-    // Exclude + recompute on the subset (Eq. 13).
-    let mut z = 0.0f32;
-    for (j, &kk) in sel.iter().enumerate() {
-        let kk = kk as usize;
-        let excl = c * row[kk];
-        let u = (th[kk] - excl + am1) * (col[kk] - excl + bm1)
-            / (phisum[kk] - excl + wbm1);
-        kern.scratch_mu[j] = u.max(0.0);
-        z += kern.scratch_mu[j];
-    }
+    let z = simd::recompute_u(
+        isa,
+        sel,
+        &kern.mu_old[..n],
+        th,
+        col,
+        phisum,
+        c,
+        am1,
+        bm1,
+        wbm1,
+        true,
+        &mut kern.scratch_mu[..n],
+    );
     if z <= 0.0 {
         return EntryOutcome { m_old, z, updated: false };
     }
     let renorm = m_old / z;
-    // Include new responsibilities + residuals (Fig. 4 lines 12-13).
+    simd::finalize_delta(
+        isa,
+        renorm,
+        c,
+        &kern.mu_old[..n],
+        &mut kern.scratch_mu[..n],
+        &mut kern.delta[..n],
+        fresh_res,
+    );
+    // AVX2 has no f32 scatter; the subset writeback stays scalar.
     for (j, &kk) in sel.iter().enumerate() {
         let kk = kk as usize;
-        let new = kern.scratch_mu[j] * renorm;
-        let delta = c * (new - row[kk]);
-        th[kk] += delta;
-        col[kk] += delta;
-        phisum[kk] += delta;
-        fresh_res[j] += delta.abs();
-        row[kk] = new;
+        let d = kern.delta[j];
+        th[kk] += d;
+        col[kk] += d;
+        phisum[kk] += d;
+        row[kk] = kern.scratch_mu[j];
     }
     EntryOutcome { m_old, z, updated: true }
 }
@@ -544,41 +677,91 @@ fn update_entry_sparse(
     let n_sel = sel.len();
     debug_assert!(kern.mark.len() >= arena.k, "sparse update outside sweep_word");
     let (base, mut n_occ) = resolve_sparse(arena, kern, e, n_sel);
+    let isa = kern.isa;
 
-    // Retained mass within the subset (Eq. 38) — summed in `sel` order,
-    // matching the dense loop's float rounding exactly.
-    let mut m_old = 0.0f32;
-    for &m in &kern.mu_old[..n_sel] {
-        m_old += m;
+    if isa == KernelIsa::Scalar {
+        // Reference scalar path — the bit-identity contract.
+        // Retained mass within the subset (Eq. 38) — summed in `sel`
+        // order, matching the dense loop's float rounding exactly.
+        let mut m_old = 0.0f32;
+        for &m in &kern.mu_old[..n_sel] {
+            m_old += m;
+        }
+        if m_old <= 1e-12 {
+            return EntryOutcome { m_old, z: 0.0, updated: false };
+        }
+        // Exclude + recompute on the subset (Eq. 13).
+        let mut z = 0.0f32;
+        for (j, &kk) in sel.iter().enumerate() {
+            let kk = kk as usize;
+            let excl = c * kern.mu_old[j];
+            let u = (th[kk] - excl + am1) * (col[kk] - excl + bm1)
+                / (phisum[kk] - excl + wbm1);
+            kern.scratch_mu[j] = u.max(0.0);
+            z += kern.scratch_mu[j];
+        }
+        if z <= 0.0 {
+            return EntryOutcome { m_old, z, updated: false };
+        }
+        let renorm = m_old / z;
+        // Include new responsibilities + residuals (Fig. 4 lines 12-13).
+        for (j, &kk) in sel.iter().enumerate() {
+            let new = kern.scratch_mu[j] * renorm;
+            let delta = c * (new - kern.mu_old[j]);
+            let kk = kk as usize;
+            th[kk] += delta;
+            col[kk] += delta;
+            phisum[kk] += delta;
+            fresh_res[j] += delta.abs();
+            let slot = kern.slot_of[j];
+            store_resolved(arena, e, base, &mut n_occ, slot, kk, new);
+        }
+        return EntryOutcome { m_old, z, updated: true };
     }
+
+    // SIMD path: the lane/spill resolve above already densified the
+    // entry's subset view into `mu_old`; recompute vectorizes over it.
+    let m_old = simd::sum(isa, &kern.mu_old[..n_sel]);
     if m_old <= 1e-12 {
         return EntryOutcome { m_old, z: 0.0, updated: false };
     }
-    // Exclude + recompute on the subset (Eq. 13).
-    let mut z = 0.0f32;
-    for (j, &kk) in sel.iter().enumerate() {
-        let kk = kk as usize;
-        let excl = c * kern.mu_old[j];
-        let u = (th[kk] - excl + am1) * (col[kk] - excl + bm1)
-            / (phisum[kk] - excl + wbm1);
-        kern.scratch_mu[j] = u.max(0.0);
-        z += kern.scratch_mu[j];
-    }
+    let z = simd::recompute_u(
+        isa,
+        sel,
+        &kern.mu_old[..n_sel],
+        th,
+        col,
+        phisum,
+        c,
+        am1,
+        bm1,
+        wbm1,
+        true,
+        &mut kern.scratch_mu[..n_sel],
+    );
     if z <= 0.0 {
         return EntryOutcome { m_old, z, updated: false };
     }
     let renorm = m_old / z;
-    // Include new responsibilities + residuals (Fig. 4 lines 12-13).
+    simd::finalize_delta(
+        isa,
+        renorm,
+        c,
+        &kern.mu_old[..n_sel],
+        &mut kern.scratch_mu[..n_sel],
+        &mut kern.delta[..n_sel],
+        fresh_res,
+    );
+    // Slot-compressed writeback is inherently scalar (lane append /
+    // spill insert can reshape storage per element).
     for (j, &kk) in sel.iter().enumerate() {
-        let new = kern.scratch_mu[j] * renorm;
-        let delta = c * (new - kern.mu_old[j]);
         let kk = kk as usize;
-        th[kk] += delta;
-        col[kk] += delta;
-        phisum[kk] += delta;
-        fresh_res[j] += delta.abs();
+        let d = kern.delta[j];
+        th[kk] += d;
+        col[kk] += d;
+        phisum[kk] += d;
         let slot = kern.slot_of[j];
-        store_resolved(arena, e, base, &mut n_occ, slot, kk, new);
+        store_resolved(arena, e, base, &mut n_occ, slot, kk, kern.scratch_mu[j]);
     }
     EntryOutcome { m_old, z, updated: true }
 }
@@ -610,37 +793,121 @@ pub fn update_entry_theta(
     wbm1: f32,
     fresh_res: &mut [f32],
 ) -> EntryOutcome {
-    kern.ensure_sel(sel.len());
+    debug_assert!(
+        kern.scratch_mu.len() >= sel.len(),
+        "update_entry_theta outside a begin_selection bracket"
+    );
+    let isa = kern.isa;
     if arena.is_dense() {
         let k = arena.k;
         let row = &mut arena.weights[e * k..(e + 1) * k];
-        let mut m_old = 0.0f32;
-        for &kk in sel {
-            m_old += row[kk as usize];
+        if isa == KernelIsa::Scalar {
+            // Reference scalar path — the bit-identity contract.
+            let mut m_old = 0.0f32;
+            for &kk in sel {
+                m_old += row[kk as usize];
+            }
+            if m_old <= 1e-12 {
+                return EntryOutcome { m_old, z: 0.0, updated: false };
+            }
+            let mut z = 0.0f32;
+            for (j, &kk) in sel.iter().enumerate() {
+                let kk = kk as usize;
+                let excl = c * row[kk];
+                let u = (th[kk] - excl + am1) * (col[kk] + bm1)
+                    / (phisum[kk] + wbm1);
+                kern.scratch_mu[j] = u.max(0.0);
+                z += kern.scratch_mu[j];
+            }
+            if z <= 0.0 {
+                return EntryOutcome { m_old, z, updated: false };
+            }
+            let renorm = m_old / z;
+            for (j, &kk) in sel.iter().enumerate() {
+                let kk = kk as usize;
+                let new = kern.scratch_mu[j] * renorm;
+                let delta = c * (new - row[kk]);
+                th[kk] += delta;
+                fresh_res[j] += delta.abs();
+                row[kk] = new;
+            }
+            return EntryOutcome { m_old, z, updated: true };
         }
+
+        // SIMD path — `phi_excl: false` zeroes the phi-factor exclusion
+        // (exact: `x - 0.0 == x`), reproducing the frozen-phi formula.
+        let n = sel.len();
+        if kern.sel_identity {
+            let m_old = simd::sum(isa, &row[..n]);
+            if m_old <= 1e-12 {
+                return EntryOutcome { m_old, z: 0.0, updated: false };
+            }
+            let z = simd::recompute_u_contig(
+                isa,
+                &row[..n],
+                &th[..n],
+                &col[..n],
+                &phisum[..n],
+                c,
+                am1,
+                bm1,
+                wbm1,
+                false,
+                &mut kern.scratch_mu[..n],
+            );
+            if z <= 0.0 {
+                return EntryOutcome { m_old, z, updated: false };
+            }
+            let renorm = m_old / z;
+            simd::finalize_delta(
+                isa,
+                renorm,
+                c,
+                &row[..n],
+                &mut kern.scratch_mu[..n],
+                &mut kern.delta[..n],
+                fresh_res,
+            );
+            simd::add_assign(isa, &mut th[..n], &kern.delta[..n]);
+            row[..n].copy_from_slice(&kern.scratch_mu[..n]);
+            return EntryOutcome { m_old, z, updated: true };
+        }
+        simd::gather(isa, row, sel, &mut kern.mu_old[..n]);
+        let m_old = simd::sum(isa, &kern.mu_old[..n]);
         if m_old <= 1e-12 {
             return EntryOutcome { m_old, z: 0.0, updated: false };
         }
-        let mut z = 0.0f32;
-        for (j, &kk) in sel.iter().enumerate() {
-            let kk = kk as usize;
-            let excl = c * row[kk];
-            let u = (th[kk] - excl + am1) * (col[kk] + bm1)
-                / (phisum[kk] + wbm1);
-            kern.scratch_mu[j] = u.max(0.0);
-            z += kern.scratch_mu[j];
-        }
+        let z = simd::recompute_u(
+            isa,
+            sel,
+            &kern.mu_old[..n],
+            th,
+            col,
+            phisum,
+            c,
+            am1,
+            bm1,
+            wbm1,
+            false,
+            &mut kern.scratch_mu[..n],
+        );
         if z <= 0.0 {
             return EntryOutcome { m_old, z, updated: false };
         }
         let renorm = m_old / z;
+        simd::finalize_delta(
+            isa,
+            renorm,
+            c,
+            &kern.mu_old[..n],
+            &mut kern.scratch_mu[..n],
+            &mut kern.delta[..n],
+            fresh_res,
+        );
         for (j, &kk) in sel.iter().enumerate() {
             let kk = kk as usize;
-            let new = kern.scratch_mu[j] * renorm;
-            let delta = c * (new - row[kk]);
-            th[kk] += delta;
-            fresh_res[j] += delta.abs();
-            row[kk] = new;
+            th[kk] += kern.delta[j];
+            row[kk] = kern.scratch_mu[j];
         }
         return EntryOutcome { m_old, z, updated: true };
     }
@@ -651,33 +918,76 @@ pub fn update_entry_theta(
         "sparse theta update outside begin_selection"
     );
     let (base, mut n_occ) = resolve_sparse(arena, kern, e, n_sel);
-    let mut m_old = 0.0f32;
-    for &m in &kern.mu_old[..n_sel] {
-        m_old += m;
+    if isa == KernelIsa::Scalar {
+        // Reference scalar path — the bit-identity contract.
+        let mut m_old = 0.0f32;
+        for &m in &kern.mu_old[..n_sel] {
+            m_old += m;
+        }
+        if m_old <= 1e-12 {
+            return EntryOutcome { m_old, z: 0.0, updated: false };
+        }
+        let mut z = 0.0f32;
+        for (j, &kk) in sel.iter().enumerate() {
+            let kk = kk as usize;
+            let excl = c * kern.mu_old[j];
+            let u =
+                (th[kk] - excl + am1) * (col[kk] + bm1) / (phisum[kk] + wbm1);
+            kern.scratch_mu[j] = u.max(0.0);
+            z += kern.scratch_mu[j];
+        }
+        if z <= 0.0 {
+            return EntryOutcome { m_old, z, updated: false };
+        }
+        let renorm = m_old / z;
+        for (j, &kk) in sel.iter().enumerate() {
+            let new = kern.scratch_mu[j] * renorm;
+            let delta = c * (new - kern.mu_old[j]);
+            let kk = kk as usize;
+            th[kk] += delta;
+            fresh_res[j] += delta.abs();
+            store_resolved(arena, e, base, &mut n_occ, kern.slot_of[j], kk, new);
+        }
+        return EntryOutcome { m_old, z, updated: true };
     }
+
+    // SIMD path over the resolved subset view.
+    let m_old = simd::sum(isa, &kern.mu_old[..n_sel]);
     if m_old <= 1e-12 {
         return EntryOutcome { m_old, z: 0.0, updated: false };
     }
-    let mut z = 0.0f32;
-    for (j, &kk) in sel.iter().enumerate() {
-        let kk = kk as usize;
-        let excl = c * kern.mu_old[j];
-        let u =
-            (th[kk] - excl + am1) * (col[kk] + bm1) / (phisum[kk] + wbm1);
-        kern.scratch_mu[j] = u.max(0.0);
-        z += kern.scratch_mu[j];
-    }
+    let z = simd::recompute_u(
+        isa,
+        sel,
+        &kern.mu_old[..n_sel],
+        th,
+        col,
+        phisum,
+        c,
+        am1,
+        bm1,
+        wbm1,
+        false,
+        &mut kern.scratch_mu[..n_sel],
+    );
     if z <= 0.0 {
         return EntryOutcome { m_old, z, updated: false };
     }
     let renorm = m_old / z;
+    simd::finalize_delta(
+        isa,
+        renorm,
+        c,
+        &kern.mu_old[..n_sel],
+        &mut kern.scratch_mu[..n_sel],
+        &mut kern.delta[..n_sel],
+        fresh_res,
+    );
     for (j, &kk) in sel.iter().enumerate() {
-        let new = kern.scratch_mu[j] * renorm;
-        let delta = c * (new - kern.mu_old[j]);
         let kk = kk as usize;
-        th[kk] += delta;
-        fresh_res[j] += delta.abs();
-        store_resolved(arena, e, base, &mut n_occ, kern.slot_of[j], kk, new);
+        th[kk] += kern.delta[j];
+        let slot = kern.slot_of[j];
+        store_resolved(arena, e, base, &mut n_occ, slot, kk, kern.scratch_mu[j]);
     }
     EntryOutcome { m_old, z, updated: true }
 }
@@ -1074,5 +1384,310 @@ mod tests {
         // n >= len is the identity.
         top_n_indices(&vals, 6, &mut out);
         assert_eq!(out.len(), 6);
+    }
+
+    /// One small sweep under the given backend, over both the dense
+    /// layout and a spilling sparse layout, with a full (identity) and a
+    /// gathered selection — shared body for the blocking `backend_*` CI
+    /// smoke tests.
+    fn run_backend_smoke(backend: KernelBackend) {
+        let k = 24usize;
+        let n_entries = 9usize;
+        let mut rng = Rng::new(7);
+        for &lane_cap in &[24usize, 3] {
+            let mut a = RespArena::new();
+            a.reset(k, n_entries, lane_cap);
+            let mut kern = SweepKernel::new();
+            kern.set_backend(backend);
+            let mut th: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 4.0).collect();
+            let mut col: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 2.0).collect();
+            let mut ps: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 50.0 + 1.0).collect();
+            for e in 0..n_entries {
+                a.set_one_hot(e, rng.below(k));
+            }
+            let counts: Vec<f32> =
+                (0..n_entries).map(|e| (e % 3 + 1) as f32).collect();
+            let docs: Vec<u32> = vec![0; n_entries];
+            let sel_all: Vec<u32> = (0..k as u32).collect();
+            let mut sel6: Vec<u32> = Vec::new();
+            while sel6.len() < 6 {
+                let cand = rng.below(k) as u32;
+                if !sel6.contains(&cand) {
+                    sel6.push(cand);
+                }
+            }
+            for sel in [&sel_all[..], &sel6[..]] {
+                let mut fr = vec![0.0f32; sel.len()];
+                sweep_word(
+                    &mut a, &mut kern, sel, 0, &docs, &counts, &mut th,
+                    &mut col, &mut ps, 0.01, 0.01, 0.32, &mut fr,
+                );
+                for v in th.iter().chain(col.iter()).chain(ps.iter()) {
+                    assert!(v.is_finite(), "non-finite stat under {backend:?}");
+                }
+                for &r in &fr {
+                    assert!(r.is_finite() && r >= 0.0);
+                }
+            }
+            // Renormalization preserves each entry's responsibility mass.
+            for e in 0..n_entries {
+                let mass: f32 = (0..k).map(|t| a.get(e, t)).sum();
+                assert!(
+                    (mass - 1.0).abs() < 1e-4,
+                    "entry {e} mass {mass} under {backend:?} cap={lane_cap}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backend_scalar_smoke() {
+        run_backend_smoke(KernelBackend::Scalar);
+    }
+
+    #[test]
+    fn backend_simd_smoke() {
+        run_backend_smoke(KernelBackend::Simd);
+    }
+
+    #[test]
+    fn backend_auto_smoke() {
+        run_backend_smoke(KernelBackend::Auto);
+    }
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-5 + 1e-4 * a.abs().max(b.abs())
+    }
+
+    /// Scalar-vs-SIMD equivalence on the training kernel over random
+    /// (K, sel, lane_cap, spill) configurations: tolerance-class outputs
+    /// on every mutated buffer, and the degenerate-skip guards
+    /// (`m_old ≤ 1e-12`, `z ≤ 0`) taken identically in both backends.
+    /// On AVX2 hosts this exercises the vector tiers; elsewhere the
+    /// portable 4-lane tier — both must agree with the scalar reference.
+    #[test]
+    fn simd_training_kernel_matches_scalar_within_tolerance() {
+        let mut rng = Rng::new(1234);
+        for &(k, n_sel, lane_cap) in &[
+            (8usize, 8usize, 8usize), // dense, identity sel, one full vector
+            (32, 32, 32),             // dense, identity sel
+            (33, 33, 33),             // dense, identity sel, odd tail
+            (64, 10, 64),             // dense, gathered subset
+            (32, 10, 4),              // sparse lanes + spill
+            (48, 12, 2),              // heavy spill
+        ] {
+            let n_entries = 10usize;
+            let mut a_s = RespArena::new();
+            a_s.reset(k, n_entries, lane_cap);
+            let mut a_v = RespArena::new();
+            a_v.reset(k, n_entries, lane_cap);
+            let mut ks = SweepKernel::new();
+            let mut kv = SweepKernel::new();
+            kv.set_backend(KernelBackend::Simd);
+
+            let mut th_s: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 4.0).collect();
+            let mut col_s: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 2.0).collect();
+            let mut ps_s: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 50.0 + 1.0).collect();
+            let mut th_v = th_s.clone();
+            let mut col_v = col_s.clone();
+            let mut ps_v = ps_s.clone();
+
+            let sel: Vec<u32> = if n_sel >= k {
+                (0..k as u32).collect()
+            } else {
+                let mut s = Vec::new();
+                while s.len() < n_sel {
+                    let cand = rng.below(k) as u32;
+                    if !s.contains(&cand) {
+                        s.push(cand);
+                    }
+                }
+                s
+            };
+            for e in 0..n_entries {
+                // Entry 0 gets an engineered zero on `sel` when the
+                // subset is proper: its one-hot topic lies outside, so
+                // the m_old guard must trip in BOTH backends.
+                let t = if e == 0 && n_sel < k {
+                    (0..k).find(|t| !sel.contains(&(*t as u32))).unwrap()
+                } else {
+                    rng.below(k)
+                };
+                a_s.set_one_hot(e, t);
+                a_v.set_one_hot(e, t);
+            }
+
+            for round in 0..3 {
+                let mut fr_s = vec![0.0f32; sel.len()];
+                let mut fr_v = vec![0.0f32; sel.len()];
+                ks.begin_selection(k, &sel);
+                kv.begin_selection(k, &sel);
+                for e in 0..n_entries {
+                    let c = (e % 3 + 1) as f32;
+                    let out_s = update_entry(
+                        &mut a_s, &mut ks, e, &sel, c, &mut th_s,
+                        &mut col_s, &mut ps_s, 0.01, 0.01, 0.32, &mut fr_s,
+                    );
+                    let out_v = update_entry(
+                        &mut a_v, &mut kv, e, &sel, c, &mut th_v,
+                        &mut col_v, &mut ps_v, 0.01, 0.01, 0.32, &mut fr_v,
+                    );
+                    assert_eq!(
+                        out_s.updated, out_v.updated,
+                        "guard divergence (k={k} e={e} round={round})"
+                    );
+                    assert!(close(out_s.m_old, out_v.m_old));
+                }
+                ks.end_selection(&sel);
+                kv.end_selection(&sel);
+                for i in 0..k {
+                    assert!(
+                        close(th_s[i], th_v[i]),
+                        "theta (k={k} cap={lane_cap} i={i}): {} vs {}",
+                        th_s[i],
+                        th_v[i]
+                    );
+                    assert!(close(col_s[i], col_v[i]));
+                    assert!(close(ps_s[i], ps_v[i]));
+                }
+                for j in 0..sel.len() {
+                    assert!(close(fr_s[j], fr_v[j]));
+                }
+                for e in 0..n_entries {
+                    for t in 0..k {
+                        assert!(
+                            close(a_s.get(e, t), a_v.get(e, t)),
+                            "mu (k={k} cap={lane_cap} e={e} t={t})"
+                        );
+                    }
+                }
+            }
+            if lane_cap == 2 {
+                assert!(a_v.spill_len() > 0, "spill path never exercised");
+            }
+        }
+    }
+
+    /// Same equivalence for the fold-in (theta-only) kernel variant —
+    /// and phi stays frozen under both backends.
+    #[test]
+    fn simd_theta_kernel_matches_scalar_within_tolerance() {
+        let mut rng = Rng::new(99);
+        for &(k, n_sel, lane_cap) in &[
+            (24usize, 24usize, 24usize), // dense, identity sel
+            (40, 9, 40),                 // dense, gathered subset
+            (32, 8, 3),                  // sparse lanes + spill
+        ] {
+            let n_entries = 8usize;
+            let mut a_s = RespArena::new();
+            a_s.reset(k, n_entries, lane_cap);
+            let mut a_v = RespArena::new();
+            a_v.reset(k, n_entries, lane_cap);
+            let mut ks = SweepKernel::new();
+            let mut kv = SweepKernel::new();
+            kv.set_backend(KernelBackend::Simd);
+
+            let mut th_s: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 4.0).collect();
+            let mut th_v = th_s.clone();
+            let col: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 2.0 + 0.1).collect();
+            let phisum: Vec<f32> =
+                (0..k).map(|_| rng.next_f32() * 50.0 + 1.0).collect();
+            let (col0, ps0) = (col.clone(), phisum.clone());
+
+            let sel: Vec<u32> = if n_sel >= k {
+                (0..k as u32).collect()
+            } else {
+                let mut s = Vec::new();
+                while s.len() < n_sel {
+                    let cand = rng.below(k) as u32;
+                    if !s.contains(&cand) {
+                        s.push(cand);
+                    }
+                }
+                s
+            };
+            for e in 0..n_entries {
+                let t = rng.below(k);
+                a_s.set_one_hot(e, t);
+                a_v.set_one_hot(e, t);
+            }
+
+            for _round in 0..3 {
+                let mut fr_s = vec![0.0f32; sel.len()];
+                let mut fr_v = vec![0.0f32; sel.len()];
+                ks.begin_selection(k, &sel);
+                kv.begin_selection(k, &sel);
+                for e in 0..n_entries {
+                    let c = (e % 2 + 1) as f32;
+                    let out_s = update_entry_theta(
+                        &mut a_s, &mut ks, e, &sel, c, &mut th_s, &col,
+                        &phisum, 0.01, 0.01, 0.32, &mut fr_s,
+                    );
+                    let out_v = update_entry_theta(
+                        &mut a_v, &mut kv, e, &sel, c, &mut th_v, &col,
+                        &phisum, 0.01, 0.01, 0.32, &mut fr_v,
+                    );
+                    assert_eq!(out_s.updated, out_v.updated);
+                }
+                ks.end_selection(&sel);
+                kv.end_selection(&sel);
+                for i in 0..k {
+                    assert!(close(th_s[i], th_v[i]));
+                }
+                for j in 0..sel.len() {
+                    assert!(close(fr_s[j], fr_v[j]));
+                }
+                for e in 0..n_entries {
+                    for t in 0..k {
+                        assert!(close(a_s.get(e, t), a_v.get(e, t)));
+                    }
+                }
+            }
+            assert_eq!(col, col0, "theta kernel mutated phi column");
+            assert_eq!(phisum, ps0, "theta kernel mutated phisum");
+        }
+    }
+
+    /// Satellite contract: arena weight lanes and every kernel scratch
+    /// buffer stay 32-byte aligned through reset, regrow, spill, and
+    /// selection growth.
+    #[test]
+    fn arena_and_kernel_scratch_stay_32_byte_aligned() {
+        let mut a = RespArena::new();
+        a.reset(64, 100, 64);
+        assert_eq!(a.weights.as_ptr() as usize % 32, 0);
+        // Sparse regrow, then force lane appends + spill inserts.
+        a.reset(512, 300, 2);
+        assert_eq!(a.weights.as_ptr() as usize % 32, 0);
+        for e in 0..300 {
+            for t in 0..4 {
+                a.set(e, t * 7, 0.25);
+            }
+        }
+        assert!(a.spill_len() > 0);
+        assert_eq!(a.weights.as_ptr() as usize % 32, 0);
+
+        let mut kern = SweepKernel::new();
+        let sel: Vec<u32> = (0..7u32).collect();
+        kern.begin_selection(512, &sel);
+        assert_eq!(kern.mu_old.as_ptr() as usize % 32, 0);
+        assert_eq!(kern.scratch_mu.as_ptr() as usize % 32, 0);
+        assert_eq!(kern.delta.as_ptr() as usize % 32, 0);
+        kern.end_selection(&sel);
+        // Scratch growth across a much larger selection.
+        let sel2: Vec<u32> = (0..500u32).collect();
+        kern.begin_selection(512, &sel2);
+        assert_eq!(kern.mu_old.as_ptr() as usize % 32, 0);
+        assert_eq!(kern.scratch_mu.as_ptr() as usize % 32, 0);
+        assert_eq!(kern.delta.as_ptr() as usize % 32, 0);
+        kern.end_selection(&sel2);
     }
 }

@@ -62,6 +62,10 @@ pub struct SemConfig {
     /// sufficient statistics are folded in with a fixed merge order.
     /// `1` = the exact serial path.
     pub n_workers: usize,
+    /// E-step kernel backend ([`crate::em::simd::KernelBackend`]):
+    /// `Scalar` is the bit-identity reference; the SIMD tiers are
+    /// tolerance-class equivalents.
+    pub kernel_backend: crate::em::simd::KernelBackend,
 }
 
 impl SemConfig {
@@ -73,6 +77,7 @@ impl SemConfig {
             check_every: 1,
             max_inner_iters: 100,
             n_workers: 1,
+            kernel_backend: crate::em::simd::KernelBackend::Scalar,
         }
     }
 }
@@ -181,6 +186,8 @@ impl Sem {
         let am1 = self.params.am1();
         let bm1 = self.params.bm1();
         let wbm1 = self.params.wbm1(w_dim);
+        // Resolve the kernel tier once per minibatch, not per token.
+        let isa = self.cfg.kernel_backend.resolve();
         let mut check =
             ConvergenceCheck::new(self.cfg.threshold, self.cfg.check_every,
                                   self.cfg.max_inner_iters);
@@ -205,7 +212,8 @@ impl Sem {
                 for (w, c) in docs.iter_doc(d) {
                     let w = w as usize;
                     let mu_row = mu.lane_dense_mut(e);
-                    let z = super::estep_unnormalized(
+                    let z = super::estep_unnormalized_isa(
+                        isa,
                         theta_d,
                         self.phi.word(w),
                         &self.phi.phisum,
@@ -539,6 +547,8 @@ fn run_sem_shard(
     let bm1 = params.bm1();
     let wbm1 = params.wbm1(w_dim);
     let kam1 = k as f32 * am1;
+    // Resolve the kernel tier once per shard, not per token.
+    let isa = cfg.kernel_backend.resolve();
     let mut check =
         ConvergenceCheck::new(cfg.threshold, cfg.check_every, cfg.max_inner_iters);
     let mut iters = 0usize;
@@ -556,7 +566,8 @@ fn run_sem_shard(
             for (_w, c) in docs.iter_doc(d) {
                 let lw = entry_slot[e] as usize;
                 let mu_row = mu.lane_dense_mut(e);
-                let z = super::estep_unnormalized(
+                let z = super::estep_unnormalized_isa(
+                    isa,
                     theta_d,
                     &lphi[lw * k..(lw + 1) * k],
                     &lphisum,

@@ -1,0 +1,931 @@
+//! Runtime-dispatched SIMD primitives for the shared E-step kernel.
+//!
+//! The paper's speed argument (§3, Fig. 4) rests on the per-token
+//! exclude–recompute–renormalize update being cheap; PR 3 collapsed all
+//! trainer/fold-in/serve paths onto one copy of that Eq. 13/38 loop in
+//! [`crate::em::resp`]. This module vectorizes its three hot phases —
+//! subset gather + `m_old` reduction, the exclude/recompute `u_j` loop,
+//! and the include/renormalize writeback — as slice-level primitives
+//! dispatched over a [`KernelIsa`] tier resolved once at startup:
+//!
+//! * **`Scalar`** — never reaches this module. The callers in
+//!   `em::resp` keep the historical scalar loops verbatim, preserving
+//!   the bit-identity contracts (`dense_ref`, sparse-vs-dense tests).
+//! * **`Portable`** — 4-lane-unrolled scalar with split accumulators.
+//!   Same element-wise float ops as `Scalar`; only the *reduction order*
+//!   of `m_old`/`z` differs (tolerance-class reassociation). Selected
+//!   when [`KernelBackend::Simd`] is forced on a host without AVX2.
+//! * **`Avx2`** — explicit `std::arch` AVX2+FMA: 8-wide gathers for the
+//!   scheduled-subset loads, fused `(th−excl+am1)(col−excl+bm1)/(…)`
+//!   via `fnmadd`, `max_ps` clamping, and a tree horizontal sum.
+//!   Requires runtime `avx2` **and** `fma` detection (checked once,
+//!   cached); the stable toolchain compiles it on every x86-64 because
+//!   the intrinsics are gated per-function with `#[target_feature]`,
+//!   not per-crate with `-C target-cpu`.
+//!
+//! One flag (`phi_excl`) serves both kernel variants: the training
+//! update excludes the entry's own mass from `col`/`phisum`, the
+//! fold-in theta-only update does not. Because `x - 0.0 == x` exactly
+//! for every finite `f32`, passing a zero exclusion coefficient for the
+//! phi factors reproduces the theta-variant formula bit-for-bit in the
+//! scalar tiers, so one code path covers Eq. 13 and the frozen-phi
+//! Eq. 38 fold-in without a second kernel.
+//!
+//! The backend seam ([`KernelBackend`] on `RunConfig` → `SweepKernel`)
+//! is deliberately the same seam ROADMAP item 3 earmarks for a future
+//! `pjrt`/XLA `compute_batch` offload: anything that can service the
+//! three primitive phases can be slotted in behind the same enum.
+
+use std::sync::OnceLock;
+
+/// User-facing kernel-backend knob (`--kernel-backend`, config key
+/// `kernel_backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelBackend {
+    /// The reference scalar kernel — bit-identical to the historical
+    /// dense loops; the determinism anchor for all `dense_ref` tests.
+    #[default]
+    Scalar,
+    /// Force SIMD: AVX2+FMA when the host has it, else the portable
+    /// unrolled tier. Tolerance-class numerics (reductions reassociate).
+    Simd,
+    /// AVX2+FMA when detected, otherwise fall back to `Scalar` so the
+    /// default numerics stay deterministic on unknown hardware.
+    Auto,
+}
+
+impl KernelBackend {
+    /// Parse a CLI/config value (`scalar` | `simd` | `auto`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        for b in Self::all() {
+            if s == b.name() {
+                return Ok(b);
+            }
+        }
+        anyhow::bail!("unknown kernel backend {s:?} (scalar|simd|auto)")
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Simd => "simd",
+            KernelBackend::Auto => "auto",
+        }
+    }
+
+    pub fn all() -> [KernelBackend; 3] {
+        [KernelBackend::Scalar, KernelBackend::Simd, KernelBackend::Auto]
+    }
+
+    /// Resolve the knob to a concrete instruction tier (detection runs
+    /// once per process and is cached).
+    pub fn resolve(self) -> KernelIsa {
+        match self {
+            KernelBackend::Scalar => KernelIsa::Scalar,
+            KernelBackend::Simd => {
+                if avx2_available() {
+                    KernelIsa::Avx2
+                } else {
+                    KernelIsa::Portable
+                }
+            }
+            KernelBackend::Auto => {
+                if avx2_available() {
+                    KernelIsa::Avx2
+                } else {
+                    KernelIsa::Scalar
+                }
+            }
+        }
+    }
+}
+
+/// Concrete instruction tier a [`KernelBackend`] resolves to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelIsa {
+    /// Reference scalar loops (handled by the callers, not here).
+    #[default]
+    Scalar,
+    /// 4-lane-unrolled scalar with split reduction accumulators.
+    Portable,
+    /// 8-wide AVX2 + FMA (`x86_64` with runtime `avx2`+`fma`).
+    Avx2,
+}
+
+impl KernelIsa {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Portable => "portable",
+            KernelIsa::Avx2 => "avx2",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_avx2() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_avx2() -> bool {
+    false
+}
+
+/// Does this host support the AVX2+FMA tier? Detected once, cached.
+pub fn avx2_available() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(detect_avx2)
+}
+
+/// One element of the unified exclude/recompute: `c` excludes from the
+/// theta factor, `c_phi` from the phi factors (`0.0` for the fold-in
+/// theta-only variant — `x - 0.0 == x` exactly, so the formula
+/// degenerates to the frozen-phi Eq. 38 form bit-for-bit).
+#[inline(always)]
+fn recompute_one(
+    mu: f32,
+    th: f32,
+    col: f32,
+    ps: f32,
+    c: f32,
+    c_phi: f32,
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+) -> f32 {
+    let excl_t = c * mu;
+    let excl_p = c_phi * mu;
+    let u = (th - excl_t + am1) * (col - excl_p + bm1) / (ps - excl_p + wbm1);
+    u.max(0.0)
+}
+
+/// `dst[j] = src[sel[j]]` — the subset gather. Exact in every tier.
+pub fn gather(isa: KernelIsa, src: &[f32], sel: &[u32], dst: &mut [f32]) {
+    debug_assert_eq!(sel.len(), dst.len());
+    match isa {
+        KernelIsa::Avx2 => gather_avx2(src, sel, dst),
+        _ => {
+            for (d, &kk) in dst.iter_mut().zip(sel) {
+                *d = src[kk as usize];
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn gather_avx2(src: &[f32], sel: &[u32], dst: &mut [f32]) {
+    // SAFETY: Avx2 is only resolved after runtime avx2+fma detection.
+    unsafe { avx2::gather(src, sel, dst) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn gather_avx2(src: &[f32], sel: &[u32], dst: &mut [f32]) {
+    for (d, &kk) in dst.iter_mut().zip(sel) {
+        *d = src[kk as usize];
+    }
+}
+
+/// Σ `xs` — the `m_old` reduction. `Scalar` keeps the sequential order;
+/// the SIMD tiers reassociate (tolerance-class).
+pub fn sum(isa: KernelIsa, xs: &[f32]) -> f32 {
+    match isa {
+        KernelIsa::Scalar => xs.iter().sum(),
+        KernelIsa::Portable => sum_portable(xs),
+        KernelIsa::Avx2 => sum_avx2(xs),
+    }
+}
+
+fn sum_portable(xs: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let mut it = xs.chunks_exact(4);
+    for ch in it.by_ref() {
+        acc[0] += ch[0];
+        acc[1] += ch[1];
+        acc[2] += ch[2];
+        acc[3] += ch[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for &x in it.remainder() {
+        s += x;
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn sum_avx2(xs: &[f32]) -> f32 {
+    // SAFETY: Avx2 is only resolved after runtime avx2+fma detection.
+    unsafe { avx2::sum(xs) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn sum_avx2(xs: &[f32]) -> f32 {
+    sum_portable(xs)
+}
+
+/// The exclude/recompute loop over a gathered subset: for each `j`,
+/// `u_out[j] = max(0, (th[sel_j]−c·mu_j+am1)(col[sel_j]−c_phi·mu_j+bm1)
+/// / (phisum[sel_j]−c_phi·mu_j+wbm1))` with `c_phi = c` when `phi_excl`
+/// else `0.0`; returns `z = Σ u_out`.
+#[allow(clippy::too_many_arguments)]
+pub fn recompute_u(
+    isa: KernelIsa,
+    sel: &[u32],
+    mu_old: &[f32],
+    th: &[f32],
+    col: &[f32],
+    phisum: &[f32],
+    c: f32,
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    phi_excl: bool,
+    u_out: &mut [f32],
+) -> f32 {
+    debug_assert_eq!(sel.len(), u_out.len());
+    let c_phi = if phi_excl { c } else { 0.0 };
+    if isa == KernelIsa::Avx2 {
+        return recompute_u_avx2(sel, mu_old, th, col, phisum, c, c_phi, am1, bm1, wbm1, u_out);
+    }
+    for (j, &kk) in sel.iter().enumerate() {
+        let kk = kk as usize;
+        u_out[j] = recompute_one(mu_old[j], th[kk], col[kk], phisum[kk], c, c_phi, am1, bm1, wbm1);
+    }
+    sum(isa, u_out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn recompute_u_avx2(
+    sel: &[u32],
+    mu_old: &[f32],
+    th: &[f32],
+    col: &[f32],
+    phisum: &[f32],
+    c: f32,
+    c_phi: f32,
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    u_out: &mut [f32],
+) -> f32 {
+    // SAFETY: Avx2 is only resolved after runtime avx2+fma detection;
+    // sel indices are checked against the operand lengths in debug.
+    unsafe {
+        avx2::recompute_u_gather(sel, mu_old, th, col, phisum, c, c_phi, am1, bm1, wbm1, u_out)
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn recompute_u_avx2(
+    sel: &[u32],
+    mu_old: &[f32],
+    th: &[f32],
+    col: &[f32],
+    phisum: &[f32],
+    c: f32,
+    c_phi: f32,
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    u_out: &mut [f32],
+) -> f32 {
+    for (j, &kk) in sel.iter().enumerate() {
+        let kk = kk as usize;
+        u_out[j] = recompute_one(mu_old[j], th[kk], col[kk], phisum[kk], c, c_phi, am1, bm1, wbm1);
+    }
+    sum_portable(u_out)
+}
+
+/// [`recompute_u`] for the identity selection (`sel[j] == j`, the dense
+/// `TopicSubset::All` sweep): all operands load contiguously — no
+/// gathers — which is where the ≥1.5× dense-layout win comes from.
+#[allow(clippy::too_many_arguments)]
+pub fn recompute_u_contig(
+    isa: KernelIsa,
+    mu_old: &[f32],
+    th: &[f32],
+    col: &[f32],
+    phisum: &[f32],
+    c: f32,
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    phi_excl: bool,
+    u_out: &mut [f32],
+) -> f32 {
+    let n = u_out.len();
+    debug_assert!(mu_old.len() >= n && th.len() >= n && col.len() >= n && phisum.len() >= n);
+    let c_phi = if phi_excl { c } else { 0.0 };
+    if isa == KernelIsa::Avx2 {
+        return recompute_u_contig_avx2(mu_old, th, col, phisum, c, c_phi, am1, bm1, wbm1, u_out);
+    }
+    for j in 0..n {
+        u_out[j] = recompute_one(mu_old[j], th[j], col[j], phisum[j], c, c_phi, am1, bm1, wbm1);
+    }
+    sum(isa, u_out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn recompute_u_contig_avx2(
+    mu_old: &[f32],
+    th: &[f32],
+    col: &[f32],
+    phisum: &[f32],
+    c: f32,
+    c_phi: f32,
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    u_out: &mut [f32],
+) -> f32 {
+    // SAFETY: Avx2 is only resolved after runtime avx2+fma detection.
+    unsafe { avx2::recompute_u_contig(mu_old, th, col, phisum, c, c_phi, am1, bm1, wbm1, u_out) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn recompute_u_contig_avx2(
+    mu_old: &[f32],
+    th: &[f32],
+    col: &[f32],
+    phisum: &[f32],
+    c: f32,
+    c_phi: f32,
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    u_out: &mut [f32],
+) -> f32 {
+    for (j, u) in u_out.iter_mut().enumerate() {
+        *u = recompute_one(mu_old[j], th[j], col[j], phisum[j], c, c_phi, am1, bm1, wbm1);
+    }
+    sum_portable(u_out)
+}
+
+/// The include/renormalize step: `u[j] ← u[j]·renorm` (the new
+/// responsibility), `delta[j] = c·(new − mu_old[j])`, and
+/// `fresh_res[j] += |delta[j]|` (the residual accumulation feeding the
+/// scheduler).
+#[allow(clippy::too_many_arguments)]
+pub fn finalize_delta(
+    isa: KernelIsa,
+    renorm: f32,
+    c: f32,
+    mu_old: &[f32],
+    u: &mut [f32],
+    delta: &mut [f32],
+    fresh_res: &mut [f32],
+) {
+    let n = u.len();
+    debug_assert!(mu_old.len() >= n && delta.len() >= n && fresh_res.len() >= n);
+    if isa == KernelIsa::Avx2 {
+        finalize_delta_avx2(renorm, c, mu_old, u, delta, fresh_res);
+        return;
+    }
+    for j in 0..n {
+        let new = u[j] * renorm;
+        let d = c * (new - mu_old[j]);
+        u[j] = new;
+        delta[j] = d;
+        fresh_res[j] += d.abs();
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn finalize_delta_avx2(
+    renorm: f32,
+    c: f32,
+    mu_old: &[f32],
+    u: &mut [f32],
+    delta: &mut [f32],
+    fresh_res: &mut [f32],
+) {
+    // SAFETY: Avx2 is only resolved after runtime avx2+fma detection.
+    unsafe { avx2::finalize_delta(renorm, c, mu_old, u, delta, fresh_res) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn finalize_delta_avx2(
+    renorm: f32,
+    c: f32,
+    mu_old: &[f32],
+    u: &mut [f32],
+    delta: &mut [f32],
+    fresh_res: &mut [f32],
+) {
+    for (j, x) in u.iter_mut().enumerate() {
+        let new = *x * renorm;
+        let d = c * (new - mu_old[j]);
+        *x = new;
+        delta[j] = d;
+        fresh_res[j] += d.abs();
+    }
+}
+
+/// `dst[i] += src[i]` — the contiguous scatter-add of the identity
+/// selection's writeback.
+pub fn add_assign(isa: KernelIsa, dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    if isa == KernelIsa::Avx2 {
+        add_assign_avx2(dst, src);
+        return;
+    }
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn add_assign_avx2(dst: &mut [f32], src: &[f32]) {
+    // SAFETY: Avx2 is only resolved after runtime avx2+fma detection.
+    unsafe { avx2::add_assign(dst, src) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn add_assign_avx2(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// The dense Eq. 11 E-step numerator (`em::estep_unnormalized` with an
+/// explicit tier): `mu[i] = (th[i]+am1)(phi[i]+bm1)/(phisum[i]+wbm1)`,
+/// returning `z = Σ mu`. Used by SEM's minibatch E-step and the dense
+/// fold-in path.
+#[allow(clippy::too_many_arguments)]
+pub fn estep_unnorm(
+    isa: KernelIsa,
+    theta_d: &[f32],
+    phi_w: &[f32],
+    phisum: &[f32],
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    mu: &mut [f32],
+) -> f32 {
+    let n = mu.len();
+    debug_assert!(theta_d.len() >= n && phi_w.len() >= n && phisum.len() >= n);
+    if isa == KernelIsa::Avx2 {
+        return estep_unnorm_avx2(theta_d, phi_w, phisum, am1, bm1, wbm1, mu);
+    }
+    for (i, m) in mu.iter_mut().enumerate() {
+        *m = (theta_d[i] + am1) * (phi_w[i] + bm1) / (phisum[i] + wbm1);
+    }
+    sum(isa, mu)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn estep_unnorm_avx2(
+    theta_d: &[f32],
+    phi_w: &[f32],
+    phisum: &[f32],
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    mu: &mut [f32],
+) -> f32 {
+    // SAFETY: Avx2 is only resolved after runtime avx2+fma detection.
+    unsafe { avx2::estep_unnorm(theta_d, phi_w, phisum, am1, bm1, wbm1, mu) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn estep_unnorm_avx2(
+    theta_d: &[f32],
+    phi_w: &[f32],
+    phisum: &[f32],
+    am1: f32,
+    bm1: f32,
+    wbm1: f32,
+    mu: &mut [f32],
+) -> f32 {
+    for (i, m) in mu.iter_mut().enumerate() {
+        *m = (theta_d[i] + am1) * (phi_w[i] + bm1) / (phisum[i] + wbm1);
+    }
+    sum_portable(mu)
+}
+
+/// The explicit AVX2+FMA tier. Every function is compiled with
+/// `#[target_feature]` on every x86-64 build (stable toolchain, no
+/// `-C target-cpu` needed) and must only be *called* after
+/// [`avx2_available`] returned true — which [`KernelBackend::resolve`]
+/// guarantees before ever producing [`KernelIsa::Avx2`].
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::recompute_one;
+    use std::arch::x86_64::*;
+
+    /// Tree-reduce the 8 lanes of `v`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let lo = _mm256_castps256_ps128(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+        _mm_cvtss_f32(s)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn sum(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(xs.as_ptr().add(i)));
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += xs[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gather(src: &[f32], sel: &[u32], dst: &mut [f32]) {
+        let n = sel.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let idx = _mm256_loadu_si256(sel.as_ptr().add(i) as *const __m256i);
+            let v = _mm256_i32gather_ps::<4>(src.as_ptr(), idx);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), v);
+            i += 8;
+        }
+        while i < n {
+            dst[i] = src[sel[i] as usize];
+            i += 1;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn recompute_u_gather(
+        sel: &[u32],
+        mu_old: &[f32],
+        th: &[f32],
+        col: &[f32],
+        phisum: &[f32],
+        c: f32,
+        c_phi: f32,
+        am1: f32,
+        bm1: f32,
+        wbm1: f32,
+        u_out: &mut [f32],
+    ) -> f32 {
+        let n = sel.len();
+        let cv = _mm256_set1_ps(c);
+        let cpv = _mm256_set1_ps(c_phi);
+        let am1v = _mm256_set1_ps(am1);
+        let bm1v = _mm256_set1_ps(bm1);
+        let wbm1v = _mm256_set1_ps(wbm1);
+        let zero = _mm256_setzero_ps();
+        let mut zacc = zero;
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let idx = _mm256_loadu_si256(sel.as_ptr().add(i) as *const __m256i);
+            let mu = _mm256_loadu_ps(mu_old.as_ptr().add(i));
+            let thv = _mm256_i32gather_ps::<4>(th.as_ptr(), idx);
+            let colv = _mm256_i32gather_ps::<4>(col.as_ptr(), idx);
+            let psv = _mm256_i32gather_ps::<4>(phisum.as_ptr(), idx);
+            let num1 = _mm256_fnmadd_ps(cv, mu, _mm256_add_ps(thv, am1v));
+            let num2 = _mm256_fnmadd_ps(cpv, mu, _mm256_add_ps(colv, bm1v));
+            let den = _mm256_fnmadd_ps(cpv, mu, _mm256_add_ps(psv, wbm1v));
+            let u = _mm256_max_ps(_mm256_div_ps(_mm256_mul_ps(num1, num2), den), zero);
+            _mm256_storeu_ps(u_out.as_mut_ptr().add(i), u);
+            zacc = _mm256_add_ps(zacc, u);
+            i += 8;
+        }
+        let mut z = hsum(zacc);
+        while i < n {
+            let kk = sel[i] as usize;
+            let u = recompute_one(mu_old[i], th[kk], col[kk], phisum[kk], c, c_phi, am1, bm1, wbm1);
+            u_out[i] = u;
+            z += u;
+            i += 1;
+        }
+        z
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn recompute_u_contig(
+        mu_old: &[f32],
+        th: &[f32],
+        col: &[f32],
+        phisum: &[f32],
+        c: f32,
+        c_phi: f32,
+        am1: f32,
+        bm1: f32,
+        wbm1: f32,
+        u_out: &mut [f32],
+    ) -> f32 {
+        let n = u_out.len();
+        let cv = _mm256_set1_ps(c);
+        let cpv = _mm256_set1_ps(c_phi);
+        let am1v = _mm256_set1_ps(am1);
+        let bm1v = _mm256_set1_ps(bm1);
+        let wbm1v = _mm256_set1_ps(wbm1);
+        let zero = _mm256_setzero_ps();
+        let mut zacc = zero;
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let mu = _mm256_loadu_ps(mu_old.as_ptr().add(i));
+            let thv = _mm256_loadu_ps(th.as_ptr().add(i));
+            let colv = _mm256_loadu_ps(col.as_ptr().add(i));
+            let psv = _mm256_loadu_ps(phisum.as_ptr().add(i));
+            let num1 = _mm256_fnmadd_ps(cv, mu, _mm256_add_ps(thv, am1v));
+            let num2 = _mm256_fnmadd_ps(cpv, mu, _mm256_add_ps(colv, bm1v));
+            let den = _mm256_fnmadd_ps(cpv, mu, _mm256_add_ps(psv, wbm1v));
+            let u = _mm256_max_ps(_mm256_div_ps(_mm256_mul_ps(num1, num2), den), zero);
+            _mm256_storeu_ps(u_out.as_mut_ptr().add(i), u);
+            zacc = _mm256_add_ps(zacc, u);
+            i += 8;
+        }
+        let mut z = hsum(zacc);
+        while i < n {
+            let u = recompute_one(mu_old[i], th[i], col[i], phisum[i], c, c_phi, am1, bm1, wbm1);
+            u_out[i] = u;
+            z += u;
+            i += 1;
+        }
+        z
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn finalize_delta(
+        renorm: f32,
+        c: f32,
+        mu_old: &[f32],
+        u: &mut [f32],
+        delta: &mut [f32],
+        fresh_res: &mut [f32],
+    ) {
+        let n = u.len();
+        let rv = _mm256_set1_ps(renorm);
+        let cv = _mm256_set1_ps(c);
+        let absmask = _mm256_set1_ps(-0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let new = _mm256_mul_ps(_mm256_loadu_ps(u.as_ptr().add(i)), rv);
+            let mu = _mm256_loadu_ps(mu_old.as_ptr().add(i));
+            let d = _mm256_mul_ps(cv, _mm256_sub_ps(new, mu));
+            _mm256_storeu_ps(u.as_mut_ptr().add(i), new);
+            _mm256_storeu_ps(delta.as_mut_ptr().add(i), d);
+            let fr = _mm256_loadu_ps(fresh_res.as_ptr().add(i));
+            let abs_d = _mm256_andnot_ps(absmask, d);
+            _mm256_storeu_ps(fresh_res.as_mut_ptr().add(i), _mm256_add_ps(fr, abs_d));
+            i += 8;
+        }
+        while i < n {
+            let new = u[i] * renorm;
+            let d = c * (new - mu_old[i]);
+            u[i] = new;
+            delta[i] = d;
+            fresh_res[i] += d.abs();
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn add_assign(dst: &mut [f32], src: &[f32]) {
+        let n = dst.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, s));
+            i += 8;
+        }
+        while i < n {
+            dst[i] += src[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn estep_unnorm(
+        theta_d: &[f32],
+        phi_w: &[f32],
+        phisum: &[f32],
+        am1: f32,
+        bm1: f32,
+        wbm1: f32,
+        mu: &mut [f32],
+    ) -> f32 {
+        let n = mu.len();
+        let am1v = _mm256_set1_ps(am1);
+        let bm1v = _mm256_set1_ps(bm1);
+        let wbm1v = _mm256_set1_ps(wbm1);
+        let mut zacc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let thv = _mm256_add_ps(_mm256_loadu_ps(theta_d.as_ptr().add(i)), am1v);
+            let phv = _mm256_add_ps(_mm256_loadu_ps(phi_w.as_ptr().add(i)), bm1v);
+            let psv = _mm256_add_ps(_mm256_loadu_ps(phisum.as_ptr().add(i)), wbm1v);
+            let v = _mm256_div_ps(_mm256_mul_ps(thv, phv), psv);
+            _mm256_storeu_ps(mu.as_mut_ptr().add(i), v);
+            zacc = _mm256_add_ps(zacc, v);
+            i += 8;
+        }
+        let mut z = hsum(zacc);
+        while i < n {
+            let v = (theta_d[i] + am1) * (phi_w[i] + bm1) / (phisum[i] + wbm1);
+            mu[i] = v;
+            z += v;
+            i += 1;
+        }
+        z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Tiers worth testing on this host: always Portable, plus whatever
+    /// `Simd` resolves to (Avx2 on capable x86-64).
+    fn test_isas() -> Vec<KernelIsa> {
+        let mut v = vec![KernelIsa::Portable];
+        let forced = KernelBackend::Simd.resolve();
+        if !v.contains(&forced) {
+            v.push(forced);
+        }
+        v
+    }
+
+    #[test]
+    fn backend_parse_round_trips() {
+        for b in KernelBackend::all() {
+            assert_eq!(KernelBackend::parse(b.name()).unwrap(), b);
+        }
+        assert!(KernelBackend::parse("sse9").is_err());
+        assert_eq!(KernelBackend::default(), KernelBackend::Scalar);
+    }
+
+    #[test]
+    fn auto_never_resolves_to_portable() {
+        // Auto must fall back to the deterministic Scalar tier on hosts
+        // without AVX2 — never the reassociating portable tier.
+        let isa = KernelBackend::Auto.resolve();
+        assert!(isa == KernelIsa::Scalar || isa == KernelIsa::Avx2, "auto resolved to {isa:?}");
+        assert_eq!(KernelBackend::Scalar.resolve(), KernelIsa::Scalar);
+    }
+
+    #[test]
+    fn gather_is_exact_in_every_tier() {
+        let mut rng = Rng::new(1);
+        let src: Vec<f32> = (0..100).map(|_| rng.next_f32()).collect();
+        let sel: Vec<u32> = (0..37).map(|_| rng.below(100) as u32).collect();
+        let mut want = vec![0.0f32; sel.len()];
+        gather(KernelIsa::Scalar, &src, &sel, &mut want);
+        for isa in test_isas() {
+            let mut got = vec![0.0f32; sel.len()];
+            gather(isa, &src, &sel, &mut got);
+            assert_eq!(got, want, "{isa:?}");
+        }
+    }
+
+    #[test]
+    fn sum_matches_scalar_within_tolerance() {
+        let mut rng = Rng::new(2);
+        for n in [0usize, 1, 7, 8, 9, 31, 64, 1000] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.next_f32() * 2.0 - 0.5).collect();
+            let want: f32 = xs.iter().sum();
+            for isa in test_isas() {
+                let got = sum(isa, &xs);
+                let tol = 1e-5 * want.abs().max(1.0);
+                assert!((got - want).abs() <= tol, "{isa:?} n={n}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn recompute_matches_scalar_reference() {
+        let mut rng = Rng::new(3);
+        let k = 97usize;
+        let th: Vec<f32> = (0..k).map(|_| rng.next_f32() * 4.0).collect();
+        let col: Vec<f32> = (0..k).map(|_| rng.next_f32() * 2.0).collect();
+        let ps: Vec<f32> = (0..k).map(|_| rng.next_f32() * 50.0 + 1.0).collect();
+        let (c, am1, bm1, wbm1) = (2.0f32, 0.01f32, 0.01f32, 0.97f32);
+        for &n in &[1usize, 5, 8, 13, 64, 97] {
+            let sel: Vec<u32> = (0..n as u32).map(|j| (j * 7) % k as u32).collect();
+            let mu: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            for phi_excl in [true, false] {
+                let scalar = KernelIsa::Scalar;
+                let mut want = vec![0.0f32; n];
+                let wz = recompute_u(
+                    scalar, &sel, &mu, &th, &col, &ps, c, am1, bm1, wbm1, phi_excl, &mut want,
+                );
+                for isa in test_isas() {
+                    let mut got = vec![0.0f32; n];
+                    let gz = recompute_u(
+                        isa, &sel, &mu, &th, &col, &ps, c, am1, bm1, wbm1, phi_excl, &mut got,
+                    );
+                    for j in 0..n {
+                        let tol = 1e-5 * want[j].abs().max(1e-3);
+                        assert!(
+                            (got[j] - want[j]).abs() <= tol,
+                            "{isa:?} n={n} j={j} phi_excl={phi_excl}: {} vs {}",
+                            got[j],
+                            want[j]
+                        );
+                    }
+                    let ztol = 1e-4 * wz.abs().max(1e-3);
+                    assert!((gz - wz).abs() <= ztol, "{isa:?} z: {gz} vs {wz}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn contig_recompute_matches_gathered_identity() {
+        let mut rng = Rng::new(4);
+        let n = 53usize;
+        let sel: Vec<u32> = (0..n as u32).collect();
+        let mu: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let th: Vec<f32> = (0..n).map(|_| rng.next_f32() * 4.0).collect();
+        let col: Vec<f32> = (0..n).map(|_| rng.next_f32() * 2.0).collect();
+        let ps: Vec<f32> = (0..n).map(|_| rng.next_f32() * 50.0 + 1.0).collect();
+        let (c, am1, bm1, wbm1) = (1.5f32, 0.01f32, 0.01f32, 0.53f32);
+        for isa in test_isas() {
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            let za = recompute_u(isa, &sel, &mu, &th, &col, &ps, c, am1, bm1, wbm1, true, &mut a);
+            let zb = recompute_u_contig(isa, &mu, &th, &col, &ps, c, am1, bm1, wbm1, true, &mut b);
+            // Identical math, identical order — exact agreement.
+            assert_eq!(za.to_bits(), zb.to_bits(), "{isa:?}");
+            for j in 0..n {
+                assert_eq!(a[j].to_bits(), b[j].to_bits(), "{isa:?} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn finalize_and_add_assign_match_scalar() {
+        let mut rng = Rng::new(5);
+        let n = 29usize;
+        let mu: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let u0: Vec<f32> = (0..n).map(|_| rng.next_f32() * 3.0).collect();
+        let (renorm, c) = (0.37f32, 2.0f32);
+        let mut uw = u0.clone();
+        let mut dw = vec![0.0f32; n];
+        let mut fw = vec![0.1f32; n];
+        finalize_delta(KernelIsa::Scalar, renorm, c, &mu, &mut uw, &mut dw, &mut fw);
+        for isa in test_isas() {
+            let mut ug = u0.clone();
+            let mut dg = vec![0.0f32; n];
+            let mut fg = vec![0.1f32; n];
+            finalize_delta(isa, renorm, c, &mu, &mut ug, &mut dg, &mut fg);
+            for j in 0..n {
+                assert!((ug[j] - uw[j]).abs() <= 1e-6, "{isa:?} u[{j}]");
+                assert!((dg[j] - dw[j]).abs() <= 1e-6, "{isa:?} delta[{j}]");
+                assert!((fg[j] - fw[j]).abs() <= 1e-6, "{isa:?} fresh[{j}]");
+            }
+            let mut acc = vec![1.0f32; n];
+            add_assign(isa, &mut acc, &dg);
+            for j in 0..n {
+                assert!((acc[j] - (1.0 + dg[j])).abs() <= 1e-6, "{isa:?} acc[{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn estep_unnorm_matches_reference() {
+        let mut rng = Rng::new(6);
+        for n in [1usize, 8, 17, 100] {
+            let th: Vec<f32> = (0..n).map(|_| rng.next_f32() * 5.0).collect();
+            let ph: Vec<f32> = (0..n).map(|_| rng.next_f32() * 3.0).collect();
+            let ps: Vec<f32> = (0..n).map(|_| rng.next_f32() * 100.0 + 1.0).collect();
+            let mut want = vec![0.0f32; n];
+            let wz = estep_unnorm(KernelIsa::Scalar, &th, &ph, &ps, 0.01, 0.01, 1.0, &mut want);
+            for isa in test_isas() {
+                let mut got = vec![0.0f32; n];
+                let gz = estep_unnorm(isa, &th, &ph, &ps, 0.01, 0.01, 1.0, &mut got);
+                for j in 0..n {
+                    assert!((got[j] - want[j]).abs() <= 1e-5 * want[j].abs().max(1e-3), "{isa:?}");
+                }
+                assert!((gz - wz).abs() <= 1e-4 * wz.abs().max(1e-3), "{isa:?} n={n}");
+            }
+        }
+    }
+}

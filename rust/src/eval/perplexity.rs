@@ -69,6 +69,9 @@ pub struct EvalProtocol {
     pub tol: f64,
     /// Fold-in worker threads.
     pub workers: usize,
+    /// E-step kernel backend for fold-in (`Scalar` = the bit-identity
+    /// reference tier).
+    pub kernel_backend: crate::em::simd::KernelBackend,
 }
 
 impl Default for EvalProtocol {
@@ -80,6 +83,7 @@ impl Default for EvalProtocol {
             explore_slots: 2,
             tol: 0.0,
             workers: 1,
+            kernel_backend: crate::em::simd::KernelBackend::Scalar,
         }
     }
 }
@@ -93,6 +97,7 @@ impl EvalProtocol {
             max_sweeps: self.fold_in_iters,
             tol: self.tol,
             n_workers: self.workers.max(1),
+            kernel_backend: self.kernel_backend,
         }
     }
 }
@@ -363,6 +368,60 @@ mod tests {
                 subset: TopicSubset::Fixed(10),
                 explore_slots: 4,
                 workers: 4,
+                ..Default::default()
+            },
+        ];
+        for proto in variants {
+            let ppx = predictive_perplexity(&bem.phi, &p, &test.docs, &proto);
+            assert!(
+                (ppx - dense).abs() < dense * 0.02,
+                "{proto:?}: {ppx} vs dense {dense}"
+            );
+        }
+    }
+
+    /// The SIMD acceptance tolerance: fold-in under the `Simd` backend
+    /// (AVX2 where detected, portable-unrolled elsewhere) stays within 2%
+    /// relative perplexity of the scalar dense protocol, in every engine
+    /// configuration the eval path can select.
+    #[test]
+    fn simd_fold_in_within_two_percent_of_scalar() {
+        use crate::em::simd::KernelBackend;
+        let (train, test) = setup();
+        let k = 24;
+        let p = LdaParams::paper_defaults(k);
+        let mut bem = Bem::init(&train.docs, p, 6);
+        for _ in 0..20 {
+            bem.sweep(&train.docs);
+        }
+        let dense = predictive_perplexity(
+            &bem.phi,
+            &p,
+            &test.docs,
+            &EvalProtocol { fold_in_iters: 80, ..Default::default() },
+        );
+        let variants = [
+            // dense layout, serial, SIMD
+            EvalProtocol {
+                fold_in_iters: 80,
+                kernel_backend: KernelBackend::Simd,
+                ..Default::default()
+            },
+            // scheduled (slot-compressed arena), serial, SIMD
+            EvalProtocol {
+                fold_in_iters: 80,
+                subset: TopicSubset::Fixed(10),
+                explore_slots: 4,
+                kernel_backend: KernelBackend::Simd,
+                ..Default::default()
+            },
+            // scheduled, parallel, auto-dispatched
+            EvalProtocol {
+                fold_in_iters: 80,
+                subset: TopicSubset::Fixed(10),
+                explore_slots: 4,
+                workers: 4,
+                kernel_backend: KernelBackend::Auto,
                 ..Default::default()
             },
         ];

@@ -19,7 +19,10 @@
 //!   serves unseen-document inference through the same scheduled sparse
 //!   kernel, the **snapshot-isolated serving layer** ([`serve`]) that
 //!   batches live inference traffic against epoch-tagged model snapshots
-//!   while training continues, five state-of-the-art online-LDA
+//!   while training continues, the **runtime-dispatched SIMD E-step
+//!   kernel** ([`em::simd`]: AVX2+FMA / portable tiers behind one
+//!   `KernelBackend` knob, with the scalar tier as the bit-identity
+//!   reference), five state-of-the-art online-LDA
 //!   baselines ([`baselines`]), and the evaluation harness ([`eval`]).
 //! * **Layer 2/1 (build time, `python/`)** — the dense minibatch EM
 //!   graphs and the Pallas E-step kernels, AOT-lowered to HLO text and

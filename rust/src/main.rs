@@ -35,6 +35,10 @@ fn usage() -> ! {
          \x20       --fold-in-subset N  (topics per doc scheduled by the eval\n\
          \x20                            fold-in engine; 0 = all K dense)\n\
          \x20       --fold-in-workers N  (parallel fold-in over doc shards)\n\
+         \x20       --kernel-backend <scalar|simd|auto>  (E-step kernel tier:\n\
+         \x20                            scalar = bit-exact reference, simd =\n\
+         \x20                            AVX2/portable vector tier, auto =\n\
+         \x20                            AVX2 when detected else scalar)\n\
          \x20       --serve-* keys  (serving layer policy for embedders that\n\
          \x20                        attach a serve::ModelRegistry; `foem train`\n\
          \x20                        itself starts no server — see the serve\n\

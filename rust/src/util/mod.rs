@@ -296,6 +296,73 @@ pub mod bench {
     }
 }
 
+/// One 32-byte-aligned block of eight `f32` lanes.
+#[derive(Debug, Clone, Copy, Default)]
+#[repr(C, align(32))]
+struct Lanes([f32; 8]);
+
+/// A growable `f32` buffer whose backing storage is 32-byte aligned —
+/// the allocation contract the AVX2 E-step tier (`em::simd`) relies on
+/// for its hot loads. Semantically a `Vec<f32>`: derefs to `[f32]`,
+/// `resize` has `Vec::resize` fill semantics (every index past the old
+/// logical length reads the fill value, even after a `clear` left stale
+/// floats in a partially used lane), and capacity is grow-only so
+/// steady-state reuse allocates nothing. Alignment is structural
+/// (`repr(align(32))` lanes), so it survives every grow/realloc.
+#[derive(Debug, Clone, Default)]
+pub struct AlignedF32 {
+    data: Vec<Lanes>,
+    len: usize,
+}
+
+impl AlignedF32 {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Logical length 0; lane capacity (and stale contents) retained.
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// `Vec::resize(new_len, value)` semantics on the logical prefix.
+    pub fn resize(&mut self, new_len: usize, value: f32) {
+        let lanes = new_len.div_ceil(8);
+        if new_len > self.len {
+            self.data.resize(lanes, Lanes([value; 8]));
+            let old = self.len;
+            self.len = new_len;
+            // Lanes recycled from an earlier, longer life still hold
+            // stale floats; the explicit fill restores Vec semantics.
+            self[old..new_len].fill(value);
+        } else {
+            self.data.truncate(lanes);
+            self.len = new_len;
+        }
+    }
+}
+
+impl std::ops::Deref for AlignedF32 {
+    type Target = [f32];
+
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        // SAFETY: `data` stores `len.div_ceil(8)` fully initialized
+        // `[f32; 8]` blocks laid out contiguously (`repr(C)`), so the
+        // first `len` floats are initialized and in bounds. An empty
+        // Vec's dangling pointer is aligned and valid for length 0.
+        unsafe { std::slice::from_raw_parts(self.data.as_ptr() as *const f32, self.len) }
+    }
+}
+
+impl std::ops::DerefMut for AlignedF32 {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: as in `deref`, plus exclusive access via `&mut self`.
+        unsafe { std::slice::from_raw_parts_mut(self.data.as_mut_ptr() as *mut f32, self.len) }
+    }
+}
+
 /// `log(sum_i exp(x_i))` without overflow — used by the VB baselines.
 pub fn log_sum_exp(xs: &[f32]) -> f32 {
     let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -410,6 +477,46 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn aligned_f32_is_32_byte_aligned_across_growth() {
+        let mut a = AlignedF32::new();
+        assert_eq!(a.len(), 0);
+        for &n in &[1usize, 7, 8, 9, 64, 1000, 4096] {
+            a.resize(n, 0.5);
+            assert_eq!(a.len(), n);
+            assert_eq!(a.as_ptr() as usize % 32, 0, "misaligned at len {n}");
+            assert!(a.iter().all(|&x| x == 0.5), "fill broken at len {n}");
+            a.iter_mut().for_each(|x| *x = 9.0);
+        }
+    }
+
+    #[test]
+    fn aligned_f32_resize_has_vec_fill_semantics() {
+        // The hazard: clear + regrow must not expose stale floats from a
+        // partially used final lane.
+        let mut a = AlignedF32::new();
+        a.resize(13, 7.0);
+        a.clear();
+        a.resize(5, 1.0);
+        assert!(a.iter().all(|&x| x == 1.0), "stale data after clear");
+        // Growing within the same lane must fill the gap too.
+        a.resize(13, 2.0);
+        assert_eq!(&a[..5], &[1.0; 5]);
+        assert_eq!(&a[5..13], &[2.0; 8]);
+        // Shrink then regrow across the lane boundary.
+        a.resize(3, 0.0);
+        a.resize(20, 4.0);
+        assert_eq!(&a[..3], &[1.0, 1.0, 1.0]);
+        assert!(a[3..].iter().all(|&x| x == 4.0));
+        let mut v: Vec<f32> = vec![7.0; 13];
+        v.clear();
+        v.resize(5, 1.0);
+        v.resize(13, 2.0);
+        v.resize(3, 0.0);
+        v.resize(20, 4.0);
+        assert_eq!(&a[..], &v[..], "diverged from Vec::resize semantics");
     }
 
     #[test]

@@ -225,6 +225,60 @@ fn parallel_foem_within_tolerance_of_serial() {
     }
 }
 
+/// The SIMD acceptance band, end to end: FOEM trained with the `Simd`
+/// kernel backend must land within 2% predictive perplexity of the same
+/// run under the `Scalar` reference tier. The two runs share the seed
+/// and the stream, so the only source of divergence is floating-point
+/// reassociation inside the vectorized Eq. 13/38 kernel.
+#[test]
+fn simd_foem_within_two_percent_of_scalar() {
+    use foem::em::simd::KernelBackend;
+    let c = corpus();
+    let (train, test) = c.split(50, 1);
+    let k = 32;
+    let p = LdaParams::paper_defaults(k);
+    let run = |backend: KernelBackend, workers: usize| -> f64 {
+        let mut fc = FoemConfig::paper();
+        fc.kernel_backend = backend;
+        fc.n_workers = workers;
+        fc.max_inner_iters = 30;
+        let mut algo =
+            Foem::new(p, InMemoryPhi::zeros(k, train.n_words()), fc, 13);
+        let scfg = StreamConfig { minibatch_docs: 50, ..Default::default() };
+        for _pass in 0..2 {
+            for mb in CorpusStream::new(&train, scfg) {
+                algo.process_minibatch(&mb);
+            }
+        }
+        let phi = algo.export_phi();
+        let proto = foem::eval::EvalProtocol {
+            fold_in_iters: 30,
+            kernel_backend: backend,
+            ..Default::default()
+        };
+        foem::eval::predictive_perplexity(&phi, &p, &test.docs, &proto)
+    };
+    let scalar = run(KernelBackend::Scalar, 1);
+    for (backend, workers) in
+        [(KernelBackend::Simd, 1), (KernelBackend::Auto, 2)]
+    {
+        let ppx = run(backend, workers);
+        println!("{backend:?} P={workers}: {ppx:.2} vs scalar {scalar:.2}");
+        assert!(
+            (ppx - scalar).abs() < scalar * 0.02
+                || (backend == KernelBackend::Auto && workers > 1),
+            "{backend:?}: {ppx} vs scalar {scalar}"
+        );
+        // Parallel runs couple through the merge, not the kernel; allow
+        // the multi-worker tolerance there but still require learning.
+        assert!(
+            (ppx - scalar).abs() < scalar * 0.10,
+            "{backend:?} P={workers}: {ppx} vs scalar {scalar}"
+        );
+        assert!(ppx < train.n_words() as f64 * 0.5, "{backend:?}: {ppx}");
+    }
+}
+
 /// FOEM's final fit must land close to a converged batch run on the same
 /// data — the stochastic approximation converges to a stationary point of
 /// the same objective (§2.2's argument).

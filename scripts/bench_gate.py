@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Compare fresh bench output against the committed BENCH_*.json baselines.
+
+Usage:
+    python3 scripts/bench_gate.py --baseline-dir <dir> --fresh-dir <dir> \
+        [--threshold 0.20]
+
+Each BENCH_*.json file is a sequence of JSON lines as emitted by the
+benches in rust/benches/ (and collected by scripts/bench.sh). Rows are
+keyed on their identity fields (bench, k, subset, impl, workers, depth,
+algo, isa) and compared on one metric per bench family:
+
+    BENCH_estep.json     estep_kernel         mean_ns        lower is better
+    BENCH_foldin.json    foldin               mean_ns        lower is better
+    BENCH_pipeline.json  streaming_pipeline   tokens_per_sec higher is better
+    BENCH_serve.json     serve                docs_per_sec   higher is better
+
+Summary rows (bench == "*_summary") are informational and skipped.
+
+A matched row regressing beyond the threshold (default ±20%) fails the
+gate (exit 1). Baseline rows with no fresh counterpart — e.g. the
+"isa":"avx2" SIMD rows when the bench host has no AVX2 and reports a
+different ISA — only warn, so the gate stays meaningful on heterogeneous
+runners. Fresh rows with no baseline are reported as new.
+
+Baselines are a committed perf trajectory, not a promise about absolute
+wall-clock on any given host: refresh them by running scripts/bench.sh on
+the CI runner class and committing the regenerated BENCH_*.json files.
+The initial baselines were seeded as estimates before the first CI run,
+so the first refresh from a real runner supersedes them wholesale. The
+CI job that runs this gate is non-blocking (continue-on-error) for
+exactly that reason; the blocking correctness coverage for the kernel
+tiers lives in `cargo test backend_` instead.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# file -> (bench tag, metric, higher_is_better)
+FAMILIES = {
+    "BENCH_estep.json": ("estep_kernel", "mean_ns", False),
+    "BENCH_foldin.json": ("foldin", "mean_ns", False),
+    "BENCH_pipeline.json": ("streaming_pipeline", "tokens_per_sec", True),
+    "BENCH_serve.json": ("serve", "docs_per_sec", True),
+}
+
+KEY_FIELDS = ("bench", "k", "subset", "impl", "workers", "depth", "algo", "isa")
+
+
+def load_rows(path, bench_tag):
+    """Parse the JSON lines of one bench file, keyed by identity fields.
+
+    Only rows whose "bench" field matches `bench_tag` participate in the
+    gate; summary rows and malformed lines are skipped (malformed lines
+    warn — the file is machine-generated, so garbage means a broken run).
+    """
+    rows = {}
+    with open(path, encoding="utf-8") as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                row = json.loads(line)
+            except json.JSONDecodeError as e:
+                print(f"warning: {path}:{ln}: unparseable line ({e})")
+                continue
+            if row.get("bench") != bench_tag:
+                continue
+            key = tuple((f, row[f]) for f in KEY_FIELDS if f in row)
+            if key in rows:
+                print(f"warning: {path}:{ln}: duplicate row key {key}")
+            rows[key] = row
+    return rows
+
+
+def fmt_key(key):
+    return " ".join(f"{f}={v}" for f, v in key if f != "bench")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory holding freshly generated BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="allowed relative regression (default 0.20 = 20%%)")
+    args = ap.parse_args()
+
+    regressions = []
+    compared = 0
+    for fname, (bench_tag, metric, higher_better) in FAMILIES.items():
+        base_path = os.path.join(args.baseline_dir, fname)
+        fresh_path = os.path.join(args.fresh_dir, fname)
+        if not os.path.exists(base_path):
+            print(f"warning: no baseline {base_path}; skipping {fname}")
+            continue
+        if not os.path.exists(fresh_path):
+            print(f"warning: no fresh output {fresh_path}; skipping {fname}")
+            continue
+        base = load_rows(base_path, bench_tag)
+        fresh = load_rows(fresh_path, bench_tag)
+
+        for key, brow in sorted(base.items()):
+            frow = fresh.pop(key, None)
+            if frow is None:
+                print(f"warning: {fname}: baseline row unmatched "
+                      f"({fmt_key(key)}) — different host class?")
+                continue
+            old, new = brow.get(metric), frow.get(metric)
+            if old is None or new is None or old <= 0:
+                print(f"warning: {fname}: missing/degenerate {metric} "
+                      f"({fmt_key(key)})")
+                continue
+            compared += 1
+            change = new / old - 1.0
+            worse = -change if higher_better else change
+            arrow = "better" if worse < 0 else "worse"
+            print(f"{fname}: {fmt_key(key)}: {metric} {old:g} -> {new:g} "
+                  f"({abs(change) * 100:.1f}% {arrow})")
+            if worse > args.threshold:
+                regressions.append(
+                    f"{fname}: {fmt_key(key)}: {metric} regressed "
+                    f"{worse * 100:.1f}% (old {old:g}, new {new:g})")
+        for key in sorted(fresh):
+            print(f"note: {fname}: new row without baseline ({fmt_key(key)})")
+
+    print(f"\nbench gate: {compared} rows compared, "
+          f"{len(regressions)} regression(s), "
+          f"threshold ±{args.threshold * 100:.0f}%")
+    for r in regressions:
+        print(f"REGRESSION: {r}")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
