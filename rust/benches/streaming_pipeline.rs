@@ -4,6 +4,14 @@
 //! `rust/DESIGN.md` §7). Depth 0 is the synchronous baseline, so the
 //! depth-0 row over the others is the overlap's speedup on this machine.
 //!
+//! A second sweep holds depth 0 / workers 1 fixed and varies the column
+//! codec (`--phi-codec`, `rust/DESIGN.md` §12): same synthetic
+//! sparse-phi workload, per-codec throughput + bytes. `disk_bytes /
+//! logical_bytes` is the exact compression ratio of real disk traffic
+//! and `file_bytes` is the backing file's high-water data size, so the
+//! raw row over a compressed row is the bytes-on-disk reduction the
+//! acceptance gate tracks.
+//!
 //! Emits one `BENCH_pipeline.json`-compatible line per configuration so
 //! the perf trajectory accumulates across PRs:
 //!
@@ -13,7 +21,7 @@
 use foem::corpus::synthetic::{generate, SyntheticConfig};
 use foem::em::foem::{Foem, FoemConfig};
 use foem::exec::pipeline::Pipeline;
-use foem::store::PhiColumnStore;
+use foem::store::{Codec, PhiColumnStore};
 use foem::stream::{CorpusStream, StreamConfig};
 use foem::util::{TempDir, Timer};
 use foem::LdaParams;
@@ -59,18 +67,64 @@ fn main() {
             println!(
                 "BENCH_pipeline.json {{\"bench\":\"streaming_pipeline\",\
                  \"algo\":\"foem_paged\",\"k\":{k},\"depth\":{depth},\
-                 \"workers\":{workers},\"seconds\":{seconds:.4},\
+                 \"workers\":{workers},\"codec\":\"auto\",\
+                 \"seconds\":{seconds:.4},\
                  \"tokens_per_sec\":{tokens_per_sec:.1},\
                  \"col_reads\":{},\"col_writes\":{},\"buffer_misses\":{},\
                  \"prefetched_cols\":{},\"prefetch_hits\":{},\
-                 \"wb_writes\":{}}}",
+                 \"wb_writes\":{},\"logical_bytes\":{},\"disk_bytes\":{}}}",
                 io.col_reads,
                 io.col_writes,
                 io.buffer_misses,
                 io.prefetched_cols,
                 io.prefetch_hits,
-                io.wb_writes
+                io.wb_writes,
+                io.logical_bytes,
+                io.disk_bytes
             );
         }
+    }
+
+    println!("== column codec sweep (depth 0, workers 1) ==");
+    for codec in Codec::all() {
+        let dir = TempDir::new("bench-codec");
+        let mut fc = FoemConfig::paper();
+        fc.exact_ll = false;
+        fc.max_inner_iters = 10;
+        fc.n_workers = 1;
+        fc.hot_words = 32;
+        let mut algo = Foem::paged_create_with_codec(
+            p,
+            &dir.path().join("phi.bin"),
+            corpus.n_words(),
+            64 * k * 4,
+            fc,
+            1,
+            codec,
+        )
+        .expect("create paged store");
+        let timer = Timer::start();
+        Pipeline::new(0)
+            .run(&mut algo, CorpusStream::new(&corpus, scfg), |_, _, _| Ok(()))
+            .expect("pipeline run");
+        algo.store.flush().expect("flush");
+        let seconds = timer.seconds();
+        let io = algo.store.io_stats();
+        let tokens_per_sec = corpus.n_tokens() / seconds.max(1e-9);
+        println!(
+            "BENCH_pipeline.json {{\"bench\":\"streaming_pipeline\",\
+             \"algo\":\"foem_paged\",\"sweep\":\"codec\",\"k\":{k},\
+             \"depth\":0,\"workers\":1,\"codec\":\"{}\",\
+             \"seconds\":{seconds:.4},\
+             \"tokens_per_sec\":{tokens_per_sec:.1},\
+             \"col_reads\":{},\"col_writes\":{},\
+             \"logical_bytes\":{},\"disk_bytes\":{},\"file_bytes\":{}}}",
+            codec.name(),
+            io.col_reads,
+            io.col_writes,
+            io.logical_bytes,
+            io.disk_bytes,
+            algo.store.data_bytes_on_disk()
+        );
     }
 }

@@ -133,11 +133,19 @@ impl<S: crate::store::PhiColumnStore> OnlineLda for crate::em::foem::Foem<S> {
         // in IoStats like any other stream access — instead of the
         // O(K*W) densification of the default.
         let snap = self.store.snapshot_columns(words);
+        // Zone-map stats ride along for free: a paged store answers from
+        // its column directory (no decode), certifying cold columns so
+        // view consumers can skip them; in-memory stores answer None.
+        let col_stats: Vec<Option<crate::store::ColumnStats>> = words
+            .iter()
+            .map(|&w| self.store.column_stats(w as usize))
+            .collect();
         crate::em::EvalPhiView::from_snapshot(
             snap,
             self.phisum.clone(),
             self.store.n_words(),
         )
+        .with_column_stats(col_stats)
     }
 
     fn checkpoint(&mut self) -> anyhow::Result<()> {

@@ -130,6 +130,12 @@ pub struct RunConfig {
     /// Topics scheduled per document by the serving fold-in (`0` = all K,
     /// the dense reference protocol) — mirrors `fold_in_subset`.
     pub serve_subset: usize,
+    /// On-disk column encoding policy for the paged phi/residual stores
+    /// (`--phi-codec`): `raw` (the bit-identity reference format),
+    /// `sparse`, `rle`, or `auto` (per-column smallest-wins, the
+    /// default). Every codec is lossless, so this changes bytes on disk
+    /// and nothing else; ignored by the in-memory store.
+    pub phi_codec: crate::store::Codec,
     /// E-step kernel backend: `scalar` (the bit-identity reference),
     /// `simd` (force the vector tiers), or `auto` (AVX2+FMA where
     /// detected, scalar otherwise). Threaded through every consumer of
@@ -166,6 +172,7 @@ impl Default for RunConfig {
             serve_queue_docs: 256,
             serve_workers: 1,
             serve_subset: 10,
+            phi_codec: crate::store::Codec::Auto,
             kernel_backend: KernelBackend::Scalar,
             seed: 42,
             verbose: false,
@@ -293,6 +300,15 @@ impl RunConfig {
             }
             "serve_workers" => self.serve_workers = value.parse()?,
             "serve_subset" => self.serve_subset = value.parse()?,
+            "phi_codec" => {
+                self.phi_codec =
+                    crate::store::Codec::parse(value).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown phi codec {value} \
+                             (expected raw|sparse|rle|auto)"
+                        )
+                    })?;
+            }
             "kernel_backend" => {
                 self.kernel_backend = KernelBackend::parse(value)?
             }
@@ -391,6 +407,22 @@ mod tests {
         assert_eq!(c.fold_in_subset, 16);
         assert_eq!(c.fold_in_workers, 4);
         assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn codec_config_round_trip() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.phi_codec, crate::store::Codec::Auto, "default is auto");
+        for (name, codec) in [
+            ("raw", crate::store::Codec::Raw),
+            ("sparse", crate::store::Codec::Sparse),
+            ("rle", crate::store::Codec::Rle),
+            ("auto", crate::store::Codec::Auto),
+        ] {
+            c.set("phi_codec", name).unwrap();
+            assert_eq!(c.phi_codec, codec);
+        }
+        assert!(c.set("phi_codec", "zstd").is_err());
     }
 
     #[test]

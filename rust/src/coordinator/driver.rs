@@ -132,13 +132,14 @@ impl Driver {
                 )),
                 StoreKind::Paged { path, buffer_bytes } => {
                     let fc = self.foem_paged_config(*buffer_bytes);
-                    Box::new(Foem::paged_create(
+                    Box::new(Foem::paged_create_with_codec(
                         params,
                         path,
                         n_words,
                         *buffer_bytes,
                         fc,
                         cfg.seed,
+                        cfg.phi_codec,
                     )?)
                 }
             },
@@ -297,13 +298,14 @@ impl Driver {
             }
             (Algorithm::Foem, StoreKind::Paged { path, buffer_bytes }) => {
                 let fc = self.foem_paged_config(*buffer_bytes);
-                let algo = Foem::paged_create(
+                let algo = Foem::paged_create_with_codec(
                     params,
                     path,
                     train.n_words(),
                     *buffer_bytes,
                     fc,
                     cfg.seed,
+                    cfg.phi_codec,
                 )?;
                 self.run_pipelined(algo, train, test)
             }

@@ -1012,15 +1012,43 @@ impl Foem<crate::store::paged::PagedPhi> {
         cfg: FoemConfig,
         seed: u64,
     ) -> anyhow::Result<Self> {
+        Self::paged_create_with_codec(
+            params,
+            path,
+            n_words,
+            buffer_bytes,
+            cfg,
+            seed,
+            crate::store::Codec::Auto,
+        )
+    }
+
+    /// [`Self::paged_create`] with an explicit column codec
+    /// (`--phi-codec`). Both streamed matrices use the same write policy
+    /// (the residual matrix is at least as sparse as phi, so whatever
+    /// compresses phi compresses it too); reads are per-record
+    /// self-describing either way.
+    #[allow(clippy::too_many_arguments)]
+    pub fn paged_create_with_codec(
+        params: LdaParams,
+        path: &std::path::Path,
+        n_words: usize,
+        buffer_bytes: usize,
+        cfg: FoemConfig,
+        seed: u64,
+        codec: crate::store::Codec,
+    ) -> anyhow::Result<Self> {
         let k = params.n_topics;
         let half = (buffer_bytes / 2).max(k * 4);
-        let store =
-            crate::store::paged::PagedPhi::create(path, k, n_words, half)?;
-        let res = crate::store::paged::PagedPhi::create(
+        let store = crate::store::paged::PagedPhi::create_with_codec(
+            path, k, n_words, half, codec,
+        )?;
+        let res = crate::store::paged::PagedPhi::create_with_codec(
             &Self::residual_path(path),
             k,
             n_words,
             half,
+            codec,
         )?;
         Ok(Self::with_stores(params, store, res, cfg, seed))
     }
@@ -1959,6 +1987,65 @@ mod tests {
         }
         assert_eq!(a.store.io_stats(), b.store.io_stats());
         assert_eq!(a.res_store.io_stats(), b.res_store.io_stats());
+        assert_states_identical(&mut a, &mut b);
+    }
+
+    #[test]
+    fn codec_raw_auto_foem_bit_identical_with_identical_logical_io() {
+        // The compressed-store acceptance contract: Codec::Auto changes
+        // how many bytes hit the disk, not one bit of the model and not
+        // one logical I/O count. Serial path (depth 0 / P=1), same seed,
+        // forced-Raw vs auto-selected stores.
+        let dir = crate::util::TempDir::new("codec-eq");
+        let c = corpus();
+        let k = 16;
+        let p = LdaParams::paper_defaults(k);
+        let mut cfg = FoemConfig::paper();
+        cfg.topic_subset = TopicSubset::Fixed(4);
+        cfg.hot_words = 8;
+        let mk = |name: &str, codec: crate::store::Codec| {
+            Foem::paged_create_with_codec(
+                p,
+                &dir.path().join(name),
+                c.n_words(),
+                16 * k * 4,
+                cfg,
+                9,
+                codec,
+            )
+            .unwrap()
+        };
+        let mut a = mk("raw.bin", crate::store::Codec::Raw);
+        let mut b = mk("auto.bin", crate::store::Codec::Auto);
+        let scfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+        for mb in CorpusStream::new(&c, scfg) {
+            let ra = a.process_minibatch_serial(&mb);
+            let rb = b.process_minibatch_serial(&mb);
+            assert_eq!(ra.train_ll.to_bits(), rb.train_ll.to_bits());
+            assert_eq!(ra.inner_iters, rb.inner_iters);
+        }
+        // Every IoStats field except disk_bytes is codec-independent.
+        let logical = |io: crate::store::IoStats| crate::store::IoStats {
+            disk_bytes: 0,
+            ..io
+        };
+        assert_eq!(
+            logical(a.store.io_stats()),
+            logical(b.store.io_stats()),
+            "phi-store logical IoStats diverged across codecs"
+        );
+        assert_eq!(
+            logical(a.res_store.io_stats()),
+            logical(b.res_store.io_stats()),
+            "residual-store logical IoStats diverged across codecs"
+        );
+        // ...while the physical traffic and the file itself shrink (the
+        // subsetted E-step keeps columns sparse, so Auto beats Raw).
+        assert!(
+            b.store.io_stats().disk_bytes < a.store.io_stats().disk_bytes,
+            "auto failed to compress disk traffic"
+        );
+        assert!(b.store.data_bytes_on_disk() < a.store.data_bytes_on_disk());
         assert_states_identical(&mut a, &mut b);
     }
 

@@ -169,6 +169,11 @@ pub struct EvalPhiView {
     /// `words.len() * k`, column-contiguous.
     data: Vec<f32>,
     phisum: Vec<f32>,
+    /// Per-materialized-column zone-map stats, parallel to `words`
+    /// (empty = none attached). `Some` entries are exact
+    /// ([`crate::store::ColumnStats`] is populated from a paged store's
+    /// column directory without decoding); `None` means unknown.
+    col_stats: Vec<Option<crate::store::ColumnStats>>,
 }
 
 impl EvalPhiView {
@@ -190,7 +195,39 @@ impl EvalPhiView {
     ) -> Self {
         let (k, words, data) = snap.into_parts();
         debug_assert_eq!(phisum.len(), k);
-        Self { k, n_words, words, data, phisum }
+        Self { k, n_words, words, data, phisum, col_stats: Vec::new() }
+    }
+
+    /// Attach per-column zone-map stats (parallel to [`Self::words`], as
+    /// returned by `PhiColumnStore::column_stats` at view-build time).
+    pub fn with_column_stats(
+        mut self,
+        col_stats: Vec<Option<crate::store::ColumnStats>>,
+    ) -> Self {
+        debug_assert!(
+            col_stats.is_empty() || col_stats.len() == self.words.len(),
+            "column stats must be parallel to the materialized words"
+        );
+        self.col_stats = col_stats;
+        self
+    }
+
+    /// Zone-map stats for materialized word `w`, if attached and known.
+    /// `Some` answers are exact — in particular `nnz == 0` certifies the
+    /// column is all-zero without touching its data.
+    pub fn column_stats(&self, w: u32) -> Option<crate::store::ColumnStats> {
+        let i = self.words.binary_search(&w).ok()?;
+        self.col_stats.get(i).copied().flatten()
+    }
+
+    /// How many materialized columns the zone maps certify as all-zero
+    /// (cold): those columns decoded nothing at build time and consumers
+    /// like the fold-in scheduler can skip them outright.
+    pub fn known_cold_columns(&self) -> usize {
+        self.col_stats
+            .iter()
+            .filter(|s| matches!(s, Some(st) if st.nnz == 0))
+            .count()
     }
 
     /// Number of materialized columns.

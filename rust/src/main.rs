@@ -28,6 +28,10 @@ fn usage() -> ! {
          train keys: --corpus <synth:NAME|PATH> --algorithm <foem|sem|scvb|ovb|ogs|rvb|soi>\n\
          \x20       --k N --ds N --passes N --seed N --eval-every N --verbose true\n\
          \x20       --store-path PATH --buffer-mb N --lambda-k-topics N --config FILE\n\
+         \x20       --phi-codec <raw|sparse|rle|auto>  (paged-store column\n\
+         \x20                            encoding; all lossless — auto picks the\n\
+         \x20                            smallest per column, raw is the\n\
+         \x20                            bit-identity reference format)\n\
          \x20       --n-workers N  (parallel sharded E-step; 1 = serial)\n\
          \x20       --pipeline-depth N  (software-pipelined staging: prefetch +\n\
          \x20                            write-behind overlap compute; 0 = off,\n\
@@ -138,6 +142,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
                 "overlapped I/O: {} cols prefetched, {} prefetch hits, \
                  {} write-behind flushes",
                 io.prefetched_cols, io.prefetch_hits, io.wb_writes
+            );
+        }
+        if io.logical_bytes > 0 {
+            println!(
+                "store bytes: {} logical -> {} on disk ({:.2}x compression)",
+                io.logical_bytes,
+                io.disk_bytes,
+                io.logical_bytes as f64 / io.disk_bytes.max(1) as f64
             );
         }
     }

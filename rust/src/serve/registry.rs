@@ -47,6 +47,14 @@ impl ModelSnapshot {
     pub fn view(&self) -> &EvalPhiView {
         &self.view
     }
+
+    /// How many of this snapshot's materialized columns the store's
+    /// zone maps certified as all-zero at publish time (see
+    /// [`EvalPhiView::known_cold_columns`]) — an observability hook for
+    /// sizing request vocabularies against actually-trained mass.
+    pub fn known_cold_columns(&self) -> usize {
+        self.view.known_cold_columns()
+    }
 }
 
 impl PhiAccess for ModelSnapshot {

@@ -1,0 +1,494 @@
+//! Lossless column codecs for the paged phi store (ROADMAP item:
+//! compressed columnar storage).
+//!
+//! A K×W topic-word matrix is mostly near-zero at big-model scale, so the
+//! paged store's disk traffic — not the SIMD E-step — bounds throughput.
+//! Each on-disk column record is `[tag u8][payload]`, self-describing so
+//! a reader never needs to know the writer's policy:
+//!
+//! * [`Codec::Raw`]    — tag 0: `k` little-endian f32 words. The
+//!   uncompressed reference format (and the fallback `Auto` picks when a
+//!   column is dense enough that neither compressor wins).
+//! * [`Codec::Sparse`] — tag 1: a `ceil(k/8)`-byte nonzero-topic bitmap
+//!   followed by the nonzero weights in topic order. Wins when
+//!   `nnz ≪ K`, the common case for phi columns.
+//! * [`Codec::Rle`]    — tag 2: `n_runs u32`, then `(count u32, bits u32)`
+//!   per run of equal bit patterns. Wins for cold/constant columns.
+//!
+//! A column whose every weight is bit-pattern `+0.0` encodes to the
+//! *empty* record (length 0) under every codec except forced `Raw`: the
+//! store's column directory then serves it with no disk bytes and no
+//! decode at all — the zone-map skip.
+//!
+//! **Losslessness is bit-exact**, not value-exact: "zero" means the u32
+//! bit pattern `0x0000_0000`, so `-0.0`, NaNs and subnormals are all
+//! stored explicitly and `decode(encode(x))` reproduces `x` bit for bit.
+//! RLE compares run membership on bit patterns for the same reason
+//! (`NaN != NaN` as values, but equal payloads must land in one run).
+//! That is what lets the paged bit-identity and pipeline-equivalence
+//! tests carry over unchanged across codecs.
+
+/// Write-time column encoding policy for [`super::paged::PagedPhi`].
+///
+/// `Auto` (the default) predicts all three encoded sizes in one pass over
+/// the column and emits the smallest, tie-breaking deterministically
+/// toward the cheapest decoder: `Raw`, then `Sparse`, then `Rle`. Reads
+/// are dispatched on the per-record tag, so stores written under
+/// different policies (or a policy changed between runs) stay readable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Codec {
+    /// Always write the dense k×f32 payload (bit-identity reference).
+    Raw,
+    /// Always write bitmap + nonzero weights.
+    Sparse,
+    /// Always write (count, bits) runs.
+    Rle,
+    /// Pick the smallest encoding per column at write time.
+    #[default]
+    Auto,
+}
+
+impl Codec {
+    /// Parse a CLI / config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "raw" => Some(Self::Raw),
+            "sparse" => Some(Self::Sparse),
+            "rle" => Some(Self::Rle),
+            "auto" => Some(Self::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Raw => "raw",
+            Self::Sparse => "sparse",
+            Self::Rle => "rle",
+            Self::Auto => "auto",
+        }
+    }
+
+    /// All policies, in tag order (bench sweeps and tests).
+    pub fn all() -> [Self; 4] {
+        [Self::Raw, Self::Sparse, Self::Rle, Self::Auto]
+    }
+
+    /// Stable numeric id persisted in the store header (the write
+    /// *policy*, distinct from the per-record tag).
+    pub(crate) fn header_tag(self) -> u64 {
+        match self {
+            Self::Raw => 0,
+            Self::Sparse => 1,
+            Self::Rle => 2,
+            Self::Auto => 3,
+        }
+    }
+
+    pub(crate) fn from_header_tag(tag: u64) -> Option<Self> {
+        match tag {
+            0 => Some(Self::Raw),
+            1 => Some(Self::Sparse),
+            2 => Some(Self::Rle),
+            3 => Some(Self::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Zone-map style per-column statistics, computed at encode time and
+/// persisted in the store's column directory so readers can skip or
+/// prioritize columns without decoding them.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ColumnStats {
+    /// Weights whose bit pattern is nonzero (so -0.0 / NaN / subnormals
+    /// count — anything the decoder must materialize explicitly).
+    pub nnz: u32,
+    /// Largest weight by value comparison, ignoring NaNs; `0.0` for an
+    /// all-zero column.
+    pub max: f32,
+}
+
+pub(crate) const TAG_RAW: u8 = 0;
+pub(crate) const TAG_SPARSE: u8 = 1;
+pub(crate) const TAG_RLE: u8 = 2;
+
+#[inline]
+fn is_stored(x: f32) -> bool {
+    x.to_bits() != 0
+}
+
+/// One pass over the column: nnz, max, and the RLE run count (equal bit
+/// patterns), enough to predict every encoded size.
+fn scan(col: &[f32]) -> (ColumnStats, usize) {
+    let mut nnz = 0u32;
+    let mut max: Option<f32> = None;
+    let mut runs = 0usize;
+    let mut prev_bits = None;
+    for &x in col {
+        let bits = x.to_bits();
+        if bits != 0 {
+            nnz += 1;
+        }
+        if !x.is_nan() && max.map_or(true, |m| x > m) {
+            max = Some(x);
+        }
+        if prev_bits != Some(bits) {
+            runs += 1;
+            prev_bits = Some(bits);
+        }
+    }
+    // All-NaN (or empty) columns report 0.0 rather than a sentinel that
+    // would confuse zone-map consumers.
+    (ColumnStats { nnz, max: max.unwrap_or(0.0) }, runs)
+}
+
+fn raw_size(k: usize) -> usize {
+    1 + 4 * k
+}
+
+fn sparse_size(k: usize, nnz: u32) -> usize {
+    1 + k.div_ceil(8) + 4 * nnz as usize
+}
+
+fn rle_size(runs: usize) -> usize {
+    1 + 4 + 8 * runs
+}
+
+fn encode_raw(col: &[f32], out: &mut Vec<u8>) {
+    out.reserve(raw_size(col.len()));
+    out.push(TAG_RAW);
+    for &x in col {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn encode_sparse(col: &[f32], out: &mut Vec<u8>) {
+    out.push(TAG_SPARSE);
+    let bm_start = out.len();
+    out.resize(bm_start + col.len().div_ceil(8), 0);
+    for (i, &x) in col.iter().enumerate() {
+        if is_stored(x) {
+            out[bm_start + i / 8] |= 1 << (i % 8);
+        }
+    }
+    for &x in col {
+        if is_stored(x) {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+fn encode_rle(col: &[f32], out: &mut Vec<u8>) {
+    out.push(TAG_RLE);
+    let nruns_pos = out.len();
+    out.extend_from_slice(&0u32.to_le_bytes());
+    let mut runs = 0u32;
+    let mut i = 0;
+    while i < col.len() {
+        let bits = col[i].to_bits();
+        let mut j = i + 1;
+        while j < col.len() && col[j].to_bits() == bits {
+            j += 1;
+        }
+        out.extend_from_slice(&((j - i) as u32).to_le_bytes());
+        out.extend_from_slice(&bits.to_le_bytes());
+        runs += 1;
+        i = j;
+    }
+    out[nruns_pos..nruns_pos + 4].copy_from_slice(&runs.to_le_bytes());
+}
+
+/// Encode `col` under `codec` into `out` (cleared first) and return its
+/// zone-map stats. An all-zero column encodes to the empty record under
+/// every policy except forced `Raw`.
+pub(crate) fn encode_column(
+    codec: Codec,
+    col: &[f32],
+    out: &mut Vec<u8>,
+) -> ColumnStats {
+    out.clear();
+    let (stats, runs) = scan(col);
+    let zero = stats.nnz == 0;
+    match codec {
+        Codec::Raw => encode_raw(col, out),
+        Codec::Sparse => {
+            if !zero {
+                encode_sparse(col, out);
+            }
+        }
+        Codec::Rle => {
+            if !zero {
+                encode_rle(col, out);
+            }
+        }
+        Codec::Auto => {
+            if !zero {
+                let (r, s, l) = (
+                    raw_size(col.len()),
+                    sparse_size(col.len(), stats.nnz),
+                    rle_size(runs),
+                );
+                if r <= s && r <= l {
+                    encode_raw(col, out);
+                } else if s <= l {
+                    encode_sparse(col, out);
+                } else {
+                    encode_rle(col, out);
+                }
+            }
+        }
+    }
+    debug_assert!(
+        codec != Codec::Sparse || out.is_empty() || out.len() == sparse_size(col.len(), stats.nnz)
+    );
+    stats
+}
+
+/// Decode a record produced by [`encode_column`] into `out`
+/// (`out.len() == k`). The empty record is the implicit all-zero column.
+/// Parses from the front and tolerates trailing slack, so a record read
+/// with a stale (longer) length from a concurrent-version window still
+/// decodes its own payload correctly.
+pub(crate) fn decode_column(bytes: &[u8], out: &mut [f32]) {
+    if bytes.is_empty() {
+        out.fill(0.0);
+        return;
+    }
+    let k = out.len();
+    let payload = &bytes[1..];
+    match bytes[0] {
+        TAG_RAW => {
+            assert!(payload.len() >= 4 * k, "truncated raw column record");
+            for (dst, chunk) in out.iter_mut().zip(payload.chunks_exact(4)) {
+                *dst = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+        }
+        TAG_SPARSE => {
+            let bm_len = k.div_ceil(8);
+            assert!(payload.len() >= bm_len, "truncated sparse bitmap");
+            let (bitmap, weights) = payload.split_at(bm_len);
+            out.fill(0.0);
+            let mut cursor = 0usize;
+            for (i, slot) in out.iter_mut().enumerate() {
+                if bitmap[i / 8] & (1 << (i % 8)) != 0 {
+                    let b = weights
+                        .get(cursor..cursor + 4)
+                        .expect("truncated sparse weights");
+                    *slot = f32::from_le_bytes(b.try_into().unwrap());
+                    cursor += 4;
+                }
+            }
+        }
+        TAG_RLE => {
+            assert!(payload.len() >= 4, "truncated rle header");
+            let n_runs =
+                u32::from_le_bytes(payload[..4].try_into().unwrap()) as usize;
+            let mut pos = 4usize;
+            let mut filled = 0usize;
+            for _ in 0..n_runs {
+                let rec = payload
+                    .get(pos..pos + 8)
+                    .expect("truncated rle run");
+                let count =
+                    u32::from_le_bytes(rec[..4].try_into().unwrap()) as usize;
+                let x =
+                    f32::from_bits(u32::from_le_bytes(rec[4..].try_into().unwrap()));
+                out[filled..filled + count].fill(x);
+                filled += count;
+                pos += 8;
+            }
+            assert_eq!(filled, k, "rle runs do not cover the column");
+        }
+        t => panic!("corrupt phi column record: unknown codec tag {t}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(codec: Codec, col: &[f32]) -> (Vec<f32>, usize, ColumnStats) {
+        let mut bytes = Vec::new();
+        let stats = encode_column(codec, col, &mut bytes);
+        let mut back = vec![7.0f32; col.len()];
+        decode_column(&bytes, &mut back);
+        (back, bytes.len(), stats)
+    }
+
+    fn assert_bit_exact(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "index {i}: {x:?} vs {y:?}");
+        }
+    }
+
+    #[test]
+    fn codec_round_trip_dense_column_every_codec() {
+        let col: Vec<f32> = (0..97).map(|i| (i as f32) * 0.25 + 0.125).collect();
+        for codec in Codec::all() {
+            let (back, _, st) = round_trip(codec, &col);
+            assert_bit_exact(&col, &back);
+            assert_eq!(st.nnz, 97);
+            assert_eq!(st.max, 96.0 * 0.25 + 0.125);
+        }
+    }
+
+    #[test]
+    fn codec_round_trip_all_zero_column_every_codec() {
+        let col = vec![0.0f32; 64];
+        for codec in Codec::all() {
+            let (back, len, st) = round_trip(codec, &col);
+            assert_bit_exact(&col, &back);
+            assert_eq!(st, ColumnStats { nnz: 0, max: 0.0 });
+            if codec == Codec::Raw {
+                assert_eq!(len, 1 + 64 * 4, "forced raw always writes dense");
+            } else {
+                assert_eq!(len, 0, "all-zero must be the implicit record");
+            }
+        }
+    }
+
+    #[test]
+    fn codec_round_trip_special_payloads_bit_exact() {
+        // -0.0, NaN (two payloads), subnormals and infinities must all
+        // survive bit-for-bit; +0.0 must stay implicit.
+        let col = vec![
+            0.0f32,
+            -0.0,
+            f32::NAN,
+            f32::from_bits(0x7fc0_1234), // NaN with a payload
+            f32::MIN_POSITIVE / 8.0,     // subnormal
+            -f32::MIN_POSITIVE / 16.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            1.5,
+            0.0,
+        ];
+        for codec in Codec::all() {
+            let (back, _, st) = round_trip(codec, &col);
+            assert_bit_exact(&col, &back);
+            // +0.0 twice -> 8 stored weights; max ignores NaN.
+            assert_eq!(st.nnz, 8);
+            assert_eq!(st.max, f32::INFINITY);
+        }
+    }
+
+    #[test]
+    fn codec_sparse_beats_raw_on_sparse_columns() {
+        let mut col = vec![0.0f32; 256];
+        col[3] = 1.0;
+        col[97] = 2.5;
+        let mut sparse = Vec::new();
+        let mut raw = Vec::new();
+        encode_column(Codec::Sparse, &col, &mut sparse);
+        encode_column(Codec::Raw, &col, &mut raw);
+        assert!(sparse.len() < raw.len() / 3);
+        // Auto must therefore not pick raw.
+        let mut auto = Vec::new();
+        encode_column(Codec::Auto, &col, &mut auto);
+        assert!(auto.len() <= sparse.len());
+    }
+
+    #[test]
+    fn codec_rle_wins_on_constant_runs() {
+        let mut col = vec![2.0f32; 300];
+        col[0] = 1.0;
+        let mut rle = Vec::new();
+        let mut sparse = Vec::new();
+        encode_column(Codec::Rle, &col, &mut rle);
+        encode_column(Codec::Sparse, &col, &mut sparse);
+        assert_eq!(rle.len(), 1 + 4 + 2 * 8, "two runs");
+        assert!(rle.len() < sparse.len());
+        let mut auto = Vec::new();
+        encode_column(Codec::Auto, &col, &mut auto);
+        assert_eq!(auto.len(), rle.len());
+        assert_eq!(auto[0], TAG_RLE);
+    }
+
+    #[test]
+    fn codec_auto_picks_smallest_and_is_self_describing() {
+        let mut rng = crate::util::Rng::new(42);
+        for k in [1usize, 7, 8, 9, 64, 129] {
+            for density_pct in [0u64, 5, 25, 60, 100] {
+                let col: Vec<f32> = (0..k)
+                    .map(|_| {
+                        if rng.below(100) < density_pct as usize {
+                            rng.next_f32() * 10.0
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                let mut auto = Vec::new();
+                encode_column(Codec::Auto, &col, &mut auto);
+                for forced in [Codec::Raw, Codec::Sparse, Codec::Rle] {
+                    let mut b = Vec::new();
+                    encode_column(forced, &col, &mut b);
+                    // Forced raw is never empty, so compare only real
+                    // encodings; auto includes the empty option.
+                    if !b.is_empty() || forced != Codec::Raw {
+                        assert!(
+                            auto.len() <= b.len(),
+                            "auto {} > {} {:?} (k={k} d={density_pct})",
+                            auto.len(),
+                            b.len(),
+                            forced
+                        );
+                    }
+                }
+                let mut back = vec![3.0f32; k];
+                decode_column(&auto, &mut back);
+                assert_bit_exact(&col, &back);
+            }
+        }
+    }
+
+    #[test]
+    fn codec_round_trip_randomized_sparsity_sweep() {
+        // Property-style sweep: random columns at random sparsity levels,
+        // with occasional special bit patterns mixed in, must round-trip
+        // bit-exactly under every codec.
+        let mut rng = crate::util::Rng::new(777);
+        let specials = [
+            f32::NAN,
+            -0.0,
+            f32::from_bits(1), // smallest subnormal
+            f32::INFINITY,
+            f32::MAX,
+        ];
+        for trial in 0..200 {
+            let k = 1 + rng.below(200);
+            let density = rng.below(101);
+            let col: Vec<f32> = (0..k)
+                .map(|_| {
+                    if rng.below(100) >= density {
+                        0.0
+                    } else if rng.below(20) == 0 {
+                        specials[rng.below(specials.len())]
+                    } else {
+                        rng.next_f32() * 100.0
+                    }
+                })
+                .collect();
+            for codec in Codec::all() {
+                let (back, _, st) = round_trip(codec, &col);
+                assert_bit_exact(&col, &back);
+                let want_nnz =
+                    col.iter().filter(|x| x.to_bits() != 0).count() as u32;
+                assert_eq!(st.nnz, want_nnz, "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn codec_parse_and_names_round_trip() {
+        for codec in Codec::all() {
+            assert_eq!(Codec::parse(codec.name()), Some(codec));
+            assert_eq!(Codec::from_header_tag(codec.header_tag()), Some(codec));
+        }
+        assert_eq!(Codec::parse("zstd"), None);
+        assert_eq!(Codec::from_header_tag(9), None);
+        assert_eq!(Codec::default(), Codec::Auto);
+    }
+}

@@ -14,7 +14,10 @@
 //!   buffer, write-back caching, I/O accounting and restart recovery
 //!   (the fault-tolerance property of §3.2).
 
+pub mod codec;
 pub mod paged;
+
+pub use codec::{Codec, ColumnStats};
 
 /// I/O accounting used by the Table 5 experiment and the coordinator's
 /// metrics.
@@ -43,6 +46,17 @@ pub struct IoStats {
     /// path. Timing-dependent upper-bounded by the logical write count
     /// (superseded versions of a column may be skipped).
     pub wb_writes: u64,
+    /// Decoded (dense `K×4`-byte) volume of actual backing-store
+    /// transfers, on both the sync and async paths. Cache hits of any
+    /// kind (hot buffer, pending-write map, prefetch cache) count in
+    /// neither byte counter — so `disk_bytes / logical_bytes` is exactly
+    /// the compression ratio of real disk traffic. Stays zero for
+    /// in-memory stores.
+    pub logical_bytes: u64,
+    /// Encoded (on-disk record) volume of those same transfers. An
+    /// implicit all-zero column transfers 0 disk bytes (the zone-map
+    /// skip) while still counting its logical volume.
+    pub disk_bytes: u64,
 }
 
 /// A detached, read-only snapshot of a set of columns — the shared-read
@@ -202,6 +216,16 @@ pub trait PhiColumnStore {
 
     /// Cumulative I/O counters.
     fn io_stats(&self) -> IoStats;
+
+    /// Zone-map stats (nnz, max weight) for column `w` if the backend
+    /// can answer *exactly* without decoding the column — `None` means
+    /// "unknown, read the column" (in-memory stores, out-of-range words,
+    /// or a paged column whose freshest state sits unencoded in the hot
+    /// buffer). Never an approximation: callers use this to skip cold
+    /// columns outright.
+    fn column_stats(&self, _w: usize) -> Option<ColumnStats> {
+        None
+    }
 
     /// Export the dense matrix (evaluation / checkpointing).
     fn export_dense(&mut self) -> crate::em::PhiStats {

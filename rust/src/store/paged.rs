@@ -1,15 +1,25 @@
 //! Disk-backed paged column store for `phi_hat_{K×W}` with a hot-word
-//! buffer — the parameter-streaming engine of §3.2.
+//! buffer — the parameter-streaming engine of §3.2, with compressed
+//! columnar storage.
 //!
 //! Layout of the backing file (`<path>`):
-//!   [magic u64][k u64][n_words u64]  then column `w` at byte offset
-//!   `HEADER + w*k*4`, little-endian f32.
+//!   [magic u64][k u64][n_words u64][data_end u64][codec u64]
+//! followed by variable-length column records allocated by a bump
+//! allocator (`data_end` is the high-water mark). Each record is
+//! `[tag u8][payload]`, one of the self-describing encodings in
+//! [`super::codec`]; a record longer than its column's current encoding
+//! keeps its slack so in-place overwrites are the common case, and a
+//! column that outgrows its extent is relocated to the end (the old
+//! extent is abandoned — bytes-on-disk is an honest high-water metric).
 //!
-//! The paper stores parameters in HDF5; we use a fixed-stride binary file,
-//! which preserves the properties the paper relies on (one sequential I/O
-//! run per column, restartability/fault tolerance, O(buffer) memory) with
-//! zero dependency weight.  A sidecar `<path>.meta.json` carries the
-//! algorithm state needed for restart (step counter, phisum), written by
+//! A sidecar `<path>.idx` persists the column directory: per column the
+//! extent `(offset, cap)`, the live record length `len` (0 = the
+//! implicit all-zero column: **no disk bytes, no disk op, no decode** —
+//! the zone-map skip), and zone-map stats `(nnz, max)` so eval-view
+//! construction and the fold-in scheduler can classify columns without
+//! decoding them. The directory is owned by the foreground and written
+//! at every [`PagedPhi::flush`]; the `<path>.meta` sidecar carries the
+//! algorithm state for restart (step counter, phisum), written by
 //! [`PagedPhi::checkpoint`].
 //!
 //! Buffering policy (Fig. 4 line 2): at every minibatch the coordinator
@@ -30,16 +40,36 @@
 //!   while the current minibatch computes, so the stage-time snapshot
 //!   reads become cache hits (`IoStats::prefetch_hits`) instead of
 //!   blocking disk reads.
-//! * **Write-behind** — column writes land in a versioned pending map and
-//!   are flushed by the thread off the critical path
-//!   (`IoStats::wb_writes`); reads are always served freshest-first
-//!   (pending write → prefetch cache → disk).
+//! * **Write-behind** — column writes are *encoded and placed*
+//!   (directory update + extent allocation) on the foreground, then land
+//!   in a versioned pending map and are flushed by the thread off the
+//!   critical path (`IoStats::wb_writes`); reads are always served
+//!   freshest-first (pending write → prefetch cache → disk).
+//!
+//! The daemon never allocates: every request carries the resolved
+//! `(offset, len)`. That split keeps the variable-length format safe
+//! under overlap — the foreground is the only directory mutator, the
+//! daemon is the only file writer, and FIFO ordering plus the pending
+//! map's shadowing guarantee a read never observes a stale record.
 //!
 //! Because the foreground sends requests over a FIFO channel and blocks on
 //! its own reads, the visible read results are exactly the synchronous
 //! ones — overlap changes *when* I/O happens, never *what* a read sees.
 //! With async I/O off (the default), behavior and [`IoStats`] are
 //! bit-identical to the original synchronous store.
+//!
+//! # Byte accounting (`IoStats::logical_bytes` / `IoStats::disk_bytes`)
+//!
+//! Both counters tick at the same events — actual transfers between the
+//! store and its backing file (including the zero-byte implicit-zero
+//! "transfers" that replace them): sync reads/writes, daemon prefetch
+//! loads and write-behind flushes, and daemon-served disk reads.
+//! Cache hits of any kind (hot buffer, pending-write map, prefetch
+//! cache) count in *neither*, and a prefetch satisfied by copying a
+//! pending write moves no disk bytes so it also counts in neither — that
+//! consistency is what makes `disk_bytes / logical_bytes` the exact
+//! compression ratio of real disk traffic on both the sync and async
+//! paths.
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
@@ -49,34 +79,68 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 
+use super::codec::{self, Codec, ColumnStats};
 use super::{IoStats, PhiColumnStore};
 
-const MAGIC: u64 = 0xF0E3_14DA_0001;
-const HEADER_BYTES: u64 = 24;
+const MAGIC: u64 = 0xF0E3_14DA_0002;
+const HEADER_BYTES: u64 = 40;
+const IDX_MAGIC: u64 = 0xF0E3_14DA_1D01;
+const IDX_HEADER_BYTES: u64 = 16;
+const DIR_ENT_BYTES: usize = 24;
 
-fn col_offset(k: usize, w: usize) -> u64 {
-    HEADER_BYTES + (w * k * 4) as u64
+/// Column directory entry: extent + live record + zone-map stats.
+/// `len == 0` is the implicit all-zero column (no bytes on disk).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+struct DirEnt {
+    offset: u64,
+    cap: u32,
+    len: u32,
+    nnz: u32,
+    max: f32,
 }
 
-/// Uncounted column read used by both the foreground (sync mode) and the
-/// background I/O thread.
-fn raw_read_col(file: &mut File, k: usize, w: usize, out: &mut [f32]) {
-    debug_assert_eq!(out.len(), k);
-    file.seek(SeekFrom::Start(col_offset(k, w))).expect("seek");
-    let bytes = unsafe {
-        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4)
-    };
-    file.read_exact(bytes).expect("column read");
+/// `<path>.idx` — appended, not `with_extension` (which would collide
+/// `phi.bin` and `phi.idx` across unrelated stores sharing a stem).
+fn idx_path(path: &Path) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".idx");
+    s.into()
 }
 
-/// Uncounted column write, shared like [`raw_read_col`].
-fn raw_write_col(file: &mut File, k: usize, w: usize, data: &[f32]) {
-    debug_assert_eq!(data.len(), k);
-    file.seek(SeekFrom::Start(col_offset(k, w))).expect("seek");
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-    };
-    file.write_all(bytes).expect("column write");
+/// Extent size for a fresh allocation: 25% growth slack, rounded up to
+/// 64 bytes, so columns whose encodings grow as training adds mass
+/// overwrite in place instead of relocating every write.
+fn cap_for(len: usize) -> u32 {
+    (len + len / 4).div_ceil(64) as u32 * 64
+}
+
+/// Positioned record read + decode, shared by the foreground (sync mode)
+/// and the background I/O thread. `len == 0` never touches the file.
+fn read_record_into(
+    file: &mut File,
+    offset: u64,
+    len: u32,
+    bbuf: &mut Vec<u8>,
+    out: &mut [f32],
+) {
+    if len == 0 {
+        out.fill(0.0);
+        return;
+    }
+    bbuf.resize(len as usize, 0);
+    file.seek(SeekFrom::Start(offset)).expect("seek");
+    file.read_exact(bbuf).expect("column record read");
+    codec::decode_column(bbuf, out);
+}
+
+/// Positioned record write, shared like [`read_record_into`]. The empty
+/// record (implicit zero) is directory-only: nothing touches the file.
+fn write_record(file: &mut File, offset: u64, bytes: &[u8]) {
+    if bytes.is_empty() {
+        return;
+    }
+    file.seek(SeekFrom::Start(offset)).expect("seek");
+    file.write_all(bytes).expect("column record write");
 }
 
 /// Where a routed (async-mode) column read was served from.
@@ -87,14 +151,36 @@ enum ReadSource {
     WriteBuffer,
 }
 
+/// A column staged for write-behind: the decoded value (serves foreground
+/// reads), the encoded record and its placed extent offset (what the
+/// daemon writes).
+struct PendingWrite {
+    version: u64,
+    col: Vec<f32>,
+    bytes: Vec<u8>,
+    offset: u64,
+}
+
+/// A prefetch target with its record location resolved at enqueue time
+/// (the daemon has no directory access).
+struct PrefetchItem {
+    w: u32,
+    offset: u64,
+    len: u32,
+}
+
 /// Requests to the background I/O thread. The channel is FIFO and the
 /// foreground is the only sender, which is what makes the overlapped mode
 /// deterministic: a read queued after a write signal for the same column
-/// always observes the flushed state.
+/// always observes the flushed state, and a request's resolved
+/// `(offset, len)` can never be overtaken by a later reallocation (any
+/// fresher version sits in the pending map, which is checked first).
 enum IoReq {
     /// Synchronous read round-trip (the caller blocks on `resp`).
     Read {
-        w: usize,
+        w: u32,
+        offset: u64,
+        len: u32,
         resp: SyncSender<(Vec<f32>, ReadSource)>,
     },
     /// A pending write was enqueued; flush it if `version` is still
@@ -102,7 +188,7 @@ enum IoReq {
     /// the column).
     WriteSignal { w: u32, version: u64 },
     /// Load these columns into the prefetch cache.
-    Prefetch(Vec<u32>),
+    Prefetch(Vec<PrefetchItem>),
     /// Flush every pending write, fsync, then ack with the fsync result
     /// (so an async-mode checkpoint surfaces durability failures exactly
     /// like the synchronous path).
@@ -113,9 +199,9 @@ enum IoReq {
 /// State shared between the store and its background I/O thread.
 #[derive(Default)]
 struct AsyncShared {
-    /// Write-behind buffer: word -> (version, column). Freshest data for
-    /// a column not in the hot buffer.
-    pending: Mutex<HashMap<u32, (u64, Vec<f32>)>>,
+    /// Write-behind buffer: word -> pending write. Freshest data for a
+    /// column not in the hot buffer.
+    pending: Mutex<HashMap<u32, PendingWrite>>,
     /// Prefetch cache: columns staged ahead of use. Entries are served by
     /// clone, invalidated whenever the column is written, and bounded by
     /// the size cap in the prefetch handler.
@@ -124,6 +210,12 @@ struct AsyncShared {
     prefetched_cols: AtomicU64,
     /// Columns flushed by the write-behind path (background writes).
     wb_writes: AtomicU64,
+    /// Decoded bytes of the daemon's own disk transfers (prefetch loads +
+    /// write-behind flushes) — folded into `IoStats::logical_bytes`.
+    bg_logical_bytes: AtomicU64,
+    /// Encoded bytes of those same transfers — folded into
+    /// `IoStats::disk_bytes`.
+    bg_disk_bytes: AtomicU64,
 }
 
 struct AsyncIo {
@@ -138,24 +230,22 @@ struct AsyncIo {
 /// The background I/O loop: sole owner of disk traffic while async mode
 /// is on.
 fn io_daemon(mut file: File, k: usize, rx: Receiver<IoReq>, shared: Arc<AsyncShared>) {
+    let logical = (k * 4) as u64;
     let mut buf = vec![0.0f32; k];
+    let mut bbuf: Vec<u8> = Vec::new();
     for req in rx {
         match req {
-            IoReq::Read { w, resp } => {
+            IoReq::Read { w, offset, len, resp } => {
                 let from_pending = shared
                     .pending
                     .lock()
                     .unwrap()
-                    .get(&(w as u32))
-                    .map(|(_, col)| col.clone());
+                    .get(&w)
+                    .map(|p| p.col.clone());
                 let reply = if let Some(col) = from_pending {
                     (col, ReadSource::WriteBuffer)
-                } else if let Some(col) = shared
-                    .prefetched
-                    .lock()
-                    .unwrap()
-                    .get(&(w as u32))
-                    .cloned()
+                } else if let Some(col) =
+                    shared.prefetched.lock().unwrap().get(&w).cloned()
                 {
                     // Served by CLONE, not removal: a mid-run evaluation
                     // pass reads many of the same columns the prefetcher
@@ -165,19 +255,27 @@ fn io_daemon(mut file: File, k: usize, rx: Receiver<IoReq>, shared: Arc<AsyncSha
                     // invalidation or the size cap instead.
                     (col, ReadSource::Prefetched)
                 } else {
-                    raw_read_col(&mut file, k, w, &mut buf);
+                    // Byte counting happens on the foreground, which
+                    // learns the source (and knows `len`) from the reply.
+                    read_record_into(&mut file, offset, len, &mut bbuf, &mut buf);
                     (buf.clone(), ReadSource::Disk)
                 };
                 let _ = resp.send(reply);
             }
             IoReq::WriteSignal { w, version } => {
-                let col = match shared.pending.lock().unwrap().get(&w) {
-                    Some((v, col)) if *v == version => Some(col.clone()),
+                let job = match shared.pending.lock().unwrap().get(&w) {
+                    Some(p) if p.version == version => {
+                        Some((p.bytes.clone(), p.offset))
+                    }
                     _ => None, // superseded by a newer write
                 };
-                if let Some(col) = col {
-                    raw_write_col(&mut file, k, w as usize, &col);
+                if let Some((bytes, offset)) = job {
+                    write_record(&mut file, offset, &bytes);
                     shared.wb_writes.fetch_add(1, Ordering::Relaxed);
+                    shared.bg_logical_bytes.fetch_add(logical, Ordering::Relaxed);
+                    shared
+                        .bg_disk_bytes
+                        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
                     // Invalidation order matters for the foreground fast
                     // path (pending first, then prefetched): the stale
                     // prefetch copy must be gone BEFORE the pending entry
@@ -185,43 +283,52 @@ fn io_daemon(mut file: File, k: usize, rx: Receiver<IoReq>, shared: Arc<AsyncSha
                     shared.prefetched.lock().unwrap().remove(&w);
                     {
                         let mut pending = shared.pending.lock().unwrap();
-                        if matches!(pending.get(&w), Some((v, _)) if *v == version)
+                        if matches!(pending.get(&w), Some(p) if p.version == version)
                         {
                             pending.remove(&w);
                         }
                     }
                 }
             }
-            IoReq::Prefetch(words) => {
+            IoReq::Prefetch(items) => {
                 {
                     // The cache is a hint; keep it bounded even if the
                     // caller never consumes some entries.
                     let mut pf = shared.prefetched.lock().unwrap();
-                    if pf.len() > 4 * words.len() + 1024 {
+                    if pf.len() > 4 * items.len() + 1024 {
                         pf.clear();
                     }
                 }
-                for w in words {
-                    if shared.prefetched.lock().unwrap().contains_key(&w) {
+                for it in items {
+                    if shared.prefetched.lock().unwrap().contains_key(&it.w) {
                         continue;
                     }
                     // Freshest-first, same as Read: a pending write beats
-                    // the disk copy.
+                    // the disk copy. A pending-map copy moves no disk
+                    // bytes, so it counts in neither byte counter.
                     let from_pending = shared
                         .pending
                         .lock()
                         .unwrap()
-                        .get(&w)
-                        .map(|(_, col)| col.clone());
+                        .get(&it.w)
+                        .map(|p| p.col.clone());
                     let col = match from_pending {
                         Some(col) => col,
                         None => {
-                            raw_read_col(&mut file, k, w as usize, &mut buf);
+                            read_record_into(
+                                &mut file, it.offset, it.len, &mut bbuf, &mut buf,
+                            );
+                            shared
+                                .bg_logical_bytes
+                                .fetch_add(logical, Ordering::Relaxed);
+                            shared
+                                .bg_disk_bytes
+                                .fetch_add(it.len as u64, Ordering::Relaxed);
                             buf.clone()
                         }
                     };
                     shared.prefetched_cols.fetch_add(1, Ordering::Relaxed);
-                    shared.prefetched.lock().unwrap().insert(w, col);
+                    shared.prefetched.lock().unwrap().insert(it.w, col);
                 }
             }
             IoReq::DrainAndSync { ack } => {
@@ -232,16 +339,20 @@ fn io_daemon(mut file: File, k: usize, rx: Receiver<IoReq>, shared: Arc<AsyncSha
                         .unwrap()
                         .iter()
                         .next()
-                        .map(|(w, (v, col))| (*w, *v, col.clone()));
-                    let Some((w, version, col)) = next else { break };
-                    raw_write_col(&mut file, k, w as usize, &col);
+                        .map(|(w, p)| (*w, p.version, p.bytes.clone(), p.offset));
+                    let Some((w, version, bytes, offset)) = next else { break };
+                    write_record(&mut file, offset, &bytes);
                     shared.wb_writes.fetch_add(1, Ordering::Relaxed);
+                    shared.bg_logical_bytes.fetch_add(logical, Ordering::Relaxed);
+                    shared
+                        .bg_disk_bytes
+                        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
                     // Same invalidation order as WriteSignal: prefetched
                     // copy first, then the shadowing pending entry.
                     shared.prefetched.lock().unwrap().remove(&w);
                     {
                         let mut pending = shared.pending.lock().unwrap();
-                        if matches!(pending.get(&w), Some((v, _)) if *v == version)
+                        if matches!(pending.get(&w), Some(p) if p.version == version)
                         {
                             pending.remove(&w);
                         }
@@ -260,6 +371,14 @@ pub struct PagedPhi {
     n_words: usize,
     file: File,
     path: PathBuf,
+    /// Write-time encoding policy (reads dispatch on per-record tags).
+    codec: Codec,
+    /// Column directory: extents + live lengths + zone-map stats. Owned
+    /// and mutated exclusively by the foreground; persisted to
+    /// `<path>.idx` on flush.
+    dir: Vec<DirEnt>,
+    /// Bump-allocator high-water mark (absolute file offset).
+    data_end: u64,
     /// Hot-word buffer: local slot per hot word, write-back.
     buffer: Vec<f32>,
     /// word id -> slot index in `buffer`.
@@ -272,50 +391,71 @@ pub struct PagedPhi {
     stats: IoStats,
     /// Scratch for non-buffered column visits.
     scratch: Vec<f32>,
+    /// Encode scratch (reused across writes).
+    enc_buf: Vec<u8>,
+    /// Decode scratch (reused across sync reads).
+    byte_scratch: Vec<u8>,
     /// Background prefetch/write-behind machinery; `None` = synchronous.
     async_io: Option<AsyncIo>,
 }
 
 impl PagedPhi {
     /// Create (or overwrite) a store of `n_words` zero columns with a hot
-    /// buffer of `buffer_bytes`.
+    /// buffer of `buffer_bytes`, writing columns under [`Codec::Auto`].
     pub fn create(
         path: &Path,
         k: usize,
         n_words: usize,
         buffer_bytes: usize,
     ) -> anyhow::Result<Self> {
-        let mut file = OpenOptions::new()
+        Self::create_with_codec(path, k, n_words, buffer_bytes, Codec::Auto)
+    }
+
+    /// [`Self::create`] with an explicit write codec (`--phi-codec`).
+    pub fn create_with_codec(
+        path: &Path,
+        k: usize,
+        n_words: usize,
+        buffer_bytes: usize,
+        codec: Codec,
+    ) -> anyhow::Result<Self> {
+        let file = OpenOptions::new()
             .read(true)
             .write(true)
             .create(true)
             .truncate(true)
             .open(path)?;
-        let mut header = [0u8; HEADER_BYTES as usize];
-        header[..8].copy_from_slice(&MAGIC.to_le_bytes());
-        header[8..16].copy_from_slice(&(k as u64).to_le_bytes());
-        header[16..24].copy_from_slice(&(n_words as u64).to_le_bytes());
-        file.write_all(&header)?;
-        // Extend to full size with zeros without materializing K*W memory.
-        file.set_len(HEADER_BYTES + (k * n_words * 4) as u64)?;
-        let max_slots = (buffer_bytes / (k * 4)).max(1);
-        Ok(Self {
+        let mut this = Self {
             k,
             n_words,
             file,
             path: path.to_path_buf(),
+            codec,
+            dir: vec![DirEnt::default(); n_words],
+            data_end: HEADER_BYTES,
             buffer: Vec::new(),
             slot_of: std::collections::HashMap::new(),
             word_of_slot: Vec::new(),
             dirty: Vec::new(),
-            max_slots,
+            max_slots: (buffer_bytes / (k * 4)).max(1),
             stats: IoStats::default(),
             scratch: vec![0.0; k],
+            enc_buf: Vec::new(),
+            byte_scratch: Vec::new(),
             async_io: None,
-        })
+        };
+        this.write_header()?;
+        // Seed the directory sidecar: header + `set_len` zeros, which IS
+        // the all-default (all columns implicitly zero) directory.
+        let mut idx = File::create(idx_path(path))?;
+        idx.write_all(&IDX_MAGIC.to_le_bytes())?;
+        idx.write_all(&(n_words as u64).to_le_bytes())?;
+        idx.set_len(IDX_HEADER_BYTES + (n_words * DIR_ENT_BYTES) as u64)?;
+        Ok(this)
     }
 
-    /// Reopen an existing store (restart / fault recovery).
+    /// Reopen an existing store (restart / fault recovery). The write
+    /// codec is restored from the header.
     pub fn open(path: &Path, buffer_bytes: usize) -> anyhow::Result<Self> {
         let mut file = OpenOptions::new().read(true).write(true).open(path)?;
         let mut header = [0u8; HEADER_BYTES as usize];
@@ -325,25 +465,116 @@ impl PagedPhi {
         let k = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
         let n_words =
             u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
-        let max_slots = (buffer_bytes / (k * 4)).max(1);
+        let data_end =
+            u64::from_le_bytes(header[24..32].try_into().unwrap()).max(HEADER_BYTES);
+        let codec_tag = u64::from_le_bytes(header[32..40].try_into().unwrap());
+        let codec = Codec::from_header_tag(codec_tag).ok_or_else(|| {
+            anyhow::anyhow!("unknown store codec tag {codec_tag} in {path:?}")
+        })?;
+        let dir = Self::read_dir_file(path, n_words)?;
         Ok(Self {
             k,
             n_words,
             file,
             path: path.to_path_buf(),
+            codec,
+            dir,
+            data_end,
             buffer: Vec::new(),
             slot_of: std::collections::HashMap::new(),
             word_of_slot: Vec::new(),
             dirty: Vec::new(),
-            max_slots,
+            max_slots: (buffer_bytes / (k * 4)).max(1),
             stats: IoStats::default(),
             scratch: vec![0.0; k],
+            enc_buf: Vec::new(),
+            byte_scratch: Vec::new(),
             async_io: None,
         })
     }
 
+    fn read_dir_file(path: &Path, n_words: usize) -> anyhow::Result<Vec<DirEnt>> {
+        let ip = idx_path(path);
+        let bytes = std::fs::read(&ip).map_err(|e| {
+            anyhow::anyhow!("column directory {ip:?} unreadable: {e}")
+        })?;
+        anyhow::ensure!(
+            bytes.len() >= IDX_HEADER_BYTES as usize,
+            "column directory {ip:?} truncated"
+        );
+        let magic = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+        anyhow::ensure!(magic == IDX_MAGIC, "not a column directory: {ip:?}");
+        let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        anyhow::ensure!(
+            bytes.len() >= IDX_HEADER_BYTES as usize + n * DIR_ENT_BYTES,
+            "column directory {ip:?} truncated"
+        );
+        // Capacity growth updates the data header immediately but the
+        // directory only at flush; tolerate a shorter directory by
+        // padding with implicit-zero entries.
+        let mut dir = vec![DirEnt::default(); n_words];
+        for (i, ent) in dir.iter_mut().enumerate().take(n.min(n_words)) {
+            let at = IDX_HEADER_BYTES as usize + i * DIR_ENT_BYTES;
+            let e = &bytes[at..at + DIR_ENT_BYTES];
+            ent.offset = u64::from_le_bytes(e[..8].try_into().unwrap());
+            ent.cap = u32::from_le_bytes(e[8..12].try_into().unwrap());
+            ent.len = u32::from_le_bytes(e[12..16].try_into().unwrap());
+            ent.nnz = u32::from_le_bytes(e[16..20].try_into().unwrap());
+            ent.max = f32::from_le_bytes(e[20..24].try_into().unwrap());
+        }
+        Ok(dir)
+    }
+
+    fn write_header(&mut self) -> std::io::Result<()> {
+        let mut h = [0u8; HEADER_BYTES as usize];
+        h[..8].copy_from_slice(&MAGIC.to_le_bytes());
+        h[8..16].copy_from_slice(&(self.k as u64).to_le_bytes());
+        h[16..24].copy_from_slice(&(self.n_words as u64).to_le_bytes());
+        h[24..32].copy_from_slice(&self.data_end.to_le_bytes());
+        h[32..40].copy_from_slice(&self.codec.header_tag().to_le_bytes());
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.write_all(&h)
+    }
+
+    fn write_dir(&self) -> anyhow::Result<()> {
+        let mut buf =
+            Vec::with_capacity(IDX_HEADER_BYTES as usize + self.dir.len() * DIR_ENT_BYTES);
+        buf.extend_from_slice(&IDX_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&(self.dir.len() as u64).to_le_bytes());
+        for e in &self.dir {
+            buf.extend_from_slice(&e.offset.to_le_bytes());
+            buf.extend_from_slice(&e.cap.to_le_bytes());
+            buf.extend_from_slice(&e.len.to_le_bytes());
+            buf.extend_from_slice(&e.nnz.to_le_bytes());
+            buf.extend_from_slice(&e.max.to_le_bytes());
+        }
+        std::fs::write(idx_path(&self.path), buf)?;
+        Ok(())
+    }
+
+    /// Persist the header + column directory (called under flush, after
+    /// all record data is on disk).
+    fn persist_metadata(&mut self) -> anyhow::Result<()> {
+        self.write_header()?;
+        self.write_dir()?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+
     pub fn path(&self) -> &Path {
         &self.path
+    }
+
+    /// The write-time encoding policy this store was created/reopened with.
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Bytes of column-record storage allocated in the backing file
+    /// (bump-allocator high-water mark, excluding the header) — the
+    /// bytes-on-disk metric the bench trajectory tracks per codec.
+    pub fn data_bytes_on_disk(&self) -> u64 {
+        self.data_end - HEADER_BYTES
     }
 
     pub fn max_buffered_columns(&self) -> usize {
@@ -359,34 +590,76 @@ impl PagedPhi {
         self.async_io.is_some()
     }
 
+    /// Encode `data` under the store codec, place the record (in-place
+    /// overwrite when it fits the column's extent, bump-allocate +
+    /// relocate otherwise) and update the directory entry + zone-map
+    /// stats. The encoded record is left in `self.enc_buf`; returns the
+    /// record's file offset. Counts nothing — the caller counts at the
+    /// actual transfer.
+    fn encode_and_place(&mut self, w: usize, data: &[f32]) -> u64 {
+        let mut buf = std::mem::take(&mut self.enc_buf);
+        let st = codec::encode_column(self.codec, data, &mut buf);
+        let len = buf.len() as u32;
+        let ent = &mut self.dir[w];
+        if len > ent.cap {
+            ent.offset = self.data_end;
+            ent.cap = cap_for(buf.len());
+            self.data_end += ent.cap as u64;
+        }
+        ent.len = len;
+        ent.nnz = st.nnz;
+        ent.max = st.max;
+        let offset = ent.offset;
+        self.enc_buf = buf;
+        offset
+    }
+
     fn read_col_from_disk(&mut self, w: usize, out: &mut [f32]) {
         self.stats.col_reads += 1;
-        raw_read_col(&mut self.file, self.k, w, out);
+        self.stats.logical_bytes += (self.k * 4) as u64;
+        let ent = self.dir[w];
+        self.stats.disk_bytes += ent.len as u64;
+        if ent.len == 0 {
+            // Zone-map skip: the directory already says all-zero.
+            out.fill(0.0);
+            return;
+        }
+        let mut bbuf = std::mem::take(&mut self.byte_scratch);
+        read_record_into(&mut self.file, ent.offset, ent.len, &mut bbuf, out);
+        self.byte_scratch = bbuf;
     }
 
     fn write_col_to_disk(&mut self, w: usize, data: &[f32]) {
         self.stats.col_writes += 1;
-        raw_write_col(&mut self.file, self.k, w, data);
+        self.stats.logical_bytes += (self.k * 4) as u64;
+        let offset = self.encode_and_place(w, data);
+        self.stats.disk_bytes += self.enc_buf.len() as u64;
+        let bytes = std::mem::take(&mut self.enc_buf);
+        write_record(&mut self.file, offset, &bytes);
+        self.enc_buf = bytes;
     }
 
     /// Route a non-hot column read: in sync mode straight off disk; in
     /// async mode freshest-first — pending write, then prefetch cache
-    /// (both served directly from the shared maps, no round trip), then a
-    /// blocking read through the I/O thread. Counts by source — a
-    /// prefetch hit is NOT a buffer miss, which is exactly the overlap
-    /// the pipeline buys.
+    /// (both served directly from the shared maps, no round trip), then
+    /// the directory's implicit-zero fast path, then a blocking read
+    /// through the I/O thread. Counts by source — a prefetch hit is NOT a
+    /// buffer miss, which is exactly the overlap the pipeline buys.
     ///
     /// The foreground fast path is safe because a stale prefetch copy
     /// only ever exists while the pending entry for the same column
     /// shadows it: writes invalidate the cache at enqueue time, and the
-    /// I/O thread re-invalidates BEFORE it drops the pending entry.
+    /// I/O thread re-invalidates BEFORE it drops the pending entry. The
+    /// directory consult is safe in the same way: the directory is
+    /// updated at write-*enqueue* time, so once the pending map misses,
+    /// the entry describes the freshest (already flushed) record.
     fn fetch_col(&mut self, w: usize, out: &mut [f32], count_miss: bool) {
         if let Some(aio) = &self.async_io {
             let served_pending = {
                 let pending = aio.shared.pending.lock().unwrap();
                 match pending.get(&(w as u32)) {
-                    Some((_, col)) => {
-                        out.copy_from_slice(col);
+                    Some(p) => {
+                        out.copy_from_slice(&p.col);
                         true
                     }
                     None => false,
@@ -410,9 +683,26 @@ impl PagedPhi {
                 self.stats.prefetch_hits += 1;
                 return;
             }
+            let ent = self.dir[w];
+            if ent.len == 0 {
+                // Zone-map skip, async flavor: no daemon round trip.
+                self.stats.col_reads += 1;
+                if count_miss {
+                    self.stats.buffer_misses += 1;
+                }
+                self.stats.logical_bytes += (self.k * 4) as u64;
+                out.fill(0.0);
+                return;
+            }
             let (tx, rx) = std::sync::mpsc::sync_channel(1);
+            let aio = self.async_io.as_ref().unwrap();
             aio.tx
-                .send(IoReq::Read { w, resp: tx })
+                .send(IoReq::Read {
+                    w: w as u32,
+                    offset: ent.offset,
+                    len: ent.len,
+                    resp: tx,
+                })
                 .expect("store I/O thread alive");
             let (col, src) = rx.recv().expect("store I/O thread reply");
             out.copy_from_slice(&col);
@@ -422,6 +712,8 @@ impl PagedPhi {
                     if count_miss {
                         self.stats.buffer_misses += 1;
                     }
+                    self.stats.logical_bytes += (self.k * 4) as u64;
+                    self.stats.disk_bytes += ent.len as u64;
                 }
                 ReadSource::Prefetched => self.stats.prefetch_hits += 1,
                 ReadSource::WriteBuffer => self.stats.buffer_hits += 1,
@@ -435,24 +727,28 @@ impl PagedPhi {
     }
 
     /// Route a non-hot column write: direct in sync mode, write-behind in
-    /// async mode (versioned pending entry + flush signal; any prefetched
-    /// copy of the column is invalidated immediately).
+    /// async mode. Either way the column is encoded and placed on the
+    /// foreground (directory update included); async mode then parks the
+    /// record in a versioned pending entry + flush signal, and any
+    /// prefetched copy of the column is invalidated immediately.
     fn put_col(&mut self, w: usize, data: &[f32]) {
-        if let Some(aio) = &mut self.async_io {
-            aio.next_version += 1;
-            let version = aio.next_version;
-            aio.shared.prefetched.lock().unwrap().remove(&(w as u32));
-            aio.shared
-                .pending
-                .lock()
-                .unwrap()
-                .insert(w as u32, (version, data.to_vec()));
-            aio.tx
-                .send(IoReq::WriteSignal { w: w as u32, version })
-                .expect("store I/O thread alive");
-        } else {
+        if self.async_io.is_none() {
             self.write_col_to_disk(w, data);
+            return;
         }
+        let offset = self.encode_and_place(w, data);
+        let bytes = self.enc_buf.clone();
+        let aio = self.async_io.as_mut().unwrap();
+        aio.next_version += 1;
+        let version = aio.next_version;
+        aio.shared.prefetched.lock().unwrap().remove(&(w as u32));
+        aio.shared.pending.lock().unwrap().insert(
+            w as u32,
+            PendingWrite { version, col: data.to_vec(), bytes, offset },
+        );
+        aio.tx
+            .send(IoReq::WriteSignal { w: w as u32, version })
+            .expect("store I/O thread alive");
     }
 
     /// Block until the I/O thread has flushed every pending write and
@@ -545,14 +841,10 @@ impl PhiColumnStore for PagedPhi {
         // in-flight background read or write.
         self.quiesce_async().expect("quiesce store I/O thread");
         self.n_words = n_words;
-        self.file
-            .set_len(HEADER_BYTES + (self.k * n_words * 4) as u64)
-            .expect("grow file");
-        // Persist the new W in the header.
-        self.file.seek(SeekFrom::Start(16)).expect("seek header");
-        self.file
-            .write_all(&(n_words as u64).to_le_bytes())
-            .expect("header write");
+        // New columns are implicit zeros: directory entries only, no file
+        // growth until something is written.
+        self.dir.resize(n_words, DirEnt::default());
+        self.write_header().expect("header write");
     }
 
     fn with_column<R>(&mut self, w: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
@@ -603,7 +895,7 @@ impl PhiColumnStore for PagedPhi {
         let to_evict: Vec<usize> = self
             .slot_of
             .iter()
-            .filter(|(w, _)| !want.contains(w))
+            .filter(|&(w, _)| !want.contains(w))
             .map(|(_, &s)| s)
             .collect();
         for slot in to_evict {
@@ -642,12 +934,18 @@ impl PhiColumnStore for PagedPhi {
     fn prefetch_columns(&mut self, words: &[u32]) {
         let Some(aio) = &self.async_io else { return };
         // Hot columns never touch the daemon, so prefetching them would
-        // only orphan cache entries.
-        let wanted: Vec<u32> = words
+        // only orphan cache entries. Record locations are resolved here
+        // (the daemon has no directory); implicit-zero columns are staged
+        // as zero-fill cache entries without a disk read.
+        let wanted: Vec<PrefetchItem> = words
             .iter()
             .copied()
             .filter(|w| {
                 (*w as usize) < self.n_words && !self.slot_of.contains_key(w)
+            })
+            .map(|w| {
+                let e = self.dir[w as usize];
+                PrefetchItem { w, offset: e.offset, len: e.len }
             })
             .collect();
         if !wanted.is_empty() {
@@ -689,6 +987,10 @@ impl PhiColumnStore for PagedPhi {
             self.stats.prefetched_cols +=
                 aio.shared.prefetched_cols.load(Ordering::Relaxed);
             self.stats.wb_writes += aio.shared.wb_writes.load(Ordering::Relaxed);
+            self.stats.logical_bytes +=
+                aio.shared.bg_logical_bytes.load(Ordering::Relaxed);
+            self.stats.disk_bytes +=
+                aio.shared.bg_disk_bytes.load(Ordering::Relaxed);
         }
         true
     }
@@ -698,14 +1000,15 @@ impl PhiColumnStore for PagedPhi {
             .word_of_slot
             .iter()
             .enumerate()
-            .filter(|(s, w)| {
-                self.slot_of.get(w) == Some(s) && self.dirty[*s]
+            .filter(|&(s, &w)| {
+                self.slot_of.get(&w) == Some(&s) && self.dirty[s]
             })
             .map(|(s, &w)| (s, w))
             .collect();
         if self.async_io.is_some() {
             // Route the hot-buffer write-backs through the write-behind
-            // path, then drain everything and fsync on the I/O thread.
+            // path, then drain everything and fsync on the I/O thread;
+            // the foreground persists the header + directory after.
             for (slot, w) in slots {
                 let col: Vec<f32> =
                     self.buffer[slot * self.k..(slot + 1) * self.k].to_vec();
@@ -713,7 +1016,7 @@ impl PhiColumnStore for PagedPhi {
                 self.dirty[slot] = false;
             }
             self.quiesce_async()?;
-            return Ok(());
+            return self.persist_metadata();
         }
         for (slot, w) in slots {
             let col: Vec<f32> =
@@ -721,8 +1024,7 @@ impl PhiColumnStore for PagedPhi {
             self.write_col_to_disk(w as usize, &col);
             self.dirty[slot] = false;
         }
-        self.file.sync_data()?;
-        Ok(())
+        self.persist_metadata()
     }
 
     fn io_stats(&self) -> IoStats {
@@ -730,8 +1032,29 @@ impl PhiColumnStore for PagedPhi {
         if let Some(aio) = &self.async_io {
             s.prefetched_cols += aio.shared.prefetched_cols.load(Ordering::Relaxed);
             s.wb_writes += aio.shared.wb_writes.load(Ordering::Relaxed);
+            s.logical_bytes +=
+                aio.shared.bg_logical_bytes.load(Ordering::Relaxed);
+            s.disk_bytes += aio.shared.bg_disk_bytes.load(Ordering::Relaxed);
         }
         s
+    }
+
+    fn column_stats(&self, w: usize) -> Option<ColumnStats> {
+        if w >= self.n_words {
+            return None;
+        }
+        if let Some(&slot) = self.slot_of.get(&(w as u32)) {
+            if self.dirty[slot] {
+                // The hot buffer holds unencoded mutations; the directory
+                // stats are stale. Exact-or-absent, never wrong.
+                return None;
+            }
+        }
+        // Not hot-dirty: the directory entry describes the freshest
+        // encoded state (it is updated at write-enqueue time, so pending
+        // async writes are already reflected).
+        let e = self.dir[w];
+        Some(ColumnStats { nnz: e.nnz, max: e.max })
     }
 }
 
@@ -946,5 +1269,259 @@ mod tests {
         assert_eq!(s.read_column(2), vec![1.0, 1.0]);
         s.set_async_io(false);
         assert_eq!(s.read_column(2), vec![1.0, 1.0]);
+    }
+
+    /// A column set exercising every record shape: implicit zero, one-hot
+    /// sparse, constant run, dense ramp, and special bit patterns.
+    fn codec_fixture(k: usize) -> Vec<(usize, Vec<f32>)> {
+        let mut one_hot = vec![0.0f32; k];
+        one_hot[k / 2] = 3.5;
+        let mut specials = vec![0.0f32; k];
+        specials[0] = -0.0;
+        specials[1] = f32::MIN_POSITIVE / 4.0;
+        if k > 2 {
+            specials[2] = f32::NAN;
+        }
+        vec![
+            (0, vec![0.0; k]),
+            (1, one_hot),
+            (2, vec![2.25; k]),
+            (3, (0..k).map(|i| i as f32 * 0.5 + 0.25).collect()),
+            (5, specials),
+        ]
+    }
+
+    #[test]
+    fn codec_container_round_trip_and_reopen_every_codec() {
+        for codec in Codec::all() {
+            let dir = crate::util::TempDir::new("cdc");
+            let path = dir.path().join("phi.bin");
+            let k = 7;
+            {
+                let mut s =
+                    PagedPhi::create_with_codec(&path, k, 8, k * 4, codec)
+                        .unwrap();
+                assert_eq!(s.codec(), codec);
+                for (w, col) in codec_fixture(k) {
+                    s.store_column(w, &col);
+                }
+                // Overwrite in place and grow a column's encoding.
+                s.store_column(1, &vec![1.0; k]);
+                s.flush().unwrap();
+                for (w, col) in codec_fixture(k) {
+                    if w == 1 {
+                        continue;
+                    }
+                    let got = s.read_column(w);
+                    for (a, b) in got.iter().zip(&col) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{codec:?} w={w}");
+                    }
+                }
+            }
+            let mut s = PagedPhi::open(&path, 1024).unwrap();
+            assert_eq!(s.codec(), codec, "codec must persist across reopen");
+            assert_eq!(s.read_column(1), vec![1.0; k]);
+            for (w, col) in codec_fixture(k) {
+                if w == 1 {
+                    continue;
+                }
+                let got = s.read_column(w);
+                for (a, b) in got.iter().zip(&col) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{codec:?} w={w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codec_async_churn_mixes_codecs_under_prefetch_and_write_behind() {
+        // Satellite: the variable-length record path must survive the
+        // full overlapped protocol under every write policy, including
+        // columns that oscillate between zero / sparse / dense (changing
+        // record length and forcing relocations mid-run).
+        for codec in Codec::all() {
+            let dir = crate::util::TempDir::new("cdc-async");
+            let path = dir.path().join("phi.bin");
+            let k = 6;
+            let n = 20;
+            let mut s =
+                PagedPhi::create_with_codec(&path, k, n, 4 * k * 4, codec)
+                    .unwrap();
+            s.set_async_io(true);
+            let mut truth = vec![vec![0.0f32; k]; n];
+            let mut rng = crate::util::Rng::new(11);
+            for round in 0..25 {
+                let hot: Vec<u32> =
+                    (0..4).map(|_| rng.below(n) as u32).collect();
+                s.set_hot_words(&hot);
+                let ahead: Vec<u32> =
+                    (0..6).map(|_| rng.below(n) as u32).collect();
+                s.prefetch_columns(&ahead);
+                for _ in 0..8 {
+                    let w = rng.below(n);
+                    match rng.below(3) {
+                        0 => {
+                            // Sparse-ify: zero all but one topic.
+                            let hit = rng.below(k);
+                            let v = (round + 1) as f32;
+                            s.with_column(w, |c| {
+                                c.fill(0.0);
+                                c[hit] = v;
+                            });
+                            truth[w].fill(0.0);
+                            truth[w][hit] = v;
+                        }
+                        1 => {
+                            // Dense increment.
+                            s.with_column(w, |c| {
+                                for x in c.iter_mut() {
+                                    *x += 0.25;
+                                }
+                            });
+                            for x in truth[w].iter_mut() {
+                                *x += 0.25;
+                            }
+                        }
+                        _ => {
+                            // Zero out (back to the implicit record).
+                            s.with_column(w, |c| c.fill(0.0));
+                            truth[w].fill(0.0);
+                        }
+                    }
+                }
+            }
+            s.flush().unwrap();
+            s.set_async_io(false);
+            for w in 0..n {
+                let col = s.read_column(w);
+                for (i, (a, b)) in col.iter().zip(&truth[w]).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{codec:?} w={w} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codec_byte_counters_track_compression() {
+        // Auto on sparse columns: fewer disk bytes than logical bytes.
+        let (_d, mut s) = new_store(64, 8, 1);
+        let mut col = vec![0.0f32; 64];
+        col[5] = 1.0;
+        for w in 0..8 {
+            s.store_column(w, &col);
+        }
+        for w in 0..8 {
+            let _ = s.read_column(w);
+        }
+        let io = s.io_stats();
+        assert_eq!(io.logical_bytes, 16 * 64 * 4, "8 writes + 8 reads");
+        assert!(io.disk_bytes > 0);
+        assert!(
+            io.disk_bytes * 3 < io.logical_bytes,
+            "sparse columns must compress >3x: {io:?}"
+        );
+
+        // Forced raw: disk bytes exceed logical (tag byte overhead).
+        let dir = crate::util::TempDir::new("raw");
+        let mut r = PagedPhi::create_with_codec(
+            &dir.path().join("phi.bin"),
+            64,
+            8,
+            64 * 4,
+            Codec::Raw,
+        )
+        .unwrap();
+        r.store_column(0, &col);
+        let rio = r.io_stats();
+        assert_eq!(rio.logical_bytes, 64 * 4);
+        assert_eq!(rio.disk_bytes, 1 + 64 * 4);
+
+        // Reading a never-written column costs zero disk bytes but still
+        // counts as a logical transfer (the zone-map skip).
+        let before = r.io_stats();
+        assert_eq!(r.read_column(7), vec![0.0; 64]);
+        let after = r.io_stats();
+        assert_eq!(after.col_reads, before.col_reads + 1);
+        assert_eq!(after.logical_bytes, before.logical_bytes + 64 * 4);
+        assert_eq!(after.disk_bytes, before.disk_bytes);
+    }
+
+    #[test]
+    fn codec_zone_map_stats_are_exact_or_absent() {
+        let (_d, mut s) = new_store(8, 6, 2);
+        let mut col = vec![0.0f32; 8];
+        col[2] = 4.5;
+        col[6] = 1.25;
+        s.store_column(1, &col);
+        // Never-written and written columns report exact directory stats.
+        assert_eq!(s.column_stats(0), Some(ColumnStats { nnz: 0, max: 0.0 }));
+        assert_eq!(s.column_stats(1), Some(ColumnStats { nnz: 2, max: 4.5 }));
+        assert_eq!(s.column_stats(99), None, "out of range");
+        // A clean hot column still reports; a dirty one must not (the
+        // directory is stale until write-back).
+        s.set_hot_words(&[1]);
+        assert_eq!(s.column_stats(1), Some(ColumnStats { nnz: 2, max: 4.5 }));
+        s.with_column(1, |c| c[0] = 9.0);
+        assert_eq!(s.column_stats(1), None, "hot-dirty stats are stale");
+        s.set_hot_words(&[]);
+        // Written back: exact again, reflecting the mutation.
+        assert_eq!(s.column_stats(1), Some(ColumnStats { nnz: 3, max: 9.0 }));
+        // Async mode: stats reflect pending (unflushed) writes too,
+        // because the directory is updated at write-enqueue time.
+        s.set_async_io(true);
+        let mut dense = vec![0.5f32; 8];
+        dense[3] = 7.0;
+        s.store_column(4, &dense);
+        assert_eq!(s.column_stats(4), Some(ColumnStats { nnz: 8, max: 7.0 }));
+        s.set_async_io(false);
+    }
+
+    #[test]
+    fn codec_raw_and_auto_agree_bitwise_with_identical_logical_iostats() {
+        // The acceptance contract at store level: the same op sequence
+        // under Raw and Auto produces bit-identical contents and
+        // identical IoStats in every field except disk_bytes.
+        let run = |codec: Codec| {
+            let dir = crate::util::TempDir::new("eq");
+            let path = dir.path().join("phi.bin");
+            let k = 5;
+            let n = 12;
+            let mut s =
+                PagedPhi::create_with_codec(&path, k, n, 3 * k * 4, codec)
+                    .unwrap();
+            let mut rng = crate::util::Rng::new(31);
+            for round in 0..20 {
+                let hot: Vec<u32> =
+                    (0..3).map(|_| rng.below(n) as u32).collect();
+                s.set_hot_words(&hot);
+                for _ in 0..6 {
+                    let w = rng.below(n);
+                    let t = rng.below(k);
+                    s.with_column(w, |c| c[t] += (round + 1) as f32 * 0.125);
+                }
+            }
+            s.flush().unwrap();
+            let contents: Vec<Vec<u32>> = (0..n)
+                .map(|w| {
+                    s.read_column(w).iter().map(|x| x.to_bits()).collect()
+                })
+                .collect();
+            (contents, s.io_stats())
+        };
+        let (raw_data, raw_io) = run(Codec::Raw);
+        let (auto_data, auto_io) = run(Codec::Auto);
+        assert_eq!(raw_data, auto_data, "contents must be bit-identical");
+        let logical = |io: IoStats| IoStats { disk_bytes: 0, ..io };
+        assert_eq!(
+            logical(raw_io),
+            logical(auto_io),
+            "logical IoStats must not depend on the codec"
+        );
+        assert_ne!(raw_io.disk_bytes, auto_io.disk_bytes);
+        assert!(auto_io.disk_bytes < raw_io.disk_bytes);
     }
 }

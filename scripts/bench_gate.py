@@ -8,12 +8,24 @@ Usage:
 Each BENCH_*.json file is a sequence of JSON lines as emitted by the
 benches in rust/benches/ (and collected by scripts/bench.sh). Rows are
 keyed on their identity fields (bench, k, subset, impl, workers, depth,
-algo, isa) and compared on one metric per bench family:
+algo, isa, codec, sweep) and compared on the metrics of the file's bench
+family:
 
     BENCH_estep.json     estep_kernel         mean_ns        lower is better
     BENCH_foldin.json    foldin               mean_ns        lower is better
     BENCH_pipeline.json  streaming_pipeline   tokens_per_sec higher is better
+                                              disk_bytes     lower is better
+                                              file_bytes     lower is better
     BENCH_serve.json     serve                docs_per_sec   higher is better
+
+The byte metrics gate the paged store's compression trajectory (column
+codecs, rust/DESIGN.md §12) exactly like the timing metrics gate
+throughput: a codec or allocator change that inflates real disk traffic
+(disk_bytes) or the backing file's data size (file_bytes) beyond the
+threshold fails. Rows that don't carry a given metric — e.g. timing-only
+rows predating the byte counters, on either side — are skipped silently
+for that metric, so refreshed baselines phase new metrics in without
+churn.
 
 Summary rows (bench == "*_summary") are informational and skipped.
 
@@ -38,15 +50,20 @@ import json
 import os
 import sys
 
-# file -> (bench tag, metric, higher_is_better)
+# file -> (bench tag, [(metric, higher_is_better), ...])
 FAMILIES = {
-    "BENCH_estep.json": ("estep_kernel", "mean_ns", False),
-    "BENCH_foldin.json": ("foldin", "mean_ns", False),
-    "BENCH_pipeline.json": ("streaming_pipeline", "tokens_per_sec", True),
-    "BENCH_serve.json": ("serve", "docs_per_sec", True),
+    "BENCH_estep.json": ("estep_kernel", [("mean_ns", False)]),
+    "BENCH_foldin.json": ("foldin", [("mean_ns", False)]),
+    "BENCH_pipeline.json": ("streaming_pipeline", [
+        ("tokens_per_sec", True),
+        ("disk_bytes", False),
+        ("file_bytes", False),
+    ]),
+    "BENCH_serve.json": ("serve", [("docs_per_sec", True)]),
 }
 
-KEY_FIELDS = ("bench", "k", "subset", "impl", "workers", "depth", "algo", "isa")
+KEY_FIELDS = ("bench", "k", "subset", "impl", "workers", "depth", "algo",
+              "isa", "codec", "sweep")
 
 
 def load_rows(path, bench_tag):
@@ -92,7 +109,7 @@ def main():
 
     regressions = []
     compared = 0
-    for fname, (bench_tag, metric, higher_better) in FAMILIES.items():
+    for fname, (bench_tag, metrics) in FAMILIES.items():
         base_path = os.path.join(args.baseline_dir, fname)
         fresh_path = os.path.join(args.fresh_dir, fname)
         if not os.path.exists(base_path):
@@ -110,21 +127,31 @@ def main():
                 print(f"warning: {fname}: baseline row unmatched "
                       f"({fmt_key(key)}) — different host class?")
                 continue
-            old, new = brow.get(metric), frow.get(metric)
-            if old is None or new is None or old <= 0:
-                print(f"warning: {fname}: missing/degenerate {metric} "
+            matched_any = False
+            for metric, higher_better in metrics:
+                old, new = brow.get(metric), frow.get(metric)
+                if old is None and new is None:
+                    # Neither side carries this metric (e.g. byte counters
+                    # on timing-only rows): not this row's metric, move on.
+                    continue
+                if old is None or new is None or old <= 0:
+                    print(f"warning: {fname}: missing/degenerate {metric} "
+                          f"({fmt_key(key)})")
+                    continue
+                matched_any = True
+                compared += 1
+                change = new / old - 1.0
+                worse = -change if higher_better else change
+                arrow = "better" if worse < 0 else "worse"
+                print(f"{fname}: {fmt_key(key)}: {metric} {old:g} -> {new:g} "
+                      f"({abs(change) * 100:.1f}% {arrow})")
+                if worse > args.threshold:
+                    regressions.append(
+                        f"{fname}: {fmt_key(key)}: {metric} regressed "
+                        f"{worse * 100:.1f}% (old {old:g}, new {new:g})")
+            if not matched_any:
+                print(f"warning: {fname}: no comparable metric "
                       f"({fmt_key(key)})")
-                continue
-            compared += 1
-            change = new / old - 1.0
-            worse = -change if higher_better else change
-            arrow = "better" if worse < 0 else "worse"
-            print(f"{fname}: {fmt_key(key)}: {metric} {old:g} -> {new:g} "
-                  f"({abs(change) * 100:.1f}% {arrow})")
-            if worse > args.threshold:
-                regressions.append(
-                    f"{fname}: {fmt_key(key)}: {metric} regressed "
-                    f"{worse * 100:.1f}% (old {old:g}, new {new:g})")
         for key in sorted(fresh):
             print(f"note: {fname}: new row without baseline ({fmt_key(key)})")
 
