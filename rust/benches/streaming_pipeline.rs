@@ -12,6 +12,13 @@
 //! raw row over a compressed row is the bytes-on-disk reduction the
 //! acceptance gate tracks.
 //!
+//! A third sweep measures the write-ahead log (`--wal`,
+//! `rust/DESIGN.md` §13): the same workload with the WAL off vs armed,
+//! no mid-run truncation — the worst case, every column write logged
+//! for the whole run plus one fsync per batch. The off/on
+//! `tokens_per_sec` ratio is the durability tax, and `wal_bytes` is the
+//! log growth a `--checkpoint-every` cadence bounds in production.
+//!
 //! Emits one `BENCH_pipeline.json`-compatible line per configuration so
 //! the perf trajectory accumulates across PRs:
 //!
@@ -125,6 +132,58 @@ fn main() {
             io.logical_bytes,
             io.disk_bytes,
             algo.store.data_bytes_on_disk()
+        );
+    }
+
+    println!("== write-ahead log sweep (depth 0, workers 1) ==");
+    for &wal in &[false, true] {
+        let dir = TempDir::new("bench-wal");
+        let mut fc = FoemConfig::paper();
+        fc.exact_ll = false;
+        fc.max_inner_iters = 10;
+        fc.n_workers = 1;
+        fc.hot_words = 32;
+        let mut algo = Foem::paged_create(
+            p,
+            &dir.path().join("phi.bin"),
+            corpus.n_words(),
+            64 * k * 4,
+            fc,
+            1,
+        )
+        .expect("create paged store");
+        if wal {
+            algo.enable_wal().expect("arm WAL");
+        }
+        let timer = Timer::start();
+        for mb in CorpusStream::new(&corpus, scfg) {
+            algo.process_minibatch(&mb);
+        }
+        algo.checkpoint_paged().expect("checkpoint");
+        let seconds = timer.seconds();
+        let io = algo.store.io_stats();
+        let tokens_per_sec = corpus.n_tokens() / seconds.max(1e-9);
+        let wal_field = if wal {
+            format!(
+                ",\"wal_bytes\":{}",
+                algo.store.wal_bytes() + algo.res_store.wal_bytes()
+            )
+        } else {
+            String::new()
+        };
+        println!(
+            "BENCH_pipeline.json {{\"bench\":\"streaming_pipeline\",\
+             \"algo\":\"foem_paged\",\"sweep\":\"wal\",\"k\":{k},\
+             \"depth\":0,\"workers\":1,\"codec\":\"auto\",\
+             \"wal\":\"{}\",\"seconds\":{seconds:.4},\
+             \"tokens_per_sec\":{tokens_per_sec:.1},\
+             \"col_reads\":{},\"col_writes\":{},\
+             \"logical_bytes\":{},\"disk_bytes\":{}{wal_field}}}",
+            if wal { "on" } else { "off" },
+            io.col_reads,
+            io.col_writes,
+            io.logical_bytes,
+            io.disk_bytes
         );
     }
 }

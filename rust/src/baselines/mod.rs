@@ -91,6 +91,20 @@ pub trait OnlineLda {
     fn io_stats(&self) -> Option<crate::store::IoStats> {
         None
     }
+
+    /// Resident trainer state for a crash-safe coordinator checkpoint
+    /// ([`crate::coordinator::checkpoint`]). `None` means the algorithm
+    /// does not support `--resume` (only paged-store FOEM does today).
+    fn export_resume_state(&self) -> Option<crate::em::foem::FoemTrainState> {
+        None
+    }
+
+    /// Discard the write-ahead logs after a successful coordinator
+    /// checkpoint (everything they protect is now durable elsewhere).
+    /// No-op for algorithms without a WAL.
+    fn truncate_wal(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 impl OnlineLda for crate::em::sem::Sem {
@@ -155,6 +169,17 @@ impl<S: crate::store::PhiColumnStore> OnlineLda for crate::em::foem::Foem<S> {
 
     fn io_stats(&self) -> Option<crate::store::IoStats> {
         Some(self.store.io_stats())
+    }
+
+    fn export_resume_state(
+        &self,
+    ) -> Option<crate::em::foem::FoemTrainState> {
+        Some(self.export_train_state())
+    }
+
+    fn truncate_wal(&mut self) -> anyhow::Result<()> {
+        self.store.truncate_wal()?;
+        self.res_store.truncate_wal()
     }
 }
 

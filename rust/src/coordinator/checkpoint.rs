@@ -1,0 +1,334 @@
+//! Atomic trainer-state snapshots for crash-safe resumable training
+//! (`--checkpoint-dir` / `--resume`, `rust/DESIGN.md` §13).
+//!
+//! A paged-store flush makes the *matrices* durable; this module makes
+//! the *resident trainer* durable: step counter, coordinator RNG stream,
+//! topic totals, residual totals, vocabulary-growth state, plus the
+//! batch cursor and last published serving epoch. The snapshot is
+//! written with the classic temp-file + fsync + rename + parent-fsync
+//! dance, so a crash at any instant leaves either the old checkpoint or
+//! the new one — never a torn file (a leftover `.tmp` is ignored by
+//! [`load`] and overwritten by the next [`save`]).
+//!
+//! Every snapshot embeds an FNV-1a fingerprint of the numerics-affecting
+//! [`RunConfig`] fields. Resuming under a different fingerprint would
+//! silently break the determinism contract (a different stream order,
+//! K, or kernel), so the driver rejects it with a clear error instead.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::config::RunConfig;
+use crate::em::foem::FoemTrainState;
+use crate::store::wal;
+
+const MAGIC: &[u8; 8] = b"FOEMCKP1";
+
+/// Everything the driver needs to continue a run exactly where a
+/// checkpoint left it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainerCheckpoint {
+    /// [`config_fingerprint`] of the run that wrote the snapshot.
+    pub fingerprint: u64,
+    /// Batches durably applied; the stream resumes after this cursor
+    /// (plus whatever the WAL replays on top).
+    pub batch_cursor: u64,
+    /// Last serving epoch published before the snapshot — republished on
+    /// resume so registry consumers never observe epoch regression.
+    pub epoch: u64,
+    /// Resident trainer state ([`FoemTrainState`]).
+    pub state: FoemTrainState,
+}
+
+/// The snapshot lives at `<dir>/trainer.ckpt`.
+pub fn checkpoint_path(dir: &Path) -> PathBuf {
+    dir.join("trainer.ckpt")
+}
+
+/// FNV-1a hash of every [`RunConfig`] field that affects the training
+/// numerics or the deterministic stream order. Presentation/cadence
+/// knobs (eval/checkpoint/publish cadence, verbosity, buffer sizes,
+/// pipeline depth — bit-identical by contract) are deliberately
+/// excluded, so a resume may e.g. change the eval cadence but not K.
+pub fn config_fingerprint(cfg: &RunConfig) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(cfg.algorithm.name().as_bytes());
+    for v in [
+        cfg.n_topics as u64,
+        cfg.minibatch_docs as u64,
+        cfg.passes as u64,
+        cfg.lambda_k_topics as u64,
+        cfg.hot_words as u64,
+        cfg.n_workers as u64,
+        cfg.seed,
+    ] {
+        eat(&v.to_le_bytes());
+    }
+    eat(&cfg.alpha.to_bits().to_le_bytes());
+    eat(&cfg.beta.to_bits().to_le_bytes());
+    eat(&cfg.lambda_w.to_bits().to_le_bytes());
+    eat(&cfg.tau0.to_bits().to_le_bytes());
+    eat(&cfg.kappa.to_bits().to_le_bytes());
+    eat(format!("{:?}|{:?}", cfg.kernel_backend, cfg.phi_codec).as_bytes());
+    h
+}
+
+/// Fail with an actionable error when `cfg` cannot continue the run
+/// that wrote `ckpt`.
+pub fn verify_compatible(
+    ckpt: &TrainerCheckpoint,
+    cfg: &RunConfig,
+) -> Result<()> {
+    let now = config_fingerprint(cfg);
+    anyhow::ensure!(
+        ckpt.fingerprint == now,
+        "--resume config fingerprint {now:#018x} does not match the \
+         checkpoint's {:#018x}: a numerics-affecting knob (algorithm, k, \
+         alpha/beta, ds, passes, lambda, hot_words, workers, kernel, \
+         codec, or seed) changed since the run being resumed",
+        ckpt.fingerprint
+    );
+    Ok(())
+}
+
+/// Atomically write `<dir>/trainer.ckpt` (temp file + fsync + rename +
+/// parent-directory fsync). Creates `dir` if needed.
+pub fn save(dir: &Path, ckpt: &TrainerCheckpoint) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+    let mut b = Vec::new();
+    b.extend_from_slice(MAGIC);
+    b.extend_from_slice(&ckpt.fingerprint.to_le_bytes());
+    b.extend_from_slice(&ckpt.batch_cursor.to_le_bytes());
+    b.extend_from_slice(&ckpt.epoch.to_le_bytes());
+    let st = &ckpt.state;
+    b.extend_from_slice(&st.step.to_le_bytes());
+    for s in st.rng {
+        b.extend_from_slice(&s.to_le_bytes());
+    }
+    b.extend_from_slice(&(st.phisum.len() as u32).to_le_bytes());
+    for &x in &st.phisum {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    b.extend_from_slice(&(st.r_totals.len() as u32).to_le_bytes());
+    for &x in &st.r_totals {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    b.extend_from_slice(&(st.seen_words.len() as u32).to_le_bytes());
+    for &w in &st.seen_words {
+        b.extend_from_slice(&w.to_le_bytes());
+    }
+    let crc = wal::crc32(&b);
+    b.extend_from_slice(&crc.to_le_bytes());
+
+    let path = checkpoint_path(dir);
+    let tmp = dir.join("trainer.ckpt.tmp");
+    {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(&b)?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    #[cfg(unix)]
+    File::open(dir)?.sync_all()?;
+    Ok(())
+}
+
+fn rd_u64(b: &[u8], p: &mut usize) -> Result<u64> {
+    let s = b
+        .get(*p..*p + 8)
+        .ok_or_else(|| anyhow::anyhow!("trainer checkpoint truncated"))?;
+    *p += 8;
+    Ok(u64::from_le_bytes(s.try_into().unwrap()))
+}
+
+fn rd_u32(b: &[u8], p: &mut usize) -> Result<u32> {
+    let s = b
+        .get(*p..*p + 4)
+        .ok_or_else(|| anyhow::anyhow!("trainer checkpoint truncated"))?;
+    *p += 4;
+    Ok(u32::from_le_bytes(s.try_into().unwrap()))
+}
+
+fn rd_f32_vec(b: &[u8], p: &mut usize) -> Result<Vec<f32>> {
+    let n = rd_u32(b, p)? as usize;
+    anyhow::ensure!(
+        n <= b.len().saturating_sub(*p) / 4,
+        "trainer checkpoint truncated: claims {n} f32 entries"
+    );
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(f32::from_bits(rd_u32(b, p)?));
+    }
+    Ok(v)
+}
+
+/// Read `<dir>/trainer.ckpt`. `Ok(None)` when no checkpoint exists yet;
+/// an error on any corruption (bad magic, short file, CRC mismatch) —
+/// a torn checkpoint is impossible by construction, so corruption means
+/// something external damaged the file and silently starting over would
+/// hide it.
+pub fn load(dir: &Path) -> Result<Option<TrainerCheckpoint>> {
+    let path = checkpoint_path(dir);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(None)
+        }
+        Err(e) => {
+            return Err(e).context(format!("reading checkpoint {path:?}"))
+        }
+    };
+    anyhow::ensure!(
+        bytes.len() >= MAGIC.len() + 4,
+        "trainer checkpoint {path:?} truncated"
+    );
+    anyhow::ensure!(
+        &bytes[..MAGIC.len()] == MAGIC,
+        "{path:?} is not a trainer checkpoint (bad magic)"
+    );
+    let body = bytes.len() - 4;
+    let stored = u32::from_le_bytes(bytes[body..].try_into().unwrap());
+    anyhow::ensure!(
+        wal::crc32(&bytes[..body]) == stored,
+        "trainer checkpoint {path:?} corrupt (CRC mismatch)"
+    );
+    let b = &bytes[..body];
+    let mut p = MAGIC.len();
+    let fingerprint = rd_u64(b, &mut p)?;
+    let batch_cursor = rd_u64(b, &mut p)?;
+    let epoch = rd_u64(b, &mut p)?;
+    let step = rd_u64(b, &mut p)?;
+    let mut rng = [0u64; 4];
+    for s in &mut rng {
+        *s = rd_u64(b, &mut p)?;
+    }
+    let phisum = rd_f32_vec(b, &mut p)?;
+    let r_totals = rd_f32_vec(b, &mut p)?;
+    let n = rd_u32(b, &mut p)? as usize;
+    anyhow::ensure!(
+        n <= b.len().saturating_sub(p) / 4,
+        "trainer checkpoint truncated: claims {n} seen words"
+    );
+    let mut seen_words = Vec::with_capacity(n);
+    for _ in 0..n {
+        seen_words.push(rd_u32(b, &mut p)?);
+    }
+    Ok(Some(TrainerCheckpoint {
+        fingerprint,
+        batch_cursor,
+        epoch,
+        state: FoemTrainState { step, rng, phisum, r_totals, seen_words },
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrainerCheckpoint {
+        TrainerCheckpoint {
+            fingerprint: config_fingerprint(&RunConfig::default()),
+            batch_cursor: 7,
+            epoch: 3,
+            state: FoemTrainState {
+                step: 7,
+                rng: [1, u64::MAX, 3, 4],
+                phisum: vec![1.5, 0.0, 2.25],
+                r_totals: vec![0.5, 4.0],
+                seen_words: vec![0, 1, 5],
+            },
+        }
+    }
+
+    #[test]
+    fn recovery_checkpoint_roundtrips_exactly() {
+        let dir = crate::util::TempDir::new("ckpt");
+        let ckpt = sample();
+        save(dir.path(), &ckpt).unwrap();
+        assert_eq!(load(dir.path()).unwrap().unwrap(), ckpt);
+        // Overwrites atomically: the second save replaces the first.
+        let mut ckpt2 = ckpt.clone();
+        ckpt2.batch_cursor = 9;
+        save(dir.path(), &ckpt2).unwrap();
+        assert_eq!(load(dir.path()).unwrap().unwrap(), ckpt2);
+    }
+
+    #[test]
+    fn recovery_missing_checkpoint_is_none() {
+        let dir = crate::util::TempDir::new("ckpt-none");
+        assert_eq!(load(dir.path()).unwrap(), None);
+    }
+
+    #[test]
+    fn recovery_leftover_temp_file_is_ignored() {
+        // A crash between temp-write and rename leaves `.tmp` garbage;
+        // load must see the (old or absent) real checkpoint, and the
+        // next save must clobber the leftover.
+        let dir = crate::util::TempDir::new("ckpt-tmp");
+        std::fs::write(dir.path().join("trainer.ckpt.tmp"), b"garbage")
+            .unwrap();
+        assert_eq!(load(dir.path()).unwrap(), None);
+        let ckpt = sample();
+        save(dir.path(), &ckpt).unwrap();
+        assert_eq!(load(dir.path()).unwrap().unwrap(), ckpt);
+        assert!(!dir.path().join("trainer.ckpt.tmp").exists());
+    }
+
+    #[test]
+    fn recovery_corrupt_checkpoint_rejected() {
+        let dir = crate::util::TempDir::new("ckpt-bad");
+        save(dir.path(), &sample()).unwrap();
+        let p = checkpoint_path(dir.path());
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(dir.path()).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+        // Truncation is caught too (CRC trailer goes missing).
+        std::fs::write(&p, &bytes[..10]).unwrap();
+        assert!(load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn recovery_fingerprint_tracks_numerics_only() {
+        let base = RunConfig::default();
+        let fp = config_fingerprint(&base);
+        let mut c = base.clone();
+        c.seed = 43;
+        assert_ne!(config_fingerprint(&c), fp, "seed must change it");
+        let mut c = base.clone();
+        c.n_topics = 64;
+        assert_ne!(config_fingerprint(&c), fp, "K must change it");
+        // Cadence/presentation knobs must NOT change it: a resume may
+        // alter them freely.
+        let mut c = base.clone();
+        c.eval_every = 50;
+        c.checkpoint_every = 10;
+        c.verbose = true;
+        c.pipeline_depth = 2;
+        assert_eq!(config_fingerprint(&c), fp);
+    }
+
+    #[test]
+    fn recovery_mismatched_config_rejected() {
+        let ckpt = sample();
+        let mut c = RunConfig::default();
+        verify_compatible(&ckpt, &c).unwrap();
+        c.n_workers = 4;
+        let err = verify_compatible(&ckpt, &c).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+    }
+}

@@ -95,6 +95,21 @@ pub struct RunConfig {
     pub eval_every: usize,
     /// Checkpoint (paged store only) every N minibatches (0 = never).
     pub checkpoint_every: usize,
+    /// Directory for atomic trainer-state snapshots
+    /// (`--checkpoint-dir`). When set (FOEM + paged store only), every
+    /// `checkpoint_every` minibatches the driver flushes the stores,
+    /// writes `trainer.ckpt` via temp-file + rename, and truncates the
+    /// write-ahead logs. Required for `resume`.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume a crashed/killed run from `checkpoint_dir` (`--resume`):
+    /// restore the trainer snapshot, replay WAL-committed batches, and
+    /// continue the stream after the recovered batch cursor. The run
+    /// configuration must fingerprint-match the checkpoint's.
+    pub resume: bool,
+    /// Arm the per-batch write-ahead log on the paged stores (`--wal`).
+    /// Implied by `checkpoint_dir`; off by default so existing configs
+    /// keep byte-identical store files.
+    pub wal: bool,
     /// E-step worker threads for the parallel executor (FOEM and SEM
     /// route minibatches through `exec::ParallelExecutor`); `1` keeps the
     /// exact serial path.
@@ -163,6 +178,9 @@ impl Default for RunConfig {
             hot_words: 0,
             eval_every: 0,
             checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume: false,
+            wal: false,
             n_workers: 1,
             pipeline_depth: 0,
             fold_in_subset: 10,
@@ -281,6 +299,11 @@ impl RunConfig {
             "hot_words" => self.hot_words = value.parse()?,
             "eval_every" => self.eval_every = value.parse()?,
             "checkpoint_every" => self.checkpoint_every = value.parse()?,
+            "checkpoint_dir" => {
+                self.checkpoint_dir = Some(PathBuf::from(value))
+            }
+            "resume" => self.resume = value.parse()?,
+            "wal" => self.wal = value.parse()?,
             "n_workers" | "workers" => self.n_workers = value.parse()?,
             "pipeline_depth" => self.pipeline_depth = value.parse()?,
             "fold_in_subset" => self.fold_in_subset = value.parse()?,
@@ -506,6 +529,23 @@ mod tests {
             c.serve_config().fold_in.kernel_backend,
             KernelBackend::Auto
         );
+    }
+
+    #[test]
+    fn recovery_knobs_round_trip() {
+        let mut c = RunConfig::default();
+        // Defaults keep existing runs byte-identical: no WAL, no
+        // checkpoint dir, no resume.
+        assert_eq!(c.checkpoint_dir, None);
+        assert!(!c.resume);
+        assert!(!c.wal);
+        c.set("checkpoint_dir", "/tmp/ckpt").unwrap();
+        c.set("resume", "true").unwrap();
+        c.set("wal", "true").unwrap();
+        assert_eq!(c.checkpoint_dir, Some(PathBuf::from("/tmp/ckpt")));
+        assert!(c.resume);
+        assert!(c.wal);
+        assert!(c.set("resume", "maybe").is_err());
     }
 
     #[test]

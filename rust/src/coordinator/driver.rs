@@ -2,6 +2,7 @@
 //! frames the stream, runs the loop with metrics, periodic predictive
 //! evaluation and checkpointing, and reports the result.
 
+use super::checkpoint::{self, TrainerCheckpoint};
 use super::config::{Algorithm, RunConfig, StoreKind};
 use super::metrics::Metrics;
 use crate::baselines::{ogs, ovb, rvb, scvb, soi, OnlineLda};
@@ -101,6 +102,101 @@ impl Driver {
         fc
     }
 
+    /// The write-ahead log is armed when asked for explicitly (`--wal`)
+    /// or implied by checkpointing (`--checkpoint-dir`).
+    fn wal_armed(&self) -> bool {
+        self.cfg.wal || self.cfg.checkpoint_dir.is_some()
+    }
+
+    /// Load + validate the checkpoint a `--resume` run continues from.
+    /// `Ok(None)` when this run is not resuming.
+    fn load_resume_checkpoint(&self) -> Result<Option<TrainerCheckpoint>> {
+        if !self.cfg.resume {
+            return Ok(None);
+        }
+        let Some(dir) = &self.cfg.checkpoint_dir else {
+            anyhow::bail!("--resume requires --checkpoint-dir");
+        };
+        if !matches!(
+            (&self.cfg.algorithm, &self.cfg.store),
+            (Algorithm::Foem, StoreKind::Paged { .. })
+        ) {
+            anyhow::bail!(
+                "--resume is only supported for FOEM with a paged store \
+                 (store_path / buffer_mb)"
+            );
+        }
+        let ckpt = checkpoint::load(dir)?.ok_or_else(|| {
+            anyhow::anyhow!(
+                "--resume: no trainer checkpoint found in {dir:?} \
+                 (did the original run ever reach a checkpoint?)"
+            )
+        })?;
+        checkpoint::verify_compatible(&ckpt, &self.cfg)?;
+        Ok(Some(ckpt))
+    }
+
+    /// Rebuild a crashed paged FOEM run from its trainer checkpoint +
+    /// WAL replay. Returns the trainer and the batch cursor the stream
+    /// resumes after. Also restores the serving epoch floor so registry
+    /// consumers never observe pre-crash epoch regression.
+    fn build_resumed_foem(
+        &self,
+        ckpt: &TrainerCheckpoint,
+    ) -> Result<(Foem<crate::store::paged::PagedPhi>, u64)> {
+        let StoreKind::Paged { path, buffer_bytes } = &self.cfg.store
+        else {
+            anyhow::bail!("--resume requires a paged store");
+        };
+        let fc = self.foem_paged_config(*buffer_bytes);
+        let (algo, cursor) = Foem::paged_resume(
+            self.cfg.params(),
+            path,
+            *buffer_bytes,
+            fc,
+            &ckpt.state,
+        )?;
+        if let Some(reg) = &self.registry {
+            reg.restore_epoch_floor(ckpt.epoch);
+        }
+        Ok((algo, cursor))
+    }
+
+    /// One durability point, shared by both run loops: flush the stores,
+    /// snapshot the trainer atomically (when `--checkpoint-dir` is set),
+    /// then truncate the WALs — strictly in that order, so a crash
+    /// between any two steps loses nothing.
+    fn do_checkpoint<A: OnlineLda + ?Sized>(
+        &self,
+        algo: &mut A,
+        batch_cursor: u64,
+    ) -> Result<()> {
+        algo.checkpoint()?;
+        let Some(dir) = &self.cfg.checkpoint_dir else {
+            return Ok(());
+        };
+        let Some(state) = algo.export_resume_state() else {
+            // Memory-resident algorithms have nothing to resume from.
+            return Ok(());
+        };
+        let epoch = self
+            .registry
+            .as_ref()
+            .map(|r| r.current_epoch())
+            .unwrap_or(0);
+        checkpoint::save(
+            dir,
+            &TrainerCheckpoint {
+                fingerprint: checkpoint::config_fingerprint(&self.cfg),
+                batch_cursor,
+                epoch,
+                state,
+            },
+        )?;
+        // Everything the WALs protected is durable elsewhere now.
+        algo.truncate_wal()
+    }
+
     /// SEM config derived from the run config — shared by the plain and
     /// pipelined construction paths so they cannot drift.
     fn sem_config(&self, scale_s: f64) -> SemConfig {
@@ -132,7 +228,7 @@ impl Driver {
                 )),
                 StoreKind::Paged { path, buffer_bytes } => {
                     let fc = self.foem_paged_config(*buffer_bytes);
-                    Box::new(Foem::paged_create_with_codec(
+                    let mut f = Foem::paged_create_with_codec(
                         params,
                         path,
                         n_words,
@@ -140,7 +236,11 @@ impl Driver {
                         fc,
                         cfg.seed,
                         cfg.phi_codec,
-                    )?)
+                    )?;
+                    if self.wal_armed() {
+                        f.enable_wal()?;
+                    }
+                    Box::new(f)
                 }
             },
             Algorithm::Sem => Box::new(Sem::new(
@@ -205,7 +305,16 @@ impl Driver {
         };
         let per_pass = CorpusStream::new(train, scfg).batches_per_pass();
         let scale_s = per_pass as f64;
-        let mut algo = self.build_algorithm(train.n_words(), scale_s)?;
+        let resume = self.load_resume_checkpoint()?;
+        let mut start_cursor = 0u64;
+        let mut algo: Box<dyn OnlineLda> = match &resume {
+            Some(ckpt) => {
+                let (a, cursor) = self.build_resumed_foem(ckpt)?;
+                start_cursor = cursor;
+                Box::new(a)
+            }
+            None => self.build_algorithm(train.n_words(), scale_s)?,
+        };
         let mut metrics = Metrics::new();
         // Periodic/final eval runs the fold-in inference engine with the
         // configured subset/workers (`--fold-in-subset`,
@@ -219,6 +328,12 @@ impl Driver {
             pass_cfg.seed = scfg.seed.wrapping_add(pass as u64);
             for mb in CorpusStream::new(train, pass_cfg) {
                 batch_no += 1;
+                // Resume: the stream is regenerated deterministically
+                // (same per-pass seeds), so recovered batches are
+                // re-enumerated and skipped, not re-trained.
+                if (batch_no as u64) <= start_cursor {
+                    continue;
+                }
                 let report = algo.process_minibatch(&mb);
                 if let (Some(words), Some(reg)) =
                     (&serve_words, &self.registry)
@@ -238,7 +353,7 @@ impl Driver {
                 if self.cfg.checkpoint_every > 0
                     && batch_no % self.cfg.checkpoint_every == 0
                 {
-                    algo.checkpoint()?;
+                    self.do_checkpoint(algo.as_mut(), batch_no as u64)?;
                 }
                 if self.cfg.verbose {
                     println!(
@@ -253,7 +368,7 @@ impl Driver {
                 }
             }
         }
-        algo.checkpoint()?;
+        self.do_checkpoint(algo.as_mut(), batch_no as u64)?;
         // Final publish so serving always sees the end-of-run model.
         if let (Some(words), Some(reg)) = (&serve_words, &self.registry) {
             Self::publish_snapshot(reg, algo.as_mut(), words);
@@ -286,6 +401,7 @@ impl Driver {
             seed: cfg.seed,
         };
         let scale_s = CorpusStream::new(train, scfg).batches_per_pass() as f64;
+        let resume = self.load_resume_checkpoint()?;
         match (&cfg.algorithm, &cfg.store) {
             (Algorithm::Foem, StoreKind::InMemory) => {
                 let algo = Foem::new(
@@ -294,11 +410,15 @@ impl Driver {
                     cfg.foem_config(),
                     cfg.seed,
                 );
-                self.run_pipelined(algo, train, test)
+                self.run_pipelined(algo, train, test, 0)
             }
             (Algorithm::Foem, StoreKind::Paged { path, buffer_bytes }) => {
+                if let Some(ckpt) = &resume {
+                    let (algo, cursor) = self.build_resumed_foem(ckpt)?;
+                    return self.run_pipelined(algo, train, test, cursor);
+                }
                 let fc = self.foem_paged_config(*buffer_bytes);
-                let algo = Foem::paged_create_with_codec(
+                let mut algo = Foem::paged_create_with_codec(
                     params,
                     path,
                     train.n_words(),
@@ -307,12 +427,15 @@ impl Driver {
                     cfg.seed,
                     cfg.phi_codec,
                 )?;
-                self.run_pipelined(algo, train, test)
+                if self.wal_armed() {
+                    algo.enable_wal()?;
+                }
+                self.run_pipelined(algo, train, test, 0)
             }
             (Algorithm::Sem, _) => {
                 let sc = self.sem_config(scale_s);
                 let algo = Sem::new(params, train.n_words(), sc, cfg.seed);
-                self.run_pipelined(algo, train, test)
+                self.run_pipelined(algo, train, test, 0)
             }
             (other, _) => anyhow::bail!(
                 "pipeline_depth > 0 requires a three-phase trainer \
@@ -330,6 +453,7 @@ impl Driver {
         mut algo: T,
         train: &Corpus,
         test: &Corpus,
+        start_cursor: u64,
     ) -> Result<TrainReport>
     where
         T: PhasedTrainer + OnlineLda,
@@ -345,36 +469,45 @@ impl Driver {
         let serve_words = self.serve_words(train.n_words());
         let registry = &self.registry;
         let passes = cfg.passes.max(1);
-        let stream = (0..passes).flat_map(|pass| {
-            let mut pass_cfg = scfg;
-            pass_cfg.seed = scfg.seed.wrapping_add(pass as u64);
-            CorpusStream::new(train, pass_cfg)
-        });
+        // Resume: regenerate the deterministic multi-pass stream and
+        // skip the batches the recovered state already covers; every
+        // cadence below runs on the GLOBAL batch number so eval/
+        // checkpoint/publish stay aligned with the original run.
+        let stream = (0..passes)
+            .flat_map(|pass| {
+                let mut pass_cfg = scfg;
+                pass_cfg.seed = scfg.seed.wrapping_add(pass as u64);
+                CorpusStream::new(train, pass_cfg)
+            })
+            .skip(start_cursor as usize);
+        let mut last_gb = start_cursor;
         Pipeline::new(cfg.pipeline_depth).run(
             &mut algo,
             stream,
             |algo, batch_no, report| {
+                let gb = start_cursor as usize + batch_no;
+                last_gb = gb as u64;
                 if let (Some(words), Some(reg)) = (&serve_words, registry) {
-                    if batch_no % cfg.serve_publish_every == 0 {
+                    if gb % cfg.serve_publish_every == 0 {
                         Self::publish_snapshot(reg, algo, words);
                     }
                 }
                 let eval = if cfg.eval_every > 0
-                    && batch_no % cfg.eval_every == 0
+                    && gb % cfg.eval_every == 0
                 {
                     Some(algo.eval_perplexity(&test.docs, &proto))
                 } else {
                     None
                 };
-                metrics.record(batch_no, report, eval);
+                metrics.record(gb, report, eval);
                 if cfg.checkpoint_every > 0
-                    && batch_no % cfg.checkpoint_every == 0
+                    && gb % cfg.checkpoint_every == 0
                 {
-                    algo.checkpoint()?;
+                    self.do_checkpoint(algo, gb as u64)?;
                 }
                 if cfg.verbose {
                     println!(
-                        "[{}] batch {batch_no}: iters={} ppx={:.1} {:.2}s{}",
+                        "[{}] batch {gb}: iters={} ppx={:.1} {:.2}s{}",
                         algo.name(),
                         report.inner_iters,
                         report.train_perplexity(),
@@ -386,7 +519,7 @@ impl Driver {
                 Ok(())
             },
         )?;
-        algo.checkpoint()?;
+        self.do_checkpoint(&mut algo, last_gb)?;
         // Final publish so serving always sees the end-of-run model.
         if let (Some(words), Some(reg)) = (&serve_words, registry) {
             Self::publish_snapshot(reg, &mut algo, words);
@@ -398,6 +531,21 @@ impl Driver {
             io: algo.io_stats(),
             metrics,
         })
+    }
+
+    /// Resume a crashed/killed run from `cfg.checkpoint_dir`: restore
+    /// the atomic trainer snapshot, replay WAL-committed batches, skip
+    /// the recovered prefix of the deterministic stream, and continue —
+    /// bit-identical to the run that never crashed. Equivalent to
+    /// [`Driver::train`] with `cfg.resume` forced on; the checkpoint
+    /// must exist and the config must fingerprint-match it.
+    pub fn resume(
+        &mut self,
+        train: &Corpus,
+        test: &Corpus,
+    ) -> Result<TrainReport> {
+        self.cfg.resume = true;
+        self.train(train, test)
     }
 
     /// Convenience: split 10% (≤ 2000 docs) for test and train on the
@@ -599,6 +747,149 @@ mod tests {
         let mut d = Driver::new(cfg).with_registry(Arc::clone(&registry));
         d.train_corpus(&c).unwrap();
         assert_eq!(registry.current_epoch(), 0);
+    }
+
+    #[test]
+    fn recovery_driver_resume_completed_run_is_noop_and_bit_identical() {
+        // Resuming a run that finished must retrain nothing, keep the
+        // serving epoch floor, and land on the bit-identical model.
+        let dir = crate::util::TempDir::new("resume-noop");
+        let c = generate(&SyntheticConfig::small(), 104);
+        let mut cfg = small_cfg(Algorithm::Foem);
+        cfg.store = StoreKind::Paged {
+            path: dir.path().join("phi.bin"),
+            buffer_bytes: 64 << 10,
+        };
+        cfg.checkpoint_dir = Some(dir.path().join("ckpt"));
+        cfg.checkpoint_every = 2;
+        cfg.serve_publish_every = 2;
+        let reg1 = Arc::new(ModelRegistry::new());
+        let mut d = Driver::new(cfg.clone()).with_registry(Arc::clone(&reg1));
+        let r1 = d.train_corpus(&c).unwrap();
+
+        let reg2 = Arc::new(ModelRegistry::new());
+        let mut d2 =
+            Driver::new(cfg).with_registry(Arc::clone(&reg2));
+        d2.cfg.resume = true;
+        let r2 = d2.train_corpus(&c).unwrap();
+        assert!(
+            r2.metrics.records.is_empty(),
+            "a completed run must not retrain any batch"
+        );
+        assert_eq!(
+            r1.final_perplexity.to_bits(),
+            r2.final_perplexity.to_bits(),
+            "{} vs {}",
+            r1.final_perplexity,
+            r2.final_perplexity
+        );
+        // Epoch floor: the fresh registry resumes at the recovered epoch
+        // and the final publish moves it forward, never backward.
+        assert_eq!(reg2.current_epoch(), reg1.current_epoch());
+    }
+
+    #[test]
+    fn recovery_pipelined_driver_resume_is_noop_too() {
+        let dir = crate::util::TempDir::new("resume-pipe");
+        let c = generate(&SyntheticConfig::small(), 105);
+        let mut cfg = small_cfg(Algorithm::Foem);
+        cfg.eval_every = 0;
+        cfg.store = StoreKind::Paged {
+            path: dir.path().join("phi.bin"),
+            buffer_bytes: 64 << 10,
+        };
+        cfg.checkpoint_dir = Some(dir.path().join("ckpt"));
+        cfg.checkpoint_every = 3;
+        cfg.pipeline_depth = 2;
+        cfg.n_workers = 2;
+        let mut d = Driver::new(cfg.clone());
+        let r1 = d.train_corpus(&c).unwrap();
+        let mut d2 = Driver::new(cfg);
+        d2.cfg.resume = true;
+        let r2 = d2.train_corpus(&c).unwrap();
+        assert!(r2.metrics.records.is_empty());
+        assert_eq!(
+            r1.final_perplexity.to_bits(),
+            r2.final_perplexity.to_bits()
+        );
+    }
+
+    #[test]
+    fn recovery_driver_resume_rejects_changed_config() {
+        let dir = crate::util::TempDir::new("resume-fp");
+        let c = generate(&SyntheticConfig::small(), 106);
+        let mut cfg = small_cfg(Algorithm::Foem);
+        cfg.eval_every = 0;
+        cfg.store = StoreKind::Paged {
+            path: dir.path().join("phi.bin"),
+            buffer_bytes: 64 << 10,
+        };
+        cfg.checkpoint_dir = Some(dir.path().join("ckpt"));
+        cfg.checkpoint_every = 2;
+        Driver::new(cfg.clone()).train_corpus(&c).unwrap();
+        // A numerics-affecting knob changed since the checkpoint: hard
+        // error, never a silently-diverging resume.
+        cfg.seed = 7;
+        cfg.resume = true;
+        let err = Driver::new(cfg).train_corpus(&c).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn recovery_driver_resume_preconditions_are_checked() {
+        let c = generate(&SyntheticConfig::small(), 107);
+        // No checkpoint dir at all.
+        let mut cfg = small_cfg(Algorithm::Foem);
+        cfg.eval_every = 0;
+        cfg.resume = true;
+        let err = Driver::new(cfg).train_corpus(&c).unwrap_err();
+        assert!(err.to_string().contains("checkpoint-dir"), "{err}");
+        // In-memory store cannot resume.
+        let dir = crate::util::TempDir::new("resume-pre");
+        let mut cfg = small_cfg(Algorithm::Foem);
+        cfg.eval_every = 0;
+        cfg.resume = true;
+        cfg.checkpoint_dir = Some(dir.path().join("ckpt"));
+        let err = Driver::new(cfg).train_corpus(&c).unwrap_err();
+        assert!(err.to_string().contains("paged store"), "{err}");
+        // Paged, but the checkpoint was never written.
+        let mut cfg = small_cfg(Algorithm::Foem);
+        cfg.eval_every = 0;
+        cfg.resume = true;
+        cfg.store = StoreKind::Paged {
+            path: dir.path().join("phi.bin"),
+            buffer_bytes: 64 << 10,
+        };
+        cfg.checkpoint_dir = Some(dir.path().join("ckpt"));
+        let err = Driver::new(cfg).train_corpus(&c).unwrap_err();
+        assert!(err.to_string().contains("no trainer checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn recovery_wal_on_run_matches_wal_off_bitwise() {
+        // Acceptance criterion: arming the WAL must not change a single
+        // bit of the training result (it only adds a log).
+        let c = generate(&SyntheticConfig::small(), 108);
+        let run = |wal: bool, dir: &crate::util::TempDir| {
+            let mut cfg = small_cfg(Algorithm::Foem);
+            cfg.eval_every = 0;
+            cfg.store = StoreKind::Paged {
+                path: dir.path().join("phi.bin"),
+                buffer_bytes: 64 << 10,
+            };
+            cfg.wal = wal;
+            Driver::new(cfg).train_corpus(&c).unwrap().final_perplexity
+        };
+        let d_off = crate::util::TempDir::new("wal-off");
+        let d_on = crate::util::TempDir::new("wal-on");
+        let off = run(false, &d_off);
+        let on = run(true, &d_on);
+        assert_eq!(off.to_bits(), on.to_bits(), "{off} vs {on}");
+        assert!(
+            !d_off.path().join("phi.bin.wal").exists(),
+            "wal-off run must leave no WAL artifacts"
+        );
+        assert!(d_on.path().join("phi.bin.wal").exists());
     }
 
     #[test]

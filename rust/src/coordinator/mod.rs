@@ -6,6 +6,7 @@
 //! or disk-streamed), and drive the stream — the driver owns the loop,
 //! periodic evaluation, and fault-tolerant checkpointing.
 
+pub mod checkpoint;
 pub mod config;
 pub mod driver;
 pub mod metrics;

@@ -102,6 +102,33 @@ impl VocabGrowth {
     pub fn effective_w(&self) -> usize {
         self.n_seen.max(1)
     }
+
+    /// Ids observed so far, ascending — the crash-recovery checkpoint
+    /// persists this so a resumed lifelong run keeps its effective `W`
+    /// and first-appearance dedup exact.
+    pub fn seen_words(&self) -> Vec<u32> {
+        (0..self.seen.len() as u32)
+            .filter(|&w| self.seen[w as usize])
+            .collect()
+    }
+
+    /// Rebuild growth state from a [`Self::seen_words`] snapshot. The
+    /// per-batch first-appearance trace (`new_per_batch`) is diagnostics
+    /// only and restarts empty.
+    pub fn restore(words: &[u32]) -> Self {
+        let mut g = Self::default();
+        for &w in words {
+            let w = w as usize;
+            if w >= g.seen.len() {
+                g.seen.resize(w + 1, false);
+            }
+            if !g.seen[w] {
+                g.seen[w] = true;
+                g.n_seen += 1;
+            }
+        }
+        g
+    }
 }
 
 #[cfg(test)]

@@ -121,6 +121,12 @@ pub struct Foem<S: PhiColumnStore> {
     pub step: usize,
     growth: VocabGrowth,
     rng: Rng,
+    /// `(batch_id, post-stage rng)` of the last *applied* batch. Under
+    /// pipelining the live `step`/`rng` run ahead of the strict-order
+    /// apply cursor, so coordinator checkpoints snapshot from here
+    /// instead ([`crate::baselines::OnlineLda::export_resume_state`]) —
+    /// phisum/r_totals ARE apply-cursor-consistent already.
+    last_applied: Option<(u64, [u64; 4])>,
     /// Inner iterations of the last minibatch (diagnostics).
     pub last_inner_iters: usize,
     /// Grow-only scratch reused across minibatches (responsibility
@@ -154,6 +160,7 @@ impl<S: PhiColumnStore> Foem<S> {
             step: 0,
             growth: VocabGrowth::new(),
             rng: Rng::new(seed),
+            last_applied: None,
             last_inner_iters: 0,
             resp_scratch: RespArena::new(),
             kern_scratch: SweepKernel::new(),
@@ -233,6 +240,16 @@ impl<S: PhiColumnStore> Foem<S> {
         let timer = Timer::start();
         let k = self.params.n_topics;
         let w_dim = self.begin_minibatch(mb);
+        // WAL bracket (no-op when disabled): every store write from here
+        // to the commit at the end of this method is logged under this
+        // batch's step. Evictions inside `begin_minibatch` fall OUTSIDE
+        // the bracket on purpose — they carry column state the previous
+        // batch's commit already captured durably.
+        let wal_on = self.store.wal_enabled();
+        if wal_on {
+            self.res_store.wal_begin(self.step as u64);
+            self.store.wal_begin(self.step as u64);
+        }
         let am1 = self.params.am1();
         let bm1 = self.params.bm1();
         let wbm1 = self.params.wbm1(w_dim);
@@ -466,6 +483,24 @@ impl<S: PhiColumnStore> Foem<S> {
         self.kern_scratch = kern;
         self.theta_scratch = theta;
 
+        self.last_applied = Some((self.step as u64, self.rng.state()));
+        if wal_on {
+            let id = self.step as u64;
+            // Residual log first, phi last: the phi commit carries the
+            // trainer blob and is the authoritative marker, so a crash
+            // between the two fsyncs leaves at worst an orphaned residual
+            // commit that recovery ignores.
+            self.res_store.wal_commit(id, &[]);
+            let blob = encode_commit_state(
+                id,
+                self.rng.state(),
+                &self.phisum,
+                &mb.local_words,
+                &self.r_totals,
+            );
+            self.store.wal_commit(id, &blob);
+        }
+
         MinibatchReport {
             inner_iters: inner,
             seconds: timer.seconds(),
@@ -517,6 +552,14 @@ impl<S: PhiColumnStore> Foem<S> {
             local_words: mb.local_words.clone(),
             tokens: mb.docs.total_tokens(),
             stage_seconds: timer.seconds(),
+            batch_id: self.step as u64,
+            // RNG snapshot AFTER this batch's shard seeds were drawn.
+            // Under pipelining the live `self.rng` will have advanced
+            // through stage(t+1..t+d) by the time apply(t) commits, but
+            // the coordinator RNG is touched ONLY by stage — so the
+            // post-stage(t) state is exactly the pre-stage(t+1) state a
+            // resumed run must start from for bit-identical staging.
+            rng_state: self.rng.state(),
         }
     }
 
@@ -552,6 +595,15 @@ impl<S: PhiColumnStore> Foem<S> {
         delta: FoemDelta,
     ) -> MinibatchReport {
         let timer = Timer::start();
+        // WAL bracket for this batch's store mutations. Under pipelining
+        // `self.step` has already advanced past this batch (stage(t+1)
+        // runs before apply(t)), so the bracket id comes from the staged
+        // bundle, never from the live step counter.
+        let wal_on = self.store.wal_enabled();
+        if wal_on {
+            self.res_store.wal_begin(staged.batch_id);
+            self.store.wal_begin(staged.batch_id);
+        }
         let k = self.params.n_topics;
         let am1 = self.params.am1();
         let bm1 = self.params.bm1();
@@ -646,6 +698,21 @@ impl<S: PhiColumnStore> Foem<S> {
             crate::exec::scratch::put_f32(r.theta);
         }
 
+        self.last_applied = Some((staged.batch_id, staged.rng_state));
+        if wal_on {
+            // Residual first, phi (with the trainer blob) last — the phi
+            // commit is the authoritative durability marker.
+            self.res_store.wal_commit(staged.batch_id, &[]);
+            let blob = encode_commit_state(
+                staged.batch_id,
+                staged.rng_state,
+                &self.phisum,
+                &staged.local_words,
+                &self.r_totals,
+            );
+            self.store.wal_commit(staged.batch_id, &blob);
+        }
+
         MinibatchReport {
             inner_iters: inner,
             // Busy time of this batch's three phases. Under pipelining the
@@ -669,6 +736,173 @@ impl<S: PhiColumnStore> Foem<S> {
     pub fn export_phi(&mut self) -> crate::em::PhiStats {
         self.store.export_dense()
     }
+
+    /// Snapshot the resident state for a coordinator checkpoint
+    /// ([`crate::coordinator::checkpoint`]). Pair with a store flush:
+    /// the snapshot + the flushed stores reproduce the exact mid-run
+    /// trainer.
+    pub fn export_train_state(&self) -> FoemTrainState {
+        // Under pipelining the live `step`/`rng` have run ahead through
+        // staged-but-unapplied batches; the snapshot must sit exactly at
+        // the apply cursor, whose `(id, rng)` every apply records.
+        let (step, rng) = self
+            .last_applied
+            .unwrap_or((self.step as u64, self.rng.state()));
+        FoemTrainState {
+            step,
+            rng,
+            phisum: self.phisum.clone(),
+            r_totals: self.r_totals.clone(),
+            seen_words: self.growth.seen_words(),
+        }
+    }
+
+    /// Restore a [`Self::export_train_state`] snapshot. The stores must
+    /// already hold the matching flushed column state (reopen first).
+    pub fn import_train_state(&mut self, st: &FoemTrainState) {
+        self.step = st.step as usize;
+        self.rng = Rng::from_state(st.rng);
+        self.last_applied = Some((st.step, st.rng));
+        self.phisum = st.phisum.clone();
+        self.r_totals = st.r_totals.clone();
+        if self.r_totals.len() < self.store.n_words() {
+            self.r_totals.resize(self.store.n_words(), 0.0);
+        }
+        self.growth = VocabGrowth::restore(&st.seen_words);
+    }
+
+    /// Restore resident state from a replayed phi WAL commit blob
+    /// (recovery path). Column contents come from
+    /// `PagedPhi::apply_wal_batch`; this applies the matching
+    /// O(K + W_s) resident piece so the trainer lands exactly where the
+    /// committed batch left it.
+    pub fn apply_commit_state(&mut self, blob: &[u8]) -> anyhow::Result<()> {
+        let (step, rng, phisum, touched) = decode_commit_state(blob)?;
+        anyhow::ensure!(
+            phisum.len() == self.params.n_topics,
+            "WAL commit blob has K = {} but the model has K = {}",
+            phisum.len(),
+            self.params.n_topics
+        );
+        self.step = step as usize;
+        self.rng = Rng::from_state(rng);
+        self.last_applied = Some((step, rng));
+        self.phisum = phisum;
+        self.growth.observe(touched.iter().map(|&(w, _)| w));
+        for &(w, r) in &touched {
+            let w = w as usize;
+            if self.r_totals.len() <= w {
+                self.r_totals.resize(w + 1, 0.0);
+            }
+            self.r_totals[w] = r;
+        }
+        Ok(())
+    }
+}
+
+/// Resident trainer state captured by coordinator checkpoints and (per
+/// batch) by phi WAL commit frames: everything [`Foem`] holds outside
+/// the two streamed matrices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FoemTrainState {
+    /// Minibatches processed so far (the batch cursor resumes after it).
+    pub step: u64,
+    /// Coordinator RNG state (4×u64 xoshiro words).
+    pub rng: [u64; 4],
+    /// Topic totals (Eq. 33 denominator), length K.
+    pub phisum: Vec<f32>,
+    /// Per-word residual totals (Eq. 37 visit order). Exact
+    /// incrementally-maintained values — a restart-time column rescan
+    /// differs in the last ulp and would break bit-identical resume.
+    pub r_totals: Vec<f32>,
+    /// Words observed so far (open-vocabulary growth state).
+    pub seen_words: Vec<u32>,
+}
+
+/// Serialize the per-batch resident state carried by a phi WAL commit
+/// frame:
+/// `[step u64][rng 4×u64][k u32][phisum k×f32][n u32][(word u32, r_total f32)×n]`
+/// (little-endian). Only the batch's local words need residual totals —
+/// all other words were untouched, so their totals are already covered
+/// by the last checkpoint or an earlier replayed commit.
+fn encode_commit_state(
+    step: u64,
+    rng: [u64; 4],
+    phisum: &[f32],
+    touched: &[u32],
+    r_totals: &[f32],
+) -> Vec<u8> {
+    let mut b = Vec::with_capacity(
+        8 + 32 + 4 + phisum.len() * 4 + 4 + touched.len() * 8,
+    );
+    b.extend_from_slice(&step.to_le_bytes());
+    for s in rng {
+        b.extend_from_slice(&s.to_le_bytes());
+    }
+    b.extend_from_slice(&(phisum.len() as u32).to_le_bytes());
+    for &x in phisum {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    b.extend_from_slice(&(touched.len() as u32).to_le_bytes());
+    for &w in touched {
+        b.extend_from_slice(&w.to_le_bytes());
+        b.extend_from_slice(&r_totals[w as usize].to_le_bytes());
+    }
+    b
+}
+
+fn rd_u64(b: &[u8], p: &mut usize) -> anyhow::Result<u64> {
+    let s = b
+        .get(*p..*p + 8)
+        .ok_or_else(|| anyhow::anyhow!("WAL commit blob truncated"))?;
+    *p += 8;
+    Ok(u64::from_le_bytes(s.try_into().unwrap()))
+}
+
+fn rd_u32(b: &[u8], p: &mut usize) -> anyhow::Result<u32> {
+    let s = b
+        .get(*p..*p + 4)
+        .ok_or_else(|| anyhow::anyhow!("WAL commit blob truncated"))?;
+    *p += 4;
+    Ok(u32::from_le_bytes(s.try_into().unwrap()))
+}
+
+fn rd_f32(b: &[u8], p: &mut usize) -> anyhow::Result<f32> {
+    Ok(f32::from_bits(rd_u32(b, p)?))
+}
+
+/// Parse an [`encode_commit_state`] blob:
+/// `(step, rng, phisum, touched (word, r_total) pairs)`.
+fn decode_commit_state(
+    b: &[u8],
+) -> anyhow::Result<(u64, [u64; 4], Vec<f32>, Vec<(u32, f32)>)> {
+    let mut p = 0usize;
+    let step = rd_u64(b, &mut p)?;
+    let mut rng = [0u64; 4];
+    for s in &mut rng {
+        *s = rd_u64(b, &mut p)?;
+    }
+    let k = rd_u32(b, &mut p)? as usize;
+    anyhow::ensure!(
+        k <= b.len().saturating_sub(p) / 4,
+        "WAL commit blob truncated: claims {k} phisum entries"
+    );
+    let mut phisum = Vec::with_capacity(k);
+    for _ in 0..k {
+        phisum.push(rd_f32(b, &mut p)?);
+    }
+    let n = rd_u32(b, &mut p)? as usize;
+    anyhow::ensure!(
+        n <= b.len().saturating_sub(p) / 8,
+        "WAL commit blob truncated: claims {n} residual totals"
+    );
+    let mut touched = Vec::with_capacity(n);
+    for _ in 0..n {
+        let w = rd_u32(b, &mut p)?;
+        let r = rd_f32(b, &mut p)?;
+        touched.push((w, r));
+    }
+    Ok((step, rng, phisum, touched))
 }
 
 /// Phase-1 output of the three-phase FOEM seam: a self-contained staged
@@ -687,6 +921,14 @@ pub struct FoemStaged {
     local_words: Vec<u32>,
     tokens: f64,
     stage_seconds: f64,
+    /// The step this batch was staged as — the WAL batch id its apply
+    /// phase commits under (apply runs in strict batch order, but under
+    /// pipelining `self.step` has already advanced past it).
+    batch_id: u64,
+    /// Coordinator RNG state at the end of this batch's stage phase (the
+    /// state a resumed run needs to stage batch `batch_id + 1`
+    /// bit-identically); carried into the WAL commit blob.
+    rng_state: [u64; 4],
 }
 
 impl FoemStaged {
@@ -1082,6 +1324,63 @@ impl Foem<crate::store::paged::PagedPhi> {
         self.store.checkpoint(self.step, &self.phisum)?;
         self.res_store.flush()?;
         Ok(())
+    }
+
+    /// Arm the write-ahead log on both streamed stores (`--wal`). Every
+    /// minibatch from now on appends its column writes plus a resident
+    /// trainer blob to `<store>.wal` before any extent is touched, and
+    /// fsyncs once per store at commit.
+    pub fn enable_wal(&mut self) -> anyhow::Result<()> {
+        self.store.enable_wal()?;
+        self.res_store.enable_wal()?;
+        Ok(())
+    }
+
+    /// Crash recovery: reopen both stores with their WALs, restore the
+    /// trainer checkpoint `state`, replay every batch committed after
+    /// the checkpoint cursor (columns AND the resident blob), and leave
+    /// the logs armed for further training. Returns the trainer plus the
+    /// id of the last batch whose effects are now durable — the batch
+    /// cursor the driver resumes after.
+    pub fn paged_resume(
+        params: LdaParams,
+        path: &std::path::Path,
+        buffer_bytes: usize,
+        cfg: FoemConfig,
+        state: &FoemTrainState,
+    ) -> anyhow::Result<(Self, u64)> {
+        let half = (buffer_bytes / 2).max(params.n_topics * 4);
+        let (store, phi_batches) =
+            crate::store::paged::PagedPhi::open_with_wal(path, half)?;
+        let (res, res_batches) = crate::store::paged::PagedPhi::open_with_wal(
+            &Self::residual_path(path),
+            half,
+        )?;
+        let mut this = Self::with_stores(params, store, res, cfg, 0);
+        this.import_train_state(state);
+
+        // Replay only batches the checkpoint does not already cover. The
+        // phi log is authoritative: its commit frame carries the trainer
+        // blob and is fsynced AFTER the residual commit, so a
+        // phi-committed batch always has its residual twin — and an
+        // orphaned residual-only commit is correctly ignored here.
+        let cursor = state.step;
+        let phi_committed: std::collections::HashSet<u64> =
+            phi_batches.iter().map(|b| b.batch_id).collect();
+        for b in &res_batches {
+            if b.batch_id > cursor && phi_committed.contains(&b.batch_id) {
+                this.res_store.apply_wal_batch(b);
+            }
+        }
+        let mut last = cursor;
+        for b in &phi_batches {
+            if b.batch_id > cursor {
+                this.store.apply_wal_batch(b);
+                this.apply_commit_state(&b.state)?;
+                last = last.max(b.batch_id);
+            }
+        }
+        Ok((this, last))
     }
 }
 
@@ -2155,5 +2454,96 @@ mod tests {
         }
         assert!(last_w > 100, "vocabulary never grew: {last_w}");
         assert!(foem.store.n_words() >= last_w);
+    }
+
+    #[test]
+    fn recovery_commit_blob_roundtrips_exactly() {
+        let r_totals = vec![0.5f32, 0.0, 3.25, 7.75];
+        let blob = encode_commit_state(
+            9,
+            [1, 2, 3, u64::MAX],
+            &[1.0, f32::MIN_POSITIVE, 3.5],
+            &[2, 0],
+            &r_totals,
+        );
+        let (step, rng, phisum, touched) =
+            decode_commit_state(&blob).unwrap();
+        assert_eq!(step, 9);
+        assert_eq!(rng, [1, 2, 3, u64::MAX]);
+        assert_eq!(phisum, vec![1.0, f32::MIN_POSITIVE, 3.5]);
+        assert_eq!(touched, vec![(2, 3.25), (0, 0.5)]);
+        // Truncated blobs are rejected, not misread.
+        assert!(decode_commit_state(&blob[..blob.len() - 3]).is_err());
+        assert!(decode_commit_state(&[]).is_err());
+    }
+
+    #[test]
+    fn recovery_crash_after_commit_resumes_bit_identical() {
+        // The headline PR-8 guarantee at the trainer level: checkpoint
+        // after batch 2, kill WITHOUT any flush after batch 4, recover
+        // (checkpoint + WAL replay of batches 3-4), finish the stream —
+        // every number bitwise equal to the uninterrupted run.
+        let c = corpus();
+        let k = 6;
+        let p = LdaParams::paper_defaults(k);
+        let mut cfg = FoemConfig::paper();
+        cfg.hot_words = 8;
+        let scfg = StreamConfig { minibatch_docs: 64, ..Default::default() };
+        let mbs: Vec<_> = CorpusStream::new(&c, scfg).collect();
+        assert!(mbs.len() >= 5, "need a multi-batch stream");
+
+        // Uninterrupted reference run (WAL off — also pins the WAL-off
+        // path to identical numerics).
+        let dir_a = crate::util::TempDir::new("rec-ref");
+        let mut a = Foem::paged_create(
+            p,
+            &dir_a.path().join("phi.bin"),
+            c.n_words(),
+            16 * k * 4,
+            cfg,
+            42,
+        )
+        .unwrap();
+        for mb in &mbs {
+            a.process_minibatch(mb);
+        }
+
+        // Crashing run with the WAL armed.
+        let dir_b = crate::util::TempDir::new("rec-crash");
+        let path = dir_b.path().join("phi.bin");
+        let mut b =
+            Foem::paged_create(p, &path, c.n_words(), 16 * k * 4, cfg, 42)
+                .unwrap();
+        b.enable_wal().unwrap();
+        let mut state = None;
+        for (i, mb) in mbs.iter().enumerate() {
+            b.process_minibatch(mb);
+            if i + 1 == 2 {
+                b.checkpoint_paged().unwrap();
+                state = Some(b.export_train_state());
+                b.store.truncate_wal().unwrap();
+                b.res_store.truncate_wal().unwrap();
+            }
+            if i + 1 == 4 {
+                break;
+            }
+        }
+        assert!(b.store.poisoned().is_none());
+        // Crash: hot buffers and the in-memory directory die un-flushed.
+        // (Leaks the store handles — fine for a test; Drop would flush
+        // and defeat the point.)
+        std::mem::forget(b);
+
+        let (mut r, last) =
+            Foem::paged_resume(p, &path, 16 * k * 4, cfg, state.as_ref().unwrap())
+                .unwrap();
+        assert_eq!(last, 4, "batches 3-4 were committed and must replay");
+        assert_eq!(r.step, 4);
+        for mb in mbs.iter().skip(last as usize) {
+            r.process_minibatch(mb);
+        }
+        assert_eq!(r.step, a.step);
+        assert_eq!(r.rng.state(), a.rng.state());
+        assert_states_identical(&mut a, &mut r);
     }
 }

@@ -14,6 +14,10 @@
 //!        --store-path /tmp/phi.bin --buffer-mb 64 --verbose true
 //!   foem train --corpus synth:pubmed --algorithm foem --store-path /tmp/phi.bin \
 //!        --buffer-mb 64 --pipeline-depth 2 --n-workers 4
+//!   foem train --corpus synth:nytimes --algorithm foem --store-path /tmp/phi.bin \
+//!        --buffer-mb 64 --checkpoint-dir /tmp/ckpt --checkpoint-every 50
+//!   foem train --corpus synth:nytimes --algorithm foem --store-path /tmp/phi.bin \
+//!        --buffer-mb 64 --checkpoint-dir /tmp/ckpt --resume true
 //!   foem info
 
 use anyhow::{Context, Result};
@@ -43,6 +47,15 @@ fn usage() -> ! {
          \x20                            scalar = bit-exact reference, simd =\n\
          \x20                            AVX2/portable vector tier, auto =\n\
          \x20                            AVX2 when detected else scalar)\n\
+         \x20       --checkpoint-dir PATH  (atomic trainer snapshots every\n\
+         \x20                            --checkpoint-every N batches; arms the\n\
+         \x20                            paged-store write-ahead log so a kill at\n\
+         \x20                            any point is recoverable)\n\
+         \x20       --resume true  (continue a crashed run from\n\
+         \x20                            --checkpoint-dir: replays WAL-committed\n\
+         \x20                            batches, then resumes the stream —\n\
+         \x20                            bit-identical to the uninterrupted run)\n\
+         \x20       --wal true  (arm the write-ahead log without checkpoints)\n\
          \x20       --serve-* keys  (serving layer policy for embedders that\n\
          \x20                        attach a serve::ModelRegistry; `foem train`\n\
          \x20                        itself starts no server — see the serve\n\

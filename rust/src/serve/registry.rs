@@ -131,6 +131,18 @@ impl ModelRegistry {
         self.inner.lock().expect("registry lock").last_epoch
     }
 
+    /// Raise the epoch counter to at least `epoch` without publishing.
+    ///
+    /// Crash recovery calls this with the epoch recorded in the trainer
+    /// checkpoint before the resumed run's first publish, so consumers
+    /// that survived the trainer restart (or compare epochs across it)
+    /// never observe a pre-crash epoch regression. Max semantics: a
+    /// registry that has already moved past `epoch` is left alone.
+    pub fn restore_epoch_floor(&self, epoch: u64) {
+        let mut g = self.inner.lock().expect("registry lock");
+        g.last_epoch = g.last_epoch.max(epoch);
+    }
+
     /// Epochs still alive (current + any older epoch a reader still
     /// pins), ascending. Old epochs disappear from this list as soon as
     /// their last reader drops — the retirement contract, observable.
@@ -184,6 +196,22 @@ mod tests {
         drop(pinned);
         // ... and retires the moment its last reader is gone.
         assert_eq!(reg.live_epochs(), vec![2]);
+    }
+
+    #[test]
+    fn recovery_epoch_floor_prevents_regression() {
+        let p = LdaParams::paper_defaults(2);
+        let reg = ModelRegistry::new();
+        // Fresh registry after a trainer restart: the checkpoint said the
+        // pre-crash run had already published epoch 7.
+        reg.restore_epoch_floor(7);
+        assert_eq!(reg.current_epoch(), 7);
+        assert!(reg.latest().is_none(), "floor restore publishes nothing");
+        let snap = reg.publish(view(2, 2, 1.0), p);
+        assert_eq!(snap.epoch(), 8, "first post-recovery publish moves on");
+        // Max semantics: a stale floor never rolls an advanced registry back.
+        reg.restore_epoch_floor(3);
+        assert_eq!(reg.current_epoch(), 8);
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Fault-injection I/O shim for crash-recovery tests (test/bench only —
+//! no production path constructs one of these).
+//!
+//! Real kill-the-process crash tests are slow, flaky and hard to aim: the
+//! interesting window (a half-appended WAL frame, an fsync that never
+//! happened) is microseconds wide. [`FaultFile`] makes the window
+//! deterministic by wrapping the backing file and misbehaving on cue:
+//!
+//! * [`FaultMode::ShortWrite`] — the Nth operation persists only a prefix
+//!   of its buffer, then the "process" is dead: exactly the torn frame a
+//!   power cut leaves.
+//! * [`FaultMode::FailSync`] — writes land in the page cache but the Nth
+//!   fsync reports failure (and the file is dead after), modeling a
+//!   device error at the durability point.
+//! * [`FaultMode::Kill`] — the Nth operation does nothing at all and every
+//!   later one fails: a clean kill between ops.
+//!
+//! The shim implements [`crate::store::wal::WalBacking`], so recovery
+//! tests drive the *real* WAL append/commit code over it and then reopen
+//! the real file to assert what survived. See
+//! `tests/recovery_equivalence.rs` and the `recovery_` unit tests.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::Path;
+
+use super::wal::WalBacking;
+
+/// What goes wrong, once the op countdown reaches zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// The faulting write persists only the first `keep` bytes.
+    ShortWrite { keep: usize },
+    /// The faulting fsync fails (writes before it stay buffered).
+    FailSync,
+    /// The faulting operation is dropped entirely.
+    Kill,
+}
+
+/// A backing file that dies on the Nth operation. Every operation after
+/// the fault fails with `ErrorKind::Other("simulated crash")`, so code
+/// under test cannot accidentally keep making progress past its death.
+pub struct FaultFile {
+    inner: File,
+    mode: FaultMode,
+    /// Operations (append/sync/truncate) left before the fault fires.
+    ops_left: u64,
+    dead: bool,
+}
+
+impl FaultFile {
+    /// Wrap an already-open file.
+    pub fn new(inner: File, mode: FaultMode, ops_before_fault: u64) -> Self {
+        Self { inner, mode, ops_left: ops_before_fault, dead: false }
+    }
+
+    /// Create/truncate a file at `path` and wrap it.
+    pub fn create(
+        path: &Path,
+        mode: FaultMode,
+        ops_before_fault: u64,
+    ) -> io::Result<Self> {
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(Self::new(file, mode, ops_before_fault))
+    }
+
+    /// Has the fault fired yet?
+    pub fn crashed(&self) -> bool {
+        self.dead
+    }
+
+    fn dead_err() -> io::Error {
+        io::Error::other("simulated crash: file is dead")
+    }
+
+    /// Returns `true` if this op is the faulting one.
+    fn tick(&mut self) -> io::Result<bool> {
+        if self.dead {
+            return Err(Self::dead_err());
+        }
+        if self.ops_left == 0 {
+            self.dead = true;
+            return Ok(true);
+        }
+        self.ops_left -= 1;
+        Ok(false)
+    }
+}
+
+impl WalBacking for FaultFile {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        if self.tick()? {
+            return match self.mode {
+                FaultMode::ShortWrite { keep } => {
+                    let keep = keep.min(buf.len());
+                    self.inner.write_all(&buf[..keep])?;
+                    let _ = self.inner.sync_data();
+                    Err(io::Error::other("simulated crash: short write"))
+                }
+                FaultMode::FailSync => {
+                    // The fault is aimed at fsync; an append that draws
+                    // the short straw just dies without writing.
+                    Err(Self::dead_err())
+                }
+                FaultMode::Kill => Err(Self::dead_err()),
+            };
+        }
+        self.inner.write_all(buf)
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        if self.tick()? {
+            return Err(io::Error::other("simulated crash: fsync failed"));
+        }
+        self.inner.sync_data()
+    }
+
+    fn truncate(&mut self, len: u64) -> io::Result<()> {
+        if self.tick()? {
+            return Err(Self::dead_err());
+        }
+        self.inner.set_len(len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::wal::Wal;
+
+    #[test]
+    fn recovery_short_write_tears_exactly_one_frame() {
+        let dir = crate::util::TempDir::new("fault");
+        let path = dir.path().join("t.wal");
+        // Ops per batch: begin(1 append) + column(1 append) + commit
+        // (1 append + 1 sync) = 4. Let batch 1 complete (4 ops), then
+        // tear the 5th op — batch 2's Begin frame — after 3 bytes.
+        let shim = FaultFile::create(&path, FaultMode::ShortWrite { keep: 3 }, 4).unwrap();
+        let mut wal = Wal::from_backing(Box::new(shim), 0);
+        wal.append_begin(1).unwrap();
+        wal.append_column(1, 4, &[1, 2, 3, 4]).unwrap();
+        wal.append_commit(1, b"s1").unwrap();
+        let err = wal.append_begin(2).unwrap_err();
+        assert!(err.to_string().contains("short write"), "{err}");
+        // Everything after the crash fails too.
+        assert!(wal.append_commit(2, b"").is_err());
+        drop(wal);
+
+        let (wal2, batches) = Wal::open(&path).unwrap();
+        assert_eq!(batches.len(), 1, "only the durably committed batch");
+        assert_eq!(batches[0].batch_id, 1);
+        assert_eq!(batches[0].writes, vec![(4, vec![1, 2, 3, 4])]);
+        // The 3 torn bytes were discarded and truncated away.
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), wal2.len());
+    }
+
+    #[test]
+    fn recovery_failed_fsync_surfaces_at_commit() {
+        let dir = crate::util::TempDir::new("faultsync");
+        let path = dir.path().join("t.wal");
+        // Batch 1 completes (4 ops); batch 2's commit fsync (op index
+        // 4+3=7, the 8th op) fails.
+        let shim = FaultFile::create(&path, FaultMode::FailSync, 7).unwrap();
+        let mut wal = Wal::from_backing(Box::new(shim), 0);
+        wal.append_begin(1).unwrap();
+        wal.append_column(1, 0, &[7]).unwrap();
+        wal.append_commit(1, b"").unwrap();
+        wal.append_begin(2).unwrap();
+        wal.append_column(2, 1, &[8]).unwrap();
+        let err = wal.append_commit(2, b"").unwrap_err();
+        assert!(err.to_string().contains("fsync"), "{err}");
+        // The caller must treat batch 2 as NOT committed even though the
+        // frames may be present in the page cache: recovery semantics
+        // are defined by what an fsync confirmed.
+    }
+
+    #[test]
+    fn recovery_kill_between_ops_loses_nothing_committed() {
+        let dir = crate::util::TempDir::new("faultkill");
+        let path = dir.path().join("t.wal");
+        let shim = FaultFile::create(&path, FaultMode::Kill, 4).unwrap();
+        let mut wal = Wal::from_backing(Box::new(shim), 0);
+        wal.append_begin(1).unwrap();
+        wal.append_column(1, 2, &[5, 5]).unwrap();
+        wal.append_commit(1, b"done").unwrap();
+        assert!(wal.append_begin(2).is_err());
+        drop(wal);
+        let (_w, batches) = Wal::open(&path).unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].state, b"done");
+    }
+}

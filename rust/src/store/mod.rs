@@ -15,7 +15,9 @@
 //!   (the fault-tolerance property of §3.2).
 
 pub mod codec;
+pub mod fault;
 pub mod paged;
+pub mod wal;
 
 pub use codec::{Codec, ColumnStats};
 
@@ -209,6 +211,34 @@ pub trait PhiColumnStore {
     /// (in-memory stores return `false` and ignore the call).
     fn set_async_io(&mut self, _enabled: bool) -> bool {
         false
+    }
+
+    /// Does this store mirror its writes into a write-ahead log
+    /// ([`wal::Wal`])? In-memory stores and WAL-off paged stores return
+    /// `false`, and the trainer skips all batch bracketing — the WAL-off
+    /// path stays bit-identical to pre-WAL behavior.
+    fn wal_enabled(&self) -> bool {
+        false
+    }
+
+    /// Open batch `batch_id` in the WAL (a `BeginBatch` intent frame).
+    /// No-op unless [`Self::wal_enabled`].
+    fn wal_begin(&mut self, _batch_id: u64) {}
+
+    /// Commit batch `batch_id`: log every still-buffered (hot, dirty)
+    /// column the batch may have touched, append the `Commit` frame
+    /// carrying the owner's `state` blob, and fsync — the batch's
+    /// durability point. Errors are recorded in the store's poison flag
+    /// (surfaced at the next [`Self::flush`]) rather than returned, so
+    /// the training hot loop stays infallible; an unpoisoned store
+    /// guarantees the commit is durable. No-op unless
+    /// [`Self::wal_enabled`].
+    fn wal_commit(&mut self, _batch_id: u64, _state: &[u8]) {}
+
+    /// Truncate the WAL after a successful checkpoint (which now covers
+    /// everything the log was protecting). No-op without a WAL.
+    fn truncate_wal(&mut self) -> anyhow::Result<()> {
+        Ok(())
     }
 
     /// Persist all dirty state to the backing store.

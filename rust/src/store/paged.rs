@@ -70,6 +70,37 @@
 //! consistency is what makes `disk_bytes / logical_bytes` the exact
 //! compression ratio of real disk traffic on both the sync and async
 //! paths.
+//!
+//! # Crash consistency (write-ahead log, `rust/DESIGN.md` §13)
+//!
+//! With [`PagedPhi::enable_wal`] the store mirrors every column write
+//! into a `<path>.wal` intent log ([`super::wal`]) *before* the extent
+//! write happens (sync mode) or is even enqueued to the I/O daemon
+//! (async mode), bracketed per training batch by
+//! [`PhiColumnStore::wal_begin`] / [`PhiColumnStore::wal_commit`]. Two
+//! invariants make the container + `.idx` pair recoverable at any kill
+//! point:
+//!
+//! 1. **Checkpoint extents are immutable.** While the WAL is armed, the
+//!    first write to a column since the last WAL truncation relocates to
+//!    a fresh extent instead of overwriting in place — so every extent
+//!    the last *durable* `.idx` references stays byte-intact until the
+//!    next `.idx` replaces it atomically (temp + rename + parent-dir
+//!    fsync, with a trailing CRC). Reopening after any crash therefore
+//!    yields exactly the last flushed state; the abandoned post-flush
+//!    extents are reclaimed automatically because the durable header's
+//!    `data_end` still points below them.
+//! 2. **Commits are self-contained.** `wal_commit` also logs every
+//!    still-dirty hot-buffer column (whose mutations bypassed the
+//!    per-write mirror) before the fsynced `Commit` frame, so replaying
+//!    a committed batch restores the full end-of-batch column state —
+//!    including data that only ever lived in the hot buffer.
+//!
+//! Recovery ([`PagedPhi::open_with_wal`] + [`PagedPhi::apply_wal_batch`])
+//! is then: reopen the last flushed state, replay committed batches in
+//! commit order, discard the torn tail. With the WAL off nothing in this
+//! section runs and behavior (numerics *and* `IoStats`) is bit-identical
+//! to the pre-WAL store.
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
@@ -80,6 +111,7 @@ use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 
 use super::codec::{self, Codec, ColumnStats};
+use super::wal::{self, Wal, WalBatch};
 use super::{IoStats, PhiColumnStore};
 
 const MAGIC: u64 = 0xF0E3_14DA_0002;
@@ -141,6 +173,19 @@ fn write_record(file: &mut File, offset: u64, bytes: &[u8]) {
     }
     file.seek(SeekFrom::Start(offset)).expect("seek");
     file.write_all(bytes).expect("column record write");
+}
+
+/// Durability for a rename-into-place: fsync the parent directory so the
+/// rename itself survives a crash. No-op off unix, where directory
+/// handles cannot be opened.
+fn sync_parent_dir(path: &Path) -> std::io::Result<()> {
+    #[cfg(unix)]
+    if let Some(parent) = path.parent() {
+        File::open(parent)?.sync_all()?;
+    }
+    #[cfg(not(unix))]
+    let _ = path;
+    Ok(())
 }
 
 /// Where a routed (async-mode) column read was served from.
@@ -397,6 +442,24 @@ pub struct PagedPhi {
     byte_scratch: Vec<u8>,
     /// Background prefetch/write-behind machinery; `None` = synchronous.
     async_io: Option<AsyncIo>,
+    /// Intent log for crash consistency; `None` = WAL off (the default),
+    /// in which case none of the WAL machinery below changes behavior.
+    wal: Option<Wal>,
+    /// Per-column "extent allocated since the last WAL truncation" flag.
+    /// A clear flag means the column's extent may still be referenced by
+    /// the last durable directory, so the next non-empty write must
+    /// relocate instead of overwriting it (invariant 1 in the module
+    /// docs). Sized `n_words` while the WAL is armed, empty otherwise.
+    wal_fresh: Vec<bool>,
+    /// Open batch bracket (`wal_begin` .. `wal_commit`). Column writes
+    /// outside a bracket are not mirrored — they can only re-persist
+    /// state some earlier commit already captured.
+    wal_batch: Option<u64>,
+    /// First durability error, if any. The write path cannot fail (it
+    /// sits inside the E-step hot loop), so errors are parked here and
+    /// surfaced at the next `flush`/`truncate_wal` — i.e. before any
+    /// checkpoint can claim durability.
+    poisoned: Option<String>,
 }
 
 impl PagedPhi {
@@ -443,14 +506,17 @@ impl PagedPhi {
             enc_buf: Vec::new(),
             byte_scratch: Vec::new(),
             async_io: None,
+            wal: None,
+            wal_fresh: Vec::new(),
+            wal_batch: None,
+            poisoned: None,
         };
         this.write_header()?;
-        // Seed the directory sidecar: header + `set_len` zeros, which IS
-        // the all-default (all columns implicitly zero) directory.
-        let mut idx = File::create(idx_path(path))?;
-        idx.write_all(&IDX_MAGIC.to_le_bytes())?;
-        idx.write_all(&(n_words as u64).to_le_bytes())?;
-        idx.set_len(IDX_HEADER_BYTES + (n_words * DIR_ENT_BYTES) as u64)?;
+        // Seed the directory sidecar with the all-default (implicitly
+        // all-zero) directory — through the same atomic, CRC-trailed
+        // writer used at flush, so a reopen before the first flush sees
+        // a valid directory.
+        this.write_dir()?;
         Ok(this)
     }
 
@@ -490,6 +556,10 @@ impl PagedPhi {
             enc_buf: Vec::new(),
             byte_scratch: Vec::new(),
             async_io: None,
+            wal: None,
+            wal_fresh: Vec::new(),
+            wal_batch: None,
+            poisoned: None,
         })
     }
 
@@ -505,9 +575,16 @@ impl PagedPhi {
         let magic = u64::from_le_bytes(bytes[..8].try_into().unwrap());
         anyhow::ensure!(magic == IDX_MAGIC, "not a column directory: {ip:?}");
         let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let body = IDX_HEADER_BYTES as usize + n * DIR_ENT_BYTES;
         anyhow::ensure!(
-            bytes.len() >= IDX_HEADER_BYTES as usize + n * DIR_ENT_BYTES,
+            bytes.len() >= body + 4,
             "column directory {ip:?} truncated"
+        );
+        let stored =
+            u32::from_le_bytes(bytes[body..body + 4].try_into().unwrap());
+        anyhow::ensure!(
+            wal::crc32(&bytes[..body]) == stored,
+            "column directory {ip:?} corrupt (CRC mismatch)"
         );
         // Capacity growth updates the data header immediately but the
         // directory only at flush; tolerate a shorter directory by
@@ -536,9 +613,15 @@ impl PagedPhi {
         self.file.write_all(&h)
     }
 
+    /// Atomically replace `<path>.idx`: serialize with a trailing CRC,
+    /// write a temp file, fsync it, rename into place, fsync the parent
+    /// directory. A crash at any point leaves either the old or the new
+    /// directory — never a torn one — and the CRC catches partial or
+    /// bit-rotted files on the read side.
     fn write_dir(&self) -> anyhow::Result<()> {
-        let mut buf =
-            Vec::with_capacity(IDX_HEADER_BYTES as usize + self.dir.len() * DIR_ENT_BYTES);
+        let mut buf = Vec::with_capacity(
+            IDX_HEADER_BYTES as usize + self.dir.len() * DIR_ENT_BYTES + 4,
+        );
         buf.extend_from_slice(&IDX_MAGIC.to_le_bytes());
         buf.extend_from_slice(&(self.dir.len() as u64).to_le_bytes());
         for e in &self.dir {
@@ -548,7 +631,20 @@ impl PagedPhi {
             buf.extend_from_slice(&e.nnz.to_le_bytes());
             buf.extend_from_slice(&e.max.to_le_bytes());
         }
-        std::fs::write(idx_path(&self.path), buf)?;
+        buf.extend_from_slice(&wal::crc32(&buf).to_le_bytes());
+        let ip = idx_path(&self.path);
+        let tmp = {
+            let mut s = ip.as_os_str().to_os_string();
+            s.push(".tmp");
+            PathBuf::from(s)
+        };
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&buf)?;
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, &ip)?;
+        sync_parent_dir(&ip)?;
         Ok(())
     }
 
@@ -600,11 +696,22 @@ impl PagedPhi {
         let mut buf = std::mem::take(&mut self.enc_buf);
         let st = codec::encode_column(self.codec, data, &mut buf);
         let len = buf.len() as u32;
+        // Crash-consistency invariant 1: while the WAL is armed, never
+        // overwrite an extent the last durable directory may still
+        // reference. The first non-empty write to a column since the last
+        // WAL truncation relocates even when it would fit in place; empty
+        // (implicit-zero) records write no bytes, so they never need to.
+        let preserve = self.wal.is_some()
+            && len > 0
+            && !self.wal_fresh.get(w).copied().unwrap_or(false);
         let ent = &mut self.dir[w];
-        if len > ent.cap {
+        if len > ent.cap || preserve {
             ent.offset = self.data_end;
             ent.cap = cap_for(buf.len());
             self.data_end += ent.cap as u64;
+            if self.wal.is_some() {
+                self.wal_fresh[w] = true;
+            }
         }
         ent.len = len;
         ent.nnz = st.nnz;
@@ -633,6 +740,7 @@ impl PagedPhi {
         self.stats.col_writes += 1;
         self.stats.logical_bytes += (self.k * 4) as u64;
         let offset = self.encode_and_place(w, data);
+        self.wal_log_column(w);
         self.stats.disk_bytes += self.enc_buf.len() as u64;
         let bytes = std::mem::take(&mut self.enc_buf);
         write_record(&mut self.file, offset, &bytes);
@@ -737,6 +845,10 @@ impl PagedPhi {
             return;
         }
         let offset = self.encode_and_place(w, data);
+        // Intent before action: the WAL frame is appended on the
+        // foreground BEFORE the write is even enqueued, so the daemon can
+        // never put bytes in an extent the log does not already explain.
+        self.wal_log_column(w);
         let bytes = self.enc_buf.clone();
         let aio = self.async_io.as_mut().unwrap();
         aio.next_version += 1;
@@ -775,6 +887,106 @@ impl PagedPhi {
             self.dirty[slot] = false;
         }
         self.slot_of.remove(&w);
+    }
+
+    /// Mirror the record just placed by [`Self::encode_and_place`] (still
+    /// sitting in `self.enc_buf`) into the WAL, if a batch bracket is
+    /// open. Runs BEFORE the extent write happens (sync mode) or is
+    /// enqueued (async mode) — intent first, always.
+    fn wal_log_column(&mut self, w: usize) {
+        let Some(batch) = self.wal_batch else { return };
+        let res = match self.wal.as_mut() {
+            Some(wal) => wal.append_column(batch, w as u32, &self.enc_buf),
+            None => return,
+        };
+        if let Err(e) = res {
+            self.note_poison(&format!("WAL append (column {w}): {e}"));
+        }
+    }
+
+    /// Record a durability error. First error wins; every error is logged
+    /// immediately so it cannot vanish into a swallowed `Drop`.
+    fn note_poison(&mut self, msg: &str) {
+        eprintln!("PagedPhi {:?}: {msg}", self.path);
+        if self.poisoned.is_none() {
+            self.poisoned = Some(msg.to_string());
+        }
+    }
+
+    /// The first durability error this store hit, if any. Checkpointing
+    /// code must consult this — or simply call `flush`/`truncate_wal`,
+    /// both of which refuse to succeed on a poisoned store — before
+    /// trusting what is on disk.
+    pub fn poisoned(&self) -> Option<&str> {
+        self.poisoned.as_deref()
+    }
+
+    /// Arm the write-ahead log (module docs, "Crash consistency").
+    /// Creates/truncates `<path>.wal`; from here on every column write
+    /// inside a [`PhiColumnStore::wal_begin`] /
+    /// [`PhiColumnStore::wal_commit`] bracket is mirrored into the log
+    /// before it touches an extent.
+    pub fn enable_wal(&mut self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.wal.is_none(), "WAL already enabled");
+        self.wal = Some(Wal::create(&wal::wal_path(&self.path))?);
+        self.wal_fresh = vec![false; self.n_words];
+        Ok(())
+    }
+
+    /// Reopen a store together with its WAL after a crash. The store
+    /// itself reflects the last flushed (durable) state; the returned
+    /// batches are the durably *committed* ones found in the log (torn
+    /// tail already truncated away), in commit order, NOT yet applied —
+    /// the caller filters them against its own checkpoint cursor and
+    /// replays the survivors via [`Self::apply_wal_batch`].
+    pub fn open_with_wal(
+        path: &Path,
+        buffer_bytes: usize,
+    ) -> anyhow::Result<(Self, Vec<WalBatch>)> {
+        let mut this = Self::open(path, buffer_bytes)?;
+        let (w, batches) = Wal::open(&wal::wal_path(path))?;
+        this.wal = Some(w);
+        this.wal_fresh = vec![false; this.n_words];
+        Ok((this, batches))
+    }
+
+    /// Replay one committed batch from [`Self::open_with_wal`]: decode
+    /// each logged record and store it. Records are full column images,
+    /// so replay is idempotent and last-wins within a batch; placement
+    /// goes through the normal (preservation-guarded) write path, so a
+    /// crash *during* recovery is itself recoverable.
+    pub fn apply_wal_batch(&mut self, batch: &WalBatch) {
+        let mut col = vec![0.0f32; self.k];
+        for (w, rec) in &batch.writes {
+            let w = *w as usize;
+            if w >= self.n_words {
+                self.ensure_capacity(w + 1);
+            }
+            codec::decode_column(rec, &mut col);
+            self.store_column(w, &col);
+        }
+    }
+
+    /// Total bytes ever appended to the WAL, across truncations — the
+    /// write-amplification observable the bench WAL sweep reports.
+    pub fn wal_bytes(&self) -> u64 {
+        self.wal.as_ref().map(|w| w.bytes_appended()).unwrap_or(0)
+    }
+
+    /// Test-only: abandon the store the way `kill -9` would — no flush,
+    /// no directory write, no WAL truncation. The I/O daemon (if any)
+    /// finishes only what was already queued, and the store object is
+    /// leaked so `Drop`'s flush can never tidy up. On-disk state is left
+    /// exactly as a real crash would leave it — which is what recovery
+    /// tests must cope with.
+    pub fn simulate_crash(mut self) {
+        if let Some(mut aio) = self.async_io.take() {
+            let _ = aio.tx.send(IoReq::Shutdown);
+            if let Some(h) = aio.handle.take() {
+                let _ = h.join();
+            }
+        }
+        std::mem::forget(self);
     }
 
     /// Write a checkpoint sidecar with algorithm state (fault tolerance:
@@ -844,6 +1056,9 @@ impl PhiColumnStore for PagedPhi {
         // New columns are implicit zeros: directory entries only, no file
         // growth until something is written.
         self.dir.resize(n_words, DirEnt::default());
+        if self.wal.is_some() {
+            self.wal_fresh.resize(n_words, false);
+        }
         self.write_header().expect("header write");
     }
 
@@ -995,7 +1210,78 @@ impl PhiColumnStore for PagedPhi {
         true
     }
 
+    fn wal_enabled(&self) -> bool {
+        self.wal.is_some()
+    }
+
+    fn wal_begin(&mut self, batch_id: u64) {
+        if self.wal.is_none() {
+            return;
+        }
+        self.wal_batch = Some(batch_id);
+        let res = self.wal.as_mut().unwrap().append_begin(batch_id);
+        if let Err(e) = res {
+            self.note_poison(&format!("WAL begin (batch {batch_id}): {e}"));
+        }
+    }
+
+    fn wal_commit(&mut self, batch_id: u64, state: &[u8]) {
+        if self.wal.is_none() {
+            return;
+        }
+        // Invariant 2: hot-buffer mutations bypass the per-write mirror,
+        // so capture every still-dirty hot column under this batch before
+        // the commit frame — each committed batch is then self-contained.
+        let slots: Vec<(usize, u32)> = self
+            .word_of_slot
+            .iter()
+            .enumerate()
+            .filter(|&(s, &w)| {
+                self.slot_of.get(&w) == Some(&s) && self.dirty[s]
+            })
+            .map(|(s, &w)| (s, w))
+            .collect();
+        let mut rec = Vec::new();
+        for (slot, w) in slots {
+            codec::encode_column(
+                self.codec,
+                &self.buffer[slot * self.k..(slot + 1) * self.k],
+                &mut rec,
+            );
+            let res =
+                self.wal.as_mut().unwrap().append_column(batch_id, w, &rec);
+            if let Err(e) = res {
+                self.note_poison(&format!("WAL append (hot column {w}): {e}"));
+            }
+        }
+        let res = self.wal.as_mut().unwrap().append_commit(batch_id, state);
+        if let Err(e) = res {
+            self.note_poison(&format!("WAL commit (batch {batch_id}): {e}"));
+        }
+        self.wal_batch = None;
+    }
+
+    fn truncate_wal(&mut self) -> anyhow::Result<()> {
+        if let Some(msg) = &self.poisoned {
+            anyhow::bail!("store {:?} is poisoned: {msg}", self.path);
+        }
+        if let Some(wal) = self.wal.as_mut() {
+            wal.reset()?;
+            // The directory just made durable describes the current
+            // extents: they become the protected base for the next
+            // checkpoint interval.
+            self.wal_fresh.fill(false);
+        }
+        Ok(())
+    }
+
     fn flush(&mut self) -> anyhow::Result<()> {
+        if let Some(msg) = &self.poisoned {
+            anyhow::bail!(
+                "refusing to flush poisoned store {:?}: {msg}",
+                self.path
+            );
+        }
         let slots: Vec<(usize, u32)> = self
             .word_of_slot
             .iter()
@@ -1061,9 +1347,14 @@ impl PhiColumnStore for PagedPhi {
 impl Drop for PagedPhi {
     fn drop(&mut self) {
         // Stop the I/O thread first (drains pending writes), then persist
-        // whatever is still dirty in the hot buffer.
+        // whatever is still dirty in the hot buffer. The error cannot
+        // propagate out of `drop`, but it must not vanish silently: a
+        // failed final flush means the on-disk state is the previous
+        // durable one, and whoever reopens the store should know why.
         self.set_async_io(false);
-        let _ = self.flush();
+        if let Err(e) = self.flush() {
+            eprintln!("PagedPhi {:?}: flush on drop failed: {e}", self.path);
+        }
     }
 }
 
@@ -1523,5 +1814,207 @@ mod tests {
         );
         assert_ne!(raw_io.disk_bytes, auto_io.disk_bytes);
         assert!(auto_io.disk_bytes < raw_io.disk_bytes);
+    }
+
+    #[test]
+    fn recovery_idx_crc_detects_corruption() {
+        let dir = crate::util::TempDir::new("idxcrc");
+        let path = dir.path().join("phi.bin");
+        {
+            let mut s = PagedPhi::create(&path, 3, 4, 1024).unwrap();
+            s.store_column(2, &[1.0, 2.0, 3.0]);
+            s.flush().unwrap();
+        }
+        // Flip one byte of a directory entry; the trailing CRC must catch
+        // it on reopen.
+        let ip = idx_path(&path);
+        let mut bytes = std::fs::read(&ip).unwrap();
+        let at = IDX_HEADER_BYTES as usize + 2 * DIR_ENT_BYTES;
+        bytes[at] ^= 0xFF;
+        std::fs::write(&ip, bytes).unwrap();
+        let err = PagedPhi::open(&path, 1024).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn recovery_idx_shorter_than_header_claims_rejected() {
+        let dir = crate::util::TempDir::new("idxtrunc");
+        let path = dir.path().join("phi.bin");
+        {
+            let mut s = PagedPhi::create(&path, 2, 6, 1024).unwrap();
+            s.store_column(5, &[1.0, 1.0]);
+            s.flush().unwrap();
+        }
+        // Chop the file short of what its own header claims: must be
+        // rejected as truncated, never zero-padded into a "valid" but
+        // wrong directory.
+        let ip = idx_path(&path);
+        let bytes = std::fs::read(&ip).unwrap();
+        std::fs::write(&ip, &bytes[..bytes.len() - 10]).unwrap();
+        let err = PagedPhi::open(&path, 1024).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn recovery_wal_replay_restores_committed_batches_only() {
+        let dir = crate::util::TempDir::new("walrec");
+        let path = dir.path().join("phi.bin");
+        {
+            let mut s = PagedPhi::create(&path, 3, 6, 2 * 3 * 4).unwrap();
+            s.enable_wal().unwrap();
+            s.wal_begin(1);
+            s.store_column(0, &[1.0, 0.0, 0.0]);
+            s.store_column(1, &[0.0, 2.0, 0.0]);
+            s.wal_commit(1, b"s1");
+            s.wal_begin(2);
+            s.store_column(0, &[5.0, 5.0, 5.0]);
+            s.wal_commit(2, b"s2");
+            s.wal_begin(3);
+            s.store_column(1, &[9.0, 9.0, 9.0]); // never committed
+            s.simulate_crash();
+        }
+        let (mut s, batches) = PagedPhi::open_with_wal(&path, 1024).unwrap();
+        // Nothing was ever flushed, so the durable base is all-zero and
+        // the WAL holds exactly the two committed batches.
+        let ids: Vec<u64> = batches.iter().map(|b| b.batch_id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(batches[1].state, b"s2");
+        for b in &batches {
+            s.apply_wal_batch(b);
+        }
+        assert_eq!(s.read_column(0), vec![5.0, 5.0, 5.0]);
+        assert_eq!(
+            s.read_column(1),
+            vec![0.0, 2.0, 0.0],
+            "uncommitted batch 3 rolled back"
+        );
+    }
+
+    #[test]
+    fn recovery_uncommitted_writes_never_touch_checkpoint_extents() {
+        let dir = crate::util::TempDir::new("walext");
+        let path = dir.path().join("phi.bin");
+        {
+            let mut s = PagedPhi::create(&path, 2, 4, 2 * 2 * 4).unwrap();
+            s.enable_wal().unwrap();
+            s.wal_begin(1);
+            s.store_column(0, &[3.0, 4.0]);
+            s.wal_commit(1, b"");
+            // Checkpoint: make the directory durable, then truncate the
+            // WAL — column 0's extent is now part of the protected base.
+            s.flush().unwrap();
+            s.truncate_wal().unwrap();
+            // A post-checkpoint overwrite that would FIT in place: the
+            // preservation guard must relocate it anyway. Crash before
+            // the batch commits.
+            s.wal_begin(2);
+            s.store_column(0, &[8.0, 8.0]);
+            s.simulate_crash();
+        }
+        let (mut s, batches) = PagedPhi::open_with_wal(&path, 1024).unwrap();
+        assert!(batches.is_empty(), "batch 2 never committed");
+        assert_eq!(
+            s.read_column(0),
+            vec![3.0, 4.0],
+            "checkpoint extent must be byte-intact after the crash"
+        );
+    }
+
+    #[test]
+    fn recovery_async_mode_committed_batches_survive_crash() {
+        let dir = crate::util::TempDir::new("walasync");
+        let path = dir.path().join("phi.bin");
+        {
+            let mut s = PagedPhi::create(&path, 3, 8, 2 * 3 * 4).unwrap();
+            s.enable_wal().unwrap();
+            s.set_async_io(true);
+            s.set_hot_words(&[1]);
+            s.wal_begin(1);
+            s.with_column(1, |c| c.copy_from_slice(&[1.0, 2.0, 3.0])); // hot
+            s.with_column(5, |c| c[2] = 7.0); // streamed, write-behind
+            s.wal_commit(1, b"t");
+            s.wal_begin(2);
+            s.with_column(5, |c| c[0] = 1.0); // never committed
+            s.simulate_crash();
+        }
+        let (mut s, batches) = PagedPhi::open_with_wal(&path, 1024).unwrap();
+        assert_eq!(batches.len(), 1);
+        for b in &batches {
+            s.apply_wal_batch(b);
+        }
+        assert_eq!(
+            s.read_column(1),
+            vec![1.0, 2.0, 3.0],
+            "hot-buffer column captured by the commit sweep"
+        );
+        assert_eq!(s.read_column(5), vec![0.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn recovery_truncate_wal_resets_log_and_rearms_guard() {
+        let dir = crate::util::TempDir::new("waltrunc");
+        let path = dir.path().join("phi.bin");
+        let mut s = PagedPhi::create(&path, 2, 4, 1024).unwrap();
+        s.enable_wal().unwrap();
+        assert!(s.wal_enabled());
+        s.wal_begin(1);
+        s.store_column(0, &[1.0, 1.0]);
+        s.wal_commit(1, b"");
+        let appended = s.wal_bytes();
+        assert!(appended > 0);
+        assert!(std::fs::metadata(wal::wal_path(&path)).unwrap().len() > 0);
+        s.flush().unwrap();
+        s.truncate_wal().unwrap();
+        assert_eq!(std::fs::metadata(wal::wal_path(&path)).unwrap().len(), 0);
+        // The lifetime append counter keeps counting across truncations.
+        s.wal_begin(2);
+        s.store_column(0, &[2.0, 2.0]);
+        s.wal_commit(2, b"");
+        assert!(s.wal_bytes() > appended);
+    }
+
+    #[test]
+    fn recovery_wal_off_store_leaves_no_wal_artifacts() {
+        let (_d, mut s) = new_store(2, 4, 2);
+        assert!(!s.wal_enabled());
+        // Bracket calls are no-ops with the WAL off.
+        s.wal_begin(1);
+        s.store_column(0, &[1.0, 2.0]);
+        s.wal_commit(1, b"ignored");
+        s.truncate_wal().unwrap();
+        assert_eq!(s.wal_bytes(), 0);
+        assert!(!wal::wal_path(s.path()).exists());
+        assert!(s.poisoned().is_none());
+    }
+
+    #[test]
+    fn recovery_wal_errors_poison_store_and_block_flush() {
+        use crate::store::fault::{FaultFile, FaultMode};
+        let dir = crate::util::TempDir::new("walpoison");
+        let path = dir.path().join("phi.bin");
+        let mut s = PagedPhi::create(&path, 2, 4, 1024).unwrap();
+        s.enable_wal().unwrap();
+        // Swap in a backing whose commit fsync fails: ops are begin
+        // append (1), column append (2), commit append (3), commit
+        // sync (4) — fault after 3 good ops.
+        let shim = FaultFile::create(
+            &wal::wal_path(&path),
+            FaultMode::FailSync,
+            3,
+        )
+        .unwrap();
+        s.wal = Some(Wal::from_backing(Box::new(shim), 0));
+        s.wal_fresh = vec![false; 4];
+        s.wal_begin(1);
+        s.store_column(0, &[1.0, 1.0]);
+        s.wal_commit(1, b"");
+        assert!(s.poisoned().is_some(), "commit fsync failure must poison");
+        let err = s.flush().unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        let err = s.truncate_wal().unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        // Reads still work (the data is in memory / on disk), so a caller
+        // can salvage state; only durability claims are refused.
+        assert_eq!(s.read_column(0), vec![1.0, 1.0]);
     }
 }

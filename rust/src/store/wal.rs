@@ -1,0 +1,495 @@
+//! Write-ahead log for the paged phi store (`rust/DESIGN.md` §13).
+//!
+//! An append-only, CRC-framed, fsync-on-commit intent log owned by
+//! [`crate::store::paged::PagedPhi`]. Between two checkpoints every
+//! column write is mirrored here as an already-encoded codec payload
+//! (the same bytes [`crate::store::codec::encode_column`] produced for
+//! the extent write), bracketed by batch markers:
+//!
+//! ```text
+//! BeginBatch{b} → ColumnWrite{b, w, record}* → Commit{b, trainer-state}
+//! ```
+//!
+//! Frames are self-delimiting — `[payload_len u32][crc32 u32][payload]`,
+//! all little-endian — so recovery scans forward, keeps every frame whose
+//! CRC matches, and discards the torn tail from the first bad frame on
+//! (a kill mid-append leaves at most one torn frame at the end; a torn
+//! frame *within* the prefix means the log itself was corrupted, and the
+//! conservative response is the same: trust only the clean prefix).
+//! Only batches whose `Commit` frame survives are replayed; an open
+//! batch at the tail is rolled back by construction.
+//!
+//! Under the pipelined executor frames of neighbouring batches interleave
+//! (batch `t+1` is staged — and its hot-buffer evictions logged — before
+//! batch `t` commits). Every frame carries its `batch_id`, so replay
+//! groups records by batch and orders batches by their `Commit` frames;
+//! interleaving is harmless.
+//!
+//! Durability contract: `append_*` buffers in the OS (no fsync);
+//! [`Wal::append_commit`] appends the commit frame and then fsyncs the
+//! log, so a batch is either durably committed in full or invisible.
+//! [`Wal::reset`] truncates the log after a successful checkpoint (the
+//! checkpoint supersedes everything the log was protecting).
+//!
+//! The backing file is abstracted behind [`WalBacking`] so the
+//! fault-injection shim ([`crate::store::fault::FaultFile`]) can stand in
+//! for a real file in crash-recovery tests (short writes, failed fsyncs,
+//! kill-after-N-ops) without real process kills.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::Path;
+
+/// Frame kinds (first payload byte).
+const KIND_BEGIN: u8 = 1;
+const KIND_COLUMN: u8 = 2;
+const KIND_COMMIT: u8 = 3;
+
+/// Frame header: payload length + payload CRC, both u32 LE.
+const FRAME_HEADER_BYTES: usize = 8;
+
+/// Parse guard: a claimed payload longer than this is treated as a torn
+/// frame rather than a real allocation request (the largest legitimate
+/// payload is one encoded column plus a few bytes of framing).
+const MAX_PAYLOAD_BYTES: usize = 1 << 30;
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the framing
+/// checksum for WAL frames and the `.idx` sidecar trailer. Hand-rolled:
+/// the crate takes no external dependencies.
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            j += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+/// CRC-32 (IEEE) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// The backing sink a [`Wal`] appends to. Production uses a real
+/// append-mode [`File`]; tests substitute
+/// [`crate::store::fault::FaultFile`] to inject short writes, fsync
+/// failures and kill-after-N-ops.
+pub trait WalBacking: Send {
+    /// Append `buf` at the end of the log.
+    fn append(&mut self, buf: &[u8]) -> io::Result<()>;
+    /// Make everything appended so far durable (fsync).
+    fn sync(&mut self) -> io::Result<()>;
+    /// Truncate the log to `len` bytes.
+    fn truncate(&mut self, len: u64) -> io::Result<()>;
+}
+
+impl WalBacking for File {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        self.write_all(buf)
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        self.sync_data()
+    }
+
+    fn truncate(&mut self, len: u64) -> io::Result<()> {
+        self.set_len(len)
+    }
+}
+
+/// One committed batch recovered from the log: the column records in
+/// append order (later records for the same word supersede earlier ones)
+/// plus the opaque trainer-state blob the owner attached at commit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalBatch {
+    pub batch_id: u64,
+    /// `(word, encoded column record)` in append order.
+    pub writes: Vec<(u32, Vec<u8>)>,
+    /// Owner-defined commit payload (FOEM: step, RNG state, phisum,
+    /// touched residual totals — see `em::foem`). Empty if none.
+    pub state: Vec<u8>,
+}
+
+/// The append-only batch-intent log. See the module docs for the frame
+/// format and durability contract.
+pub struct Wal {
+    backing: Box<dyn WalBacking>,
+    /// Current log length in bytes (frames appended and not truncated).
+    len: u64,
+    /// Total bytes appended over this handle's lifetime (bench metric;
+    /// survives `reset`).
+    appended: u64,
+    frame: Vec<u8>,
+}
+
+impl std::fmt::Debug for Wal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Wal")
+            .field("len", &self.len)
+            .field("appended", &self.appended)
+            .finish()
+    }
+}
+
+/// Scan `bytes` as a frame sequence: committed batches in commit order,
+/// plus the length of the clean prefix (everything past it is torn or
+/// garbage and must be truncated away). Pure, so torn-tail handling is
+/// unit-testable byte-by-byte.
+pub fn parse(bytes: &[u8]) -> (Vec<WalBatch>, u64) {
+    let mut open: Vec<WalBatch> = Vec::new();
+    let mut committed: Vec<WalBatch> = Vec::new();
+    let mut pos = 0usize;
+    let mut valid = 0usize;
+    while bytes.len() - pos >= FRAME_HEADER_BYTES {
+        let len =
+            u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if len < 9 || len > MAX_PAYLOAD_BYTES {
+            break; // impossible payload: torn or garbage
+        }
+        let start = pos + FRAME_HEADER_BYTES;
+        let Some(end) = start.checked_add(len) else { break };
+        if end > bytes.len() {
+            break; // frame extends past EOF: torn tail
+        }
+        let payload = &bytes[start..end];
+        if crc32(payload) != crc {
+            break;
+        }
+        let kind = payload[0];
+        let batch_id = u64::from_le_bytes(payload[1..9].try_into().unwrap());
+        match kind {
+            KIND_BEGIN => {
+                open.push(WalBatch { batch_id, writes: Vec::new(), state: Vec::new() });
+            }
+            KIND_COLUMN if payload.len() >= 13 => {
+                let word =
+                    u32::from_le_bytes(payload[9..13].try_into().unwrap());
+                let rec = payload[13..].to_vec();
+                // Tolerate a record without an explicit Begin (a reset
+                // that raced a crash can drop the marker): open the
+                // batch implicitly.
+                let batch = match open.iter_mut().find(|b| b.batch_id == batch_id) {
+                    Some(b) => b,
+                    None => {
+                        open.push(WalBatch {
+                            batch_id,
+                            writes: Vec::new(),
+                            state: Vec::new(),
+                        });
+                        open.last_mut().unwrap()
+                    }
+                };
+                batch.writes.push((word, rec));
+            }
+            KIND_COMMIT => {
+                let state = payload[9..].to_vec();
+                let mut batch = match open.iter().position(|b| b.batch_id == batch_id) {
+                    Some(i) => open.remove(i),
+                    None => WalBatch {
+                        batch_id,
+                        writes: Vec::new(),
+                        state: Vec::new(),
+                    },
+                };
+                batch.state = state;
+                committed.push(batch);
+            }
+            _ => break, // unknown kind: treat as corruption, keep the prefix
+        }
+        pos = end;
+        valid = pos;
+    }
+    // Batches still open at the clean tail are rolled back (dropped).
+    (committed, valid as u64)
+}
+
+impl Wal {
+    /// Create (or truncate) a fresh, empty log at `path`.
+    pub fn create(path: &Path) -> io::Result<Self> {
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(Self::from_backing(Box::new(file), 0))
+    }
+
+    /// Open the log at `path` (creating it if absent), recover the
+    /// committed batches, and truncate the torn tail so subsequent
+    /// appends extend a clean prefix.
+    pub fn open(path: &Path) -> io::Result<(Self, Vec<WalBatch>)> {
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e),
+        };
+        let (batches, valid) = parse(&bytes);
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        let mut wal = Self::from_backing(Box::new(file), bytes.len() as u64);
+        if valid < bytes.len() as u64 {
+            wal.backing.truncate(valid)?;
+            wal.backing.sync()?;
+            wal.len = valid;
+        }
+        Ok((wal, batches))
+    }
+
+    /// Build a log over an arbitrary backing (fault-injection tests).
+    pub fn from_backing(backing: Box<dyn WalBacking>, len: u64) -> Self {
+        Self { backing, len, appended: 0, frame: Vec::new() }
+    }
+
+    fn append_frame(&mut self, payload_fn: impl FnOnce(&mut Vec<u8>)) -> io::Result<()> {
+        self.frame.clear();
+        self.frame.resize(FRAME_HEADER_BYTES, 0);
+        payload_fn(&mut self.frame);
+        let payload_len = (self.frame.len() - FRAME_HEADER_BYTES) as u32;
+        let crc = crc32(&self.frame[FRAME_HEADER_BYTES..]);
+        self.frame[0..4].copy_from_slice(&payload_len.to_le_bytes());
+        self.frame[4..8].copy_from_slice(&crc.to_le_bytes());
+        self.backing.append(&self.frame)?;
+        self.len += self.frame.len() as u64;
+        self.appended += self.frame.len() as u64;
+        Ok(())
+    }
+
+    /// Append a `BeginBatch{batch_id}` marker (no fsync).
+    pub fn append_begin(&mut self, batch_id: u64) -> io::Result<()> {
+        self.append_frame(|p| {
+            p.push(KIND_BEGIN);
+            p.extend_from_slice(&batch_id.to_le_bytes());
+        })
+    }
+
+    /// Append one column-write intent: the already-encoded codec record
+    /// that is (or will be) written to the extent (no fsync).
+    pub fn append_column(
+        &mut self,
+        batch_id: u64,
+        word: u32,
+        record: &[u8],
+    ) -> io::Result<()> {
+        self.append_frame(|p| {
+            p.push(KIND_COLUMN);
+            p.extend_from_slice(&batch_id.to_le_bytes());
+            p.extend_from_slice(&word.to_le_bytes());
+            p.extend_from_slice(record);
+        })
+    }
+
+    /// Append `Commit{batch_id}` carrying the owner's state blob, then
+    /// fsync — the batch's durability point.
+    pub fn append_commit(&mut self, batch_id: u64, state: &[u8]) -> io::Result<()> {
+        self.append_frame(|p| {
+            p.push(KIND_COMMIT);
+            p.extend_from_slice(&batch_id.to_le_bytes());
+            p.extend_from_slice(state);
+        })?;
+        self.backing.sync()
+    }
+
+    /// Truncate the log after a successful checkpoint (which now covers
+    /// everything the log was protecting).
+    pub fn reset(&mut self) -> io::Result<()> {
+        self.backing.truncate(0)?;
+        self.backing.sync()?;
+        self.len = 0;
+        Ok(())
+    }
+
+    /// Current log length in bytes.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total bytes appended over this handle's lifetime (not reduced by
+    /// [`Self::reset`]) — the write-amplification metric the
+    /// `streaming_pipeline` bench reports as `wal_bytes`.
+    pub fn bytes_appended(&self) -> u64 {
+        self.appended
+    }
+}
+
+/// `<store path>.wal` — sibling of the container, like the `.idx`
+/// sidecar (extension *appended*, so `phi.bin` and `phi.res.bin` get
+/// distinct logs).
+pub fn wal_path(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".wal");
+    std::path::PathBuf::from(os)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        // IEEE CRC-32 check values ("check" column of the catalogue).
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    fn temp_wal(label: &str) -> (crate::util::TempDir, std::path::PathBuf) {
+        let dir = crate::util::TempDir::new(label);
+        let path = dir.path().join("t.wal");
+        (dir, path)
+    }
+
+    #[test]
+    fn recovery_wal_round_trip_replays_committed_batches() {
+        let (_dir, path) = temp_wal("walrt");
+        let mut wal = Wal::create(&path).unwrap();
+        wal.append_begin(1).unwrap();
+        wal.append_column(1, 7, &[1, 2, 3]).unwrap();
+        wal.append_column(1, 9, &[4, 5]).unwrap();
+        wal.append_commit(1, b"state-1").unwrap();
+        wal.append_begin(2).unwrap();
+        wal.append_column(2, 7, &[6]).unwrap();
+        wal.append_commit(2, b"").unwrap();
+        // Batch 3 never commits: rolled back on recovery.
+        wal.append_begin(3).unwrap();
+        wal.append_column(3, 1, &[9, 9]).unwrap();
+        assert!(wal.bytes_appended() > 0);
+        drop(wal);
+
+        let (wal, batches) = Wal::open(&path).unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].batch_id, 1);
+        assert_eq!(batches[0].writes, vec![(7, vec![1, 2, 3]), (9, vec![4, 5])]);
+        assert_eq!(batches[0].state, b"state-1");
+        assert_eq!(batches[1].batch_id, 2);
+        assert_eq!(batches[1].writes, vec![(7, vec![6])]);
+        // The uncommitted batch-3 frames survive in the file (they are
+        // intact frames, not torn), but are not replayed.
+        assert!(wal.len() > 0);
+    }
+
+    #[test]
+    fn recovery_wal_interleaved_batches_group_by_id() {
+        // Pipelined executors interleave frames: Begin(2) before
+        // Commit(1). Replay must group by batch_id, order by commit.
+        let (_dir, path) = temp_wal("walint");
+        let mut wal = Wal::create(&path).unwrap();
+        wal.append_begin(1).unwrap();
+        wal.append_column(1, 0, &[1]).unwrap();
+        wal.append_begin(2).unwrap();
+        wal.append_column(2, 5, &[2]).unwrap();
+        wal.append_column(1, 3, &[3]).unwrap();
+        wal.append_commit(1, b"a").unwrap();
+        wal.append_commit(2, b"b").unwrap();
+        drop(wal);
+        let (_wal, batches) = Wal::open(&path).unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].batch_id, 1);
+        assert_eq!(batches[0].writes, vec![(0, vec![1]), (3, vec![3])]);
+        assert_eq!(batches[1].batch_id, 2);
+        assert_eq!(batches[1].writes, vec![(5, vec![2])]);
+    }
+
+    #[test]
+    fn recovery_wal_discards_garbage_tail_and_truncates() {
+        let (_dir, path) = temp_wal("walgar");
+        let mut wal = Wal::create(&path).unwrap();
+        wal.append_begin(1).unwrap();
+        wal.append_column(1, 2, &[8, 8, 8]).unwrap();
+        wal.append_commit(1, b"").unwrap();
+        let clean = wal.len();
+        drop(wal);
+        // A kill mid-append leaves arbitrary bytes at the tail.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0xDE, 0xAD, 0xBE, 0xEF, 0x01, 0x02, 0x03]);
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (wal, batches) = Wal::open(&path).unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(wal.len(), clean, "torn tail must be truncated away");
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), clean);
+    }
+
+    #[test]
+    fn recovery_wal_every_truncation_point_yields_a_clean_prefix() {
+        // Byte-exact torn-tail sweep: for EVERY possible kill point the
+        // log must recover some prefix of the committed batches, never
+        // error, never invent data.
+        let (_dir, path) = temp_wal("walsweep");
+        let mut wal = Wal::create(&path).unwrap();
+        for b in 1..=3u64 {
+            wal.append_begin(b).unwrap();
+            wal.append_column(b, b as u32, &[b as u8; 5]).unwrap();
+            wal.append_commit(b, &b.to_le_bytes()).unwrap();
+        }
+        drop(wal);
+        let full = std::fs::read(&path).unwrap();
+        for cut in 0..=full.len() {
+            let (batches, valid) = parse(&full[..cut]);
+            assert!(valid as usize <= cut);
+            // Committed batches recovered in order, a prefix of 1..=3.
+            let ids: Vec<u64> = batches.iter().map(|b| b.batch_id).collect();
+            let expect: Vec<u64> = (1..=ids.len() as u64).collect();
+            assert_eq!(ids, expect, "cut at {cut}");
+            for b in &batches {
+                assert_eq!(b.writes, vec![(b.batch_id as u32, vec![b.batch_id as u8; 5])]);
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_wal_corrupt_interior_frame_keeps_clean_prefix() {
+        let (_dir, path) = temp_wal("walflip");
+        let mut wal = Wal::create(&path).unwrap();
+        wal.append_begin(1).unwrap();
+        wal.append_commit(1, b"first").unwrap();
+        let first_end = wal.len() as usize;
+        wal.append_begin(2).unwrap();
+        wal.append_commit(2, b"second").unwrap();
+        drop(wal);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one payload byte inside the *second* batch's frames.
+        bytes[first_end + FRAME_HEADER_BYTES] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let (_wal, batches) = Wal::open(&path).unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].state, b"first");
+    }
+
+    #[test]
+    fn recovery_wal_reset_truncates_but_keeps_append_counter() {
+        let (_dir, path) = temp_wal("walreset");
+        let mut wal = Wal::create(&path).unwrap();
+        wal.append_begin(1).unwrap();
+        wal.append_commit(1, b"x").unwrap();
+        let appended = wal.bytes_appended();
+        assert!(appended > 0);
+        wal.reset().unwrap();
+        assert_eq!(wal.len(), 0);
+        assert_eq!(wal.bytes_appended(), appended);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 0);
+        // Appends continue cleanly after a reset.
+        wal.append_begin(2).unwrap();
+        wal.append_commit(2, b"y").unwrap();
+        drop(wal);
+        let (_wal, batches) = Wal::open(&path).unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].batch_id, 2);
+    }
+}

@@ -29,6 +29,18 @@ impl Rng {
         Self { s: [next(), next(), next(), next()] }
     }
 
+    /// Export the raw xoshiro256++ state — the crash-recovery checkpoint
+    /// persists this so a resumed run continues the exact draw sequence
+    /// (`coordinator::checkpoint`).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild an RNG mid-stream from a [`Self::state`] snapshot.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = (self.s[0].wrapping_add(self.s[3]))

@@ -1,0 +1,224 @@
+//! Crash-recovery equivalence guards for the WAL + checkpoint stack
+//! (`store::wal`, `coordinator::checkpoint`, `rust/DESIGN.md` §13),
+//! driven entirely through the public API:
+//!
+//! * Kill the trainer at a batch boundary (`std::mem::forget`, the
+//!   userspace analogue of `kill -9`: no flush, no Drop, no WAL
+//!   truncation), recover via [`Foem::paged_resume`], finish the
+//!   stream — trainer state, exported phi, and held-out perplexity
+//!   must be BIT-identical to the uninterrupted same-seed run.
+//! * A torn WAL tail (partial last frame, as a crash mid-append
+//!   leaves behind) silently falls back to the last complete commit;
+//!   the lost batch is simply retrained, and the final state is
+//!   still bit-identical.
+//! * Garbage appended past the last commit is discarded the same way.
+
+use foem::baselines::OnlineLda;
+use foem::coordinator::checkpoint::{self, TrainerCheckpoint};
+use foem::em::foem::{Foem, FoemConfig, FoemTrainState};
+use foem::store::wal::wal_path;
+use foem::stream::{CorpusStream, StreamConfig};
+use foem::util::TempDir;
+use foem::LdaParams;
+
+const K: usize = 6;
+const SEED: u64 = 7;
+
+fn corpus() -> foem::corpus::Corpus {
+    let mut cfg = foem::corpus::synthetic::SyntheticConfig::small();
+    cfg.n_docs = 250;
+    foem::corpus::synthetic::generate(&cfg, 31)
+}
+
+/// 200 train docs / 50 per batch = exactly 4 batches per pass.
+fn stream_cfg() -> StreamConfig {
+    StreamConfig { minibatch_docs: 50, ..Default::default() }
+}
+
+fn foem_cfg() -> FoemConfig {
+    let mut fc = FoemConfig::paper();
+    // Small hot buffer: columns evict mid-batch, so the WAL's
+    // extent-preservation and dirty-hot-sweep paths both run.
+    fc.hot_words = 8;
+    fc
+}
+
+fn mk(dir: &TempDir, name: &str, n_words: usize) -> Foem<foem::store::paged::PagedPhi> {
+    Foem::paged_create(
+        LdaParams::paper_defaults(K),
+        &dir.path().join(name),
+        n_words,
+        32 * K * 4,
+        foem_cfg(),
+        SEED,
+    )
+    .unwrap()
+}
+
+fn ppx_bits(algo: &mut Foem<foem::store::paged::PagedPhi>, test: &foem::corpus::Corpus) -> u64 {
+    let proto = foem::eval::EvalProtocol { fold_in_iters: 20, seed: 0, ..Default::default() };
+    algo.eval_perplexity(&test.docs, &proto).to_bits()
+}
+
+/// The uninterrupted WAL-off reference run: final trainer state, phi
+/// bits, and held-out perplexity bits. Everything a recovered run
+/// must reproduce exactly.
+fn reference(
+    dir: &TempDir,
+    train: &foem::corpus::Corpus,
+    test: &foem::corpus::Corpus,
+) -> (FoemTrainState, Vec<f32>, u64) {
+    let mut a = mk(dir, "ref.bin", train.n_words());
+    for mb in CorpusStream::new(train, stream_cfg()) {
+        a.process_minibatch(&mb);
+    }
+    let state = a.export_train_state();
+    let phi = a.export_phi().raw().to_vec();
+    let ppx = ppx_bits(&mut a, test);
+    (state, phi, ppx)
+}
+
+/// Run a WAL-armed trainer: coordinator checkpoint after
+/// `checkpoint_after` batches, hard kill after `kill_after`, leaving
+/// batches (checkpoint_after, kill_after] only in the WALs.
+/// Returns the number of batches processed before the kill.
+fn run_and_kill(
+    dir: &TempDir,
+    ckpt_dir: &std::path::Path,
+    train: &foem::corpus::Corpus,
+    checkpoint_after: usize,
+    kill_after: usize,
+) -> usize {
+    let mut b = mk(dir, "phi.bin", train.n_words());
+    b.enable_wal().unwrap();
+    let mut done = 0usize;
+    for mb in CorpusStream::new(train, stream_cfg()) {
+        b.process_minibatch(&mb);
+        done += 1;
+        if done == checkpoint_after {
+            b.checkpoint_paged().unwrap();
+            checkpoint::save(
+                ckpt_dir,
+                &TrainerCheckpoint {
+                    fingerprint: 0xfeed,
+                    batch_cursor: done as u64,
+                    epoch: 0,
+                    state: b.export_train_state(),
+                },
+            )
+            .unwrap();
+            OnlineLda::truncate_wal(&mut b).unwrap();
+        }
+        if done == kill_after {
+            break;
+        }
+    }
+    // kill -9: no Drop, no flush, no .idx rewrite, no WAL truncation.
+    std::mem::forget(b);
+    done
+}
+
+/// Recover from the on-disk checkpoint + WALs, finish the remainder of
+/// the stream, and assert bit-identity against the reference run.
+fn resume_and_check(
+    dir: &TempDir,
+    ckpt_dir: &std::path::Path,
+    train: &foem::corpus::Corpus,
+    test: &foem::corpus::Corpus,
+    want_last: u64,
+    reference: &(FoemTrainState, Vec<f32>, u64),
+) {
+    let ckpt = checkpoint::load(ckpt_dir).unwrap().expect("checkpoint exists");
+    let (mut r, last) = Foem::paged_resume(
+        LdaParams::paper_defaults(K),
+        &dir.path().join("phi.bin"),
+        32 * K * 4,
+        foem_cfg(),
+        &ckpt.state,
+    )
+    .unwrap();
+    assert_eq!(last, want_last, "WAL replay recovered the wrong batch cursor");
+    for mb in CorpusStream::new(train, stream_cfg()).skip(last as usize) {
+        r.process_minibatch(&mb);
+    }
+    assert_eq!(
+        r.export_train_state(),
+        reference.0,
+        "recovered trainer state diverged from the uninterrupted run"
+    );
+    assert_eq!(
+        r.export_phi().raw(),
+        &reference.1[..],
+        "recovered phi diverged from the uninterrupted run"
+    );
+    assert_eq!(
+        ppx_bits(&mut r, test),
+        reference.2,
+        "recovered held-out perplexity diverged"
+    );
+}
+
+#[test]
+fn recovery_kill_and_resume_matches_uninterrupted_run() {
+    let c = corpus();
+    let (train, test) = c.split(50, 1);
+    let rdir = TempDir::new("rec-kill-ref");
+    let want = reference(&rdir, &train, &test);
+
+    let dir = TempDir::new("rec-kill");
+    let ckpt_dir = dir.path().join("ckpt");
+    // Checkpoint at batch 2, die at batch 3: batch 3 exists ONLY as
+    // committed WAL frames (the on-disk .idx still describes batch 2),
+    // and batch 4 is retrained live after recovery.
+    let done = run_and_kill(&dir, &ckpt_dir, &train, 2, 3);
+    assert_eq!(done, 3);
+    resume_and_check(&dir, &ckpt_dir, &train, &test, 3, &want);
+}
+
+#[test]
+fn recovery_torn_wal_tail_falls_back_to_last_commit() {
+    let c = corpus();
+    let (train, test) = c.split(50, 1);
+    let rdir = TempDir::new("rec-torn-ref");
+    let want = reference(&rdir, &train, &test);
+
+    let dir = TempDir::new("rec-torn");
+    let ckpt_dir = dir.path().join("ckpt");
+    let done = run_and_kill(&dir, &ckpt_dir, &train, 2, 4);
+    assert_eq!(done, 4);
+
+    // Tear the phi WAL mid-frame — the tail a crash inside append()
+    // leaves. Batch 4's commit frame is destroyed, so recovery must
+    // land on batch 3 and retrain batch 4 from the stream instead.
+    let wal = wal_path(&dir.path().join("phi.bin"));
+    let bytes = std::fs::read(&wal).unwrap();
+    assert!(bytes.len() > 7, "phi WAL unexpectedly small");
+    std::fs::write(&wal, &bytes[..bytes.len() - 7]).unwrap();
+
+    resume_and_check(&dir, &ckpt_dir, &train, &test, 3, &want);
+}
+
+#[test]
+fn recovery_garbage_wal_tail_is_ignored() {
+    let c = corpus();
+    let (train, test) = c.split(50, 1);
+    let rdir = TempDir::new("rec-garbage-ref");
+    let want = reference(&rdir, &train, &test);
+
+    let dir = TempDir::new("rec-garbage");
+    let ckpt_dir = dir.path().join("ckpt");
+    let done = run_and_kill(&dir, &ckpt_dir, &train, 2, 3);
+    assert_eq!(done, 3);
+
+    // Append junk past the last commit on BOTH logs (a torn Begin frame
+    // of a batch that never committed looks exactly like this). Every
+    // committed frame before it must still replay.
+    for store in ["phi.bin", "phi.res.bin"] {
+        let wal = wal_path(&dir.path().join(store));
+        let mut bytes = std::fs::read(&wal).unwrap();
+        bytes.extend(std::iter::repeat(0xAB).take(64));
+        std::fs::write(&wal, &bytes).unwrap();
+    }
+
+    resume_and_check(&dir, &ckpt_dir, &train, &test, 3, &want);
+}

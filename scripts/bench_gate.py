@@ -58,12 +58,13 @@ FAMILIES = {
         ("tokens_per_sec", True),
         ("disk_bytes", False),
         ("file_bytes", False),
+        ("wal_bytes", False),
     ]),
     "BENCH_serve.json": ("serve", [("docs_per_sec", True)]),
 }
 
 KEY_FIELDS = ("bench", "k", "subset", "impl", "workers", "depth", "algo",
-              "isa", "codec", "sweep")
+              "isa", "codec", "sweep", "wal")
 
 
 def load_rows(path, bench_tag):
