@@ -14,6 +14,14 @@
 //! O(NNZ·S) instead of O(NNZ·K), so at serving-sized K the Fixed(10)
 //! configuration sustains a higher docs/sec at lower tail latency, and
 //! workers scale throughput until the queue is the bottleneck.
+//!
+//! A second row family (`"sweep":"shards"`, N ∈ {1, 2, 4}) serves the
+//! same workload against a DISTRIBUTED snapshot assembled from N
+//! per-shard view parts (`ModelRegistry::publish_distributed`, the
+//! gather half of the vocabulary-sharded router). The merged snapshot
+//! is one contiguous view, so steady-state docs/sec must be invariant
+//! in N — the shard count is paid once at publish (`publish_us`), never
+//! per request. `scripts/bench_gate.py` keys these rows on `shards`.
 
 use foem::corpus::synthetic::{generate, SyntheticConfig};
 use foem::em::infer::FoldInConfig;
@@ -145,5 +153,90 @@ fn main() {
                 report.p99_latency_us
             );
         }
+    }
+
+    // Shards sweep: gather N per-shard view parts into one distributed
+    // snapshot, then serve the identical workload (workers=4, fixed10).
+    // Publish cost scales with N; per-request cost must not.
+    for &n_shards in &[1usize, 2, 4] {
+        let span = corpus.n_words().div_ceil(n_shards).max(1);
+        let registry = Arc::new(ModelRegistry::new());
+        let publish_start = std::time::Instant::now();
+        let parts: Vec<EvalPhiView> = (0..n_shards)
+            .filter_map(|s| {
+                let lo = (s * span).min(words.len());
+                let hi = ((s + 1) * span).min(words.len());
+                if lo == hi {
+                    None
+                } else {
+                    Some(EvalPhiView::from_dense(&phi, &words[lo..hi]))
+                }
+            })
+            .collect();
+        registry.publish_distributed(parts, params);
+        let publish_us = publish_start.elapsed().as_micros();
+        let serve_cfg = ServeConfig {
+            max_batch_docs: 32,
+            queue_docs: 1024,
+            workers: 4,
+            fold_in: FoldInConfig {
+                subset: TopicSubset::Fixed(10),
+                explore_slots: 2,
+                max_sweeps: SWEEPS,
+                tol: 1e-2,
+                n_workers: 1,
+                kernel_backend: foem::em::simd::KernelBackend::Auto,
+            },
+        };
+        let warm = Server::start(Arc::clone(&registry), serve_cfg);
+        for (i, doc) in requests.iter().enumerate() {
+            let resp = warm
+                .submit(doc.clone(), i as u64)
+                .expect("submit")
+                .wait()
+                .expect("warmup response");
+            assert_eq!(resp.theta.len(), k, "bad theta length");
+        }
+        warm.shutdown();
+
+        let server = Server::start(Arc::clone(&registry), serve_cfg);
+        for wave in 0..WAVES {
+            let pending: Vec<_> = requests
+                .iter()
+                .enumerate()
+                .map(|(i, doc)| {
+                    server
+                        .submit(doc.clone(), (wave * 1000 + i) as u64)
+                        .expect("submit")
+                })
+                .collect();
+            for p in pending {
+                p.wait().expect("response");
+            }
+        }
+        let report = server.shutdown();
+        println!(
+            "serve_k{k}_shards{n_shards}: {} docs  {:.0} docs/s  \
+             p50 {:.0}µs  p99 {:.0}µs  publish {publish_us}µs",
+            report.docs,
+            report.docs_per_sec,
+            report.p50_latency_us,
+            report.p99_latency_us
+        );
+        println!(
+            "BENCH_serve.json {{\"bench\":\"serve\",\"k\":{k},\
+             \"workers\":4,\"subset\":\"fixed10\",\
+             \"sweep\":\"shards\",\"shards\":{n_shards},\
+             \"docs\":{},\"batches\":{},\"mean_batch_docs\":{:.2},\
+             \"docs_per_sec\":{:.1},\"p50_us\":{:.1},\
+             \"p99_us\":{:.1},\"publish_us\":{publish_us},\
+             \"sweeps\":{SWEEPS}}}",
+            report.docs,
+            report.batches,
+            report.mean_batch_docs,
+            report.docs_per_sec,
+            report.p50_latency_us,
+            report.p99_latency_us
+        );
     }
 }

@@ -53,6 +53,8 @@ pub fn checkpoint_path(dir: &Path) -> PathBuf {
 /// knobs (eval/checkpoint/publish cadence, verbosity, buffer sizes,
 /// pipeline depth — bit-identical by contract) are deliberately
 /// excluded, so a resume may e.g. change the eval cadence but not K.
+/// The vocabulary shard count IS included even though sharding is
+/// content-identical: it pins the on-disk store layout.
 pub fn config_fingerprint(cfg: &RunConfig) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     let mut eat = |bytes: &[u8]| {
@@ -69,6 +71,11 @@ pub fn config_fingerprint(cfg: &RunConfig) -> u64 {
         cfg.lambda_k_topics as u64,
         cfg.hot_words as u64,
         cfg.n_workers as u64,
+        // The shard layout is derived deterministically from
+        // `n_shards` (even contiguous ranges), so the count pins the
+        // on-disk partition: resuming with a different `--shards`
+        // would reopen the wrong store files and is rejected here.
+        cfg.n_shards as u64,
         cfg.seed,
     ] {
         eat(&v.to_le_bytes());

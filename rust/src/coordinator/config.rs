@@ -114,6 +114,14 @@ pub struct RunConfig {
     /// route minibatches through `exec::ParallelExecutor`); `1` keeps the
     /// exact serial path.
     pub n_workers: usize,
+    /// Vocabulary shards (`--shards`, FOEM + paged store only): `0`
+    /// keeps the single-store path; `N >= 1` partitions the vocabulary
+    /// into N contiguous ranges, each owned by a phi-shard thread with
+    /// its own paged store pair, WAL and checkpoint
+    /// ([`crate::shard`]). `N = 1` is bit-identical to the unsharded
+    /// run; the shard layout is part of the checkpoint fingerprint, so
+    /// `resume` rejects a changed shard count.
+    pub n_shards: usize,
     /// Software-pipeline depth (`exec::pipeline`): how many minibatches
     /// may be staged/computing ahead of the strict-order apply cursor.
     /// `0` bypasses the pipeline entirely — bit-identical to the plain
@@ -182,6 +190,7 @@ impl Default for RunConfig {
             resume: false,
             wal: false,
             n_workers: 1,
+            n_shards: 0,
             pipeline_depth: 0,
             fold_in_subset: 10,
             fold_in_workers: 1,
@@ -305,6 +314,7 @@ impl RunConfig {
             "resume" => self.resume = value.parse()?,
             "wal" => self.wal = value.parse()?,
             "n_workers" | "workers" => self.n_workers = value.parse()?,
+            "n_shards" | "shards" => self.n_shards = value.parse()?,
             "pipeline_depth" => self.pipeline_depth = value.parse()?,
             "fold_in_subset" => self.fold_in_subset = value.parse()?,
             "fold_in_workers" => self.fold_in_workers = value.parse()?,

@@ -162,6 +162,34 @@ impl Driver {
         Ok((algo, cursor))
     }
 
+    /// Sharded twin of [`Self::build_resumed_foem`]: reopen every
+    /// shard's store pair with its WAL, replay up to the last GLOBALLY
+    /// durable batch, and respawn the owner fleet with logs armed. The
+    /// checkpoint fingerprint already pinned `n_shards`, so the
+    /// on-disk shard layout is the one this config expects.
+    fn build_resumed_foem_sharded(
+        &self,
+        ckpt: &TrainerCheckpoint,
+    ) -> Result<(Foem<crate::shard::ShardedPhi>, u64)> {
+        let StoreKind::Paged { path, buffer_bytes } = &self.cfg.store
+        else {
+            anyhow::bail!("--resume requires a paged store");
+        };
+        let fc = self.foem_paged_config(*buffer_bytes);
+        let (algo, cursor) = Foem::sharded_resume(
+            self.cfg.params(),
+            path,
+            self.cfg.n_shards,
+            *buffer_bytes,
+            fc,
+            &ckpt.state,
+        )?;
+        if let Some(reg) = &self.registry {
+            reg.restore_epoch_floor(ckpt.epoch);
+        }
+        Ok((algo, cursor))
+    }
+
     /// One durability point, shared by both run loops: flush the stores,
     /// snapshot the trainer atomically (when `--checkpoint-dir` is set),
     /// then truncate the WALs — strictly in that order, so a crash
@@ -226,6 +254,25 @@ impl Driver {
                     cfg.foem_config(),
                     cfg.seed,
                 )),
+                StoreKind::Paged { path, buffer_bytes }
+                    if cfg.n_shards > 0 =>
+                {
+                    let fc = self.foem_paged_config(*buffer_bytes);
+                    let mut f = Foem::sharded_create_with_codec(
+                        params,
+                        path,
+                        cfg.n_shards,
+                        n_words,
+                        *buffer_bytes,
+                        fc,
+                        cfg.seed,
+                        cfg.phi_codec,
+                    )?;
+                    if self.wal_armed() {
+                        f.enable_wal()?;
+                    }
+                    Box::new(f)
+                }
                 StoreKind::Paged { path, buffer_bytes } => {
                     let fc = self.foem_paged_config(*buffer_bytes);
                     let mut f = Foem::paged_create_with_codec(
@@ -308,6 +355,11 @@ impl Driver {
         let resume = self.load_resume_checkpoint()?;
         let mut start_cursor = 0u64;
         let mut algo: Box<dyn OnlineLda> = match &resume {
+            Some(ckpt) if self.cfg.n_shards > 0 => {
+                let (a, cursor) = self.build_resumed_foem_sharded(ckpt)?;
+                start_cursor = cursor;
+                Box::new(a)
+            }
             Some(ckpt) => {
                 let (a, cursor) = self.build_resumed_foem(ckpt)?;
                 start_cursor = cursor;
@@ -414,8 +466,30 @@ impl Driver {
             }
             (Algorithm::Foem, StoreKind::Paged { path, buffer_bytes }) => {
                 if let Some(ckpt) = &resume {
+                    if cfg.n_shards > 0 {
+                        let (algo, cursor) =
+                            self.build_resumed_foem_sharded(ckpt)?;
+                        return self.run_pipelined(algo, train, test, cursor);
+                    }
                     let (algo, cursor) = self.build_resumed_foem(ckpt)?;
                     return self.run_pipelined(algo, train, test, cursor);
+                }
+                if cfg.n_shards > 0 {
+                    let fc = self.foem_paged_config(*buffer_bytes);
+                    let mut algo = Foem::sharded_create_with_codec(
+                        params,
+                        path,
+                        cfg.n_shards,
+                        train.n_words(),
+                        *buffer_bytes,
+                        fc,
+                        cfg.seed,
+                        cfg.phi_codec,
+                    )?;
+                    if self.wal_armed() {
+                        algo.enable_wal()?;
+                    }
+                    return self.run_pipelined(algo, train, test, 0);
                 }
                 let fc = self.foem_paged_config(*buffer_bytes);
                 let mut algo = Foem::paged_create_with_codec(

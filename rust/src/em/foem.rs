@@ -629,15 +629,8 @@ impl<S: PhiColumnStore> Foem<S> {
         // scheduling heuristic and must only stay non-negative.
         for (i, &gw) in staged.local_words.iter().enumerate() {
             let gw = gw as usize;
-            let d = res_delta.col(i);
-            let mut total = 0.0f32;
-            self.res_store.with_column(gw, |col| {
-                for (c, &dv) in col.iter_mut().zip(d) {
-                    *c = (*c + dv).max(0.0);
-                    total += *c;
-                }
-            });
-            self.r_totals[gw] = total;
+            self.r_totals[gw] =
+                self.res_store.clamp_add_column(gw, res_delta.col(i));
         }
 
         let inner = results.iter().map(|r| r.inner_iters).max().unwrap_or(0);

@@ -246,6 +246,55 @@ impl EvalPhiView {
     pub fn has_word(&self, w: u32) -> bool {
         self.words.binary_search(&w).is_ok()
     }
+
+    /// Gather per-shard views into one — the serve-side merge of the
+    /// vocabulary-sharded fleet's scatter ([`crate::shard`]): each shard
+    /// contributes the columns of its contiguous word range, in shard
+    /// (= ascending word-range) order, and all parts carry the same
+    /// coordinator-resident `phisum`, so concatenation is the whole
+    /// merge. Panics if the parts are empty, disagree on K/phisum, or
+    /// their word ranges are not disjoint and ascending — those are
+    /// router bugs, not data conditions.
+    pub fn merge_shards(parts: Vec<EvalPhiView>) -> Self {
+        let mut it = parts.into_iter();
+        let mut out = it.next().expect("merge_shards: no shard views");
+        debug_assert!(
+            out.col_stats.is_empty() || out.col_stats.len() == out.words.len(),
+            "merge_shards: part stats not parallel to its words"
+        );
+        for part in it {
+            let any_stats = !out.col_stats.is_empty();
+            assert_eq!(out.k, part.k, "merge_shards: K mismatch");
+            assert_eq!(
+                out.phisum, part.phisum,
+                "merge_shards: shards disagree on the topic totals"
+            );
+            if let (Some(&last), Some(&first)) =
+                (out.words.last(), part.words.first())
+            {
+                assert!(
+                    last < first,
+                    "merge_shards: shard word ranges overlap or are out of \
+                     order ({last} >= {first})"
+                );
+            }
+            // A view without stats contributes explicit unknowns so the
+            // merged stats stay parallel to the merged words.
+            if any_stats || !part.col_stats.is_empty() {
+                out.col_stats.resize(out.words.len(), None);
+                if part.col_stats.is_empty() {
+                    out.col_stats
+                        .resize(out.words.len() + part.words.len(), None);
+                } else {
+                    out.col_stats.extend(part.col_stats);
+                }
+            }
+            out.words.extend(part.words);
+            out.data.extend(part.data);
+            out.n_words = out.n_words.max(part.n_words);
+        }
+        out
+    }
 }
 
 impl PhiAccess for EvalPhiView {
@@ -426,12 +475,7 @@ impl SsDelta {
         phisum: &mut [f32],
     ) {
         for (i, &w) in self.words.iter().enumerate() {
-            let src = self.col(i);
-            store.with_column(w as usize, |col| {
-                for (c, &d) in col.iter_mut().zip(src) {
-                    *c += d;
-                }
-            });
+            store.merge_column(w as usize, self.col(i));
         }
         for (p, &d) in phisum.iter_mut().zip(&self.phisum) {
             *p += d;

@@ -55,6 +55,7 @@ pub mod eval;
 pub mod exec;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod store;
 pub mod stream;
 pub mod util;

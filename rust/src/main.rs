@@ -37,6 +37,11 @@ fn usage() -> ! {
          \x20                            smallest per column, raw is the\n\
          \x20                            bit-identity reference format)\n\
          \x20       --n-workers N  (parallel sharded E-step; 1 = serial)\n\
+         \x20       --shards N  (vocabulary-sharded store fleet: N owner\n\
+         \x20                            threads, each with its own paged store\n\
+         \x20                            pair + WAL + checkpoint; 0 = single\n\
+         \x20                            store, 1 = bit-identical to unsharded;\n\
+         \x20                            foem + --store-path only)\n\
          \x20       --pipeline-depth N  (software-pipelined staging: prefetch +\n\
          \x20                            write-behind overlap compute; 0 = off,\n\
          \x20                            bit-identical serial; foem/sem only)\n\
@@ -129,12 +134,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
         corpus.n_tokens()
     );
     println!(
-        "algorithm {} K={} D_s={} workers={} pipeline_depth={} store={:?}",
+        "algorithm {} K={} D_s={} workers={} pipeline_depth={} shards={} \
+         store={:?}",
         cfg.algorithm.name(),
         cfg.n_topics,
         cfg.minibatch_docs,
         cfg.n_workers,
         cfg.pipeline_depth,
+        cfg.n_shards,
         cfg.store
     );
     let mut driver = Driver::new(cfg);

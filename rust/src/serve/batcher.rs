@@ -21,6 +21,16 @@
 //! bit-identical to an offline [`crate::em::infer::fold_in`] +
 //! [`crate::eval::log_likelihood`] run against the same snapshot, no
 //! matter what else is in flight (`tests/serve_equivalence.rs`).
+//!
+//! **Distributed snapshots.** Under a vocabulary-sharded trainer
+//! ([`crate::shard`]) the snapshot a request pins is assembled by the
+//! scatter-gather router: per-shard view parts, gathered while every
+//! shard is quiesced at the same batch cursor, merged into one
+//! [`crate::em::EvalPhiView`] before publication
+//! ([`ModelRegistry::publish_distributed`]). The batcher is oblivious —
+//! a merged snapshot is bit-identical to a single-store one, so the
+//! determinism contract above holds unchanged for sharded runs
+//! (`tests/shard_equivalence.rs`).
 
 use super::registry::{ModelRegistry, ModelSnapshot};
 use super::ServeConfig;

@@ -119,6 +119,42 @@ impl ModelRegistry {
         snap
     }
 
+    /// Publish one epoch assembled from per-shard view parts — the
+    /// gather half of the vocabulary-sharded serve router
+    /// ([`crate::shard`]).
+    ///
+    /// The distributed-snapshot protocol is enforced upstream by
+    /// construction: the coordinator collects the parts over the
+    /// fleet's synchronous request/response transport between
+    /// minibatches, so every shard is quiesced at the SAME batch
+    /// cursor when its part is read — there is no torn epoch to
+    /// detect. `parts` must arrive in ascending shard order (as
+    /// returned by `Foem::shard_eval_views`); the merged view is then
+    /// bit-identical to a single-store `eval_view` over the same
+    /// words, and every fold-in against the published snapshot is
+    /// bit-identical to the unsharded serve path
+    /// (`tests/shard_equivalence.rs`).
+    pub fn publish_distributed(
+        &self,
+        parts: Vec<EvalPhiView>,
+        params: LdaParams,
+    ) -> Arc<ModelSnapshot> {
+        self.publish(EvalPhiView::merge_shards(parts), params)
+    }
+
+    /// [`Self::restore_epoch_floor`] for a resumed sharded run: each
+    /// shard recovers its own epoch floor from its checkpoint, and the
+    /// registry must not regress below ANY of them — max semantics
+    /// across the fleet, then max against the registry's own state.
+    pub fn restore_epoch_floor_distributed(
+        &self,
+        floors: impl IntoIterator<Item = u64>,
+    ) {
+        if let Some(max) = floors.into_iter().max() {
+            self.restore_epoch_floor(max);
+        }
+    }
+
     /// Pin the current epoch (`None` until the first publish). The
     /// returned `Arc` keeps that epoch alive for as long as the caller
     /// holds it, regardless of later publishes.
@@ -212,6 +248,42 @@ mod tests {
         // Max semantics: a stale floor never rolls an advanced registry back.
         reg.restore_epoch_floor(3);
         assert_eq!(reg.current_epoch(), 8);
+    }
+
+    #[test]
+    fn shard_distributed_publish_matches_single_view() {
+        let p = LdaParams::paper_defaults(2);
+        let mut phi = PhiStats::zeros(2, 4);
+        for w in 0..4 {
+            phi.add_to_word(w, &[w as f32 + 1.0, 0.5]);
+        }
+        let full = EvalPhiView::from_dense(&phi, &[0, 1, 2, 3]);
+        // Per-shard parts in ascending shard order, sharing the
+        // trainer's resident phisum — exactly what the scatter half
+        // hands the registry.
+        let parts = vec![
+            EvalPhiView::from_dense(&phi, &[0, 1]),
+            EvalPhiView::from_dense(&phi, &[2, 3]),
+        ];
+        let reg = ModelRegistry::new();
+        let snap = reg.publish_distributed(parts, p);
+        assert_eq!(snap.epoch(), 1);
+        assert_eq!(snap.n_words(), full.n_words());
+        assert_eq!(snap.phisum(), full.phisum());
+        for w in 0..4 {
+            assert_eq!(snap.word(w), full.word(w), "column {w} diverged");
+        }
+    }
+
+    #[test]
+    fn shard_distributed_epoch_floor_takes_fleet_max() {
+        let reg = ModelRegistry::new();
+        reg.restore_epoch_floor_distributed([3u64, 7, 5]);
+        assert_eq!(reg.current_epoch(), 7);
+        // An empty fleet (or stale floors) never regresses the registry.
+        reg.restore_epoch_floor_distributed(std::iter::empty::<u64>());
+        reg.restore_epoch_floor_distributed([2u64]);
+        assert_eq!(reg.current_epoch(), 7);
     }
 
     #[test]

@@ -1,0 +1,433 @@
+//! Vocabulary-sharded scale-out: a fleet of phi-shard owners behind
+//! the single-store interface.
+//!
+//! The vocabulary `[0, W)` is partitioned into N contiguous ranges by
+//! a [`ShardRouter`]; each range is owned by a [`PhiShardOwner`] on
+//! its own thread with its OWN paged store pair (phi + residual),
+//! codec directory, write-ahead log and checkpoint — the existing
+//! single-store machinery instantiated per shard, unchanged. The
+//! coordinator talks to owners only through the request/response
+//! protocol in [`transport`] (in-process channels today,
+//! serialization-ready frames for sockets later).
+//!
+//! The seam is the store, not the trainer: [`ShardedPhi`] implements
+//! [`crate::store::PhiColumnStore`], so `Foem<ShardedPhi>` IS the
+//! unmodified FOEM trainer — its three-phase stage/compute/apply
+//! split, the doc-sharded executor reduction, the pipelined driver
+//! and the serve fold-in all run verbatim over the fleet. All
+//! resident EM state (phisum, residual totals, RNG, step) stays in
+//! the coordinator; owners only materialize column state. A column's
+//! value history is therefore the same sequence of deltas no matter
+//! which owner holds it, which is what makes the sharded run
+//! content-identical to the unsharded run at any N — and, on the
+//! three-phase executor path, fully bit-identical (including
+//! [`crate::store::IoStats`]) at N=1.
+//!
+//! Layout: shard `i` of an even split over `W` words owns
+//! `[i*ceil(W/N), (i+1)*ceil(W/N))`, clamped to `W`; the LAST shard's
+//! range is open-ended so lifelong vocabulary growth lands entirely
+//! in it and earlier shards' extents never move. That invariant is
+//! what lets [`Foem::sharded_resume`] rebuild the router from the
+//! on-disk shard extents alone.
+
+pub mod owner;
+pub mod store;
+pub mod transport;
+
+pub use owner::PhiShardOwner;
+pub use store::ShardedPhi;
+pub use transport::{
+    ChannelTransport, ShardRequest, ShardResponse, ShardTransport, StoreSel,
+};
+
+use crate::em::foem::{Foem, FoemConfig, FoemTrainState};
+use crate::em::EvalPhiView;
+use crate::store::paged::PagedPhi;
+use crate::store::{Codec, PhiColumnStore, PhiSnapshot};
+use crate::LdaParams;
+use std::path::{Path, PathBuf};
+
+/// The contiguous range partition of the vocabulary. `cuts[i]` is
+/// shard `i`'s first word; shard `i` owns `[cuts[i], cuts[i+1])`, and
+/// the last shard owns `[cuts[N-1], ∞)` — open-ended for vocabulary
+/// growth.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardRouter {
+    cuts: Vec<usize>,
+}
+
+impl ShardRouter {
+    /// Even split of an initial vocabulary of `n_words` over
+    /// `n_shards` ranges of `ceil(n_words / n_shards)` words each
+    /// (clamped at `n_words`; trailing shards may start empty, and
+    /// with `n_words == 0` the last shard owns everything).
+    pub fn even(n_words: usize, n_shards: usize) -> Self {
+        let n = n_shards.max(1);
+        let span = n_words.div_ceil(n).max(1);
+        let cuts = (0..n).map(|i| (i * span).min(n_words)).collect();
+        Self { cuts }
+    }
+
+    /// Rebuild a router from explicit range starts — the resume path,
+    /// where the cuts are recovered from the on-disk shard extents.
+    pub fn from_cuts(cuts: Vec<usize>) -> Self {
+        assert!(!cuts.is_empty(), "router needs at least one shard");
+        assert_eq!(cuts[0], 0, "shard 0 must start at word 0");
+        debug_assert!(
+            cuts.windows(2).all(|c| c[0] <= c[1]),
+            "shard cuts must be non-decreasing"
+        );
+        Self { cuts }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.cuts.len()
+    }
+
+    /// First word of shard `i`'s range.
+    pub fn lo(&self, i: usize) -> usize {
+        self.cuts[i]
+    }
+
+    /// One past the last word of shard `i`'s range; `usize::MAX` for
+    /// the open-ended last shard.
+    pub fn hi(&self, i: usize) -> usize {
+        if i + 1 == self.cuts.len() {
+            usize::MAX
+        } else {
+            self.cuts[i + 1]
+        }
+    }
+
+    /// The shard owning global word `w`. With duplicate cuts (empty
+    /// shards) the last shard at that cut wins, so empty shards never
+    /// own a word.
+    pub fn owner_of(&self, w: usize) -> usize {
+        self.cuts.partition_point(|&c| c <= w) - 1
+    }
+
+    /// Split a sorted global word list into per-shard runs, in shard
+    /// order: `(shard, index range into `words`)`. Only shards that
+    /// own at least one of the words appear.
+    pub fn split_words(
+        &self,
+        words: &[u32],
+    ) -> Vec<(usize, std::ops::Range<usize>)> {
+        debug_assert!(
+            words.windows(2).all(|w| w[0] < w[1]),
+            "split_words needs sorted, distinct words"
+        );
+        let mut runs = Vec::new();
+        let mut start = 0;
+        while start < words.len() {
+            let shard = self.owner_of(words[start] as usize);
+            let hi = self.hi(shard);
+            let end = start
+                + words[start..].partition_point(|&w| (w as usize) < hi);
+            runs.push((shard, start..end));
+            start = end;
+        }
+        runs
+    }
+}
+
+/// Shard `i`'s store path derived from the run's phi path:
+/// `phi.bin` → `phi.s<i>.bin` (the residual twin then follows from
+/// [`Foem::residual_path`]: `phi.s<i>.res.bin`).
+pub fn shard_path(path: &Path, shard: usize) -> PathBuf {
+    let stem = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("phi");
+    let ext = path
+        .extension()
+        .and_then(|s| s.to_str())
+        .unwrap_or("bin");
+    path.with_file_name(format!("{stem}.s{shard}.{ext}"))
+}
+
+impl Foem<ShardedPhi> {
+    /// Create a fresh vocabulary-sharded trainer: one owner thread per
+    /// shard, each with its own phi/residual store pair at
+    /// [`shard_path`]. The hot-buffer budget splits evenly across
+    /// shards, then evenly across the two matrices within each shard —
+    /// at N=1 this is byte-for-byte the unsharded budget split.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sharded_create_with_codec(
+        params: LdaParams,
+        path: &Path,
+        n_shards: usize,
+        n_words: usize,
+        buffer_bytes: usize,
+        cfg: FoemConfig,
+        seed: u64,
+        codec: Codec,
+    ) -> anyhow::Result<Self> {
+        let k = params.n_topics;
+        let router = ShardRouter::even(n_words, n_shards);
+        let n = router.n_shards();
+        let half = ((buffer_bytes / n) / 2).max(k * 4);
+        let mut owners = Vec::with_capacity(n);
+        for i in 0..n {
+            let (lo, hi) = (router.lo(i), router.hi(i));
+            let local = n_words.min(hi).saturating_sub(lo);
+            let p = shard_path(path, i);
+            let phi =
+                PagedPhi::create_with_codec(&p, k, local, half, codec)?;
+            let res = PagedPhi::create_with_codec(
+                &Foem::<PagedPhi>::residual_path(&p),
+                k,
+                local,
+                half,
+                codec,
+            )?;
+            owners.push(PhiShardOwner::new(i, lo, hi, phi, res));
+        }
+        let (phi, res) = ShardedPhi::spawn_fleet(owners, k, router, false);
+        Ok(Self::with_stores(params, phi, res, cfg, seed))
+    }
+
+    /// Arm the write-ahead log on every shard of both streams
+    /// (`--wal` / checkpointing under `--shards`).
+    pub fn enable_wal(&mut self) -> anyhow::Result<()> {
+        self.store.enable_wal()?;
+        self.res_store.enable_wal()
+    }
+
+    /// Crash recovery for a sharded run. Reopens every shard pair with
+    /// its WAL on the coordinator thread, replays, then spawns the
+    /// fleet with logs still armed. Returns the trainer plus the last
+    /// GLOBALLY durable batch id — the cursor the driver resumes after.
+    ///
+    /// A batch is globally durable only when EVERY shard committed it.
+    /// Commits walk the shards sequentially in shard order (shard
+    /// `i`'s fsync completes before shard `i+1`'s commit is
+    /// requested), so each shard's committed set covers every batch id
+    /// up to its own maximum, and the durable cursor is exactly the
+    /// minimum of the per-shard maxima. Batches beyond that cursor are
+    /// NOT replayed anywhere — checkpoint extents are immutable while
+    /// the WAL is armed, so skipping a record leaves the shard at the
+    /// state after the cursor, and the driver's deterministic re-run
+    /// of later batches regenerates bit-identical deltas (their stale
+    /// log records are superseded by the re-run's identical full
+    /// column images). At N=1 this degenerates to the single-store
+    /// [`Foem::paged_resume`].
+    pub fn sharded_resume(
+        params: LdaParams,
+        path: &Path,
+        n_shards: usize,
+        buffer_bytes: usize,
+        cfg: FoemConfig,
+        state: &FoemTrainState,
+    ) -> anyhow::Result<(Self, u64)> {
+        let k = params.n_topics;
+        let n = n_shards.max(1);
+        for i in 0..n {
+            let p = shard_path(path, i);
+            if !p.exists() {
+                anyhow::bail!(
+                    "missing shard store {}: was this run created with a \
+                     different --shards?",
+                    p.display()
+                );
+            }
+        }
+        let extra = shard_path(path, n);
+        if extra.exists() {
+            anyhow::bail!(
+                "unexpected extra shard store {}: was this run created \
+                 with a different --shards?",
+                extra.display()
+            );
+        }
+
+        let half = ((buffer_bytes / n) / 2).max(k * 4);
+        let mut opened = Vec::with_capacity(n);
+        for i in 0..n {
+            let p = shard_path(path, i);
+            let (phi, phi_batches) = PagedPhi::open_with_wal(&p, half)?;
+            let (res, res_batches) = PagedPhi::open_with_wal(
+                &Foem::<PagedPhi>::residual_path(&p),
+                half,
+            )?;
+            opened.push((phi, phi_batches, res, res_batches));
+        }
+
+        // Non-last shard extents are fixed at creation (growth only
+        // lands in the open-ended last shard), so the on-disk column
+        // counts reconstruct the original cuts exactly.
+        let mut cuts = Vec::with_capacity(n);
+        let mut acc = 0usize;
+        for entry in &opened {
+            cuts.push(acc);
+            acc += entry.0.n_words();
+        }
+        let router = ShardRouter::from_cuts(cuts);
+
+        let cursor0 = state.step;
+        let mut cursor = u64::MAX;
+        for entry in &opened {
+            let max_committed = entry
+                .1
+                .iter()
+                .map(|b| b.batch_id)
+                .max()
+                .unwrap_or(cursor0);
+            cursor = cursor.min(max_committed);
+        }
+        let cursor = cursor.max(cursor0);
+
+        // The phi commit of a batch happens only after its residual
+        // commit completed on ALL shards, so every batch in
+        // (cursor0, cursor] is present in both logs of every shard —
+        // and an orphaned residual-only commit necessarily sits beyond
+        // the cursor and is correctly skipped by the range check.
+        for (phi, phi_batches, res, res_batches) in &mut opened {
+            for b in res_batches.iter() {
+                if b.batch_id > cursor0 && b.batch_id <= cursor {
+                    res.apply_wal_batch(b);
+                }
+            }
+            for b in phi_batches.iter() {
+                if b.batch_id > cursor0 && b.batch_id <= cursor {
+                    phi.apply_wal_batch(b);
+                }
+            }
+        }
+
+        // Every shard's phi log carries the SAME coordinator state
+        // blob per commit; shard 0's log is as good as any.
+        let blobs: Vec<Vec<u8>> = opened[0]
+            .1
+            .iter()
+            .filter(|b| b.batch_id > cursor0 && b.batch_id <= cursor)
+            .map(|b| b.state.clone())
+            .collect();
+
+        let mut owners = Vec::with_capacity(n);
+        for (i, (phi, _, res, _)) in opened.into_iter().enumerate() {
+            owners.push(PhiShardOwner::new(
+                i,
+                router.lo(i),
+                router.hi(i),
+                phi,
+                res,
+            ));
+        }
+        let (phi, res) = ShardedPhi::spawn_fleet(owners, k, router, true);
+        let mut this = Self::with_stores(params, phi, res, cfg, 0);
+        this.import_train_state(state);
+        for blob in &blobs {
+            this.apply_commit_state(blob)?;
+        }
+        Ok((this, cursor))
+    }
+
+    /// Per-shard [`EvalPhiView`] parts over the requested (sorted,
+    /// global) words, in shard order — the scatter half of the serve
+    /// router. Concatenating these via [`EvalPhiView::merge_shards`]
+    /// is bit-identical to the single
+    /// [`crate::baselines::OnlineLda::eval_view`] over the same words:
+    /// each part is built exactly like the single view (one
+    /// non-dirtying snapshot read per column, zone-map stats riding
+    /// along, the coordinator's resident `phisum` as the shared
+    /// denominator), just restricted to one shard's range.
+    pub fn shard_eval_views(&mut self, words: &[u32]) -> Vec<EvalPhiView> {
+        let n_words = self.store.n_words();
+        let parts = self.store.shard_snapshots(words);
+        parts
+            .into_iter()
+            .map(|snap| {
+                let (k, part_words, data) = snap.into_parts();
+                let col_stats: Vec<Option<crate::store::ColumnStats>> =
+                    part_words
+                        .iter()
+                        .map(|&w| self.store.column_stats(w as usize))
+                        .collect();
+                EvalPhiView::from_snapshot(
+                    PhiSnapshot::from_parts(k, part_words, data),
+                    self.phisum.clone(),
+                    n_words,
+                )
+                .with_column_stats(col_stats)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_router_even_split_covers_vocab() {
+        let r = ShardRouter::even(10, 4);
+        // ceil(10/4) = 3 → cuts 0,3,6,9.
+        assert_eq!(r.n_shards(), 4);
+        assert_eq!((r.lo(0), r.hi(0)), (0, 3));
+        assert_eq!((r.lo(1), r.hi(1)), (3, 6));
+        assert_eq!((r.lo(2), r.hi(2)), (6, 9));
+        assert_eq!((r.lo(3), r.hi(3)), (9, usize::MAX));
+        for w in 0..10 {
+            let s = r.owner_of(w);
+            assert!(r.lo(s) <= w && w < r.hi(s), "word {w} misrouted");
+        }
+        // Vocabulary growth beyond the initial W lands in the last shard.
+        assert_eq!(r.owner_of(10_000), 3);
+    }
+
+    #[test]
+    fn shard_router_more_shards_than_words() {
+        let r = ShardRouter::even(2, 4);
+        // span = max(ceil(2/4), 1) = 1 → cuts 0,1,2,2; shard 2 is empty.
+        assert_eq!(r.owner_of(0), 0);
+        assert_eq!(r.owner_of(1), 1);
+        // Duplicate cuts: the LAST shard at the cut owns the range, so
+        // the empty shard never receives a word.
+        assert_eq!(r.owner_of(2), 3);
+        assert_eq!(r.lo(2), r.hi(2));
+    }
+
+    #[test]
+    fn shard_router_single_shard_owns_everything() {
+        let r = ShardRouter::even(100, 1);
+        assert_eq!(r.n_shards(), 1);
+        assert_eq!(r.owner_of(0), 0);
+        assert_eq!(r.owner_of(99), 0);
+        assert_eq!(r.hi(0), usize::MAX);
+    }
+
+    #[test]
+    fn shard_router_split_words_runs() {
+        let r = ShardRouter::even(10, 4);
+        let words = [0u32, 2, 3, 7, 8, 9];
+        let runs = r.split_words(&words);
+        assert_eq!(
+            runs,
+            vec![(0usize, 0..2), (1usize, 2..3), (2usize, 3..5), (3usize, 5..6)]
+        );
+        // Shards owning none of the words do not appear.
+        let runs = r.split_words(&[4u32, 5]);
+        assert_eq!(runs, vec![(1usize, 0..2)]);
+        assert!(r.split_words(&[]).is_empty());
+    }
+
+    #[test]
+    fn shard_router_from_cuts_round_trip() {
+        let r = ShardRouter::even(10, 3);
+        let cuts: Vec<usize> = (0..r.n_shards()).map(|i| r.lo(i)).collect();
+        assert_eq!(ShardRouter::from_cuts(cuts), r);
+    }
+
+    #[test]
+    fn shard_path_naming() {
+        let p = Path::new("/tmp/run/phi.bin");
+        assert_eq!(shard_path(p, 0), Path::new("/tmp/run/phi.s0.bin"));
+        assert_eq!(shard_path(p, 3), Path::new("/tmp/run/phi.s3.bin"));
+        // The residual twin of a shard store keeps the shard tag.
+        assert_eq!(
+            Foem::<PagedPhi>::residual_path(&shard_path(p, 1)),
+            Path::new("/tmp/run/phi.s1.res.bin")
+        );
+    }
+}

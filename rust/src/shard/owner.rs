@@ -1,0 +1,206 @@
+//! The shard owner: one thread, one contiguous vocabulary range, one
+//! pair of paged stores (phi + residual) with their own codec
+//! directories, write-ahead logs and checkpoints — the PR-7/8 single
+//! store machinery instantiated per shard, unchanged.
+//!
+//! The owner is a pure servant: it never initiates anything, it
+//! executes [`ShardRequest`]s from its channel in arrival order and
+//! replies on the requesting stream's channel. All EM semantics
+//! (phisum, residual totals, RNG, batch ordering) stay resident in the
+//! coordinator's trainer; the owner only materializes column state.
+//! That split is what makes the sharded fleet bit-identical to the
+//! single store: a column's value history is the same sequence of
+//! merge/clamp deltas no matter which owner holds it.
+
+use super::transport::{ShardRequest, ShardResponse, StoreSel};
+use crate::store::paged::PagedPhi;
+use crate::store::PhiColumnStore;
+use std::sync::mpsc::{Receiver, Sender};
+
+/// One vocabulary shard: the owning word range plus its two stores.
+///
+/// `hi == usize::MAX` marks the LAST shard, whose range is open-ended —
+/// lifelong vocabulary growth (`W ← W+1`) lands entirely in the last
+/// shard so earlier shards' extents never move.
+#[derive(Debug)]
+pub struct PhiShardOwner {
+    index: usize,
+    lo: usize,
+    hi: usize,
+    phi: PagedPhi,
+    res: PagedPhi,
+}
+
+impl PhiShardOwner {
+    pub fn new(
+        index: usize,
+        lo: usize,
+        hi: usize,
+        phi: PagedPhi,
+        res: PagedPhi,
+    ) -> Self {
+        Self { index, lo, hi, phi, res }
+    }
+
+    fn store(&mut self, sel: StoreSel) -> &mut PagedPhi {
+        match sel {
+            StoreSel::Phi => &mut self.phi,
+            StoreSel::Res => &mut self.res,
+        }
+    }
+
+    /// Global word id → this shard's local column index.
+    fn local(&self, w: usize) -> usize {
+        debug_assert!(
+            self.lo <= w && w < self.hi,
+            "shard {}: word {w} outside owned range [{}, {})",
+            self.index,
+            self.lo,
+            self.hi
+        );
+        w - self.lo
+    }
+
+    /// Localize a sorted global word list that the router already
+    /// restricted to this shard's range (subtracting `lo` preserves
+    /// order and distinctness).
+    fn localize(&self, words: &[u32]) -> Vec<u32> {
+        words.iter().map(|&w| (w as usize - self.lo) as u32).collect()
+    }
+
+    /// Keep only this shard's words, localized, ORDER PRESERVED — hot
+    /// sets arrive in mass order, not sorted, and the buffer-pinning
+    /// priority must survive the filter.
+    fn filter_localize(&self, words: &[u32]) -> Vec<u32> {
+        words
+            .iter()
+            .filter(|&&w| self.lo <= w as usize && (w as usize) < self.hi)
+            .map(|&w| (w as usize - self.lo) as u32)
+            .collect()
+    }
+
+    /// The request service loop. Runs until [`ShardRequest::Shutdown`],
+    /// a closed request channel, or a facade that stopped listening —
+    /// all three mean the coordinator is done with this shard.
+    pub fn serve(
+        mut self,
+        rx: Receiver<ShardRequest>,
+        phi_reply: Sender<ShardResponse>,
+        res_reply: Sender<ShardResponse>,
+    ) {
+        while let Ok(req) = rx.recv() {
+            let sel = match &req {
+                ShardRequest::Shutdown => break,
+                ShardRequest::EnsureCapacity { sel, .. }
+                | ShardRequest::LoadColumn { sel, .. }
+                | ShardRequest::StoreColumn { sel, .. }
+                | ShardRequest::MergeColumn { sel, .. }
+                | ShardRequest::ClampAddColumn { sel, .. }
+                | ShardRequest::SnapshotColumns { sel, .. }
+                | ShardRequest::SetHotWords { sel, .. }
+                | ShardRequest::PrefetchColumns { sel, .. }
+                | ShardRequest::SetAsyncIo { sel, .. }
+                | ShardRequest::ColumnStats { sel, .. }
+                | ShardRequest::NWords { sel }
+                | ShardRequest::EnableWal { sel }
+                | ShardRequest::WalBegin { sel, .. }
+                | ShardRequest::WalCommit { sel, .. }
+                | ShardRequest::TruncateWal { sel }
+                | ShardRequest::Flush { sel }
+                | ShardRequest::IoStats { sel }
+                | ShardRequest::WalBytes { sel } => *sel,
+            };
+            let resp = self.execute(req);
+            let reply = match sel {
+                StoreSel::Phi => &phi_reply,
+                StoreSel::Res => &res_reply,
+            };
+            if reply.send(resp).is_err() {
+                break;
+            }
+        }
+    }
+
+    fn execute(&mut self, req: ShardRequest) -> ShardResponse {
+        match req {
+            ShardRequest::EnsureCapacity { sel, n_words } => {
+                let local = n_words.min(self.hi).saturating_sub(self.lo);
+                self.store(sel).ensure_capacity(local);
+                ShardResponse::Unit
+            }
+            ShardRequest::LoadColumn { sel, w } => {
+                let (lw, k) = (self.local(w), self.phi.k());
+                let mut out = vec![0.0f32; k];
+                self.store(sel).load_column(lw, &mut out);
+                ShardResponse::Column(out)
+            }
+            ShardRequest::StoreColumn { sel, w, data } => {
+                let lw = self.local(w);
+                self.store(sel).store_column(lw, &data);
+                ShardResponse::Unit
+            }
+            ShardRequest::MergeColumn { sel, w, delta } => {
+                let lw = self.local(w);
+                self.store(sel).merge_column(lw, &delta);
+                ShardResponse::Unit
+            }
+            ShardRequest::ClampAddColumn { sel, w, delta } => {
+                let lw = self.local(w);
+                ShardResponse::Total(self.store(sel).clamp_add_column(lw, &delta))
+            }
+            ShardRequest::SnapshotColumns { sel, words } => {
+                let local = self.localize(&words);
+                let snap = self.store(sel).snapshot_columns(&local);
+                let (_, _, data) = snap.into_parts();
+                ShardResponse::Snapshot { words, data }
+            }
+            ShardRequest::SetHotWords { sel, words } => {
+                let local = self.filter_localize(&words);
+                self.store(sel).set_hot_words(&local);
+                ShardResponse::Unit
+            }
+            ShardRequest::PrefetchColumns { sel, words } => {
+                let local = self.filter_localize(&words);
+                self.store(sel).prefetch_columns(&local);
+                ShardResponse::Unit
+            }
+            ShardRequest::SetAsyncIo { sel, enabled } => {
+                ShardResponse::Bool(self.store(sel).set_async_io(enabled))
+            }
+            ShardRequest::ColumnStats { sel, w } => {
+                if w < self.lo || w >= self.hi {
+                    return ShardResponse::ColStats(None);
+                }
+                let lw = w - self.lo;
+                ShardResponse::ColStats(self.store(sel).column_stats(lw))
+            }
+            ShardRequest::NWords { sel } => {
+                ShardResponse::Count(self.store(sel).n_words())
+            }
+            ShardRequest::EnableWal { sel } => ShardResponse::Done(
+                self.store(sel).enable_wal().map_err(|e| e.to_string()),
+            ),
+            ShardRequest::WalBegin { sel, batch_id } => {
+                self.store(sel).wal_begin(batch_id);
+                ShardResponse::Unit
+            }
+            ShardRequest::WalCommit { sel, batch_id, state } => {
+                self.store(sel).wal_commit(batch_id, &state);
+                ShardResponse::Unit
+            }
+            ShardRequest::TruncateWal { sel } => ShardResponse::Done(
+                self.store(sel).truncate_wal().map_err(|e| e.to_string()),
+            ),
+            ShardRequest::Flush { sel } => ShardResponse::Done(
+                self.store(sel).flush().map_err(|e| e.to_string()),
+            ),
+            ShardRequest::IoStats { sel } => {
+                ShardResponse::Stats(self.store(sel).io_stats())
+            }
+            ShardRequest::WalBytes { sel } => {
+                ShardResponse::Bytes(self.store(sel).wal_bytes())
+            }
+            ShardRequest::Shutdown => unreachable!("handled in serve()"),
+        }
+    }
+}

@@ -1,0 +1,478 @@
+//! [`ShardedPhi`]: the coordinator-side store facade over the shard
+//! fleet.
+//!
+//! One facade instance is one *stream* (phi or residual) over ALL
+//! shards: it implements [`PhiColumnStore`], so the trainer
+//! (`Foem<ShardedPhi>`) is the unmodified single-store trainer — the
+//! three-phase seam, the blanket [`crate::baselines::OnlineLda`] impl
+//! and the [`crate::exec::pipeline::PhasedTrainer`] impl all come for
+//! free. Every column operation is routed to the owner of the word's
+//! range as one explicit [`ShardRequest`]; reads scatter-gather
+//! (send to every owning shard, collect in fixed shard order), WAL
+//! brackets walk the shards sequentially so commit durability is
+//! ordered.
+//!
+//! **Accounting bit-identity.** The facade never adds or removes a
+//! store access: the owner executes the *same* `PagedPhi` call the
+//! unsharded trainer would have made (`load_column`,
+//! `snapshot_columns`, `merge_column`, `clamp_add_column`, ...), so at
+//! N=1 the per-counter [`IoStats`] are bit-identical to the single
+//! store, and at N>1 only buffer-dynamics counters (hits/misses,
+//! write-behind) may shift while logical read/write counts stay exact.
+//! The one exception is the generic closure access
+//! [`PhiColumnStore::with_column`], which a wire protocol cannot carry
+//! and the facade emulates as load + store (two accesses). The
+//! three-phase executor path — every sharded production configuration
+//! (`n_workers >= 2` or any pipeline depth) — never touches it; only
+//! the single-worker serial sweep does, and there the emulation is
+//! still content-identical (the load returns the current value, the
+//! store persists the closure's mutation), with only the access
+//! counters shifting.
+
+use super::owner::PhiShardOwner;
+use super::transport::{
+    ChannelTransport, ShardRequest, ShardResponse, ShardTransport, StoreSel,
+};
+use super::ShardRouter;
+use crate::store::{ColumnStats, IoStats, PhiColumnStore, PhiSnapshot};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Owns the request senders and join handles of the shard threads.
+/// Dropped when the LAST facade over the fleet drops: sends `Shutdown`
+/// to every owner and joins, so shard threads never outlive the
+/// trainer.
+struct Fleet {
+    txs: Vec<mpsc::Sender<ShardRequest>>,
+    joins: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            // A send error only means the owner already exited.
+            let _ = tx.send(ShardRequest::Shutdown);
+        }
+        let mut joins = match self.joins.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        for j in joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One stream (phi or residual) of the vocabulary-sharded fleet,
+/// behind the ordinary [`PhiColumnStore`] interface. See the module
+/// docs for the routing and bit-identity contracts.
+pub struct ShardedPhi {
+    sel: StoreSel,
+    k: usize,
+    router: ShardRouter,
+    transports: Vec<Box<dyn ShardTransport>>,
+    fleet: Arc<Fleet>,
+    wal_on: bool,
+}
+
+impl std::fmt::Debug for ShardedPhi {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedPhi")
+            .field("sel", &self.sel)
+            .field("k", &self.k)
+            .field("n_shards", &self.transports.len())
+            .field("wal_on", &self.wal_on)
+            .finish_non_exhaustive()
+    }
+}
+
+impl ShardedPhi {
+    /// Spawn one owner thread per shard and return the two store
+    /// facades over the fleet: `(phi, residual)`. `wal_armed` seeds the
+    /// facades' cached WAL flag — `true` when the owners' stores were
+    /// reopened with their logs already armed
+    /// ([`crate::store::paged::PagedPhi::open_with_wal`]).
+    pub fn spawn_fleet(
+        owners: Vec<PhiShardOwner>,
+        k: usize,
+        router: ShardRouter,
+        wal_armed: bool,
+    ) -> (ShardedPhi, ShardedPhi) {
+        assert_eq!(owners.len(), router.n_shards(), "owner/router mismatch");
+        let mut txs = Vec::new();
+        let mut joins = Vec::new();
+        let mut phi_tr: Vec<Box<dyn ShardTransport>> = Vec::new();
+        let mut res_tr: Vec<Box<dyn ShardTransport>> = Vec::new();
+        for (i, owner) in owners.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            let (phi_tx, phi_rx) = mpsc::channel();
+            let (res_tx, res_rx) = mpsc::channel();
+            let join = std::thread::Builder::new()
+                .name(format!("phi-shard-{i}"))
+                .spawn(move || owner.serve(rx, phi_tx, res_tx))
+                .expect("spawn shard owner thread");
+            phi_tr.push(Box::new(ChannelTransport::new(tx.clone(), phi_rx)));
+            res_tr.push(Box::new(ChannelTransport::new(tx.clone(), res_rx)));
+            txs.push(tx);
+            joins.push(join);
+        }
+        let fleet = Arc::new(Fleet { txs, joins: Mutex::new(joins) });
+        let phi = ShardedPhi {
+            sel: StoreSel::Phi,
+            k,
+            router: router.clone(),
+            transports: phi_tr,
+            fleet: Arc::clone(&fleet),
+            wal_on: wal_armed,
+        };
+        let res = ShardedPhi {
+            sel: StoreSel::Res,
+            k,
+            router,
+            transports: res_tr,
+            fleet,
+            wal_on: wal_armed,
+        };
+        (phi, res)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.transports.len()
+    }
+
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    /// One request to one shard, strict RPC.
+    fn call(&self, shard: usize, req: ShardRequest) -> ShardResponse {
+        let t = &self.transports[shard];
+        t.send(req);
+        t.recv()
+    }
+
+    /// Scatter a request to every shard, then gather replies in fixed
+    /// shard order — owners work concurrently, the result order is
+    /// deterministic.
+    fn scatter(
+        &self,
+        mk: impl Fn(usize) -> ShardRequest,
+    ) -> Vec<ShardResponse> {
+        for (i, t) in self.transports.iter().enumerate() {
+            t.send(mk(i));
+        }
+        self.transports.iter().map(|t| t.recv()).collect()
+    }
+
+    /// Walk the shards one by one (send → recv before the next shard) —
+    /// the durability-ordered broadcast used for WAL brackets.
+    fn sequential(
+        &self,
+        mk: impl Fn(usize) -> ShardRequest,
+    ) -> Vec<ShardResponse> {
+        (0..self.transports.len())
+            .map(|i| self.call(i, mk(i)))
+            .collect()
+    }
+
+    fn expect_unit(resp: ShardResponse) {
+        match resp {
+            ShardResponse::Unit => {}
+            other => panic!("shard protocol error: expected Unit, got {other:?}"),
+        }
+    }
+
+    fn expect_done(resp: ShardResponse) -> anyhow::Result<()> {
+        match resp {
+            ShardResponse::Done(Ok(())) => Ok(()),
+            ShardResponse::Done(Err(e)) => Err(anyhow::anyhow!(e)),
+            other => {
+                panic!("shard protocol error: expected Done, got {other:?}")
+            }
+        }
+    }
+
+    /// Arm the write-ahead log on every shard store of this stream.
+    pub fn enable_wal(&mut self) -> anyhow::Result<()> {
+        let sel = self.sel;
+        for resp in self.sequential(|_| ShardRequest::EnableWal { sel }) {
+            Self::expect_done(resp)?;
+        }
+        self.wal_on = true;
+        Ok(())
+    }
+
+    /// Total WAL bytes ever appended across the shards of this stream
+    /// (survives truncation — the perf-trajectory counter).
+    pub fn wal_bytes(&self) -> u64 {
+        let sel = self.sel;
+        self.scatter(|_| ShardRequest::WalBytes { sel })
+            .into_iter()
+            .map(|r| match r {
+                ShardResponse::Bytes(b) => b,
+                other => panic!(
+                    "shard protocol error: expected Bytes, got {other:?}"
+                ),
+            })
+            .sum()
+    }
+
+    /// Per-shard I/O counters of this stream, in shard order — the
+    /// truthful-telemetry breakdown behind the summed
+    /// [`PhiColumnStore::io_stats`].
+    pub fn shard_io_stats(&self) -> Vec<IoStats> {
+        let sel = self.sel;
+        self.scatter(|_| ShardRequest::IoStats { sel })
+            .into_iter()
+            .map(|r| match r {
+                ShardResponse::Stats(s) => s,
+                other => panic!(
+                    "shard protocol error: expected Stats, got {other:?}"
+                ),
+            })
+            .collect()
+    }
+
+    /// Scatter-gather a snapshot as PER-SHARD parts (global word ids),
+    /// in shard order — the serve layer assembles these into per-shard
+    /// [`crate::em::EvalPhiView`]s and merges them into one distributed
+    /// snapshot ([`crate::em::EvalPhiView::merge_shards`]). The plain
+    /// [`PhiColumnStore::snapshot_columns`] is exactly the
+    /// concatenation of these parts.
+    pub fn shard_snapshots(&mut self, words: &[u32]) -> Vec<PhiSnapshot> {
+        let sel = self.sel;
+        let runs = self.router.split_words(words);
+        for &(shard, ref range) in &runs {
+            self.transports[shard].send(ShardRequest::SnapshotColumns {
+                sel,
+                words: words[range.clone()].to_vec(),
+            });
+        }
+        runs.iter()
+            .map(|(shard, _)| match self.transports[*shard].recv() {
+                ShardResponse::Snapshot { words, data } => {
+                    PhiSnapshot::from_parts(self.k, words, data)
+                }
+                other => panic!(
+                    "shard protocol error: expected Snapshot, got {other:?}"
+                ),
+            })
+            .collect()
+    }
+}
+
+impl PhiColumnStore for ShardedPhi {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn n_words(&self) -> usize {
+        // Only the LAST shard's range is open-ended, so the global
+        // vocabulary is its low cut plus its current column count.
+        let last = self.transports.len() - 1;
+        let sel = self.sel;
+        match self.call(last, ShardRequest::NWords { sel }) {
+            ShardResponse::Count(n) => self.router.lo(last) + n,
+            other => {
+                panic!("shard protocol error: expected Count, got {other:?}")
+            }
+        }
+    }
+
+    fn ensure_capacity(&mut self, n_words: usize) {
+        let sel = self.sel;
+        for resp in
+            self.scatter(|_| ShardRequest::EnsureCapacity { sel, n_words })
+        {
+            Self::expect_unit(resp);
+        }
+    }
+
+    fn with_column<R>(
+        &mut self,
+        w: usize,
+        f: impl FnOnce(&mut [f32]) -> R,
+    ) -> R {
+        // Closures cannot cross the transport: emulate as a
+        // load + store round trip. Never on a trainer hot path — the
+        // apply phase uses the explicit merge/clamp verbs below.
+        let sel = self.sel;
+        let shard = self.router.owner_of(w);
+        let mut col =
+            match self.call(shard, ShardRequest::LoadColumn { sel, w }) {
+                ShardResponse::Column(c) => c,
+                other => panic!(
+                    "shard protocol error: expected Column, got {other:?}"
+                ),
+            };
+        let r = f(&mut col);
+        Self::expect_unit(self.call(
+            shard,
+            ShardRequest::StoreColumn { sel, w, data: col },
+        ));
+        r
+    }
+
+    fn load_column(&mut self, w: usize, out: &mut [f32]) {
+        let sel = self.sel;
+        let shard = self.router.owner_of(w);
+        match self.call(shard, ShardRequest::LoadColumn { sel, w }) {
+            ShardResponse::Column(c) => out.copy_from_slice(&c),
+            other => {
+                panic!("shard protocol error: expected Column, got {other:?}")
+            }
+        }
+    }
+
+    fn store_column(&mut self, w: usize, data: &[f32]) {
+        let sel = self.sel;
+        let shard = self.router.owner_of(w);
+        Self::expect_unit(self.call(
+            shard,
+            ShardRequest::StoreColumn { sel, w, data: data.to_vec() },
+        ));
+    }
+
+    fn merge_column(&mut self, w: usize, delta: &[f32]) {
+        let sel = self.sel;
+        let shard = self.router.owner_of(w);
+        Self::expect_unit(self.call(
+            shard,
+            ShardRequest::MergeColumn { sel, w, delta: delta.to_vec() },
+        ));
+    }
+
+    fn clamp_add_column(&mut self, w: usize, delta: &[f32]) -> f32 {
+        let sel = self.sel;
+        let shard = self.router.owner_of(w);
+        match self.call(
+            shard,
+            ShardRequest::ClampAddColumn { sel, w, delta: delta.to_vec() },
+        ) {
+            ShardResponse::Total(t) => t,
+            other => {
+                panic!("shard protocol error: expected Total, got {other:?}")
+            }
+        }
+    }
+
+    fn snapshot_columns(&mut self, words: &[u32]) -> PhiSnapshot {
+        debug_assert!(
+            words.windows(2).all(|w| w[0] < w[1]),
+            "snapshot words must be sorted and distinct"
+        );
+        // Shard ranges are contiguous and ascending, so concatenating
+        // the per-shard parts in shard order preserves the global sort.
+        let parts = self.shard_snapshots(words);
+        let mut out_words = Vec::with_capacity(words.len());
+        let mut data = Vec::with_capacity(words.len() * self.k);
+        for part in parts {
+            let (_, w, d) = part.into_parts();
+            out_words.extend(w);
+            data.extend(d);
+        }
+        PhiSnapshot::from_parts(self.k, out_words, data)
+    }
+
+    fn set_hot_words(&mut self, words: &[u32]) {
+        let sel = self.sel;
+        for resp in self.scatter(|_| ShardRequest::SetHotWords {
+            sel,
+            words: words.to_vec(),
+        }) {
+            Self::expect_unit(resp);
+        }
+    }
+
+    fn prefetch_columns(&mut self, words: &[u32]) {
+        let sel = self.sel;
+        for resp in self.scatter(|_| ShardRequest::PrefetchColumns {
+            sel,
+            words: words.to_vec(),
+        }) {
+            Self::expect_unit(resp);
+        }
+    }
+
+    fn set_async_io(&mut self, enabled: bool) -> bool {
+        let sel = self.sel;
+        self.scatter(|_| ShardRequest::SetAsyncIo { sel, enabled })
+            .into_iter()
+            .all(|r| match r {
+                ShardResponse::Bool(b) => b,
+                other => panic!(
+                    "shard protocol error: expected Bool, got {other:?}"
+                ),
+            })
+    }
+
+    fn wal_enabled(&self) -> bool {
+        self.wal_on
+    }
+
+    fn wal_begin(&mut self, batch_id: u64) {
+        if !self.wal_on {
+            return;
+        }
+        let sel = self.sel;
+        for resp in self.sequential(|_| ShardRequest::WalBegin { sel, batch_id })
+        {
+            Self::expect_unit(resp);
+        }
+    }
+
+    fn wal_commit(&mut self, batch_id: u64, state: &[u8]) {
+        if !self.wal_on {
+            return;
+        }
+        // Sequential walk: shard i's commit (one fsync) completes
+        // before shard i+1's is requested, so a crash leaves committed
+        // batches as a PREFIX in shard order — and recovery's
+        // min-across-shards cursor is exact, never racy.
+        let sel = self.sel;
+        for resp in self.sequential(|_| ShardRequest::WalCommit {
+            sel,
+            batch_id,
+            state: state.to_vec(),
+        }) {
+            Self::expect_unit(resp);
+        }
+    }
+
+    fn truncate_wal(&mut self) -> anyhow::Result<()> {
+        let sel = self.sel;
+        for resp in self.sequential(|_| ShardRequest::TruncateWal { sel }) {
+            Self::expect_done(resp)?;
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self) -> anyhow::Result<()> {
+        let sel = self.sel;
+        for resp in self.scatter(|_| ShardRequest::Flush { sel }) {
+            Self::expect_done(resp)?;
+        }
+        Ok(())
+    }
+
+    fn io_stats(&self) -> IoStats {
+        // Satellite contract: the coordinator's telemetry is the SUM of
+        // the per-shard stores, not one shard's view.
+        let mut total = IoStats::default();
+        for s in self.shard_io_stats() {
+            total.absorb(&s);
+        }
+        total
+    }
+
+    fn column_stats(&self, w: usize) -> Option<ColumnStats> {
+        let sel = self.sel;
+        let shard = self.router.owner_of(w);
+        match self.call(shard, ShardRequest::ColumnStats { sel, w }) {
+            ShardResponse::ColStats(s) => s,
+            other => {
+                panic!("shard protocol error: expected ColStats, got {other:?}")
+            }
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! The coordinator ↔ shard-owner wire protocol.
+//!
+//! Every interaction is a strict request/response pair of *plain-data*
+//! messages: owned buffers, ids and flags only — no closures, no
+//! borrows, no shared memory. That is deliberate: the in-process
+//! [`ChannelTransport`] moves these enums over `std::sync::mpsc`
+//! channels today, and a future socket transport can serialize the
+//! exact same frames to a remote owner process without touching the
+//! trainer (the store's closure-taking `with_column` access is the one
+//! thing that cannot cross a wire, which is why the hot apply-phase
+//! verbs exist as explicit messages: [`ShardRequest::MergeColumn`],
+//! [`ShardRequest::ClampAddColumn`]).
+//!
+//! Word ids in every message are GLOBAL: the owner translates to its
+//! local column index (`w - lo`). This keeps the coordinator free of
+//! per-shard index arithmetic and makes request frames meaningful on
+//! their own — a requirement for debuggable socket traffic later.
+
+use crate::store::{ColumnStats, IoStats};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Mutex;
+
+/// Which of the owner's two streamed matrices a request addresses. A
+/// [`PhiShardOwner`](super::PhiShardOwner) owns the phi AND residual
+/// store of its word range (they are streamed in lockstep, exactly as
+/// the unsharded trainer pairs them), and replies on the selected
+/// stream's channel — the phi and residual facades of
+/// [`super::ShardedPhi`] share one owner without interleaving replies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreSel {
+    /// The topic-word statistics matrix `phi_hat`.
+    Phi,
+    /// The residual matrix `r_hat` of the dynamic scheduler.
+    Res,
+}
+
+/// A coordinator → owner request. One reply ([`ShardResponse`]) per
+/// request, always, on the `sel` stream's reply channel — except
+/// [`ShardRequest::Shutdown`], which has no reply and ends the owner's
+/// service loop.
+#[derive(Debug)]
+pub enum ShardRequest {
+    /// Grow the shard's slice of a global vocabulary of `n_words`
+    /// columns (the owner clamps to its range). → [`ShardResponse::Unit`]
+    EnsureCapacity { sel: StoreSel, n_words: usize },
+    /// Non-dirtying read of global column `w`.
+    /// → [`ShardResponse::Column`]
+    LoadColumn { sel: StoreSel, w: usize },
+    /// Overwrite global column `w`. → [`ShardResponse::Unit`]
+    StoreColumn { sel: StoreSel, w: usize, data: Vec<f32> },
+    /// `col += delta` on global column `w` — the apply-phase verb, one
+    /// owner-side read-modify-write access. → [`ShardResponse::Unit`]
+    MergeColumn { sel: StoreSel, w: usize, delta: Vec<f32> },
+    /// `col = max(col + delta, 0)` on global column `w`, returning the
+    /// clamped column total — the residual apply verb.
+    /// → [`ShardResponse::Total`]
+    ClampAddColumn { sel: StoreSel, w: usize, delta: Vec<f32> },
+    /// Snapshot the given (sorted, range-owned, global) words.
+    /// → [`ShardResponse::Snapshot`]
+    SnapshotColumns { sel: StoreSel, words: Vec<u32> },
+    /// Install the minibatch's hot set; the owner pins the subset of
+    /// `words` inside its range (order preserved).
+    /// → [`ShardResponse::Unit`]
+    SetHotWords { sel: StoreSel, words: Vec<u32> },
+    /// Prefetch hint (pipelined trainer); the owner filters to its
+    /// range. → [`ShardResponse::Unit`]
+    PrefetchColumns { sel: StoreSel, words: Vec<u32> },
+    /// Toggle background I/O. → [`ShardResponse::Bool`] (supported?)
+    SetAsyncIo { sel: StoreSel, enabled: bool },
+    /// Zone-map stats of global column `w`. → [`ShardResponse::ColStats`]
+    ColumnStats { sel: StoreSel, w: usize },
+    /// The shard store's current column count. → [`ShardResponse::Count`]
+    NWords { sel: StoreSel },
+    /// Arm the write-ahead log. → [`ShardResponse::Done`]
+    EnableWal { sel: StoreSel },
+    /// Open batch `batch_id` in the shard's WAL. → [`ShardResponse::Unit`]
+    WalBegin { sel: StoreSel, batch_id: u64 },
+    /// Commit batch `batch_id`, carrying the coordinator's resident
+    /// state blob (every shard's phi log stores the SAME blob — any
+    /// shard can replay the trainer state). → [`ShardResponse::Unit`]
+    WalCommit { sel: StoreSel, batch_id: u64, state: Vec<u8> },
+    /// Truncate the WAL after a checkpoint. → [`ShardResponse::Done`]
+    TruncateWal { sel: StoreSel },
+    /// Flush dirty state to the backing file. → [`ShardResponse::Done`]
+    Flush { sel: StoreSel },
+    /// Cumulative I/O counters. → [`ShardResponse::Stats`]
+    IoStats { sel: StoreSel },
+    /// Total WAL bytes ever appended. → [`ShardResponse::Bytes`]
+    WalBytes { sel: StoreSel },
+    /// End the owner's service loop (no reply).
+    Shutdown,
+}
+
+/// An owner → coordinator reply. Variants mirror the request
+/// contracts above; `Done` carries fallible-operation errors as
+/// strings so the frame stays serialization-ready.
+#[derive(Debug)]
+pub enum ShardResponse {
+    Unit,
+    Bool(bool),
+    Count(usize),
+    Bytes(u64),
+    Total(f32),
+    Column(Vec<f32>),
+    /// Global word ids + column-contiguous data (`words.len() * k`).
+    Snapshot { words: Vec<u32>, data: Vec<f32> },
+    Stats(IoStats),
+    ColStats(Option<ColumnStats>),
+    Done(Result<(), String>),
+}
+
+/// One coordinator-side endpoint of a request/response stream to one
+/// shard owner.
+///
+/// Implementations must be synchronous and ordered: after `send(req)`,
+/// the next `recv()` returns that request's reply. The facade leans on
+/// this for the scatter-gather pattern (send to every owner, then
+/// collect in fixed shard order) and for the durability ordering of
+/// WAL commits (send → recv per shard, so shard `i`'s fsync completes
+/// before shard `i+1`'s commit is even requested).
+pub trait ShardTransport: Send + Sync {
+    /// Ship a request to the owner. Panics if the owner is gone — a
+    /// dead shard thread is unrecoverable mid-run, exactly like a
+    /// poisoned store.
+    fn send(&self, req: ShardRequest);
+    /// Block for the next reply from the owner.
+    fn recv(&self) -> ShardResponse;
+}
+
+/// The in-process transport: an `mpsc` request channel into the owner
+/// thread plus this stream's private reply channel back. The receiver
+/// sits behind a `Mutex` only to make the endpoint `Sync`; the facade
+/// serializes its own calls, so the lock is never contended.
+pub struct ChannelTransport {
+    tx: Sender<ShardRequest>,
+    rx: Mutex<Receiver<ShardResponse>>,
+}
+
+impl ChannelTransport {
+    pub fn new(tx: Sender<ShardRequest>, rx: Receiver<ShardResponse>) -> Self {
+        Self { tx, rx: Mutex::new(rx) }
+    }
+}
+
+impl ShardTransport for ChannelTransport {
+    fn send(&self, req: ShardRequest) {
+        self.tx
+            .send(req)
+            .expect("shard owner thread terminated unexpectedly");
+    }
+
+    fn recv(&self) -> ShardResponse {
+        self.rx
+            .lock()
+            .expect("shard transport reply lock")
+            .recv()
+            .expect("shard owner thread terminated unexpectedly")
+    }
+}
+
+impl std::fmt::Debug for ChannelTransport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChannelTransport").finish_non_exhaustive()
+    }
+}

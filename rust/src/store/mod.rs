@@ -61,6 +61,24 @@ pub struct IoStats {
     pub disk_bytes: u64,
 }
 
+impl IoStats {
+    /// Accumulate another store's counters into this one — the
+    /// per-shard aggregation of the vocabulary-sharded fleet
+    /// ([`crate::shard::ShardedPhi::io_stats`] sums its owners with
+    /// this), so coordinator telemetry stays truthful under N>1.
+    pub fn absorb(&mut self, other: &IoStats) {
+        self.col_reads += other.col_reads;
+        self.col_writes += other.col_writes;
+        self.buffer_hits += other.buffer_hits;
+        self.buffer_misses += other.buffer_misses;
+        self.prefetched_cols += other.prefetched_cols;
+        self.prefetch_hits += other.prefetch_hits;
+        self.wb_writes += other.wb_writes;
+        self.logical_bytes += other.logical_bytes;
+        self.disk_bytes += other.disk_bytes;
+    }
+}
+
 /// A detached, read-only snapshot of a set of columns — the shared-read
 /// path of the parallel E-step engine ([`crate::exec`]).
 ///
@@ -170,6 +188,37 @@ pub trait PhiColumnStore {
     /// Overwrite column `w` with `data` (no prior read needed).
     fn store_column(&mut self, w: usize, data: &[f32]) {
         self.with_column(w, |col| col.copy_from_slice(data));
+    }
+
+    /// Merge `delta` into column `w` (`col[k] += delta[k]`) — the
+    /// apply-phase accumulate verb ([`crate::em::SsDelta::apply_to_store`]).
+    /// The default is exactly the [`Self::with_column`] closure it
+    /// replaces (one read-modify-write access, identical accounting);
+    /// it exists as a named verb so routing stores
+    /// ([`crate::shard::ShardedPhi`]) can ship the operation as one
+    /// explicit message to the owning shard instead of a closure.
+    fn merge_column(&mut self, w: usize, delta: &[f32]) {
+        self.with_column(w, |col| {
+            for (c, &d) in col.iter_mut().zip(delta) {
+                *c += d;
+            }
+        });
+    }
+
+    /// Merge `delta` into column `w` clamping every entry at zero, and
+    /// return the clamped column's sum — the residual-store apply verb
+    /// (FOEM keeps residuals non-negative and the dynamic scheduler
+    /// needs the per-word total back). Same single read-modify-write
+    /// access as the [`Self::with_column`] closure it replaces.
+    fn clamp_add_column(&mut self, w: usize, delta: &[f32]) -> f32 {
+        self.with_column(w, |col| {
+            let mut total = 0.0f32;
+            for (c, &d) in col.iter_mut().zip(delta) {
+                *c = (*c + d).max(0.0);
+                total += *c;
+            }
+            total
+        })
     }
 
     /// Materialize a read-only [`PhiSnapshot`] of the given columns

@@ -249,6 +249,212 @@ fn prop_foem_mass_invariant_any_schedule() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Shard-reduction properties: `exec::ParallelExecutor::reduce` /
+// `em::SsDelta::merge` are the seam both the doc-sharded executor and
+// the vocabulary-sharded fleet lean on for determinism, so their
+// algebra is pinned here over random shard framings.
+// ---------------------------------------------------------------------
+
+fn random_delta(rng: &mut Rng, k: usize, words: &[u32]) -> foem::em::SsDelta {
+    let mut d = foem::em::SsDelta::zeros(k, words.to_vec());
+    for i in 0..words.len() {
+        for t in 0..k {
+            if rng.below(3) != 0 {
+                // Strictly positive mass: avoids -0.0 artifacts so the
+                // bit-equality assertions below are meaningful.
+                d.add_at(i, t, rng.next_f32() + 0.25);
+            }
+        }
+    }
+    d
+}
+
+fn random_word_subset(rng: &mut Rng, vocab: usize, max_len: usize) -> Vec<u32> {
+    let mut set = std::collections::BTreeSet::new();
+    for _ in 0..(rng.below(max_len) + 1) {
+        set.insert(rng.below(vocab) as u32);
+    }
+    set.into_iter().collect()
+}
+
+/// Property: reducing deltas over DISJOINT word ranges (the
+/// vocabulary-sharded framing) is an exact scatter — every output
+/// column is bit-identical to its sole contributor, no matter how many
+/// shards there are.
+#[test]
+fn shard_prop_reduce_disjoint_is_exact_scatter() {
+    let mut rng = Rng::new(8000);
+    for case in 0..30 {
+        let k = rng.below(6) + 1;
+        let vocab = rng.below(40) + 8;
+        let n_shards = rng.below(5) + 1;
+        let span = vocab.div_ceil(n_shards).max(1);
+        let mut deltas = Vec::new();
+        for s in 0..n_shards {
+            let lo = (s * span).min(vocab) as u32;
+            let hi = ((s + 1) * span).min(vocab) as u32;
+            let words: Vec<u32> = (lo..hi).collect();
+            if !words.is_empty() {
+                deltas.push(random_delta(&mut rng, k, &words));
+            }
+        }
+        let all_words: Vec<u32> = (0..vocab as u32).collect();
+        let acc = foem::exec::ParallelExecutor::new(1)
+            .reduce(k, &all_words, deltas.iter());
+        for d in &deltas {
+            for (i, &w) in d.words().iter().enumerate() {
+                let j = acc.index_of(w).unwrap();
+                assert_eq!(acc.col(j), d.col(i), "case {case} word {w}");
+            }
+        }
+    }
+}
+
+/// Property: reduction over OVERLAPPING shard vocabularies in fixed
+/// shard order is bit-identical to the scalar reference fold (the same
+/// `+=` sequence per column) — the doc-sharded determinism contract.
+#[test]
+fn shard_prop_reduce_overlapping_matches_reference() {
+    let mut rng = Rng::new(8100);
+    for case in 0..30 {
+        let k = rng.below(6) + 1;
+        let vocab = rng.below(30) + 4;
+        let n_shards = rng.below(4) + 2;
+        let deltas: Vec<foem::em::SsDelta> = (0..n_shards)
+            .map(|_| {
+                let words = random_word_subset(&mut rng, vocab, 12);
+                random_delta(&mut rng, k, &words)
+            })
+            .collect();
+        let all_words: Vec<u32> = (0..vocab as u32).collect();
+        let acc = foem::exec::ParallelExecutor::new(4)
+            .reduce(k, &all_words, deltas.iter());
+        // Reference: identical per-column accumulation order.
+        let mut reference = vec![0.0f32; vocab * k];
+        let mut ref_phisum = vec![0.0f32; k];
+        for d in &deltas {
+            for (i, &w) in d.words().iter().enumerate() {
+                for (t, &v) in d.col(i).iter().enumerate() {
+                    reference[w as usize * k + t] += v;
+                }
+            }
+            for (p, &q) in ref_phisum.iter_mut().zip(&d.phisum) {
+                *p += q;
+            }
+        }
+        for w in 0..vocab {
+            let j = acc.index_of(w as u32).unwrap();
+            assert_eq!(
+                acc.col(j),
+                &reference[w * k..(w + 1) * k],
+                "case {case} word {w}"
+            );
+        }
+        assert_eq!(acc.phisum, ref_phisum, "case {case} phisum");
+    }
+}
+
+/// Property: with disjoint coverage the reduce order cannot change any
+/// column (each has exactly one contributor) — only the per-topic
+/// totals may move in the last float bits, and then only within
+/// rounding of the reordered sum.
+#[test]
+fn shard_prop_reduce_disjoint_order_invariant() {
+    let mut rng = Rng::new(8200);
+    for case in 0..20 {
+        let k = rng.below(5) + 1;
+        let vocab = rng.below(24) + 6;
+        let mid = vocab / 2;
+        let a = random_delta(
+            &mut rng,
+            k,
+            &(0..mid as u32).collect::<Vec<_>>(),
+        );
+        let b = random_delta(
+            &mut rng,
+            k,
+            &(mid as u32..vocab as u32).collect::<Vec<_>>(),
+        );
+        let all_words: Vec<u32> = (0..vocab as u32).collect();
+        let ex = foem::exec::ParallelExecutor::new(2);
+        let fwd = ex.reduce(k, &all_words, [&a, &b]);
+        let rev = ex.reduce(k, &all_words, [&b, &a]);
+        for (j, &w) in fwd.words().iter().enumerate() {
+            let jr = rev.index_of(w).unwrap();
+            assert_eq!(fwd.col(j), rev.col(jr), "case {case} word {w}");
+        }
+        for t in 0..k {
+            assert!(
+                (fwd.phisum[t] - rev.phisum[t]).abs()
+                    <= fwd.phisum[t].abs() * 1e-6,
+                "case {case} topic {t}"
+            );
+        }
+    }
+}
+
+/// Property: reducing a single delta over its own word list is the
+/// identity, bit-for-bit (columns and totals).
+#[test]
+fn shard_prop_reduce_single_is_identity() {
+    let mut rng = Rng::new(8300);
+    for _case in 0..30 {
+        let k = rng.below(6) + 1;
+        let words = random_word_subset(&mut rng, 50, 20);
+        let d = random_delta(&mut rng, k, &words);
+        let acc = foem::exec::ParallelExecutor::new(1)
+            .reduce(k, &words, [&d]);
+        assert_eq!(acc.words(), d.words());
+        for i in 0..words.len() {
+            assert_eq!(acc.col(i), d.col(i));
+        }
+        assert_eq!(acc.phisum, d.phisum);
+    }
+}
+
+/// The accumulator's word list must COVER every shard delta — a shard
+/// producing a word outside the minibatch vocabulary is a framing bug
+/// and must fail loudly, not be silently dropped.
+#[test]
+#[should_panic(expected = "word not covered by accumulator")]
+fn shard_prop_merge_rejects_uncovered_word() {
+    let mut rng = Rng::new(8400);
+    let d = random_delta(&mut rng, 3, &[1, 5, 9]);
+    // Accumulator misses word 5.
+    foem::exec::ParallelExecutor::new(1).reduce(3, &[1, 9], [&d]);
+}
+
+/// Property: after any reduction, the accumulated per-topic totals
+/// agree with the column sums (mass bookkeeping survives merging).
+#[test]
+fn shard_prop_reduce_phisum_consistent() {
+    let mut rng = Rng::new(8500);
+    for case in 0..20 {
+        let k = rng.below(6) + 1;
+        let vocab = rng.below(30) + 4;
+        let deltas: Vec<foem::em::SsDelta> = (0..rng.below(4) + 1)
+            .map(|_| {
+                let words = random_word_subset(&mut rng, vocab, 10);
+                random_delta(&mut rng, k, &words)
+            })
+            .collect();
+        let all_words: Vec<u32> = (0..vocab as u32).collect();
+        let acc = foem::exec::ParallelExecutor::new(1)
+            .reduce(k, &all_words, deltas.iter());
+        for t in 0..k {
+            let col_sum: f32 =
+                (0..vocab).map(|w| acc.col(w)[t]).sum();
+            assert!(
+                (acc.phisum[t] - col_sum).abs()
+                    <= col_sum.abs().max(1.0) * 1e-5,
+                "case {case} topic {t}: {} vs {col_sum}",
+                acc.phisum[t]
+            );
+        }
+    }
+}
+
 /// Property: minibatch framing is lossless for any minibatch size.
 #[test]
 fn prop_stream_framing_lossless() {

@@ -1,0 +1,374 @@
+//! Equivalence guards for the vocabulary-sharded fleet
+//! (`shard::{ShardedPhi, PhiShardOwner}`, `rust/DESIGN.md` §14),
+//! driven entirely through the public API:
+//!
+//! * N=1 sharding is BIT-identical to the unsharded paged trainer —
+//!   trainer state, exported phi, held-out perplexity, and the `IoStats`
+//!   counters of the three-phase executor path (where the facade never
+//!   adds or removes a store access — every verb routes 1:1).
+//! * N>1 sharding is content-identical: same state/phi/perplexity bits
+//!   (only buffer dynamics may differ, since each shard has its own hot
+//!   buffer), and the logical access counts still agree.
+//! * The scatter-gather serve router: per-shard view parts merged via
+//!   `EvalPhiView::merge_shards` / `ModelRegistry::publish_distributed`
+//!   are bit-identical to the single `eval_view`, and a fold-in against
+//!   the merged snapshot is bit-identical to the unsharded serve path.
+//! * Kill-and-resume of a sharded WAL-armed run (`std::mem::forget`,
+//!   the userspace `kill -9`) recovers through `Foem::sharded_resume`
+//!   to a bit-identical final state.
+//! * Resume validation: a changed `--shards` is rejected both by the
+//!   checkpoint fingerprint and by the on-disk shard layout check.
+
+use foem::baselines::OnlineLda;
+use foem::coordinator::checkpoint::{self, TrainerCheckpoint};
+use foem::coordinator::config::{Algorithm, RunConfig, StoreKind};
+use foem::coordinator::driver::Driver;
+use foem::em::foem::{Foem, FoemConfig, FoemTrainState};
+use foem::em::infer::{self, FoldInConfig};
+use foem::em::{EvalPhiView, PhiAccess};
+use foem::serve::ModelRegistry;
+use foem::shard::ShardedPhi;
+use foem::store::paged::PagedPhi;
+use foem::store::{Codec, PhiColumnStore};
+use foem::stream::{CorpusStream, StreamConfig};
+use foem::util::TempDir;
+use foem::LdaParams;
+
+const K: usize = 6;
+const SEED: u64 = 7;
+const BUF: usize = 32 * K * 4;
+
+fn corpus() -> foem::corpus::Corpus {
+    let mut cfg = foem::corpus::synthetic::SyntheticConfig::small();
+    cfg.n_docs = 250;
+    foem::corpus::synthetic::generate(&cfg, 31)
+}
+
+/// 200 train docs / 50 per batch = exactly 4 batches per pass.
+fn stream_cfg() -> StreamConfig {
+    StreamConfig { minibatch_docs: 50, ..Default::default() }
+}
+
+fn foem_cfg() -> FoemConfig {
+    let mut fc = FoemConfig::paper();
+    // Small hot set: columns evict mid-batch on every shard, so the
+    // equivalence below covers the paging machinery, not just buffers.
+    fc.hot_words = 8;
+    // Drive the three-phase executor path (snapshot / reduce / explicit
+    // apply verbs) — the production path for sharded runs, and the one
+    // whose store accesses route 1:1 through the fleet. The
+    // single-worker serial path's closure access (`with_column`) is
+    // emulated as load + store by the facade: still content-identical,
+    // but its IoStats legitimately differ, so it cannot carry the
+    // bit-identity assertions below.
+    fc.n_workers = 2;
+    fc
+}
+
+fn mk_unsharded(dir: &TempDir, n_words: usize) -> Foem<PagedPhi> {
+    Foem::paged_create(
+        LdaParams::paper_defaults(K),
+        &dir.path().join("phi.bin"),
+        n_words,
+        BUF,
+        foem_cfg(),
+        SEED,
+    )
+    .unwrap()
+}
+
+fn mk_sharded(
+    dir: &TempDir,
+    n_shards: usize,
+    n_words: usize,
+) -> Foem<ShardedPhi> {
+    Foem::sharded_create_with_codec(
+        LdaParams::paper_defaults(K),
+        &dir.path().join("phi.bin"),
+        n_shards,
+        n_words,
+        // N shards get N× the single buffer so each shard's slice
+        // matches the unsharded budget split at every N.
+        BUF * n_shards,
+        foem_cfg(),
+        SEED,
+        Codec::Auto,
+    )
+    .unwrap()
+}
+
+fn ppx_bits<S: PhiColumnStore>(
+    algo: &mut Foem<S>,
+    test: &foem::corpus::Corpus,
+) -> u64 {
+    let proto = foem::eval::EvalProtocol {
+        fold_in_iters: 20,
+        seed: 0,
+        ..Default::default()
+    };
+    algo.eval_perplexity(&test.docs, &proto).to_bits()
+}
+
+fn train_all<S: PhiColumnStore>(
+    algo: &mut Foem<S>,
+    train: &foem::corpus::Corpus,
+) {
+    for mb in CorpusStream::new(train, stream_cfg()) {
+        algo.process_minibatch(&mb);
+    }
+}
+
+#[test]
+fn shard_n1_bit_identical_to_unsharded() {
+    let c = corpus();
+    let (train, test) = c.split(50, 1);
+    let udir = TempDir::new("shard-n1-u");
+    let sdir = TempDir::new("shard-n1-s");
+    let mut u = mk_unsharded(&udir, train.n_words());
+    let mut s = mk_sharded(&sdir, 1, train.n_words());
+    train_all(&mut u, &train);
+    train_all(&mut s, &train);
+
+    // The one-owner fleet executes the exact same store calls in the
+    // exact same order, so even the buffer-dynamics counters agree.
+    assert_eq!(
+        u.store.io_stats(),
+        s.store.io_stats(),
+        "N=1 phi-stream IoStats diverged from the unsharded store"
+    );
+    assert_eq!(
+        u.res_store.io_stats(),
+        s.res_store.io_stats(),
+        "N=1 residual-stream IoStats diverged"
+    );
+    assert_eq!(u.export_train_state(), s.export_train_state());
+    assert_eq!(u.export_phi().raw(), s.export_phi().raw());
+    assert_eq!(ppx_bits(&mut u, &test), ppx_bits(&mut s, &test));
+}
+
+#[test]
+fn shard_n4_content_identical_to_unsharded() {
+    let c = corpus();
+    let (train, test) = c.split(50, 1);
+    let udir = TempDir::new("shard-n4-u");
+    let sdir = TempDir::new("shard-n4-s");
+    let mut u = mk_unsharded(&udir, train.n_words());
+    let mut s = mk_sharded(&sdir, 4, train.n_words());
+    train_all(&mut u, &train);
+    train_all(&mut s, &train);
+
+    // Content bit-identity at any N: every column sees the same delta
+    // sequence on some owner, and all resident EM state stays in the
+    // coordinator. (Acceptance only demands 2% perplexity tolerance at
+    // N=4; the design delivers exact bits, so pin exact bits.)
+    assert_eq!(u.export_train_state(), s.export_train_state());
+    assert_eq!(u.export_phi().raw(), s.export_phi().raw());
+    assert_eq!(ppx_bits(&mut u, &test), ppx_bits(&mut s, &test));
+
+    // Buffer dynamics (hits/misses, write-behind) legitimately shift
+    // across per-shard buffers, but the logical access counts are the
+    // same store calls and must sum exactly.
+    let (ui, si) = (u.store.io_stats(), s.store.io_stats());
+    assert_eq!(ui.col_reads, si.col_reads, "phi logical reads diverged");
+    assert_eq!(ui.col_writes, si.col_writes, "phi logical writes diverged");
+    let (ur, sr) = (u.res_store.io_stats(), s.res_store.io_stats());
+    assert_eq!(ur.col_reads, sr.col_reads, "res logical reads diverged");
+    assert_eq!(ur.col_writes, sr.col_writes, "res logical writes diverged");
+}
+
+#[test]
+fn shard_scatter_gather_serve_matches_single_fold_in() {
+    let c = corpus();
+    let (train, test) = c.split(50, 1);
+    let udir = TempDir::new("shard-serve-u");
+    let sdir = TempDir::new("shard-serve-s");
+    let mut u = mk_unsharded(&udir, train.n_words());
+    let mut s = mk_sharded(&sdir, 3, train.n_words());
+    train_all(&mut u, &train);
+    train_all(&mut s, &train);
+
+    let words: Vec<u32> = (0..train.n_words() as u32).collect();
+    let single = u.eval_view(&words);
+
+    // Scatter: per-shard parts; gather: one distributed snapshot.
+    let reg = ModelRegistry::new();
+    let snap =
+        reg.publish_distributed(s.shard_eval_views(&words), s.eval_params());
+    assert_eq!(snap.epoch(), 1);
+
+    // The merged view is bit-identical to the unsharded single-store
+    // view — same columns, same totals, same vocabulary extent.
+    assert_eq!(snap.n_words(), single.n_words());
+    assert_eq!(snap.phisum(), single.phisum());
+    for w in 0..train.n_words() {
+        assert_eq!(snap.word(w), single.word(w), "column {w} diverged");
+    }
+
+    // ... and so is the direct facade view (gather via the plain
+    // snapshot path rather than merge_shards).
+    let facade = s.eval_view(&words);
+    assert_eq!(facade.phisum(), single.phisum());
+    for w in 0..train.n_words() {
+        assert_eq!(facade.word(w), single.word(w), "facade column {w}");
+    }
+
+    // End to end: folding test documents in against the distributed
+    // snapshot is bit-identical to the unsharded serve path.
+    let params = LdaParams::paper_defaults(K);
+    let fold = FoldInConfig::dense(10);
+    let via_snap = infer::fold_in(&*snap, &params, &test.docs, &fold, 0);
+    let via_single = infer::fold_in(&single, &params, &test.docs, &fold, 0);
+    assert_eq!(via_snap.raw(), via_single.raw(), "served theta diverged");
+
+    let merged_again =
+        EvalPhiView::merge_shards(s.shard_eval_views(&words));
+    let via_merge = infer::fold_in(&merged_again, &params, &test.docs, &fold, 0);
+    assert_eq!(via_merge.raw(), via_single.raw());
+}
+
+#[test]
+fn shard_kill_and_resume_matches_uninterrupted_run() {
+    const N: usize = 3;
+    let c = corpus();
+    let (train, test) = c.split(50, 1);
+
+    // Uninterrupted sharded reference (WAL off).
+    let rdir = TempDir::new("shard-kill-ref");
+    let mut a = mk_sharded(&rdir, N, train.n_words());
+    train_all(&mut a, &train);
+    let want_state = a.export_train_state();
+    let want_phi = a.export_phi().raw().to_vec();
+    let want_ppx = ppx_bits(&mut a, &test);
+
+    // WAL-armed run: coordinator checkpoint after batch 2, hard kill
+    // after batch 3 — batch 3 lives ONLY in the per-shard WALs.
+    let dir = TempDir::new("shard-kill");
+    let ckpt_dir = dir.path().join("ckpt");
+    let mut b = mk_sharded(&dir, N, train.n_words());
+    b.enable_wal().unwrap();
+    let mut done = 0usize;
+    for mb in CorpusStream::new(&train, stream_cfg()) {
+        b.process_minibatch(&mb);
+        done += 1;
+        if done == 2 {
+            OnlineLda::checkpoint(&mut b).unwrap();
+            checkpoint::save(
+                &ckpt_dir,
+                &TrainerCheckpoint {
+                    fingerprint: 0xfeed,
+                    batch_cursor: done as u64,
+                    epoch: 0,
+                    state: b.export_train_state(),
+                },
+            )
+            .unwrap();
+            OnlineLda::truncate_wal(&mut b).unwrap();
+        }
+        if done == 3 {
+            break;
+        }
+    }
+    // kill -9: no Drop, no flush, no fleet shutdown, no WAL truncation.
+    std::mem::forget(b);
+
+    let ckpt = checkpoint::load(&ckpt_dir).unwrap().expect("checkpoint");
+    let (mut r, last) = Foem::sharded_resume(
+        LdaParams::paper_defaults(K),
+        &dir.path().join("phi.bin"),
+        N,
+        BUF * N,
+        foem_cfg(),
+        &ckpt.state,
+    )
+    .unwrap();
+    assert_eq!(last, 3, "replay recovered the wrong global batch cursor");
+    for mb in CorpusStream::new(&train, stream_cfg()).skip(last as usize) {
+        r.process_minibatch(&mb);
+    }
+    assert_eq!(r.export_train_state(), want_state, "state diverged");
+    assert_eq!(r.export_phi().raw(), &want_phi[..], "phi diverged");
+    assert_eq!(ppx_bits(&mut r, &test), want_ppx, "perplexity diverged");
+}
+
+#[test]
+fn shard_resume_rejects_mismatched_layout() {
+    let c = corpus();
+    let (train, _) = c.split(50, 1);
+    let dir = TempDir::new("shard-layout");
+    let mut t = mk_sharded(&dir, 2, train.n_words());
+    let state: FoemTrainState = t.export_train_state();
+    drop(t); // Clean fleet shutdown; the shard files stay on disk.
+
+    for wrong in [1usize, 3] {
+        let err = Foem::sharded_resume(
+            LdaParams::paper_defaults(K),
+            &dir.path().join("phi.bin"),
+            wrong,
+            BUF * wrong,
+            foem_cfg(),
+            &state,
+        )
+        .err()
+        .unwrap_or_else(|| panic!("--shards {wrong} must be rejected"));
+        assert!(
+            err.to_string().contains("--shards"),
+            "unhelpful layout error: {err}"
+        );
+    }
+}
+
+#[test]
+fn shard_count_is_part_of_checkpoint_fingerprint() {
+    let mut cfg = RunConfig { n_shards: 2, ..RunConfig::default() };
+    let fp2 = checkpoint::config_fingerprint(&cfg);
+    cfg.n_shards = 4;
+    let fp4 = checkpoint::config_fingerprint(&cfg);
+    assert_ne!(fp2, fp4, "--resume must reject a changed --shards");
+    // Cadence knobs still don't pin the fingerprint.
+    cfg.eval_every = 17;
+    cfg.verbose = true;
+    assert_eq!(checkpoint::config_fingerprint(&cfg), fp4);
+}
+
+#[test]
+fn shard_driver_run_matches_unsharded_driver_run() {
+    let c = foem::corpus::synthetic::generate(
+        &foem::corpus::synthetic::SyntheticConfig::small(),
+        92,
+    );
+    let run = |n_shards: usize, pipeline_depth: usize| {
+        let dir = TempDir::new("shard-driver");
+        let cfg = RunConfig {
+            algorithm: Algorithm::Foem,
+            n_topics: K,
+            minibatch_docs: 64,
+            n_shards,
+            n_workers: 2,
+            pipeline_depth,
+            store: StoreKind::Paged {
+                path: dir.path().join("phi.bin"),
+                buffer_bytes: 64 << 10,
+            },
+            ..RunConfig::default()
+        };
+        let mut d = Driver::new(cfg);
+        d.train_corpus(&c).unwrap()
+    };
+    let plain = run(0, 0);
+    let sharded = run(2, 0);
+    let sharded_pipelined = run(2, 2);
+    assert_eq!(
+        plain.final_perplexity.to_bits(),
+        sharded.final_perplexity.to_bits(),
+        "--shards 2 diverged from the single-store driver run"
+    );
+    assert_eq!(
+        plain.final_perplexity.to_bits(),
+        sharded_pipelined.final_perplexity.to_bits(),
+        "--shards 2 --pipeline-depth 2 diverged"
+    );
+    // Truthful telemetry: the report's IoStats is the fleet-wide sum.
+    let (pio, sio) = (plain.io.unwrap(), sharded.io.unwrap());
+    assert_eq!(pio.col_reads, sio.col_reads);
+    assert_eq!(pio.col_writes, sio.col_writes);
+}

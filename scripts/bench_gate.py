@@ -8,8 +8,8 @@ Usage:
 Each BENCH_*.json file is a sequence of JSON lines as emitted by the
 benches in rust/benches/ (and collected by scripts/bench.sh). Rows are
 keyed on their identity fields (bench, k, subset, impl, workers, depth,
-algo, isa, codec, sweep) and compared on the metrics of the file's bench
-family:
+algo, isa, codec, sweep, wal, shards) and compared on the metrics of the
+file's bench family:
 
     BENCH_estep.json     estep_kernel         mean_ns        lower is better
     BENCH_foldin.json    foldin               mean_ns        lower is better
@@ -64,7 +64,7 @@ FAMILIES = {
 }
 
 KEY_FIELDS = ("bench", "k", "subset", "impl", "workers", "depth", "algo",
-              "isa", "codec", "sweep", "wal")
+              "isa", "codec", "sweep", "wal", "shards")
 
 
 def load_rows(path, bench_tag):
