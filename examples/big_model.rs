@@ -16,6 +16,7 @@
 //!
 //!     cargo run --release --example big_model
 
+use foem::coordinator::metrics::Metrics;
 use foem::corpus::synthetic::{generate, SyntheticConfig};
 use foem::em::foem::{Foem, FoemConfig};
 use foem::exec::pipeline::Pipeline;
@@ -54,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         usize,
         IoStats,
         (usize, usize),
+        Metrics,
         Foem<PagedPhi>,
     )> {
         let mut fc = FoemConfig::paper(); // lambda_k*K = 10 topics per word
@@ -76,15 +78,13 @@ fn main() -> anyhow::Result<()> {
         )?;
         let t = Timer::start();
         let mut batches = 0usize;
-        let mut peak_resp = 0usize;
-        let mut peak_scratch = 0usize;
+        let mut metrics = Metrics::new();
         Pipeline::new(depth).run(
             &mut algo,
             CorpusStream::new(&corpus, scfg),
             |_, batch_no, r| {
                 batches = batch_no;
-                peak_resp = peak_resp.max(r.resp_bytes);
-                peak_scratch = peak_scratch.max(r.scratch_bytes);
+                metrics.record(batch_no, r, None, None);
                 println!(
                     "  [d{depth}] batch {batch_no}: {} inner sweeps, {:.2}s",
                     r.inner_iters, r.seconds
@@ -92,20 +92,29 @@ fn main() -> anyhow::Result<()> {
                 Ok(())
             },
         )?;
-        Ok((
-            t.seconds(),
-            batches,
-            algo.store.io_stats(),
-            (peak_resp, peak_scratch),
-            algo,
-        ))
+        let peaks = (metrics.peak_resp_bytes, metrics.peak_scratch_bytes);
+        Ok((t.seconds(), batches, algo.store.io_stats(), peaks, metrics, algo))
     };
 
     println!("\n-- synchronous parameter streaming (pipeline depth 0) --");
-    let (t0, batches0, io0, (resp0, scratch0), _algo0) = run(0)?;
+    let (t0, batches0, io0, (resp0, scratch0), _m0, _algo0) = run(0)?;
     println!("\n-- pipelined: prefetch + write-behind (depth 2) --");
-    let (t2, batches2, io2, (resp2, scratch2), mut algo2) = run(2)?;
+    let (t2, batches2, io2, (resp2, scratch2), m2, mut algo2) = run(2)?;
     assert_eq!(batches0, batches2);
+
+    // Per-batch telemetry round-trips through the CSV layer: this
+    // consumer indexes columns by header name, so future appended
+    // columns (e.g. the drift monitor's shift_dir/shift_score pair)
+    // never break it.
+    let csv = m2.to_csv();
+    let parsed = Metrics::parse_csv(&csv)?;
+    assert_eq!(parsed.records.len(), m2.records.len());
+    println!(
+        "per-batch CSV: {} rows x {} cols round-tripped (peak resp {:.2} MB)",
+        parsed.records.len(),
+        csv.lines().next().map_or(0, |h| h.split(',').count()),
+        parsed.peak_resp_bytes as f64 / 1e6,
+    );
 
     let hit_rate = |io: &IoStats| {
         100.0 * (io.buffer_hits + io.prefetch_hits) as f64

@@ -1,0 +1,158 @@
+//! Drift-response bench: ground-truth detection latency, post-shift
+//! recovery, and false-alarm counts for the online shift detectors
+//! (`coordinator::drift`) over the synthetic drifting stream
+//! (`corpus::synthetic::DriftingCorpus`).
+//!
+//! Emits `BENCH_drift.json` lines:
+//!
+//!     cargo bench --bench drift
+//!     scripts/bench.sh   # writes BENCH_drift.json at the repo root
+//!
+//! Scenarios × detectors, all seeded and timing-free (every metric is a
+//! batch count, so the numbers are exactly reproducible):
+//!
+//! - `mixture_shift`: every generating topic is redrawn at batch 40 of
+//!   80 — the abrupt-regime-change case. The detector must flag it
+//!   within the documented latency bound (DESIGN.md §15), after which
+//!   the decay-reset response halves the sufficient statistics and the
+//!   trainer re-converges; `post_shift_recovery_batches` counts batches
+//!   from the true shift until training perplexity is back within 10%
+//!   of its pre-shift level.
+//! - `stationary`: the same generator with no scheduled events — the
+//!   false-alarm control. Both detectors must stay silent for the whole
+//!   run (`false_alarms` = 0) despite the convergence trend in the
+//!   monitored log-likelihood.
+
+use foem::coordinator::drift::{
+    DetectorKind, DriftMonitor, MonitorConfig, ShiftEvent, DECAY_FACTOR,
+};
+use foem::corpus::synthetic::{
+    DriftConfig, DriftKind, DriftPoint, DriftingCorpus, SyntheticConfig,
+};
+use foem::em::foem::{Foem, FoemConfig};
+use foem::store::InMemoryPhi;
+use foem::LdaParams;
+
+const K: usize = 16;
+const W: usize = 800;
+const N_BATCHES: usize = 80;
+const SHIFT_BATCH: usize = 40;
+/// Alarms this many batches past a true shift count as echoes of it,
+/// not false alarms (the response itself perturbs the monitored LL).
+const GRACE: usize = 12;
+
+fn base() -> SyntheticConfig {
+    let mut cfg = SyntheticConfig::small();
+    cfg.n_docs = 0; // unused by the drifting generator
+    cfg.n_words = W;
+    cfg.n_topics = K;
+    cfg
+}
+
+struct Outcome {
+    detection_latency: usize,
+    recovery: usize,
+    false_alarms: usize,
+    alarms: Vec<ShiftEvent>,
+}
+
+/// Train FOEM over the stream, feed the monitor, apply the decay-reset
+/// response on alarm, and score against the generator's change log.
+fn run(scenario: &str, detector: DetectorKind, seed: u64) -> Outcome {
+    let mut cfg = DriftConfig::stationary(base(), 64, N_BATCHES);
+    if scenario == "mixture_shift" {
+        cfg.events = vec![DriftPoint {
+            batch: SHIFT_BATCH,
+            kind: DriftKind::MixtureShift { fraction: 1.0 },
+        }];
+    }
+    let stream = DriftingCorpus::new(cfg, seed);
+    let shifts = stream.truth().shift_batches();
+
+    let mut fc = FoemConfig::paper();
+    fc.exact_ll = true;
+    let mut algo =
+        Foem::new(LdaParams::paper_defaults(K), InMemoryPhi::zeros(K, W), fc, 7);
+    let threshold = match detector {
+        DetectorKind::Cusum => 8.0,
+        // Shewhart limit in z units: one-shot, so set lower than the
+        // CUSUM's accumulated threshold.
+        _ => 4.0,
+    };
+    let mcfg = MonitorConfig { detector, threshold, ..Default::default() };
+    let mut monitor = DriftMonitor::new(mcfg);
+
+    let mut ppx = vec![f64::NAN; N_BATCHES];
+    let mut alarms: Vec<ShiftEvent> = Vec::new();
+    for mb in stream {
+        let report = algo.process_minibatch(&mb);
+        ppx[mb.index] = report.train_perplexity();
+        if let Some(event) =
+            monitor.observe(mb.index, report.train_ll / report.tokens.max(1.0))
+        {
+            alarms.push(event);
+            algo.reset_decay(DECAY_FACTOR);
+        }
+    }
+
+    let detection_latency = match shifts.first() {
+        None => 0,
+        Some(&t) => alarms
+            .iter()
+            .find(|a| a.batch >= t)
+            .map(|a| a.batch - t + 1)
+            .unwrap_or(N_BATCHES - t),
+    };
+    // Recovery: batches from the true shift until training perplexity
+    // is back within 10% of the mean over the 8 batches before it.
+    let recovery = match shifts.first() {
+        None => 0,
+        Some(&t) => {
+            let pre: f64 =
+                ppx[t - 8..t].iter().sum::<f64>() / 8.0;
+            (t..N_BATCHES)
+                .find(|&b| ppx[b] <= pre * 1.10)
+                .map(|b| b - t)
+                .unwrap_or(N_BATCHES - t)
+        }
+    };
+    let false_alarms = alarms
+        .iter()
+        .filter(|a| {
+            !shifts.iter().any(|&t| a.batch >= t && a.batch < t + GRACE)
+        })
+        .count();
+    Outcome { detection_latency, recovery, false_alarms, alarms }
+}
+
+fn main() {
+    println!(
+        "== drift detection: latency + recovery + false alarms \
+         (K={K} W={W} batches={N_BATCHES} shift@{SHIFT_BATCH}) =="
+    );
+    for scenario in ["mixture_shift", "stationary"] {
+        for detector in [DetectorKind::Cusum, DetectorKind::Window] {
+            let out = run(scenario, detector, 42);
+            println!(
+                "drift_{scenario}_{}: latency {} batches, recovery {} \
+                 batches, {} false alarms ({} alarms total)",
+                detector.name(),
+                out.detection_latency,
+                out.recovery,
+                out.false_alarms,
+                out.alarms.len()
+            );
+            println!(
+                "BENCH_drift.json {{\"bench\":\"drift\",\
+                 \"scenario\":\"{scenario}\",\"detector\":\"{}\",\
+                 \"detection_latency_batches\":{},\
+                 \"post_shift_recovery_batches\":{},\
+                 \"false_alarms\":{}}}",
+                detector.name(),
+                out.detection_latency,
+                out.recovery,
+                out.false_alarms
+            );
+        }
+    }
+}

@@ -105,6 +105,35 @@ pub trait OnlineLda {
     fn truncate_wal(&mut self) -> anyhow::Result<()> {
         Ok(())
     }
+
+    // --- Drift responses (coordinator::drift) -----------------------
+    //
+    // Invoked by the driver when the shift detector confirms a regime
+    // change and the user opted into a response (`--drift-response`).
+    // Each returns `true` iff the algorithm actually applied the
+    // action; the defaults decline, so baselines without an adaptive
+    // story are safely inert and the driver can report "response
+    // unsupported" instead of silently doing nothing.
+
+    /// Discount the accumulated sufficient statistics by `factor`
+    /// (0 < factor < 1), restarting the implicit 1/s step-size
+    /// schedule partway (DESIGN.md §15).
+    fn reset_decay(&mut self, _factor: f32) -> bool {
+        false
+    }
+
+    /// Permanently widen topic scheduling/exploration so starved
+    /// topics can be rediscovered after a shift.
+    fn widen_exploration(&mut self) -> bool {
+        false
+    }
+
+    /// Grow the topic dimension by `extra` fresh topics through the
+    /// parameter store. Returns `false` when the backing store pins K
+    /// (paged / sharded column records).
+    fn grow_topics(&mut self, _extra: usize) -> bool {
+        false
+    }
 }
 
 impl OnlineLda for crate::em::sem::Sem {
@@ -180,6 +209,18 @@ impl<S: crate::store::PhiColumnStore> OnlineLda for crate::em::foem::Foem<S> {
     fn truncate_wal(&mut self) -> anyhow::Result<()> {
         self.store.truncate_wal()?;
         self.res_store.truncate_wal()
+    }
+
+    fn reset_decay(&mut self, factor: f32) -> bool {
+        crate::em::foem::Foem::reset_decay(self, factor)
+    }
+
+    fn widen_exploration(&mut self) -> bool {
+        crate::em::foem::Foem::widen_exploration(self)
+    }
+
+    fn grow_topics(&mut self, extra: usize) -> bool {
+        crate::em::foem::Foem::grow_topics(self, extra)
     }
 }
 

@@ -3,6 +3,7 @@
 //! dependency-light stand-in for a clap/serde config system — the
 //! vendored crate set has neither).
 
+use crate::coordinator::drift::{DetectorKind, MonitorConfig, ResponseKind};
 use crate::em::foem::FoemConfig;
 use crate::em::schedule::TopicSubset;
 use crate::em::sem::LearningRate;
@@ -164,6 +165,35 @@ pub struct RunConfig {
     /// detected, scalar otherwise). Threaded through every consumer of
     /// the shared sweep kernel — training, fold-in, and serving.
     pub kernel_backend: KernelBackend,
+    /// Online shift detection over the per-batch training LL
+    /// (`--drift-detector off|cusum|window`, coordinator::drift). Off by
+    /// default: the detector-off path is bit-identical to a build
+    /// without the drift subsystem. Turning it on forces the exact
+    /// training-LL pass (`exact_ll`) so the monitor has a signal —
+    /// a read-only, RNG-free pass, so model state stays bit-identical
+    /// and only telemetry changes.
+    pub drift_detector: DetectorKind,
+    /// What the driver does on a confirmed shift
+    /// (`--drift-response none|decay-reset|widen|grow`). Responses
+    /// mutate the model mid-stream, so they require `pipeline_depth 0`;
+    /// `grow` additionally requires FOEM on the in-memory store.
+    pub drift_response: ResponseKind,
+    /// Detector alarm threshold `h`, in baseline-σ units.
+    pub drift_threshold: f64,
+    /// CUSUM slack `κ` (per-batch drift allowance, in baseline-σ
+    /// units). The default 2.0 sits above the ~1.73σ a smooth
+    /// convergence trend standardizes to against the lagged window
+    /// baseline, so converging-but-stationary streams never alarm
+    /// (see `coordinator::drift`); lower it only to make the detector
+    /// deliberately jumpy (e.g. in tests).
+    pub drift_slack: f64,
+    /// Rolling-baseline window, in batches.
+    pub drift_window: usize,
+    /// Batches absorbed before the detector arms (also the post-alarm
+    /// cooldown).
+    pub drift_warmup: usize,
+    /// Fresh topics allocated by the `grow` response per shift.
+    pub drift_grow_topics: usize,
     pub seed: u64,
     /// Print per-minibatch progress lines.
     pub verbose: bool,
@@ -201,6 +231,13 @@ impl Default for RunConfig {
             serve_subset: 10,
             phi_codec: crate::store::Codec::Auto,
             kernel_backend: KernelBackend::Scalar,
+            drift_detector: DetectorKind::Off,
+            drift_response: ResponseKind::None,
+            drift_threshold: 8.0,
+            drift_slack: 2.0,
+            drift_window: 16,
+            drift_warmup: 12,
+            drift_grow_topics: 8,
             seed: 42,
             verbose: false,
         }
@@ -231,11 +268,26 @@ impl RunConfig {
             hot_words: self.hot_words,
             // The driver evaluates predictively (eval_every); skip the
             // O(K*NNZ_s) exact-training-LL pass on the hot path so the
-            // per-minibatch cost stays flat in K (Table 3).
-            exact_ll: false,
+            // per-minibatch cost stays flat in K (Table 3). The drift
+            // monitor's observation IS the per-batch training LL, so an
+            // armed detector turns the pass back on — it is read-only
+            // and RNG-free, so model state stays bit-identical.
+            exact_ll: self.drift_detector != DetectorKind::Off,
             n_workers: self.n_workers,
             kernel_backend: self.kernel_backend,
             ..FoemConfig::paper()
+        }
+    }
+
+    /// The drift-monitor tuning this run configuration induces
+    /// ([`crate::coordinator::drift::DriftMonitor`]).
+    pub fn monitor_config(&self) -> MonitorConfig {
+        MonitorConfig {
+            detector: self.drift_detector,
+            threshold: self.drift_threshold,
+            slack: self.drift_slack,
+            window: self.drift_window,
+            warmup: self.drift_warmup,
         }
     }
 
@@ -344,6 +396,33 @@ impl RunConfig {
             }
             "kernel_backend" => {
                 self.kernel_backend = KernelBackend::parse(value)?
+            }
+            "drift_detector" => {
+                self.drift_detector = DetectorKind::parse(value)?
+            }
+            "drift_response" => {
+                self.drift_response = ResponseKind::parse(value)?
+            }
+            "drift_threshold" => {
+                let h: f64 = value.parse()?;
+                anyhow::ensure!(h > 0.0, "drift_threshold must be > 0");
+                self.drift_threshold = h;
+            }
+            "drift_slack" => {
+                let s: f64 = value.parse()?;
+                anyhow::ensure!(s >= 0.0, "drift_slack must be >= 0");
+                self.drift_slack = s;
+            }
+            "drift_window" => {
+                let w: usize = value.parse()?;
+                anyhow::ensure!(w >= 2, "drift_window must be >= 2");
+                self.drift_window = w;
+            }
+            "drift_warmup" => self.drift_warmup = value.parse()?,
+            "drift_grow_topics" => {
+                let n: usize = value.parse()?;
+                anyhow::ensure!(n >= 1, "drift_grow_topics must be >= 1");
+                self.drift_grow_topics = n;
             }
             "seed" => self.seed = value.parse()?,
             "verbose" => self.verbose = value.parse()?,
@@ -556,6 +635,44 @@ mod tests {
         assert!(c.resume);
         assert!(c.wal);
         assert!(c.set("resume", "maybe").is_err());
+    }
+
+    #[test]
+    fn drift_knobs_round_trip() {
+        let mut c = RunConfig::default();
+        // Defaults: detector off, no response, and — critically for the
+        // bit-identity contract — foem_config unchanged from pre-drift
+        // behavior (no exact-LL pass).
+        assert_eq!(c.drift_detector, DetectorKind::Off);
+        assert_eq!(c.drift_response, ResponseKind::None);
+        assert!(!c.foem_config().exact_ll);
+        assert_eq!(c.monitor_config().detector, DetectorKind::Off);
+        c.set("drift_detector", "cusum").unwrap();
+        c.set("drift_response", "decay-reset").unwrap();
+        c.set("drift_threshold", "5.5").unwrap();
+        c.set("drift_slack", "0.5").unwrap();
+        c.set("drift_window", "24").unwrap();
+        c.set("drift_warmup", "6").unwrap();
+        c.set("drift_grow_topics", "4").unwrap();
+        assert_eq!(c.drift_detector, DetectorKind::Cusum);
+        assert_eq!(c.drift_response, ResponseKind::DecayReset);
+        assert_eq!(c.drift_grow_topics, 4);
+        let m = c.monitor_config();
+        assert_eq!(m.detector, DetectorKind::Cusum);
+        assert_eq!(m.threshold, 5.5);
+        assert_eq!(m.slack, 0.5);
+        assert_eq!(m.window, 24);
+        assert_eq!(m.warmup, 6);
+        // An armed detector needs the training-LL signal.
+        assert!(c.foem_config().exact_ll);
+        c.set("drift_detector", "window").unwrap();
+        assert_eq!(c.drift_detector, DetectorKind::Window);
+        assert!(c.set("drift_detector", "bogus").is_err());
+        assert!(c.set("drift_response", "panic").is_err());
+        assert!(c.set("drift_threshold", "0").is_err());
+        assert!(c.set("drift_slack", "-1").is_err());
+        assert!(c.set("drift_window", "1").is_err());
+        assert!(c.set("drift_grow_topics", "0").is_err());
     }
 
     #[test]

@@ -1,0 +1,425 @@
+//! Online shift detection over the per-batch training signal.
+//!
+//! The paper's lifelong setting assumes the stream never ends; this
+//! module assumes it never stays still either. A [`DriftMonitor`]
+//! watches the per-token log-likelihood that every minibatch already
+//! reports (`MinibatchReport::train_ll / tokens`) and flags abrupt
+//! level shifts — the statistical signature of a regime change in the
+//! underlying corpus (topic mixture shift, topic birth/death,
+//! vocabulary growth; see `corpus::synthetic::DriftingCorpus` for the
+//! ground-truth generator used to test this).
+//!
+//! Two detectors share one observation path:
+//!
+//! * **CUSUM** (the default when armed): a two-sided standardized
+//!   cumulative-sum chart. Each observation is standardized against a
+//!   *lagged* rolling window (the current observation is excluded from
+//!   its own baseline), then accumulated into `g⁺ = max(0, g⁺ + z − κ)`
+//!   and `g⁻ = max(0, g⁻ − z − κ)`. An alarm fires when either
+//!   statistic crosses the threshold `h`.
+//! * **Window** (Shewhart baseline): alarm when a single standardized
+//!   observation satisfies `|z| ≥ h`. Less sensitive to small sustained
+//!   shifts, immune to slow accumulation — kept as the control arm the
+//!   CUSUM is benchmarked against in `benches/drift.rs`.
+//!
+//! Design notes (full discussion in rust/DESIGN.md §15):
+//!
+//! * The slack κ defaults to **2.0σ**. A converging trainer's LL
+//!   improves steadily, and against a lagged window baseline a pure
+//!   linear trend standardizes to z ≈ √12/2 ≈ 1.73 *independent of the
+//!   noise scale* (both the lag of the mean and the within-window
+//!   spread scale with the slope). Any κ below that accumulates the
+//!   convergence ramp itself into a false "up" alarm; κ = 2 suppresses
+//!   trends entirely while leaving genuine shifts (z ≫ κ) detected in
+//!   ⌈h / (z̄ − κ)⌉ batches.
+//! * σ has an absolute floor of 1e-12 — absolute, not relative, so the
+//!   statistic stays invariant under a constant offset of the input
+//!   series (`shift_prop_cusum_offset_invariant`).
+//! * After an alarm the monitor discards its window and re-enters
+//!   warmup: the post-shift regime needs a fresh baseline, and the
+//!   warmup doubles as an alarm cooldown.
+//!
+//! The monitor is pure telemetry — it never touches the model. The
+//! driver decides what to *do* about a confirmed shift via
+//! [`ResponseKind`] (reset the n_d decay schedule, widen topic-subset
+//! exploration, or grow K through the store seam); all of it is off by
+//! default and bit-identity of the default path is enforced by
+//! `tests/drift_equivalence.rs`.
+
+use anyhow::{bail, Result};
+
+/// Absolute floor for the baseline standard deviation. Keeps z finite
+/// on degenerate (constant) windows without breaking offset invariance.
+const MIN_SIGMA: f64 = 1e-12;
+
+/// Sufficient-statistic discount applied by the `decay_reset` response:
+/// `phi_hat *= γ`, `phisum *= γ`, which restarts the implicit 1/s
+/// schedule at `s_eff = γ·s` (DESIGN.md §15).
+pub const DECAY_FACTOR: f32 = 0.5;
+
+/// Which change detector runs over the per-batch LL stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DetectorKind {
+    /// No monitoring at all (the default): zero new code on the hot
+    /// path, bit-identical to a build without this module.
+    Off,
+    /// Two-sided standardized CUSUM (Page's test).
+    Cusum,
+    /// Windowed-mean (Shewhart) baseline: single-observation z test.
+    Window,
+}
+
+impl DetectorKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(Self::Off),
+            "cusum" => Ok(Self::Cusum),
+            "window" => Ok(Self::Window),
+            other => bail!("unknown drift detector {other} (off|cusum|window)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::Cusum => "cusum",
+            Self::Window => "window",
+        }
+    }
+}
+
+/// What the driver does when the detector confirms a shift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResponseKind {
+    /// Record the event in telemetry but leave the model alone.
+    None,
+    /// Discount the accumulated sufficient statistics, restarting the
+    /// implicit 1/s step-size schedule partway (DESIGN.md §15).
+    DecayReset,
+    /// Widen `TopicSubset` scheduling and exploration slots so the
+    /// scheduler can rediscover topics the old residuals starved.
+    Widen,
+    /// Allocate fresh topics through the store seam (in-memory FOEM
+    /// only — paged column records pin K at creation).
+    Grow,
+}
+
+impl ResponseKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "none" => Ok(Self::None),
+            "decay_reset" | "decay-reset" => Ok(Self::DecayReset),
+            "widen" => Ok(Self::Widen),
+            "grow" => Ok(Self::Grow),
+            other => bail!("unknown drift response {other} (none|decay-reset|widen|grow)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::DecayReset => "decay_reset",
+            Self::Widen => "widen",
+            Self::Grow => "grow",
+        }
+    }
+}
+
+/// Which way the monitored statistic jumped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShiftDirection {
+    /// Per-token LL abruptly improved (e.g. the stream got easier).
+    Up,
+    /// Per-token LL abruptly dropped — the classic drift signature.
+    Down,
+}
+
+impl ShiftDirection {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Up => "up",
+            Self::Down => "down",
+        }
+    }
+}
+
+/// A confirmed change point, in stream batch coordinates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShiftEvent {
+    /// Global batch index at which the alarm fired.
+    pub batch: usize,
+    pub direction: ShiftDirection,
+    /// Value of the firing statistic: the winning CUSUM accumulator
+    /// (≥ threshold) or |z| for the window detector.
+    pub score: f64,
+}
+
+/// Detector tuning. Thresholds are in units of the baseline σ.
+#[derive(Debug, Clone, Copy)]
+pub struct MonitorConfig {
+    pub detector: DetectorKind,
+    /// Alarm threshold `h` (CUSUM accumulator / window |z|).
+    pub threshold: f64,
+    /// CUSUM slack κ subtracted from |z| before accumulation. Must
+    /// exceed ~1.73 to ignore the convergence ramp (module docs).
+    pub slack: f64,
+    /// Rolling-baseline length in batches.
+    pub window: usize,
+    /// Observations absorbed before the detector arms; also the
+    /// cooldown after every alarm.
+    pub warmup: usize,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        Self {
+            detector: DetectorKind::Off,
+            threshold: 8.0,
+            slack: 2.0,
+            window: 16,
+            warmup: 12,
+        }
+    }
+}
+
+/// Online two-sided CUSUM / Shewhart monitor over a scalar series.
+///
+/// Feed it one observation per batch via [`DriftMonitor::observe`];
+/// it returns `Some(ShiftEvent)` exactly when an alarm fires. All
+/// state is plain f64 arithmetic — deterministic, RNG-free, and
+/// independent of the model it watches.
+#[derive(Debug, Clone)]
+pub struct DriftMonitor {
+    cfg: MonitorConfig,
+    /// Lagged baseline: the last `window` observations *before* the
+    /// one currently being scored.
+    ring: Vec<f64>,
+    /// Next slot to overwrite once the ring is full.
+    next: usize,
+    /// Observations absorbed since the last (re)arm.
+    armed_count: usize,
+    g_pos: f64,
+    g_neg: f64,
+    events: Vec<ShiftEvent>,
+}
+
+impl DriftMonitor {
+    pub fn new(cfg: MonitorConfig) -> Self {
+        Self {
+            cfg,
+            ring: Vec::with_capacity(cfg.window.max(2)),
+            next: 0,
+            armed_count: 0,
+            g_pos: 0.0,
+            g_neg: 0.0,
+            events: Vec::new(),
+        }
+    }
+
+    /// Mean and sample standard deviation of the lagged baseline.
+    fn baseline(&self) -> (f64, f64) {
+        let n = self.ring.len();
+        let mean = self.ring.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            self.ring.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        (mean, var.sqrt())
+    }
+
+    /// True once warmup is over and the baseline has ≥ 2 points.
+    pub fn is_armed(&self) -> bool {
+        self.cfg.detector != DetectorKind::Off
+            && self.armed_count >= self.cfg.warmup
+            && self.ring.len() >= 2
+    }
+
+    /// Current value of the detection statistic (max CUSUM arm).
+    pub fn statistic(&self) -> f64 {
+        self.g_pos.max(self.g_neg)
+    }
+
+    /// Every alarm raised so far, in firing order.
+    pub fn events(&self) -> &[ShiftEvent] {
+        &self.events
+    }
+
+    /// Score one observation (per-token train LL of batch `batch`).
+    ///
+    /// Returns the alarm if one fired. The firing observation is NOT
+    /// absorbed into the baseline — the monitor resets and re-warms on
+    /// the post-shift regime instead.
+    pub fn observe(&mut self, batch: usize, x: f64) -> Option<ShiftEvent> {
+        if self.cfg.detector == DetectorKind::Off {
+            return None;
+        }
+        let mut fired: Option<ShiftEvent> = None;
+        if self.is_armed() {
+            let (mean, std) = self.baseline();
+            let z = (x - mean) / std.max(MIN_SIGMA);
+            match self.cfg.detector {
+                DetectorKind::Cusum => {
+                    self.g_pos = (self.g_pos + z - self.cfg.slack).max(0.0);
+                    self.g_neg = (self.g_neg - z - self.cfg.slack).max(0.0);
+                    let g = self.statistic();
+                    if g >= self.cfg.threshold {
+                        let direction = if self.g_pos >= self.g_neg {
+                            ShiftDirection::Up
+                        } else {
+                            ShiftDirection::Down
+                        };
+                        fired = Some(ShiftEvent { batch, direction, score: g });
+                    }
+                }
+                DetectorKind::Window => {
+                    if z.abs() >= self.cfg.threshold {
+                        let direction = if z > 0.0 {
+                            ShiftDirection::Up
+                        } else {
+                            ShiftDirection::Down
+                        };
+                        fired = Some(ShiftEvent { batch, direction, score: z.abs() });
+                    }
+                }
+                DetectorKind::Off => unreachable!(),
+            }
+        }
+        if let Some(event) = fired {
+            self.events.push(event);
+            self.ring.clear();
+            self.next = 0;
+            self.armed_count = 0;
+            self.g_pos = 0.0;
+            self.g_neg = 0.0;
+            return Some(event);
+        }
+        if self.ring.len() < self.cfg.window.max(2) {
+            self.ring.push(x);
+        } else {
+            self.ring[self.next] = x;
+            self.next = (self.next + 1) % self.ring.len();
+        }
+        self.armed_count += 1;
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cusum_cfg() -> MonitorConfig {
+        MonitorConfig { detector: DetectorKind::Cusum, ..MonitorConfig::default() }
+    }
+
+    #[test]
+    fn off_detector_never_fires() {
+        let mut m = DriftMonitor::new(MonitorConfig::default());
+        for b in 0..200 {
+            let x = if b < 100 { -5.0 } else { -50.0 };
+            assert!(m.observe(b, x).is_none());
+        }
+        assert!(m.events().is_empty());
+        assert!(!m.is_armed());
+    }
+
+    #[test]
+    fn cusum_detects_level_drop() {
+        let mut m = DriftMonitor::new(cusum_cfg());
+        // Noisy-but-stationary prelude, then a brutal drop.
+        let mut alarm = None;
+        for b in 0..80 {
+            let base = if b % 2 == 0 { -5.0 + 0.1 } else { -5.0 - 0.1 };
+            let x = if b < 50 { base } else { base - 10.0 };
+            if let Some(e) = m.observe(b, x) {
+                alarm.get_or_insert(e);
+            }
+        }
+        let e = alarm.expect("shift must be detected");
+        assert!(e.batch >= 50 && e.batch < 58, "latency bound: fired at {}", e.batch);
+        assert_eq!(e.direction, ShiftDirection::Down);
+        assert!(e.score >= 8.0);
+    }
+
+    #[test]
+    fn cusum_detects_level_rise_as_up() {
+        let mut m = DriftMonitor::new(cusum_cfg());
+        let mut alarm = None;
+        for b in 0..80 {
+            let base = if b % 2 == 0 { 0.1 } else { -0.1 };
+            let x = if b < 50 { base } else { base + 10.0 };
+            if let Some(e) = m.observe(b, x) {
+                alarm.get_or_insert(e);
+            }
+        }
+        assert_eq!(alarm.expect("detected").direction, ShiftDirection::Up);
+    }
+
+    #[test]
+    fn window_detector_fires_on_outlier() {
+        let cfg = MonitorConfig { detector: DetectorKind::Window, ..MonitorConfig::default() };
+        let mut m = DriftMonitor::new(cfg);
+        let mut alarm = None;
+        for b in 0..60 {
+            let base = if b % 2 == 0 { 0.1 } else { -0.1 };
+            let x = if b < 40 { base } else { base - 20.0 };
+            if let Some(e) = m.observe(b, x) {
+                alarm.get_or_insert(e);
+            }
+        }
+        let e = alarm.expect("detected");
+        assert_eq!(e.batch, 40);
+        assert_eq!(e.direction, ShiftDirection::Down);
+    }
+
+    #[test]
+    fn convergence_ramp_does_not_alarm() {
+        // Exponentially saturating improvement — the exact shape a
+        // converging trainer emits — with κ = 2 must stay silent.
+        let mut m = DriftMonitor::new(cusum_cfg());
+        for b in 0..300 {
+            let x = -5.0 - 2.0 * (-(b as f64) / 20.0).exp();
+            assert!(m.observe(b, x).is_none(), "false alarm at batch {b}");
+        }
+        assert!(m.events().is_empty());
+    }
+
+    #[test]
+    fn warmup_gates_arming_and_alarm_rearms() {
+        let mut m = DriftMonitor::new(cusum_cfg());
+        assert!(!m.is_armed());
+        for b in 0..12 {
+            m.observe(b, if b % 2 == 0 { 0.1 } else { -0.1 });
+        }
+        assert!(m.is_armed());
+        // Force an alarm, then confirm full reset + cooldown.
+        let e = (12..40).find_map(|b| m.observe(b, -50.0));
+        let e = e.expect("alarm");
+        assert!(!m.is_armed(), "must re-enter warmup after alarm");
+        assert_eq!(m.statistic(), 0.0);
+        // The cooldown swallows the next warmup-many observations even
+        // though they sit far from the (discarded) old baseline.
+        for b in e.batch + 1..e.batch + 1 + 12 {
+            assert!(m.observe(b, -50.0 + (b % 2) as f64 * 0.1).is_none());
+        }
+    }
+
+    #[test]
+    fn kind_parsing_round_trips() {
+        for k in [DetectorKind::Off, DetectorKind::Cusum, DetectorKind::Window] {
+            assert_eq!(DetectorKind::parse(k.name()).unwrap(), k);
+        }
+        for r in [
+            ResponseKind::None,
+            ResponseKind::DecayReset,
+            ResponseKind::Widen,
+            ResponseKind::Grow,
+        ] {
+            assert_eq!(ResponseKind::parse(r.name()).unwrap(), r);
+        }
+        assert_eq!(ResponseKind::parse("decay-reset").unwrap(), ResponseKind::DecayReset);
+        assert!(DetectorKind::parse("bogus").is_err());
+        assert!(ResponseKind::parse("bogus").is_err());
+    }
+}

@@ -4,6 +4,7 @@
 
 use super::checkpoint::{self, TrainerCheckpoint};
 use super::config::{Algorithm, RunConfig, StoreKind};
+use super::drift::{DetectorKind, DriftMonitor, ResponseKind, ShiftEvent};
 use super::metrics::Metrics;
 use crate::baselines::{ogs, ovb, rvb, scvb, soi, OnlineLda};
 use crate::corpus::Corpus;
@@ -106,6 +107,88 @@ impl Driver {
     /// or implied by checkpointing (`--checkpoint-dir`).
     fn wal_armed(&self) -> bool {
         self.cfg.wal || self.cfg.checkpoint_dir.is_some()
+    }
+
+    /// Validate the drift knob combination before any training starts.
+    /// Detector-only runs (response `none`) are pure telemetry and work
+    /// everywhere; *responses* mutate the model between batches, which
+    /// the pipelined loop cannot tolerate (staged batches would compute
+    /// against pre-mutation snapshots), and `grow` additionally needs a
+    /// store that can re-stride K.
+    fn ensure_drift_supported(&self) -> Result<()> {
+        if self.cfg.drift_response == ResponseKind::None {
+            return Ok(());
+        }
+        if self.cfg.drift_detector == DetectorKind::Off {
+            anyhow::bail!(
+                "drift_response {} needs a detector: set drift_detector \
+                 to cusum or window",
+                self.cfg.drift_response.name()
+            );
+        }
+        if self.cfg.algorithm != Algorithm::Foem {
+            anyhow::bail!(
+                "drift responses are only supported by foem ({} has no \
+                 adaptive seam); use drift_response none for telemetry",
+                self.cfg.algorithm.name()
+            );
+        }
+        if self.cfg.pipeline_depth > 0 {
+            anyhow::bail!(
+                "drift responses mutate the model mid-stream and require \
+                 pipeline_depth 0 (detector-only telemetry is fine under \
+                 pipelining)"
+            );
+        }
+        if self.cfg.drift_response == ResponseKind::Grow
+            && self.cfg.store != StoreKind::InMemory
+        {
+            anyhow::bail!(
+                "drift_response grow requires the in-memory store: paged \
+                 column records pin K at creation"
+            );
+        }
+        Ok(())
+    }
+
+    /// Apply the configured response to a confirmed shift. Returns
+    /// `true` if the model was mutated (the caller then re-checkpoints
+    /// so the mutation is covered by the durability chain).
+    fn apply_drift_response<A: OnlineLda + ?Sized>(
+        &self,
+        algo: &mut A,
+        event: ShiftEvent,
+    ) -> Result<bool> {
+        let applied = match self.cfg.drift_response {
+            ResponseKind::None => return Ok(false),
+            ResponseKind::DecayReset => {
+                algo.reset_decay(super::drift::DECAY_FACTOR)
+            }
+            ResponseKind::Widen => algo.widen_exploration(),
+            ResponseKind::Grow => {
+                algo.grow_topics(self.cfg.drift_grow_topics)
+            }
+        };
+        // ensure_drift_supported pre-validated the combination; an
+        // algorithm declining here is a coordination bug, not a user
+        // error.
+        anyhow::ensure!(
+            applied,
+            "{} declined drift response {} at batch {}",
+            algo.name(),
+            self.cfg.drift_response.name(),
+            event.batch
+        );
+        if self.cfg.verbose {
+            println!(
+                "[drift] batch {}: shift {} (score {:.1}) -> response {}",
+                event.batch,
+                event.direction.name(),
+                event.score,
+                self.cfg.drift_response.name()
+            );
+        }
+        Ok(true)
     }
 
     /// Load + validate the checkpoint a `--resume` run continues from.
@@ -342,6 +425,7 @@ impl Driver {
         train: &Corpus,
         test: &Corpus,
     ) -> Result<TrainReport> {
+        self.ensure_drift_supported()?;
         if self.cfg.pipeline_depth > 0 {
             return self.train_pipelined(train, test);
         }
@@ -373,6 +457,10 @@ impl Driver {
         // `--fold-in-workers`), so evaluation cost scales with NNZ·S.
         let proto = self.cfg.eval_protocol();
         let serve_words = self.serve_words(train.n_words());
+        // Shift detection over the per-token training LL (off by
+        // default: DetectorKind::Off makes observe() a constant-time
+        // no-op and the monitor allocates nothing).
+        let mut monitor = DriftMonitor::new(self.cfg.monitor_config());
 
         let mut batch_no = 0usize;
         for pass in 0..self.cfg.passes.max(1) {
@@ -401,7 +489,26 @@ impl Driver {
                 } else {
                     None
                 };
-                metrics.record(batch_no, &report, eval);
+                let shift = monitor
+                    .observe(batch_no, report.train_ll / report.tokens.max(1.0));
+                if let Some(event) = shift {
+                    if let Some(reg) = &self.registry {
+                        reg.note_shift(event);
+                    }
+                    if self.apply_drift_response(algo.as_mut(), event)? {
+                        // A response mutated the model between batches:
+                        // fold it into the durability chain immediately
+                        // (flush + snapshot + WAL truncate) so a crash
+                        // never replays pre-response column state.
+                        if self.wal_armed() {
+                            self.do_checkpoint(
+                                algo.as_mut(),
+                                batch_no as u64,
+                            )?;
+                        }
+                    }
+                }
+                metrics.record(batch_no, &report, eval, shift);
                 if self.cfg.checkpoint_every > 0
                     && batch_no % self.cfg.checkpoint_every == 0
                 {
@@ -409,12 +516,15 @@ impl Driver {
                 }
                 if self.cfg.verbose {
                     println!(
-                        "[{}] batch {batch_no}: iters={} ppx={:.1} {:.2}s{}",
+                        "[{}] batch {batch_no}: iters={} ppx={:.1} {:.2}s{}{}",
                         algo.name(),
                         report.inner_iters,
                         report.train_perplexity(),
                         report.seconds,
                         eval.map(|p| format!(" eval={p:.1}"))
+                            .unwrap_or_default(),
+                        shift
+                            .map(|s| format!(" SHIFT {}", s.direction.name()))
                             .unwrap_or_default()
                     );
                 }
@@ -542,6 +652,10 @@ impl Driver {
         let proto = cfg.eval_protocol();
         let serve_words = self.serve_words(train.n_words());
         let registry = &self.registry;
+        // Detector-only under pipelining (responses are rejected by
+        // ensure_drift_supported): alarms flow to telemetry, never back
+        // into the model, so staged batches stay coherent.
+        let mut monitor = DriftMonitor::new(cfg.monitor_config());
         let passes = cfg.passes.max(1);
         // Resume: regenerate the deterministic multi-pass stream and
         // skip the batches the recovered state already covers; every
@@ -573,7 +687,12 @@ impl Driver {
                 } else {
                     None
                 };
-                metrics.record(gb, report, eval);
+                let shift =
+                    monitor.observe(gb, report.train_ll / report.tokens.max(1.0));
+                if let (Some(event), Some(reg)) = (shift, registry) {
+                    reg.note_shift(event);
+                }
+                metrics.record(gb, report, eval, shift);
                 if cfg.checkpoint_every > 0
                     && gb % cfg.checkpoint_every == 0
                 {

@@ -1,6 +1,7 @@
 //! Run metrics: per-minibatch records and aggregate throughput, consumed
 //! by the experiment harness (`expfig`) and printed by `foem train`.
 
+use crate::coordinator::drift::{ShiftDirection, ShiftEvent};
 use crate::em::MinibatchReport;
 
 /// One record per processed minibatch.
@@ -20,6 +21,9 @@ pub struct BatchRecord {
     pub resp_bytes: usize,
     /// Auxiliary per-minibatch scratch bytes.
     pub scratch_bytes: usize,
+    /// Shift alarm raised by the drift monitor after this minibatch
+    /// ([`crate::coordinator::drift`]), if any.
+    pub shift: Option<ShiftEvent>,
 }
 
 /// Aggregated run metrics.
@@ -44,6 +48,7 @@ impl Metrics {
         index: usize,
         report: &MinibatchReport,
         eval_perplexity: Option<f64>,
+        shift: Option<ShiftEvent>,
     ) {
         self.total_tokens += report.tokens;
         self.total_seconds += report.seconds;
@@ -60,6 +65,7 @@ impl Metrics {
             eval_perplexity,
             resp_bytes: report.resp_bytes,
             scratch_bytes: report.scratch_bytes,
+            shift,
         });
     }
 
@@ -81,6 +87,11 @@ impl Metrics {
             .collect()
     }
 
+    /// Every shift alarm recorded in the run, in batch order.
+    pub fn shift_events(&self) -> Vec<ShiftEvent> {
+        self.records.iter().filter_map(|r| r.shift).collect()
+    }
+
     /// Mean inner iterations per minibatch.
     pub fn mean_inner_iters(&self) -> f64 {
         if self.records.is_empty() {
@@ -91,14 +102,20 @@ impl Metrics {
     }
 
     /// CSV dump (header + rows) for external plotting.
+    ///
+    /// Columns are append-only: new telemetry lands at the END of the
+    /// row so consumers that index the header (or tolerate trailing
+    /// columns, like [`Metrics::parse_csv`]) keep working across
+    /// versions. `csv_round_trips_and_tolerates_extra_columns` pins
+    /// this contract.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "batch,inner_iters,seconds,tokens,train_ppx,elapsed,eval_ppx,\
-             resp_bytes,scratch_bytes\n",
+             resp_bytes,scratch_bytes,shift_dir,shift_score\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{:.6},{},{:.3},{:.6},{},{},{}\n",
+                "{},{},{:.6},{},{:.3},{:.6},{},{},{},{},{}\n",
                 r.index,
                 r.inner_iters,
                 r.seconds,
@@ -110,9 +127,95 @@ impl Metrics {
                     .unwrap_or_default(),
                 r.resp_bytes,
                 r.scratch_bytes,
+                r.shift.map(|s| s.direction.name()).unwrap_or_default(),
+                r.shift
+                    .map(|s| format!("{:.3}", s.score))
+                    .unwrap_or_default(),
             ));
         }
         out
+    }
+
+    /// Parse a [`Metrics::to_csv`] dump back into records.
+    ///
+    /// Header-indexed: columns are located by name, unknown columns are
+    /// ignored, and optional columns (eval_ppx, the shift pair) may be
+    /// absent entirely — so consumers built against an older or newer
+    /// column set both parse. Aggregates (totals, peaks) are rebuilt
+    /// from the rows.
+    pub fn parse_csv(text: &str) -> anyhow::Result<Metrics> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty CSV"))?;
+        let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+        let col = |name: &str| cols.iter().position(|&c| c == name);
+        let need = |name: &str| {
+            col(name).ok_or_else(|| anyhow::anyhow!("CSV missing column {name}"))
+        };
+        let c_batch = need("batch")?;
+        let c_inner = need("inner_iters")?;
+        let c_seconds = need("seconds")?;
+        let c_tokens = need("tokens")?;
+        let c_train = need("train_ppx")?;
+        let c_elapsed = need("elapsed")?;
+        let c_eval = col("eval_ppx");
+        let c_resp = col("resp_bytes");
+        let c_scratch = col("scratch_bytes");
+        let c_dir = col("shift_dir");
+        let c_score = col("shift_score");
+
+        let mut m = Metrics::new();
+        for (ln, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split(',').map(str::trim).collect();
+            let get = |i: usize| -> anyhow::Result<&str> {
+                f.get(i).copied().ok_or_else(|| {
+                    anyhow::anyhow!("row {}: missing column {i}", ln + 2)
+                })
+            };
+            // Optional columns may be absent (shorter rows from an older
+            // writer) or empty (this writer's None encoding).
+            let opt = |i: Option<usize>| -> Option<&str> {
+                i.and_then(|i| f.get(i)).copied().filter(|s| !s.is_empty())
+            };
+            let shift = match (opt(c_dir), opt(c_score)) {
+                (Some(d), Some(s)) => Some(ShiftEvent {
+                    batch: get(c_batch)?.parse()?,
+                    direction: match d {
+                        "up" => ShiftDirection::Up,
+                        "down" => ShiftDirection::Down,
+                        other => anyhow::bail!(
+                            "row {}: bad shift_dir {other:?}",
+                            ln + 2
+                        ),
+                    },
+                    score: s.parse()?,
+                }),
+                _ => None,
+            };
+            let rec = BatchRecord {
+                index: get(c_batch)?.parse()?,
+                inner_iters: get(c_inner)?.parse()?,
+                seconds: get(c_seconds)?.parse()?,
+                tokens: get(c_tokens)?.parse()?,
+                train_perplexity: get(c_train)?.parse()?,
+                elapsed: get(c_elapsed)?.parse()?,
+                eval_perplexity: opt(c_eval).map(str::parse).transpose()?,
+                resp_bytes: opt(c_resp).map(str::parse).transpose()?.unwrap_or(0),
+                scratch_bytes: opt(c_scratch)
+                    .map(str::parse)
+                    .transpose()?
+                    .unwrap_or(0),
+                shift,
+            };
+            m.total_tokens += rec.tokens;
+            m.total_seconds += rec.seconds;
+            m.peak_resp_bytes = m.peak_resp_bytes.max(rec.resp_bytes);
+            m.peak_scratch_bytes = m.peak_scratch_bytes.max(rec.scratch_bytes);
+            m.records.push(rec);
+        }
+        Ok(m)
     }
 }
 
@@ -134,8 +237,8 @@ mod tests {
     #[test]
     fn aggregates_accumulate() {
         let mut m = Metrics::new();
-        m.record(1, &report(0.5, 100.0), None);
-        m.record(2, &report(0.5, 300.0), Some(42.0));
+        m.record(1, &report(0.5, 100.0), None, None);
+        m.record(2, &report(0.5, 300.0), Some(42.0), None);
         assert_eq!(m.records.len(), 2);
         assert!((m.total_tokens - 400.0).abs() < 1e-9);
         assert!((m.tokens_per_second() - 400.0).abs() < 1e-6);
@@ -147,9 +250,9 @@ mod tests {
     #[test]
     fn eval_trace_collects_only_evals() {
         let mut m = Metrics::new();
-        m.record(1, &report(1.0, 10.0), None);
-        m.record(2, &report(1.0, 10.0), Some(99.0));
-        m.record(3, &report(1.0, 10.0), Some(90.0));
+        m.record(1, &report(1.0, 10.0), None, None);
+        m.record(2, &report(1.0, 10.0), Some(99.0), None);
+        m.record(3, &report(1.0, 10.0), Some(90.0), None);
         let tr = m.eval_trace();
         assert_eq!(tr.len(), 2);
         assert!((tr[0].0 - 2.0).abs() < 1e-9);
@@ -159,10 +262,76 @@ mod tests {
     #[test]
     fn csv_has_header_and_rows() {
         let mut m = Metrics::new();
-        m.record(1, &report(1.0, 10.0), Some(5.0));
+        m.record(1, &report(1.0, 10.0), Some(5.0), None);
         let csv = m.to_csv();
         assert!(csv.starts_with("batch,"));
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.contains("5.000"));
+    }
+
+    #[test]
+    fn csv_rows_match_header_column_count() {
+        let mut m = Metrics::new();
+        m.record(1, &report(1.0, 10.0), None, None);
+        let shift = ShiftEvent {
+            batch: 2,
+            direction: ShiftDirection::Down,
+            score: 9.25,
+        };
+        m.record(2, &report(1.0, 10.0), Some(5.0), Some(shift));
+        let csv = m.to_csv();
+        let n_cols = csv.lines().next().unwrap().split(',').count();
+        for row in csv.lines().skip(1) {
+            assert_eq!(row.split(',').count(), n_cols, "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn csv_round_trips_and_tolerates_extra_columns() {
+        let mut m = Metrics::new();
+        m.record(1, &report(1.0, 10.0), None, None);
+        let shift = ShiftEvent {
+            batch: 2,
+            direction: ShiftDirection::Down,
+            score: 9.25,
+        };
+        m.record(2, &report(2.0, 20.0), Some(5.0), Some(shift));
+        let parsed = Metrics::parse_csv(&m.to_csv()).unwrap();
+        assert_eq!(parsed.records.len(), 2);
+        assert_eq!(parsed.records[0].index, 1);
+        assert!(parsed.records[0].shift.is_none());
+        let s = parsed.records[1].shift.expect("shift survives round trip");
+        assert_eq!(s.direction, ShiftDirection::Down);
+        assert!((s.score - 9.25).abs() < 1e-9);
+        assert!((parsed.total_tokens - 30.0).abs() < 1e-9);
+
+        // A FUTURE writer appending more columns must not break this
+        // parser (the append-only contract).
+        let extended: String = m
+            .to_csv()
+            .lines()
+            .enumerate()
+            .map(|(i, l)| {
+                if i == 0 {
+                    format!("{l},future_metric\n")
+                } else {
+                    format!("{l},1.5\n")
+                }
+            })
+            .collect();
+        let parsed = Metrics::parse_csv(&extended).unwrap();
+        assert_eq!(parsed.records.len(), 2);
+        assert!(parsed.records[1].shift.is_some());
+
+        // And a PAST writer without the shift/byte columns still parses
+        // (missing optional columns read as None/0).
+        let legacy = "batch,inner_iters,seconds,tokens,train_ppx,elapsed,eval_ppx\n\
+                      1,3,1.000000,10,2.718,1.000000,\n\
+                      2,3,1.000000,10,2.718,2.000000,5.000\n";
+        let parsed = Metrics::parse_csv(legacy).unwrap();
+        assert_eq!(parsed.records.len(), 2);
+        assert!(parsed.records[0].shift.is_none());
+        assert_eq!(parsed.records[1].eval_perplexity, Some(5.0));
+        assert_eq!(parsed.records[1].resp_bytes, 0);
     }
 }

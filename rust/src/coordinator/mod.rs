@@ -8,5 +8,6 @@
 
 pub mod checkpoint;
 pub mod config;
+pub mod drift;
 pub mod driver;
 pub mod metrics;

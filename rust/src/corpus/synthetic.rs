@@ -15,6 +15,7 @@
 //! vocabulary, NNZ density) scaled to this testbed.
 
 use super::{Corpus, DocWordMatrix};
+use crate::stream::Minibatch;
 use crate::util::Rng;
 
 /// Parameters of the generative sampler.
@@ -207,6 +208,290 @@ pub fn generate_with_truth(cfg: &SyntheticConfig, seed: u64) -> (Corpus, GroundT
     (Corpus::new(cfg.name.clone(), docs), GroundTruth { phi })
 }
 
+// ---------------------------------------------------------------------
+// Non-stationary streams: the ground-truth drift generator.
+//
+// A `DriftingCorpus` is an endless-stream stand-in whose generative
+// process *changes* at known batch indices. Every change is logged in a
+// `DriftTruth`, so tests can assert detection latency and false-alarm
+// rates against exact change points instead of eyeballing loss curves
+// (ISSUE 10; detector in coordinator::drift, harness in
+// tests/drift_equivalence.rs).
+// ---------------------------------------------------------------------
+
+/// One kind of regime change the generator can inject.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DriftKind {
+    /// Redraw a deterministic prefix of `ceil(fraction * K)` topic-word
+    /// distributions from a fresh Dirichlet — a piecewise mixture
+    /// shift. `fraction = 1.0` replaces every topic (the brutal case
+    /// the detection-latency tests use).
+    MixtureShift { fraction: f32 },
+    /// Append one freshly drawn topic (K grows by 1).
+    TopicBirth,
+    /// Remove one topic, chosen uniformly at random (K shrinks by 1).
+    TopicDeath,
+    /// Extend the active vocabulary by `new_words` columns; every topic
+    /// row gets fresh Gamma(beta_gen) mass there and renormalizes.
+    VocabGrowth { new_words: usize },
+}
+
+/// A scheduled change: `kind` is applied just before batch `batch` is
+/// sampled.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftPoint {
+    pub batch: usize,
+    pub kind: DriftKind,
+}
+
+/// The ground-truth change-point log of one generated stream.
+#[derive(Debug, Clone, Default)]
+pub struct DriftTruth {
+    /// Every injected change, sorted by batch (stable for equal
+    /// batches, in application order).
+    pub points: Vec<DriftPoint>,
+    /// Active vocabulary size over time as `(batch, n_words)` steps:
+    /// entry 0 is `(0, base_words)` and one entry is appended per
+    /// `VocabGrowth` event. Both coordinates are non-decreasing.
+    pub vocab_sizes: Vec<(usize, usize)>,
+}
+
+impl DriftTruth {
+    /// Batch indices of every change point, sorted, deduplicated.
+    pub fn shift_batches(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.points.iter().map(|p| p.batch).collect();
+        b.dedup();
+        b
+    }
+
+    /// Active vocabulary just before `batch` is sampled.
+    pub fn vocab_at(&self, batch: usize) -> usize {
+        self.vocab_sizes
+            .iter()
+            .rev()
+            .find(|&&(b, _)| b <= batch)
+            .map(|&(_, w)| w)
+            .unwrap_or(0)
+    }
+}
+
+/// Parameters of a drifting stream.
+#[derive(Debug, Clone)]
+pub struct DriftConfig {
+    /// Regime-0 generative parameters (topics, vocab, doc shape).
+    pub base: SyntheticConfig,
+    /// Documents per emitted minibatch.
+    pub docs_per_batch: usize,
+    /// Total batches the iterator yields.
+    pub n_batches: usize,
+    /// Scheduled changes; must be sorted by batch and in-range.
+    pub events: Vec<DriftPoint>,
+    /// Fixed stream width (matrix `n_words` of every batch). Must cover
+    /// `base.n_words` plus all scheduled vocabulary growth so batch
+    /// shapes stay constant across regime changes.
+    pub max_words: usize,
+}
+
+impl DriftConfig {
+    /// A control stream with no change points — same sampler, same
+    /// seed discipline, zero drift. The detector must stay silent on
+    /// this (asserted in tests/drift_equivalence.rs).
+    pub fn stationary(base: SyntheticConfig, docs_per_batch: usize, n_batches: usize) -> Self {
+        let max_words = base.n_words;
+        Self { base, docs_per_batch, n_batches, events: Vec::new(), max_words }
+    }
+}
+
+/// Seeded, deterministic generator of a non-stationary minibatch
+/// stream. Implements `Iterator<Item = Minibatch>`; the ground-truth
+/// change log is available via [`DriftingCorpus::truth`] up front.
+pub struct DriftingCorpus {
+    cfg: DriftConfig,
+    rng: Rng,
+    /// Current topic-word rows at `active_words` width.
+    phi: Vec<Vec<f32>>,
+    cum_phi: Vec<Vec<f32>>,
+    active_words: usize,
+    next_batch: usize,
+    next_event: usize,
+    truth: DriftTruth,
+}
+
+impl DriftingCorpus {
+    /// Build the stream and precompute its [`DriftTruth`]. Panics on an
+    /// inconsistent schedule (unsorted events, out-of-range batches,
+    /// growth past `max_words`, death below one topic) — these are test
+    /// harness bugs, not runtime conditions.
+    pub fn new(cfg: DriftConfig, seed: u64) -> Self {
+        assert!(cfg.docs_per_batch > 0 && cfg.n_batches > 0);
+        assert!(cfg.max_words >= cfg.base.n_words, "max_words below base vocabulary");
+        assert!(
+            cfg.events.windows(2).all(|w| w[0].batch <= w[1].batch),
+            "drift events must be sorted by batch"
+        );
+        // Precompute the truth log (and validate the schedule) without
+        // touching the sampling RNG.
+        let mut truth = DriftTruth {
+            points: cfg.events.clone(),
+            vocab_sizes: vec![(0, cfg.base.n_words)],
+        };
+        let mut words = cfg.base.n_words;
+        let mut topics = cfg.base.n_topics;
+        for p in &cfg.events {
+            assert!(p.batch < cfg.n_batches, "drift event past end of stream");
+            match p.kind {
+                DriftKind::MixtureShift { fraction } => {
+                    assert!(fraction > 0.0 && fraction <= 1.0);
+                }
+                DriftKind::TopicBirth => topics += 1,
+                DriftKind::TopicDeath => {
+                    assert!(topics > 1, "topic death would leave zero topics");
+                    topics -= 1;
+                }
+                DriftKind::VocabGrowth { new_words } => {
+                    words += new_words;
+                    assert!(words <= cfg.max_words, "vocab growth exceeds max_words");
+                    truth.vocab_sizes.push((p.batch, words));
+                }
+            }
+        }
+
+        let mut rng = Rng::new(seed);
+        let phi: Vec<Vec<f32>> = (0..cfg.base.n_topics)
+            .map(|_| draw_topic(&mut rng, cfg.base.beta_gen, cfg.base.n_words))
+            .collect();
+        let cum_phi = phi.iter().map(|row| cumulative(row)).collect();
+        let active_words = cfg.base.n_words;
+        Self { cfg, rng, phi, cum_phi, active_words, next_batch: 0, next_event: 0, truth }
+    }
+
+    /// The precomputed change-point log (valid before iteration).
+    pub fn truth(&self) -> &DriftTruth {
+        &self.truth
+    }
+
+    /// Current number of generating topics.
+    pub fn n_topics(&self) -> usize {
+        self.phi.len()
+    }
+
+    /// Apply every event scheduled for `batch`, then rebuild CDFs.
+    fn apply_due_events(&mut self, batch: usize) {
+        let mut changed = false;
+        while self.next_event < self.cfg.events.len()
+            && self.cfg.events[self.next_event].batch == batch
+        {
+            let kind = self.cfg.events[self.next_event].kind;
+            self.next_event += 1;
+            changed = true;
+            match kind {
+                DriftKind::MixtureShift { fraction } => {
+                    let m = ((fraction as f64) * self.phi.len() as f64).ceil() as usize;
+                    for k in 0..m.clamp(1, self.phi.len()) {
+                        self.phi[k] =
+                            draw_topic(&mut self.rng, self.cfg.base.beta_gen, self.active_words);
+                    }
+                }
+                DriftKind::TopicBirth => {
+                    let row =
+                        draw_topic(&mut self.rng, self.cfg.base.beta_gen, self.active_words);
+                    self.phi.push(row);
+                }
+                DriftKind::TopicDeath => {
+                    let victim = self.rng.below(self.phi.len());
+                    self.phi.remove(victim);
+                }
+                DriftKind::VocabGrowth { new_words } => {
+                    self.active_words += new_words;
+                    for row in &mut self.phi {
+                        let mut total = 1.0f64;
+                        for _ in 0..new_words {
+                            let g = self.rng.gamma(self.cfg.base.beta_gen) as f32;
+                            total += g as f64;
+                            row.push(g);
+                        }
+                        let inv = (1.0 / total) as f32;
+                        for p in row.iter_mut() {
+                            *p *= inv;
+                        }
+                    }
+                }
+            }
+        }
+        if changed {
+            self.cum_phi = self.phi.iter().map(|row| cumulative(row)).collect();
+        }
+    }
+
+    /// Sample the next minibatch (mirrors [`generate_with_truth`]'s
+    /// document loop, against the *current* regime).
+    fn sample_batch(&mut self) -> Minibatch {
+        let batch = self.next_batch;
+        self.apply_due_events(batch);
+        let n_topics = self.phi.len();
+        let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(self.cfg.docs_per_batch);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..self.cfg.docs_per_batch {
+            let theta: Vec<f64> = self.rng.dirichlet_sym(self.cfg.base.alpha_gen, n_topics);
+            let len = self.rng.poisson(self.cfg.base.mean_doc_len).max(2);
+            counts.clear();
+            for _ in 0..len {
+                let mut r = self.rng.next_f64();
+                let mut z = n_topics - 1;
+                for (k, &t) in theta.iter().enumerate() {
+                    r -= t;
+                    if r <= 0.0 {
+                        z = k;
+                        break;
+                    }
+                }
+                let target = self.rng.next_f32();
+                let cdf = &self.cum_phi[z];
+                let w = match cdf.binary_search_by(|p| {
+                    p.partial_cmp(&target).unwrap_or(std::cmp::Ordering::Equal)
+                }) {
+                    Ok(i) | Err(i) => i.min(self.active_words - 1),
+                };
+                *counts.entry(w as u32).or_insert(0f32) += 1.0;
+            }
+            let mut row: Vec<(u32, f32)> = counts.drain().collect();
+            row.sort_unstable_by_key(|&(w, _)| w);
+            rows.push(row);
+        }
+        let refs: Vec<&[(u32, f32)]> = rows.iter().map(|r| r.as_slice()).collect();
+        // Fixed max_words width keeps batch shapes stable across
+        // vocabulary growth (consumers size buffers once).
+        let docs = DocWordMatrix::from_rows(self.cfg.max_words, &refs);
+        self.next_batch += 1;
+        Minibatch::new(batch, docs)
+    }
+}
+
+impl Iterator for DriftingCorpus {
+    type Item = Minibatch;
+
+    fn next(&mut self) -> Option<Minibatch> {
+        if self.next_batch >= self.cfg.n_batches {
+            return None;
+        }
+        Some(self.sample_batch())
+    }
+}
+
+fn draw_topic(rng: &mut Rng, beta_gen: f64, n_words: usize) -> Vec<f32> {
+    rng.dirichlet_sym(beta_gen, n_words).into_iter().map(|x| x as f32).collect()
+}
+
+fn cumulative(row: &[f32]) -> Vec<f32> {
+    let mut acc = 0.0f32;
+    row.iter()
+        .map(|&p| {
+            acc += p;
+            acc
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -265,5 +550,128 @@ mod tests {
             .word_ids
             .iter()
             .all(|&w| (w as usize) < cfg.n_words));
+    }
+
+    fn drift_cfg(events: Vec<DriftPoint>, max_words: usize) -> DriftConfig {
+        DriftConfig {
+            base: SyntheticConfig::small(),
+            docs_per_batch: 16,
+            n_batches: 12,
+            events,
+            max_words,
+        }
+    }
+
+    #[test]
+    fn drifting_corpus_is_deterministic() {
+        let events = vec![
+            DriftPoint { batch: 3, kind: DriftKind::MixtureShift { fraction: 1.0 } },
+            DriftPoint { batch: 6, kind: DriftKind::TopicBirth },
+            DriftPoint { batch: 9, kind: DriftKind::VocabGrowth { new_words: 50 } },
+        ];
+        let a: Vec<_> = DriftingCorpus::new(drift_cfg(events.clone(), 550), 5).collect();
+        let b: Vec<_> = DriftingCorpus::new(drift_cfg(events, 550), 5).collect();
+        assert_eq!(a.len(), 12);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.index, y.index);
+            assert_eq!(x.docs.word_ids, y.docs.word_ids);
+            assert_eq!(x.docs.counts, y.docs.counts);
+        }
+    }
+
+    #[test]
+    fn drifting_corpus_stationary_matches_no_event_schedule() {
+        // An empty schedule and the stationary() helper draw the same
+        // stream for the same seed.
+        let a: Vec<_> =
+            DriftingCorpus::new(DriftConfig::stationary(SyntheticConfig::small(), 16, 12), 5)
+                .collect();
+        let b: Vec<_> = DriftingCorpus::new(drift_cfg(Vec::new(), 500), 5).collect();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.docs.word_ids, y.docs.word_ids);
+            assert_eq!(x.docs.counts, y.docs.counts);
+        }
+    }
+
+    #[test]
+    fn drift_changes_stream_after_change_point_only() {
+        let shifted = vec![DriftPoint { batch: 4, kind: DriftKind::MixtureShift { fraction: 1.0 } }];
+        let a: Vec<_> = DriftingCorpus::new(drift_cfg(Vec::new(), 500), 9).collect();
+        let b: Vec<_> = DriftingCorpus::new(drift_cfg(shifted, 500), 9).collect();
+        for i in 0..4 {
+            assert_eq!(a[i].docs.word_ids, b[i].docs.word_ids, "pre-shift batch {i} diverged");
+        }
+        assert_ne!(a[4].docs.word_ids, b[4].docs.word_ids, "shift had no effect");
+    }
+
+    #[test]
+    fn drift_truth_bookkeeping() {
+        let events = vec![
+            DriftPoint { batch: 2, kind: DriftKind::TopicBirth },
+            DriftPoint { batch: 4, kind: DriftKind::VocabGrowth { new_words: 30 } },
+            DriftPoint { batch: 5, kind: DriftKind::TopicDeath },
+            DriftPoint { batch: 8, kind: DriftKind::VocabGrowth { new_words: 20 } },
+        ];
+        let c = DriftingCorpus::new(drift_cfg(events, 600), 1);
+        let t = c.truth();
+        // Sorted change points, deduped batch list.
+        assert!(t.points.windows(2).all(|w| w[0].batch <= w[1].batch));
+        assert_eq!(t.shift_batches(), vec![2, 4, 5, 8]);
+        // Vocabulary growth is monotone in batch and size.
+        assert_eq!(t.vocab_sizes, vec![(0, 500), (4, 530), (8, 550)]);
+        assert!(t.vocab_sizes.windows(2).all(|w| w[0].0 <= w[1].0 && w[0].1 <= w[1].1));
+        assert_eq!(t.vocab_at(0), 500);
+        assert_eq!(t.vocab_at(4), 530);
+        assert_eq!(t.vocab_at(11), 550);
+    }
+
+    #[test]
+    fn drift_birth_and_death_track_topic_count() {
+        let events = vec![
+            DriftPoint { batch: 1, kind: DriftKind::TopicBirth },
+            DriftPoint { batch: 2, kind: DriftKind::TopicBirth },
+            DriftPoint { batch: 3, kind: DriftKind::TopicDeath },
+        ];
+        let mut c = DriftingCorpus::new(drift_cfg(events, 500), 3);
+        assert_eq!(c.n_topics(), 10);
+        c.next();
+        assert_eq!(c.n_topics(), 10);
+        c.next();
+        assert_eq!(c.n_topics(), 11);
+        c.next();
+        assert_eq!(c.n_topics(), 12);
+        c.next();
+        assert_eq!(c.n_topics(), 11);
+    }
+
+    #[test]
+    fn drift_vocab_growth_emits_new_words_at_fixed_width() {
+        let events = vec![DriftPoint { batch: 2, kind: DriftKind::VocabGrowth { new_words: 400 } }];
+        let batches: Vec<_> = DriftingCorpus::new(drift_cfg(events, 900), 7).collect();
+        // Every batch reports the fixed stream width...
+        assert!(batches.iter().all(|m| m.docs.n_words == 900));
+        // ...but words beyond the base vocabulary appear only after the
+        // growth event.
+        let max_word = |m: &Minibatch| m.docs.word_ids.iter().copied().max().unwrap();
+        assert!(batches[..2].iter().all(|m| (max_word(m) as usize) < 500));
+        let post_max = batches[2..].iter().map(|m| max_word(m)).max().unwrap();
+        assert!((post_max as usize) >= 500, "no new-vocabulary tokens sampled");
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted")]
+    fn drift_unsorted_schedule_panics() {
+        let events = vec![
+            DriftPoint { batch: 5, kind: DriftKind::TopicBirth },
+            DriftPoint { batch: 2, kind: DriftKind::TopicBirth },
+        ];
+        DriftingCorpus::new(drift_cfg(events, 500), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_words")]
+    fn drift_vocab_overflow_panics() {
+        let events = vec![DriftPoint { batch: 1, kind: DriftKind::VocabGrowth { new_words: 10 } }];
+        DriftingCorpus::new(drift_cfg(events, 505), 1);
     }
 }

@@ -791,6 +791,70 @@ impl<S: PhiColumnStore> Foem<S> {
         }
         Ok(())
     }
+
+    // --- Drift responses (coordinator::drift, DESIGN.md §15) --------
+
+    /// Discount the accumulated sufficient statistics: `phi_hat *= γ`,
+    /// `phisum *= γ` for `0 < γ < 1`. Because the Eq. 33 estimator is a
+    /// running sum with the implicit step size `rho_s = 1/s`, scaling
+    /// all statistics by γ is exactly restarting that schedule at
+    /// `s_eff = γ·s` — the posterior flattens toward the prior and new
+    /// (post-shift) data re-sharpens it at the weight it had early in
+    /// training. Residuals are left untouched: they encode *relative*
+    /// scheduling priority, which a uniform rescale would not change.
+    pub fn reset_decay(&mut self, factor: f32) -> bool {
+        assert!(factor > 0.0 && factor < 1.0, "decay factor must be in (0, 1)");
+        let n_words = self.store.n_words();
+        for w in 0..n_words {
+            self.store.with_column(w, |col| {
+                for x in col.iter_mut() {
+                    *x *= factor;
+                }
+            });
+        }
+        for s in self.phisum.iter_mut() {
+            *s *= factor;
+        }
+        true
+    }
+
+    /// Permanently widen the dynamic scheduler: double the scheduled
+    /// topic subset (capped at K) and double the epsilon-greedy
+    /// exploration slots. After a shift the residual matrix still
+    /// reflects the *old* regime, so topics the old schedule starved
+    /// need extra discovery bandwidth to be rediscovered.
+    pub fn widen_exploration(&mut self) -> bool {
+        let k = self.params.n_topics;
+        self.cfg.topic_subset = match self.cfg.topic_subset {
+            TopicSubset::All => TopicSubset::All,
+            TopicSubset::Fraction(f) => TopicSubset::Fraction((f * 2.0).min(1.0)),
+            TopicSubset::Fixed(n) => TopicSubset::Fixed((n.max(1) * 2).min(k)),
+        };
+        self.cfg.explore_slots = (self.cfg.explore_slots.max(1) * 2).min(k);
+        true
+    }
+
+    /// Grow the model by `extra` fresh zero-mass topics through the
+    /// store seam. Declines (returns `false`, model untouched) when the
+    /// backend pins K — paged/sharded column records fix K at creation,
+    /// so this is an in-memory-store capability.
+    pub fn grow_topics(&mut self, extra: usize) -> bool {
+        if extra == 0 {
+            return true;
+        }
+        let new_k = self.params.n_topics + extra;
+        if !self.store.grow_topics(new_k) {
+            return false;
+        }
+        // Same backend type: if phi grew, the residual store must too.
+        assert!(
+            self.res_store.grow_topics(new_k),
+            "phi store grew to K={new_k} but residual store declined"
+        );
+        self.params.n_topics = new_k;
+        self.phisum.resize(new_k, 0.0);
+        true
+    }
 }
 
 /// Resident trainer state captured by coordinator checkpoints and (per

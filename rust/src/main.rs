@@ -61,6 +61,23 @@ fn usage() -> ! {
          \x20                            batches, then resumes the stream —\n\
          \x20                            bit-identical to the uninterrupted run)\n\
          \x20       --wal true  (arm the write-ahead log without checkpoints)\n\
+         \x20       --drift-detector <off|cusum|window>  (shift monitor over\n\
+         \x20                            per-batch train log-likelihood; off =\n\
+         \x20                            default, bit-identical; cusum = two-sided\n\
+         \x20                            standardized CUSUM; window = plain z-test)\n\
+         \x20       --drift-response <none|decay-reset|widen|grow>  (what an\n\
+         \x20                            alarm triggers: none = telemetry only,\n\
+         \x20                            decay-reset = discount sufficient stats,\n\
+         \x20                            widen = full-K fold-in exploration, grow =\n\
+         \x20                            add --drift-grow-topics new topics; foem +\n\
+         \x20                            pipeline-depth 0 only, grow needs the\n\
+         \x20                            in-memory store)\n\
+         \x20       --drift-threshold H --drift-slack K  (CUSUM alarm level and\n\
+         \x20                            per-batch slack; defaults 8.0 / 2.0 —\n\
+         \x20                            see rust/DESIGN.md \u{a7}15 for the tuning\n\
+         \x20                            argument)\n\
+         \x20       --drift-window N --drift-warmup N  (rolling baseline size\n\
+         \x20                            and post-reset cooldown; defaults 16 / 12)\n\
          \x20       --serve-* keys  (serving layer policy for embedders that\n\
          \x20                        attach a serve::ModelRegistry; `foem train`\n\
          \x20                        itself starts no server — see the serve\n\

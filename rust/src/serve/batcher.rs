@@ -116,6 +116,12 @@ pub struct ServeReport {
     pub p50_latency_us: f64,
     /// 99th-percentile submit-to-completion latency, microseconds.
     pub p99_latency_us: f64,
+    /// Distribution shifts the trainer's drift monitor has flagged on
+    /// this registry ([`crate::coordinator::drift`]); 0 when the
+    /// detector is off.
+    pub shifts_detected: u64,
+    /// Training batch index of the most recent flagged shift.
+    pub last_shift_batch: Option<u64>,
 }
 
 /// Cap on retained latency samples: a long-running server keeps a
@@ -202,6 +208,10 @@ impl ServeMetrics {
             docs_per_sec: if secs > 0.0 { g.docs as f64 / secs } else { 0.0 },
             p50_latency_us: pct(0.5),
             p99_latency_us: pct(0.99),
+            // Filled in by Server::report from the registry's drift
+            // telemetry; the raw metrics layer never sees shifts.
+            shifts_detected: 0,
+            last_shift_batch: None,
         }
     }
 }
@@ -213,6 +223,7 @@ pub struct Server {
     tx: Option<SyncSender<Job>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<ServeMetrics>,
+    registry: Arc<ModelRegistry>,
     queue_docs: usize,
 }
 
@@ -224,14 +235,18 @@ impl Server {
         let (tx, rx) = mpsc::sync_channel::<Job>(queue_docs);
         let metrics = Arc::new(ServeMetrics::start());
         let worker_metrics = Arc::clone(&metrics);
+        let loop_registry = Arc::clone(&registry);
         let dispatcher = std::thread::Builder::new()
             .name("foem-serve-dispatch".into())
-            .spawn(move || dispatch_loop(rx, registry, cfg, worker_metrics))
+            .spawn(move || {
+                dispatch_loop(rx, loop_registry, cfg, worker_metrics)
+            })
             .expect("spawn serve dispatcher");
         Self {
             tx: Some(tx),
             dispatcher: Some(dispatcher),
             metrics,
+            registry,
             queue_docs,
         }
     }
@@ -303,16 +318,21 @@ impl Server {
         Ok(PendingResponse { rx })
     }
 
-    /// Current serving telemetry.
+    /// Current serving telemetry, including the registry's drift
+    /// telemetry (shifts the trainer's monitor has flagged so far).
     pub fn report(&self) -> ServeReport {
-        self.metrics.report()
+        let mut report = self.metrics.report();
+        let (shifts, last) = self.registry.shift_telemetry();
+        report.shifts_detected = shifts;
+        report.last_shift_batch = last.map(|e| e.batch as u64);
+        report
     }
 
     /// Stop accepting requests, drain the queue, join the dispatcher and
     /// return the final telemetry.
     pub fn shutdown(mut self) -> ServeReport {
         self.stop();
-        self.metrics.report()
+        self.report()
     }
 
     fn stop(&mut self) {
@@ -534,6 +554,31 @@ mod tests {
         let report = server2.shutdown();
         assert_eq!(report.failed, 1);
         assert_eq!(report.docs, 0);
+    }
+
+    #[test]
+    fn report_surfaces_registry_shift_telemetry() {
+        use crate::coordinator::drift::{ShiftDirection, ShiftEvent};
+        let (reg, _) = registry_with_model(4, 8);
+        let server = Server::start(Arc::clone(&reg), ServeConfig::default());
+        let clean = server.report();
+        assert_eq!(clean.shifts_detected, 0);
+        assert_eq!(clean.last_shift_batch, None);
+        // The trainer flags shifts on the shared registry; the serve
+        // report picks them up without any request traffic.
+        reg.note_shift(ShiftEvent {
+            batch: 12,
+            direction: ShiftDirection::Down,
+            score: 9.0,
+        });
+        reg.note_shift(ShiftEvent {
+            batch: 30,
+            direction: ShiftDirection::Up,
+            score: 8.2,
+        });
+        let report = server.shutdown();
+        assert_eq!(report.shifts_detected, 2);
+        assert_eq!(report.last_shift_batch, Some(30));
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! reader and is freed the moment that reader drops — no epoch GC, no
 //! generation list to compact.
 
+use crate::coordinator::drift::ShiftEvent;
 use crate::em::{EvalPhiView, PhiAccess};
 use crate::LdaParams;
 use std::sync::{Arc, Mutex, Weak};
@@ -82,6 +83,11 @@ struct Inner {
     /// Weak handles to every epoch ever published and not yet dropped —
     /// observability only (never keeps an epoch alive).
     history: Vec<(u64, Weak<ModelSnapshot>)>,
+    /// Drift telemetry the trainer pushes alongside publishes: how many
+    /// distribution shifts its monitor has flagged, and the most recent
+    /// one ([`crate::coordinator::drift::DriftMonitor`]).
+    shifts_detected: u64,
+    last_shift: Option<ShiftEvent>,
 }
 
 /// The publish/subscribe point between one trainer and any number of
@@ -177,6 +183,23 @@ impl ModelRegistry {
     pub fn restore_epoch_floor(&self, epoch: u64) {
         let mut g = self.inner.lock().expect("registry lock");
         g.last_epoch = g.last_epoch.max(epoch);
+    }
+
+    /// Record one detected distribution shift from the trainer's drift
+    /// monitor. Readers pick it up via [`Self::shift_telemetry`]; the
+    /// serve report surfaces it as `shifts_detected` /
+    /// `last_shift_batch` ([`crate::serve::ServeReport`]).
+    pub fn note_shift(&self, event: ShiftEvent) {
+        let mut g = self.inner.lock().expect("registry lock");
+        g.shifts_detected += 1;
+        g.last_shift = Some(event);
+    }
+
+    /// Drift telemetry: (total shifts noted, most recent event). Both
+    /// are zero/`None` until the trainer's monitor first fires.
+    pub fn shift_telemetry(&self) -> (u64, Option<ShiftEvent>) {
+        let g = self.inner.lock().expect("registry lock");
+        (g.shifts_detected, g.last_shift)
     }
 
     /// Epochs still alive (current + any older epoch a reader still
@@ -294,6 +317,28 @@ mod tests {
         reg.publish(view(2, 3, 9.0), p);
         assert_eq!(a.word(2), &[5.0, 5.0]);
         assert_eq!(a.phisum(), &[15.0, 15.0]);
+    }
+
+    #[test]
+    fn shift_telemetry_counts_and_keeps_latest() {
+        use crate::coordinator::drift::ShiftDirection;
+        let reg = ModelRegistry::new();
+        assert_eq!(reg.shift_telemetry(), (0, None));
+        let a = ShiftEvent {
+            batch: 7,
+            direction: ShiftDirection::Down,
+            score: 9.5,
+        };
+        let b = ShiftEvent {
+            batch: 21,
+            direction: ShiftDirection::Up,
+            score: 8.1,
+        };
+        reg.note_shift(a);
+        reg.note_shift(b);
+        let (n, last) = reg.shift_telemetry();
+        assert_eq!(n, 2);
+        assert_eq!(last, Some(b));
     }
 
     #[test]

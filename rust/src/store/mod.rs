@@ -306,6 +306,17 @@ pub trait PhiColumnStore {
         None
     }
 
+    /// Grow the topic dimension to `new_k` (K ← new_k), zero-filling
+    /// the fresh rows of every column. Returns `false` if the backend
+    /// cannot change K after creation — paged and sharded stores pin K
+    /// in their on-disk column records, so only fully resident stores
+    /// support this (the drift responder's `grow` action,
+    /// coordinator::drift). Implementations must grow atomically or
+    /// not at all.
+    fn grow_topics(&mut self, _new_k: usize) -> bool {
+        false
+    }
+
     /// Export the dense matrix (evaluation / checkpointing).
     fn export_dense(&mut self) -> crate::em::PhiStats {
         let k = self.k();
@@ -351,6 +362,24 @@ impl PhiColumnStore for InMemoryPhi {
         if n_words * self.k > self.data.len() {
             self.data.resize(n_words * self.k, 0.0);
         }
+    }
+
+    fn grow_topics(&mut self, new_k: usize) -> bool {
+        assert!(new_k >= self.k, "grow_topics cannot shrink K");
+        if new_k == self.k {
+            return true;
+        }
+        // Re-stride: each word's column keeps its K old entries and
+        // gains zeros for the fresh topics.
+        let n_words = self.n_words();
+        let mut data = vec![0.0f32; new_k * n_words];
+        for w in 0..n_words {
+            data[w * new_k..w * new_k + self.k]
+                .copy_from_slice(&self.data[w * self.k..(w + 1) * self.k]);
+        }
+        self.data = data;
+        self.k = new_k;
+        true
     }
 
     fn with_column<R>(&mut self, w: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
@@ -436,6 +465,20 @@ mod tests {
             "snapshot must not write"
         );
         assert!(s.io_stats().col_reads >= 3);
+    }
+
+    #[test]
+    fn grow_topics_preserves_columns_and_zero_fills() {
+        let mut s = InMemoryPhi::zeros(2, 3);
+        s.with_column(0, |c| c.copy_from_slice(&[1.0, 2.0]));
+        s.with_column(2, |c| c.copy_from_slice(&[3.0, 4.0]));
+        assert!(s.grow_topics(2), "no-op grow must succeed");
+        assert!(s.grow_topics(4));
+        assert_eq!(s.k(), 4);
+        assert_eq!(s.n_words(), 3);
+        assert_eq!(s.read_column(0), vec![1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(s.read_column(1), vec![0.0; 4]);
+        assert_eq!(s.read_column(2), vec![3.0, 4.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -478,3 +478,151 @@ fn prop_stream_framing_lossless() {
         assert!((mass - c.n_tokens()).abs() < 1e-6);
     }
 }
+
+use foem::coordinator::drift::{
+    DetectorKind, DriftMonitor, MonitorConfig, ShiftEvent,
+};
+
+/// Default tuning with the CUSUM armed — MonitorConfig::default() keeps
+/// the detector off (the bit-identity default), which would make every
+/// alarm list trivially empty.
+fn cusum_cfg() -> MonitorConfig {
+    MonitorConfig { detector: DetectorKind::Cusum, ..Default::default() }
+}
+
+/// Feed `series` to a fresh CUSUM monitor and collect every alarm.
+fn cusum_alarms(series: &[f64], cfg: MonitorConfig) -> Vec<ShiftEvent> {
+    let mut monitor = DriftMonitor::new(cfg);
+    series
+        .iter()
+        .enumerate()
+        .filter_map(|(b, &x)| monitor.observe(b, x))
+        .collect()
+}
+
+/// A noisy level series with one downward step at `shift_at`.
+fn step_series(
+    rng: &mut Rng,
+    len: usize,
+    shift_at: usize,
+    delta: f64,
+    sigma: f64,
+) -> Vec<f64> {
+    (0..len)
+        .map(|b| {
+            let level = if b < shift_at { -5.0 } else { -5.0 - delta };
+            level + (rng.next_f64() * 2.0 - 1.0) * sigma
+        })
+        .collect()
+}
+
+/// Property: the CUSUM statistic standardizes against its own rolling
+/// baseline, so adding a constant offset to the whole series changes
+/// NOTHING — same alarm batches, same directions.
+#[test]
+fn shift_prop_cusum_offset_invariant() {
+    let mut rng = Rng::new(8100);
+    for _case in 0..30 {
+        let sigma = 0.01 + rng.next_f64() * 0.1;
+        let delta = 2.0 + rng.next_f64() * 4.0;
+        let series = step_series(&mut rng, 70, 45, delta, sigma);
+        let reference: Vec<(usize, _)> =
+            cusum_alarms(&series, cusum_cfg())
+                .into_iter()
+                .map(|a| (a.batch, a.direction))
+                .collect();
+        for offset in [-1000.0, -3.25, 0.5, 777.0] {
+            let shifted: Vec<f64> =
+                series.iter().map(|x| x + offset).collect();
+            let got: Vec<(usize, _)> =
+                cusum_alarms(&shifted, cusum_cfg())
+                    .into_iter()
+                    .map(|a| (a.batch, a.direction))
+                    .collect();
+            assert_eq!(got, reference, "offset {offset} changed alarms");
+        }
+    }
+}
+
+/// Property: a bigger shift is never detected later. Deterministic
+/// alternating baseline so latency depends only on the step size.
+#[test]
+fn shift_prop_cusum_monotone_in_magnitude() {
+    let shift_at = 50usize;
+    let latency = |delta: f64| -> Option<usize> {
+        let series: Vec<f64> = (0..80)
+            .map(|b| {
+                let noise = if b % 2 == 0 { 0.1 } else { -0.1 };
+                let level =
+                    if b < shift_at { -5.0 } else { -5.0 - delta };
+                level + noise
+            })
+            .collect();
+        cusum_alarms(&series, cusum_cfg())
+            .iter()
+            .find(|a| a.batch >= shift_at)
+            .map(|a| a.batch - shift_at)
+    };
+    let mut last = usize::MAX;
+    for delta in [1.0, 2.0, 4.0, 8.0, 16.0] {
+        let lat = latency(delta);
+        if let Some(lat) = lat {
+            assert!(
+                lat <= last,
+                "delta {delta}: latency {lat} > smaller-shift latency {last}"
+            );
+            last = lat;
+        } else {
+            assert_eq!(
+                last,
+                usize::MAX,
+                "delta {delta} missed after a smaller shift was caught"
+            );
+        }
+    }
+    assert_ne!(last, usize::MAX, "even the largest shift was missed");
+}
+
+/// Property: an alarm fully resets the monitor — statistic zero,
+/// disarmed, and silent through the whole re-warmup cooldown — then it
+/// re-arms and can fire again on a later shift.
+#[test]
+fn shift_prop_cusum_resets_after_alarm() {
+    let mut rng = Rng::new(8300);
+    for _case in 0..20 {
+        let sigma = 0.01 + rng.next_f64() * 0.05;
+        let cfg = cusum_cfg();
+        let mut monitor = DriftMonitor::new(cfg);
+        let series = step_series(&mut rng, 120, 40, 8.0, sigma);
+        let mut first_alarm = None;
+        for (b, &x) in series.iter().enumerate() {
+            if let Some(event) = monitor.observe(b, x) {
+                first_alarm = Some(event.batch);
+                break;
+            }
+        }
+        let fired = first_alarm.expect("an 8-sigma step must alarm");
+        assert_eq!(monitor.statistic(), 0.0, "statistic survives reset");
+        assert!(!monitor.is_armed(), "armed through the cooldown");
+        // Silent for the entire re-warmup, even though the post-shift
+        // level keeps arriving.
+        for b in fired + 1..fired + 1 + cfg.warmup {
+            assert!(
+                monitor.observe(b, series[b]).is_none(),
+                "alarm during cooldown at {b}"
+            );
+        }
+        // A second, later step is caught after re-arming.
+        let tail_shift = fired + 1 + cfg.warmup + cfg.window;
+        let mut caught = false;
+        for b in fired + 1 + cfg.warmup..120 {
+            let x = if b < tail_shift { series[b] } else { series[b] + 9.0 };
+            if let Some(event) = monitor.observe(b, x) {
+                assert!(event.batch >= tail_shift, "early re-alarm at {b}");
+                caught = true;
+                break;
+            }
+        }
+        assert!(caught, "re-armed monitor missed the second shift");
+    }
+}

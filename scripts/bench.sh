@@ -4,6 +4,7 @@
 #
 #   scripts/bench.sh    # writes BENCH_estep.json + BENCH_pipeline.json
 #                       #        + BENCH_foldin.json + BENCH_serve.json
+#                       #        + BENCH_drift.json
 #
 # Each bench prints human-readable summaries to stderr and emits one
 # `BENCH_<name>.json {…}` marker line per configuration; this script
@@ -34,3 +35,4 @@ run_bench estep_kernel estep
 run_bench streaming_pipeline pipeline
 run_bench foldin foldin
 run_bench serve serve
+run_bench drift drift

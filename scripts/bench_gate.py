@@ -17,6 +17,14 @@ file's bench family:
                                               disk_bytes     lower is better
                                               file_bytes     lower is better
     BENCH_serve.json     serve                docs_per_sec   higher is better
+    BENCH_drift.json     drift                detection_latency_batches,
+                                              post_shift_recovery_batches,
+                                              false_alarms   lower is better
+
+The drift metrics are batch counts from a fully seeded run (no timing),
+so they are exactly reproducible; zero-valued baselines (e.g. the
+stationary control's false_alarms) are skipped by the degenerate-value
+guard below and pinned by `tests/drift_equivalence.rs` instead.
 
 The byte metrics gate the paged store's compression trajectory (column
 codecs, rust/DESIGN.md §12) exactly like the timing metrics gate
@@ -61,10 +69,16 @@ FAMILIES = {
         ("wal_bytes", False),
     ]),
     "BENCH_serve.json": ("serve", [("docs_per_sec", True)]),
+    "BENCH_drift.json": ("drift", [
+        ("detection_latency_batches", False),
+        ("post_shift_recovery_batches", False),
+        ("false_alarms", False),
+    ]),
 }
 
 KEY_FIELDS = ("bench", "k", "subset", "impl", "workers", "depth", "algo",
-              "isa", "codec", "sweep", "wal", "shards")
+              "isa", "codec", "sweep", "wal", "shards", "scenario",
+              "detector")
 
 
 def load_rows(path, bench_tag):
